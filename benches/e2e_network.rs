@@ -1,0 +1,114 @@
+//! End-to-end network benchmark: the CNN through the full stack, on
+//! every built-in target — compile latency, interpreter serving
+//! latency/throughput, simulated memory traffic, and (when `make
+//! artifacts` has run) the XLA-artifact comparison point.
+//!
+//! This is the Fig.-6 pipeline measured: source → Stripe → passes →
+//! execution.
+
+use std::collections::BTreeMap;
+
+use stripe::coordinator::compile_network;
+use stripe::exec::{run_program, run_program_sink, ExecOptions};
+use stripe::frontend::ops;
+use stripe::hw::targets;
+use stripe::sim::cache::CacheConfig;
+use stripe::sim::{CacheSink, Hierarchy};
+use stripe::util::bench::{section, Bench};
+
+fn main() {
+    let p = ops::cnn_program();
+
+    section("compile latency per target (unverified)");
+    let bench = Bench::quick();
+    for cfg in targets::builtin_targets() {
+        let name = cfg.name.clone();
+        bench.run(&format!("compile cnn for {name}"), || {
+            std::hint::black_box(compile_network(&p, &cfg, false).unwrap());
+        });
+    }
+
+    section("serving throughput (interpreter, optimized vs unoptimized)");
+    let cfg = targets::cpu_cache();
+    let compiled = compile_network(&p, &cfg, false).unwrap();
+    let inputs = stripe::passes::equiv::gen_inputs(&p, 5);
+    let bench = Bench::default();
+    let s_unopt = bench.run("run cnn (flat, unoptimized)", || {
+        std::hint::black_box(run_program(&p, &inputs).unwrap());
+    });
+    let s_opt = bench.run("run cnn (cpu_cache pipeline)", || {
+        std::hint::black_box(run_program(&compiled.program, &inputs).unwrap());
+    });
+    s_unopt.print_throughput(1.0, "req");
+    s_opt.print_throughput(1.0, "req");
+
+    section("simulated memory traffic (32KiB L1 + 1MiB L2)");
+    for (label, prog) in [("flat", &p), ("optimized", &compiled.program)] {
+        let h = Hierarchy::new(vec![
+            ("L1".into(), CacheConfig::with_capacity(32 << 10, 64, 8)),
+            ("L2".into(), CacheConfig::with_capacity(1 << 20, 64, 8)),
+        ]);
+        let mut sink = CacheSink::new(h, 64);
+        for b in &prog.buffers {
+            sink.register_buffer(b.ttype.span_elems(), 4);
+        }
+        run_program_sink(prog, &inputs, &ExecOptions::default(), &mut sink).unwrap();
+        let st = sink.hierarchy.stats();
+        println!(
+            "{label:<10} L1 hit {:>6.2}%  L2 hit {:>6.2}%  dram bytes {:>10}",
+            st[0].stats.hit_rate() * 100.0,
+            st[1].stats.hit_rate() * 100.0,
+            sink.hierarchy.dram_bytes
+        );
+    }
+
+    section("output stability across targets");
+    let base = run_program(&p, &inputs).unwrap();
+    let base_o = base.values().next().unwrap();
+    for cfg in targets::builtin_targets() {
+        let c = compile_network(&p, &cfg, false).unwrap();
+        let out = run_program(&c.program, &inputs).unwrap();
+        let o = out.values().next().unwrap();
+        let max_err = base_o
+            .iter()
+            .zip(o)
+            .map(|(a, b)| (a - b).abs() / 1.0f32.max(a.abs()))
+            .fold(0f32, f32::max);
+        println!("{:<12} max rel err vs flat: {max_err:.3e}", cfg.name);
+        assert!(max_err < 1e-3);
+    }
+
+    // XLA comparison if the artifact exists.
+    let model = stripe::runtime::artifact_path("model");
+    if model.is_file() {
+        section("XLA artifact comparison point");
+        let mut rt = stripe::runtime::Runtime::cpu().unwrap();
+        rt.load_hlo_text("model", &model).unwrap();
+        let mut args: Vec<(Vec<f32>, Vec<usize>)> = Vec::new();
+        for b in &p.buffers {
+            if matches!(b.kind, stripe::ir::BufKind::Input | stripe::ir::BufKind::Weight) {
+                let shape: Vec<usize> = b.ttype.sizes().iter().map(|&s| s as usize).collect();
+                args.push((inputs[&b.name].clone(), shape));
+            }
+        }
+        let borrowed: Vec<(&[f32], &[usize])> =
+            args.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+        let s_xla = bench.run("run cnn (XLA artifact via PJRT)", || {
+            std::hint::black_box(rt.execute_f32("model", &borrowed).unwrap());
+        });
+        s_xla.print_throughput(1.0, "req");
+        let out = rt.execute_f32("model", &borrowed).unwrap();
+        let max_err = base_o
+            .iter()
+            .zip(&out[0])
+            .map(|(a, b)| (a - b).abs() / 1.0f32.max(a.abs()))
+            .fold(0f32, f32::max);
+        println!("max rel err interpreter vs XLA: {max_err:.3e}");
+        assert!(max_err < 1e-3);
+    } else {
+        println!("\n(model artifact missing — run `make artifacts` for the XLA row)");
+    }
+
+    // Keep a reference to inputs' type for the unused-import-free build.
+    let _: &BTreeMap<String, Vec<f32>> = &inputs;
+}

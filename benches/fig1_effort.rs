@@ -1,0 +1,63 @@
+//! Figure 1 — manual engineering effort under the three code-generation
+//! approaches, as kernels/architectures/versions/shapes scale.
+//!
+//! The paper's figure is qualitative pseudocode; this bench quantifies
+//! it with the model in `coordinator::effort` and prints the scaling
+//! series (who explodes combinatorially, who grows additively).
+
+use stripe::coordinator::effort::{compare, render_table, stripe_wins, Scenario};
+use stripe::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig. 1 — baseline scenario");
+    let s = Scenario::default();
+    print!("{}", render_table(&s));
+    assert!(stripe_wins(&s));
+
+    section("Fig. 1 — scaling in kernels (A=4, V=3, S=20)");
+    println!(
+        "{:>8} {:>16} {:>16} {:>10}",
+        "kernels", "kernel_library", "schedule_space", "stripe"
+    );
+    for k in [4u64, 8, 16, 32, 64, 128] {
+        let s = Scenario { kernels: k, ..Scenario::default() };
+        let rows = compare(&s);
+        println!(
+            "{:>8} {:>16} {:>16} {:>10}",
+            k, rows[0].manual, rows[1].manual, rows[2].manual
+        );
+    }
+
+    section("Fig. 1 — scaling in architectures (K=12, V=3, S=20)");
+    println!(
+        "{:>8} {:>16} {:>16} {:>10}",
+        "archs", "kernel_library", "schedule_space", "stripe"
+    );
+    for a in [1u64, 2, 4, 8, 16, 32] {
+        let s = Scenario { architectures: a, ..Scenario::default() };
+        let rows = compare(&s);
+        println!(
+            "{:>8} {:>16} {:>16} {:>10}",
+            a, rows[0].manual, rows[1].manual, rows[2].manual
+        );
+    }
+
+    // The crossover claim: stripe's advantage grows with scale.
+    let small = Scenario { kernels: 2, architectures: 1, versions_per_arch: 1, shapes: 1 };
+    let big = Scenario { kernels: 64, architectures: 8, versions_per_arch: 4, shapes: 40 };
+    let ratio_small =
+        compare(&small)[0].manual as f64 / compare(&small)[2].manual as f64;
+    let ratio_big = compare(&big)[0].manual as f64 / compare(&big)[2].manual as f64;
+    section("Fig. 1 — advantage ratio (kernel_library manual / stripe manual)");
+    println!("small deployment: {ratio_small:.1}x   large deployment: {ratio_big:.1}x");
+    assert!(ratio_big > ratio_small);
+
+    // And the config path is cheap at *runtime* too: versioning a config
+    // (set_config_params) costs microseconds, not an engineering cycle.
+    section("set_config_params microbenchmark");
+    let b = Bench::default();
+    let mut cfg = stripe::hw::targets::dc_accel();
+    b.run("set_param(memory.SRAM.capacity)", || {
+        cfg.set_param("memory.SRAM.capacity", 128.0 * 1024.0).unwrap();
+    });
+}

@@ -1,0 +1,84 @@
+//! Figure 5 — Stripe code before and after the tiling pass: golden-text
+//! structure checks, parser round-trip, semantic equivalence, and the
+//! rewrite's timing.
+
+use std::collections::BTreeMap;
+
+use stripe::frontend::ops;
+use stripe::ir::builder::fig5_conv_block;
+use stripe::ir::parser::parse_block;
+use stripe::ir::printer::block_to_string;
+use stripe::ir::Statement;
+use stripe::passes::tile::{apply_tiling, TileOptions};
+use stripe::util::bench::{section, Bench};
+
+fn main() {
+    let before = fig5_conv_block();
+    let tile: BTreeMap<String, u64> = [("x".to_string(), 3), ("y".to_string(), 4)].into();
+    let after = apply_tiling(&before, &tile, &TileOptions::default());
+
+    section("Fig. 5a — before tiling");
+    let text_a = block_to_string(&before);
+    print!("{text_a}");
+
+    section("Fig. 5b — after the 3x4 tiling pass");
+    let text_b = block_to_string(&after);
+    print!("{text_b}");
+
+    section("golden structure checks");
+    // 5a: flat block, Fig-5a signature lines.
+    for needle in [
+        "block conv [x:12, y:16, i:3, j:3, c:8, k:16]",
+        "in I[i + x - 1, j + y - 1, c] i8(1, 1, 1):(128, 8, 1)",
+        "in F[i, j, k, c] i8(1, 1, 1, 1):(384, 128, 8, 1)",
+        "out O[x, y, k]:add i8(1, 1, 1):(256, 16, 1)",
+        "$O = mul($I, $F)",
+    ] {
+        assert!(text_a.contains(needle), "5a missing: {needle}");
+    }
+    // 5b: the paper's key features — outer strides 3x/4y, middle views
+    // larger than strides (halo overlap: I is (5,6,8)), parent x/y
+    // passed into the child for the constraints.
+    for needle in [
+        "in I[3*x - 1, 4*y - 1, 0] i8(5, 6, 8):(128, 8, 1)",
+        "out O[3*x, 4*y, 0]:add i8(3, 4, 16):(256, 16, 1)",
+        "x__o = x",
+        "y__o = y",
+        "3*x__o",
+        "4*y__o",
+    ] {
+        assert!(text_b.contains(needle), "5b missing: {needle}");
+    }
+    println!("all Fig-5 signature lines present ✓");
+
+    section("parser round-trip");
+    let reparsed_a = parse_block(&text_a).expect("parse 5a");
+    let reparsed_b = parse_block(&text_b).expect("parse 5b");
+    assert_eq!(reparsed_a, before);
+    assert_eq!(reparsed_b, after);
+    println!("print→parse round-trips exactly ✓");
+
+    section("semantic equivalence (interpreter, random inputs)");
+    let p = ops::fig4_conv_program();
+    let mut q = p.clone();
+    if let Statement::Block(b) = &mut q.main.stmts[0] {
+        **b = apply_tiling(b, &tile, &TileOptions::default());
+    }
+    stripe::passes::equiv::assert_equiv(&p, &q, 1234, 1e-3).expect("equivalent");
+    println!("before ≡ after on random inputs ✓");
+
+    section("timings");
+    let bench = Bench::default();
+    bench.run("apply_tiling (fig5 conv, 3x4)", || {
+        std::hint::black_box(apply_tiling(&before, &tile, &TileOptions::default()));
+    });
+    bench.run("print fig5b", || {
+        std::hint::black_box(block_to_string(&after));
+    });
+    bench.run("parse fig5b", || {
+        std::hint::black_box(parse_block(&text_b).unwrap());
+    });
+    bench.run("validate fig5b (Def-2 checks)", || {
+        std::hint::black_box(stripe::ir::validate::validate_block(&after));
+    });
+}

@@ -1,0 +1,114 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! * L3 (rust): the CNN is built op-by-op, compiled through the full
+//!   cpu_cache pass pipeline, and *served*: a batch of requests flows
+//!   through the compile-service + interpreter, reporting latency and
+//!   throughput.
+//! * L2/L1 (AOT): the same CNN — with its conv layers implemented by
+//!   the L1 Pallas kernel — was lowered once by `make artifacts`; the
+//!   rust PJRT runtime executes the artifact and the outputs are
+//!   compared elementwise against the Stripe interpreter.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example network_e2e
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use stripe::coordinator::compile_network;
+use stripe::exec::run_program;
+use stripe::frontend::ops;
+use stripe::hw::targets;
+use stripe::runtime::{artifact_path, Runtime};
+use stripe::util::rng::Rng;
+
+fn main() {
+    let program = ops::cnn_program();
+    let cfg = targets::cpu_cache();
+
+    // ---- compile (verified) ----
+    let t0 = Instant::now();
+    let compiled = compile_network(&program, &cfg, true).expect("compile");
+    println!("compiled cnn for {} in {:?}", cfg.name, t0.elapsed());
+    for r in &compiled.reports {
+        if r.changed {
+            println!("  {}: {} change(s)", r.pass, r.details.len());
+        }
+    }
+
+    // ---- fixed weights, batch of inputs ----
+    let mut rng = Rng::new(2024);
+    let f1 = rng.normal_vec(3 * 3 * 16 * 8, 0.2);
+    let f2 = rng.normal_vec(3 * 3 * 16 * 16, 0.1);
+    let wd = rng.normal_vec(6 * 8 * 16 * 10, 0.1);
+    let batch: Vec<Vec<f32>> =
+        (0..32).map(|_| rng.normal_vec(12 * 16 * 8, 1.0)).collect();
+
+    // ---- serve the batch through the interpreter ----
+    let mut latencies = Vec::new();
+    let mut outputs = Vec::new();
+    let t0 = Instant::now();
+    for x in &batch {
+        let mut inputs = BTreeMap::new();
+        inputs.insert("I".to_string(), x.clone());
+        inputs.insert("F1".to_string(), f1.clone());
+        inputs.insert("F2".to_string(), f2.clone());
+        inputs.insert("WD".to_string(), wd.clone());
+        let t = Instant::now();
+        let out = run_program(&compiled.program, &inputs).expect("run");
+        latencies.push(t.elapsed());
+        outputs.push(out.into_values().next().unwrap());
+    }
+    let total = t0.elapsed();
+    latencies.sort();
+    println!("\n== serving (Stripe interpreter, optimized program) ==");
+    println!(
+        "batch={} total={total:?} throughput={:.1} req/s",
+        batch.len(),
+        batch.len() as f64 / total.as_secs_f64()
+    );
+    println!(
+        "latency p50={:?} p95={:?} max={:?}",
+        latencies[latencies.len() / 2],
+        latencies[latencies.len() * 95 / 100],
+        latencies[latencies.len() - 1]
+    );
+
+    // ---- cross-check vs the XLA artifact (L2+L1 via PJRT) ----
+    let model_path = artifact_path("model");
+    if !model_path.is_file() {
+        println!("\nartifact {model_path:?} missing — run `make artifacts` for the oracle check");
+        return;
+    }
+    let mut rt = Runtime::cpu().expect("pjrt cpu client");
+    rt.load_hlo_text("model", &model_path).expect("load artifact");
+    println!("\n== oracle check (PJRT, platform {}) ==", rt.platform());
+    let mut max_err = 0f32;
+    let t0 = Instant::now();
+    for (x, stripe_out) in batch.iter().zip(&outputs) {
+        let args: Vec<(&[f32], &[usize])> = vec![
+            (x.as_slice(), &[12, 16, 8]),
+            (f1.as_slice(), &[3, 3, 16, 8]),
+            (f2.as_slice(), &[3, 3, 16, 16]),
+            (wd.as_slice(), &[768, 10]),
+        ];
+        let xla_out = rt.execute_f32("model", &args).expect("execute artifact");
+        assert_eq!(xla_out[0].len(), stripe_out.len());
+        for (a, b) in xla_out[0].iter().zip(stripe_out) {
+            let scale = 1.0f32.max(a.abs());
+            max_err = max_err.max((a - b).abs() / scale);
+        }
+    }
+    let xla_total = t0.elapsed();
+    println!(
+        "XLA artifact: batch={} total={xla_total:?} throughput={:.1} req/s",
+        batch.len(),
+        batch.len() as f64 / xla_total.as_secs_f64()
+    );
+    println!("max relative error Stripe-interpreter vs XLA: {max_err:.3e}");
+    assert!(max_err < 1e-3, "numeric mismatch vs oracle");
+    println!("\nall {} outputs match the XLA oracle ✓", batch.len());
+}

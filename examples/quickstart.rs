@@ -1,0 +1,56 @@
+//! Quickstart: write a network in the Tile language, compile it for a
+//! hardware target, execute it, and read the pass report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use stripe::coordinator::compile_network;
+use stripe::exec::run_program;
+use stripe::hw::targets;
+use stripe::ir::printer::print_program;
+use stripe::passes::equiv::gen_inputs;
+
+const SOURCE: &str = r#"
+function cnn(I[12, 16, 8], $F[3, 3, 16, 8]) -> (R) {
+  # The paper's Fig-4/5 convolution, in Tile-style Einstein notation.
+  T[x, y, k : 12, 16, 16] = +(I[x + i - 1, y + j - 1, c] * F[i, j, k, c]);
+  R = relu(T);
+}
+"#;
+
+fn main() {
+    // 1. Frontend: Tile text -> flat Stripe (Fig. 6's Tile -> Stripe).
+    let func = stripe::frontend::parse_function(SOURCE).expect("parse");
+    let program = stripe::frontend::lower_function(&func).expect("lower");
+    println!("== flat Stripe (before optimization) ==\n");
+    println!("{}", print_program(&program));
+
+    // 2. Compile for a target; every rewriting pass is verified for
+    //    semantic equivalence against the interpreter.
+    let cfg = targets::cpu_cache();
+    let compiled = compile_network(&program, &cfg, true).expect("compile");
+    println!("== pass report ==\n\n{}", compiled.summary());
+
+    // 3. Execute on deterministic random inputs.
+    let inputs = gen_inputs(&compiled.program, 42);
+    let t0 = std::time::Instant::now();
+    let outputs = run_program(&compiled.program, &inputs).expect("run");
+    let dt = t0.elapsed();
+    let r = &outputs["R"];
+    println!("== execution ==\n");
+    println!("R[{}] head: {:?}", r.len(), &r[..6.min(r.len())]);
+    println!("ran in {dt:?}");
+
+    // 4. The same compile through the service (queue + cache).
+    let svc = stripe::coordinator::CompileService::start(2);
+    let again = svc
+        .compile_blocking(program.clone(), cfg.clone(), false)
+        .expect("service compile");
+    let again2 = svc
+        .compile_blocking(program, cfg, false)
+        .expect("cached compile");
+    assert!(std::sync::Arc::ptr_eq(&again, &again2));
+    println!("\nservice metrics: {}", svc.metrics.snapshot());
+    svc.shutdown();
+}

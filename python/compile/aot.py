@@ -1,0 +1,75 @@
+"""AOT pipeline: lower the L2 model (with its L1 Pallas kernels) to HLO
+*text* artifacts the rust runtime loads via PJRT.
+
+Text, NOT ``lowered.compile()``/``.serialize()``: jax >= 0.5 emits HLO
+protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the published `xla` 0.1.6 crate) rejects; the HLO text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out DIR]
+Emits: model.hlo.txt, conv.hlo.txt, matmul.hlo.txt, manifest.txt
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unpacks a tuple uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+
+    # Whole-network artifact.
+    lowered = jax.jit(model.cnn_forward).lower(
+        spec(model.INPUT_SHAPE), spec(model.F1_SHAPE),
+        spec(model.F2_SHAPE), spec(model.WD_SHAPE),
+    )
+    artifacts["model"] = to_hlo_text(lowered)
+
+    # Per-op artifacts.
+    lowered = jax.jit(model.conv_op).lower(
+        spec(model.INPUT_SHAPE), spec(model.F1_SHAPE)
+    )
+    artifacts["conv"] = to_hlo_text(lowered)
+
+    lowered = jax.jit(model.matmul_op).lower(spec((16, 16)), spec((16, 16)))
+    artifacts["matmul"] = to_hlo_text(lowered)
+
+    for name, text in artifacts.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(sorted(artifacts)) + "\n")
+    return artifacts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""L1: tiled same-padded conv2d as a Pallas kernel.
+
+The tiling is the one Stripe's autotiler selects for the Fig.-4 conv
+(3x4 output tiles — see `stripe fig4` / EXPERIMENTS.md): the BlockSpec
+grid expresses the HBM->VMEM schedule that Stripe's nested blocks
+express on the simulated accelerator (DESIGN.md §Hardware-Adaptation).
+
+interpret=True everywhere: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT plugin cannot run; correctness is validated on CPU and the
+VMEM/MXU characteristics are estimated analytically (EXPERIMENTS.md
+§Perf L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Stripe's choice for the Fig.-4 conv on the paper_fig4 target.
+DEFAULT_TILE = (3, 4)
+
+
+def _conv_kernel(x_ref, f_ref, o_ref, *, th, tw, kh, kw):
+    """One (th, tw, co) output tile.
+
+    x_ref is the whole padded input (halo tiles overlap, which BlockSpec
+    cannot express directly); f_ref the whole filter; o_ref the tile.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    ci = x_ref.shape[2]
+    x_tile = x_ref[
+        pl.dslice(i * th, th + kh - 1), pl.dslice(j * tw, tw + kw - 1), pl.dslice(0, ci)
+    ].astype(jnp.float32)
+    f = f_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            acc = acc + jnp.einsum(
+                "hwc,kc->hwk", x_tile[di : di + th, dj : dj + tw, :], f[di, dj]
+            )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def conv2d_same(x, f, tile=DEFAULT_TILE):
+    """Same-padded conv2d via the Pallas tile kernel.
+
+    x: (H, W, ci); f: (kh, kw, co, ci); tile must divide (H, W).
+    """
+    h, w, ci = x.shape
+    kh, kw, co, fci = f.shape
+    assert ci == fci, f"channel mismatch {ci} vs {fci}"
+    th, tw = tile
+    assert h % th == 0 and w % tw == 0, f"tile {tile} must divide ({h}, {w})"
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((ph, ph), (pw, pw), (0, 0)))
+
+    kernel = functools.partial(_conv_kernel, th=th, tw=tw, kh=kh, kw=kw)
+    return pl.pallas_call(
+        kernel,
+        grid=(h // th, w // tw),
+        in_specs=[
+            # Whole padded input visible to every tile (halo overlap).
+            pl.BlockSpec(xp.shape, lambda i, j: (0, 0, 0)),
+            pl.BlockSpec(f.shape, lambda i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((th, tw, co), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, co), x.dtype),
+        interpret=True,
+    )(xp, f)
+
+
+def vmem_footprint_bytes(tile, ci, co, kh=3, kw=3, dtype_bytes=4):
+    """Analytic VMEM estimate for one tile step: input halo tile +
+    filter + output tile (the quantity EXPERIMENTS.md §Perf L1 reports).
+    """
+    th, tw = tile
+    x_tile = (th + kh - 1) * (tw + kw - 1) * ci
+    f_full = kh * kw * co * ci
+    o_tile = th * tw * co
+    return (x_tile + f_full + o_tile) * dtype_bytes
+
+
+def mxu_utilization_estimate(tile, ci, co):
+    """Fraction of an MXU-shaped (128x128) matmul the per-tile
+    contraction fills: the tile GEMM is (th*tw) x ci -> co.
+    """
+    th, tw = tile
+    m = th * tw
+    return min(m / 128.0, 1.0) * min(ci / 128.0, 1.0) * min(co / 128.0, 1.0)

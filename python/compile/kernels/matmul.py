@@ -1,0 +1,59 @@
+"""L1: blocked matmul as a Pallas kernel (MXU-shaped tiling).
+
+The Stripe `tpu_like` target's stencil (`mxu128`) wants (m, n, k) tiles
+that feed the systolic array; this kernel is the Pallas realization of
+that schedule: grid over (M/bm, N/bn), with the K reduction accumulated
+in VMEM scratch across a k-loop — the standard Pallas matmul shape,
+here sized by parameters so the Stripe-chosen stencil/tile sizes drop
+in directly.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    # a_ref: (bm, K), b_ref: (K, bn), o_ref: (bm, bn)
+    o_ref[...] = jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul(a, b, block=(8, 128)):
+    """O[m, n] = sum_k A[m, k] * B[k, n], tiled (bm, bn) over the grid.
+
+    `block` must divide (M, N); K is kept whole per tile (the MXU
+    streams it), which is exactly what the rust stencil pass encodes
+    with its reduction-size rule.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm, bn = block
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, f"block {block} must divide ({m}, {n})"
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(m, n, k, block=(8, 128), dtype_bytes=4):
+    """Per-tile VMEM: A panel + B panel + O tile."""
+    bm, bn = min(block[0], m), min(block[1], n)
+    return (bm * k + k * bn + bm * bn) * dtype_bytes

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the L2 model.
+
+Everything here is the *specification*: the Pallas kernels
+(`conv2d.py`) are checked against these functions by pytest, and the
+Rust Stripe interpreter is cross-checked against the AOT-compiled model
+built from them (examples/network_e2e.rs).
+
+Layout conventions mirror the Rust side exactly (see
+rust/src/graph/mod.rs):
+  * activations: (H, W, C) row-major
+  * conv filters: (kh, kw, co, ci)
+  * dense weights: (K, N)
+"""
+
+import jax.numpy as jnp
+
+
+def conv2d_same(x, f):
+    """3x3-style same-padded convolution, HWC x (kh,kw,co,ci) -> HWC'."""
+    h, w, _ = x.shape
+    kh, kw, co, ci = f.shape
+    assert x.shape[2] == ci, f"channel mismatch: {x.shape} vs {f.shape}"
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((ph, ph), (pw, pw), (0, 0)))
+    out = jnp.zeros((h, w, co), dtype=jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            window = xp[i : i + h, j : j + w, :].astype(jnp.float32)
+            out = out + jnp.einsum(
+                "hwc,kc->hwk", window, f[i, j].astype(jnp.float32)
+            )
+    return out.astype(x.dtype)
+
+
+def maxpool2(x):
+    """2x2/stride-2 max pool over HWC."""
+    h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0
+    return x.reshape(h // 2, 2, w // 2, 2, c).max(axis=(1, 3))
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def dense(x, w):
+    """O[n] = sum_k I[k] * W[k, n]."""
+    return x @ w
+
+
+def cnn_forward_ref(i, f1, f2, wd):
+    """Reference replica of the L2 model (and of ops::cnn_program)."""
+    x = relu(conv2d_same(i, f1))
+    x = maxpool2(x)
+    x = relu(conv2d_same(x, f2))
+    x = x.reshape(-1)
+    return dense(x, wd)

@@ -1,0 +1,51 @@
+"""L2: the JAX model — forward pass of the CNN used end-to-end.
+
+Mirrors rust `ops::cnn_program()` op for op and layout for layout:
+
+    I (12,16,8) -> conv3x3 (->16, Pallas kernel) -> relu -> maxpool2
+      -> conv3x3 (->16, Pallas kernel) -> relu -> flatten -> dense (->10)
+
+The convolutions call the L1 Pallas kernel (`kernels.conv2d`), so the
+AOT artifact contains the kernel's lowered form; everything else is
+plain jnp that XLA fuses. Build-time only: `aot.py` lowers this once to
+HLO text, and the rust runtime executes the artifact.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import conv2d as k_conv
+
+# Canonical shapes (kept in sync with rust ops::cnn_program()).
+INPUT_SHAPE = (12, 16, 8)
+F1_SHAPE = (3, 3, 16, 8)
+F2_SHAPE = (3, 3, 16, 16)
+WD_SHAPE = (6 * 8 * 16, 10)
+N_CLASSES = 10
+
+# Stripe's autotile decision for each conv layer (see EXPERIMENTS.md):
+# 3x4 output tiles fit both (12,16) and the post-pool (6,8).
+CONV_TILE = (3, 4)
+
+
+def cnn_forward(i, f1, f2, wd):
+    """Forward pass; argument order = the rust program's buffer order."""
+    x = k_conv.conv2d_same(i, f1, tile=CONV_TILE)
+    x = jnp.maximum(x, 0)
+    h, w, c = x.shape
+    x = x.reshape(h // 2, 2, w // 2, 2, c).max(axis=(1, 3))
+    x = k_conv.conv2d_same(x, f2, tile=CONV_TILE)
+    x = jnp.maximum(x, 0)
+    x = x.reshape(-1)
+    return (x @ wd,)
+
+
+def conv_op(x, f):
+    """Single conv op (per-op artifact for the rust runtime)."""
+    return (k_conv.conv2d_same(x, f, tile=CONV_TILE),)
+
+
+def matmul_op(a, b):
+    """Single matmul op (per-op artifact), via the L1 Pallas kernel."""
+    from .kernels import matmul as k_mm
+
+    return (k_mm.matmul(a, b, tuple((8, 8))),)

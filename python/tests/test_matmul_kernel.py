@@ -1,0 +1,64 @@
+"""Pallas matmul kernel vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as k
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _check(m, kk, n, bm, bn, dtype, seed, tol):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, kk)), dtype)
+    b = jnp.asarray(rng.standard_normal((kk, n)), dtype)
+    got = k.matmul(a, b, block=(bm, bn))
+    want = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+def test_square():
+    _check(16, 16, 16, 8, 8, jnp.float32, 0, 1e-4)
+
+
+def test_mxu_shaped_block():
+    _check(16, 32, 256, 8, 128, jnp.float32, 1, 1e-4)
+
+
+def test_single_tile():
+    _check(4, 4, 4, 8, 128, jnp.float32, 2, 1e-4)  # blocks clamp to (4,4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bm=st.sampled_from([1, 2, 4, 8]),
+    bn=st.sampled_from([1, 4, 16]),
+    kk=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_blocks(bm, bn, kk, seed):
+    _check(bm * 2, kk, bn * 3, bm, bn, jnp.float32, seed, 1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bf16(seed):
+    _check(8, 16, 8, 4, 4, jnp.bfloat16, seed, 5e-2)
+
+
+def test_block_must_divide():
+    import pytest
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((10, 4)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4, 10)), jnp.float32)
+    with pytest.raises(AssertionError):
+        k.matmul(a, b, block=(3, 5))
+
+
+def test_vmem_estimate():
+    fp = k.vmem_footprint_bytes(128, 256, 64, block=(8, 128))
+    assert fp == (8 * 64 + 64 * 128 + 8 * 128) * 4

@@ -1,0 +1,47 @@
+"""L2 correctness: the Pallas-backed model vs the pure-jnp replica."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _weights(seed):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.standard_normal(model.INPUT_SHAPE), jnp.float32),
+        jnp.asarray(rng.standard_normal(model.F1_SHAPE) * 0.2, jnp.float32),
+        jnp.asarray(rng.standard_normal(model.F2_SHAPE) * 0.2, jnp.float32),
+        jnp.asarray(rng.standard_normal(model.WD_SHAPE) * 0.1, jnp.float32),
+    )
+
+
+def test_output_shape_and_finiteness():
+    (logits,) = model.cnn_forward(*_weights(0))
+    assert logits.shape == (model.N_CLASSES,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matches_pure_jnp_reference(seed):
+    args = _weights(seed)
+    (got,) = model.cnn_forward(*args)
+    want = ref.cnn_forward_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_jit_lowerable():
+    # The model must lower (this is what aot.py does once at build time).
+    lowered = jax.jit(model.cnn_forward).lower(
+        jax.ShapeDtypeStruct(model.INPUT_SHAPE, jnp.float32),
+        jax.ShapeDtypeStruct(model.F1_SHAPE, jnp.float32),
+        jax.ShapeDtypeStruct(model.F2_SHAPE, jnp.float32),
+        jax.ShapeDtypeStruct(model.WD_SHAPE, jnp.float32),
+    )
+    assert lowered is not None

@@ -1,0 +1,105 @@
+//! End-to-end compile drivers shared by the CLI, examples, and service.
+
+use crate::hw::MachineConfig;
+use crate::ir::Program;
+use crate::passes::{compile, PassReport};
+
+/// A compiled network plus its provenance.
+#[derive(Debug)]
+pub struct CompiledNetwork {
+    pub target: String,
+    pub program: Program,
+    pub reports: Vec<PassReport>,
+}
+
+impl CompiledNetwork {
+    /// One-line-per-pass summary.
+    pub fn summary(&self) -> String {
+        let mut s = format!("target {}\n", self.target);
+        for r in &self.reports {
+            s.push_str(&format!(
+                "  pass {:<16} {}\n",
+                r.pass,
+                if r.changed { format!("changed ({} notes)", r.details.len()) } else { "no-op".into() }
+            ));
+            for d in &r.details {
+                s.push_str(&format!("    - {d}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// Compile a program for a target (optionally verifying each pass by
+/// execution — slower, on by default in tests and the CLI's default
+/// path).
+pub fn compile_network(
+    program: &Program,
+    cfg: &MachineConfig,
+    verify: bool,
+) -> Result<CompiledNetwork, String> {
+    // Static validation up front.
+    let findings = crate::ir::validate::validate_program(program);
+    if !crate::ir::validate::is_valid(&findings) {
+        let msgs: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        return Err(format!("input program invalid:\n{}", msgs.join("\n")));
+    }
+    let result = compile(program, cfg, verify)?;
+    Ok(CompiledNetwork {
+        target: cfg.name.clone(),
+        program: result.program,
+        reports: result.reports,
+    })
+}
+
+/// Deterministic content hash of a (program, target) pair — the compile
+/// cache key. FNV-1a over the printed IR and config name.
+pub fn cache_key(program: &Program, cfg: &MachineConfig) -> u64 {
+    let text = crate::ir::printer::print_program(program);
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in text.bytes().chain(cfg.name.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn compile_fig4_for_every_builtin_target() {
+        let p = ops::fig4_conv_program();
+        for cfg in targets::builtin_targets() {
+            let c = compile_network(&p, &cfg, true)
+                .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+            assert_eq!(c.reports.len(), cfg.passes.len());
+            assert!(c.summary().contains(&cfg.name));
+        }
+    }
+
+    #[test]
+    fn cache_key_is_content_addressed() {
+        let p = ops::fig4_conv_program();
+        let q = ops::conv_relu_program();
+        let cfg = targets::paper_fig4();
+        let cfg2 = targets::cpu_cache();
+        assert_eq!(cache_key(&p, &cfg), cache_key(&p, &cfg));
+        assert_ne!(cache_key(&p, &cfg), cache_key(&q, &cfg));
+        assert_ne!(cache_key(&p, &cfg), cache_key(&p, &cfg2));
+    }
+
+    #[test]
+    fn invalid_program_rejected_before_passes() {
+        let mut p = ops::fig4_conv_program();
+        // Corrupt: constraint referencing an unknown index.
+        if let crate::ir::Statement::Block(b) = &mut p.main.stmts[0] {
+            b.constraints.push(crate::poly::Affine::var("bogus"));
+        }
+        let e = compile_network(&p, &targets::paper_fig4(), false).unwrap_err();
+        assert!(e.contains("invalid"), "{e}");
+    }
+}

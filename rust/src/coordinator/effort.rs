@@ -1,0 +1,149 @@
+//! The Fig.-1 engineering-effort model.
+//!
+//! Figure 1 compares the *manually engineered artifacts* required by
+//! three code-generation approaches as kernels (K), hardware
+//! architectures (A), hardware versions per architecture (V), and
+//! distinct input/output shape combinations (S) grow:
+//!
+//! * **Kernel library** — a kernel per (architecture, version, kernel,
+//!   shape-in, shape-out): `A·V·K·S` hand-written artifacts.
+//! * **Schedule search space** — an algorithm per kernel, a schedule
+//!   space per (kernel, architecture), and an autotuned selection per
+//!   (version, shape): `K + K·A` written artifacts plus `K·A·V·S`
+//!   machine-made selections (cheap but not free — they cost tuning
+//!   time).
+//! * **Stripe** — an algorithm per kernel, a config per architecture,
+//!   and parameter settings per version: `K + A + A·V`.
+//!
+//! `benches/fig1_effort.rs` prints the table; this module holds the
+//! model so it is unit-testable and usable from the CLI (`stripe fig1`).
+
+/// Scenario parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub kernels: u64,
+    pub architectures: u64,
+    pub versions_per_arch: u64,
+    pub shapes: u64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        // A realistic mid-size deployment: 12 op kernels, 4 accelerator
+        // architectures, 3 versions each, 20 materially-distinct shapes.
+        Scenario { kernels: 12, architectures: 4, versions_per_arch: 3, shapes: 20 }
+    }
+}
+
+/// Artifact counts for one approach.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Effort {
+    pub approach: &'static str,
+    /// Hand-written engineering artifacts (kernels, schedule spaces,
+    /// configs, algorithms).
+    pub manual: u64,
+    /// Machine-generated artifacts (autotuned schedule selections).
+    pub automated: u64,
+}
+
+/// Kernel-library approach: write a kernel per everything.
+pub fn kernel_library(s: &Scenario) -> Effort {
+    Effort {
+        approach: "kernel_library",
+        manual: s.architectures * s.versions_per_arch * s.kernels * s.shapes,
+        automated: 0,
+    }
+}
+
+/// Schedule-space approach (AutoTVM-like).
+pub fn schedule_space(s: &Scenario) -> Effort {
+    Effort {
+        approach: "schedule_space",
+        manual: s.kernels + s.kernels * s.architectures,
+        automated: s.kernels * s.architectures * s.versions_per_arch * s.shapes,
+    }
+}
+
+/// Stripe: algorithms per kernel, config per architecture, params per
+/// version. Shapes are free (generic passes parameterized by config).
+pub fn stripe(s: &Scenario) -> Effort {
+    Effort {
+        approach: "stripe",
+        manual: s.kernels + s.architectures + s.architectures * s.versions_per_arch,
+        automated: 0,
+    }
+}
+
+/// All three rows of the Fig.-1 comparison.
+pub fn compare(s: &Scenario) -> Vec<Effort> {
+    vec![kernel_library(s), schedule_space(s), stripe(s)]
+}
+
+/// Render the table (used by the bench and the CLI).
+pub fn render_table(s: &Scenario) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig.1 engineering effort — K={} kernels, A={} archs, V={} versions, S={} shapes\n",
+        s.kernels, s.architectures, s.versions_per_arch, s.shapes
+    ));
+    out.push_str(&format!(
+        "{:<16} {:>16} {:>20}\n",
+        "approach", "manual artifacts", "automated artifacts"
+    ));
+    for e in compare(s) {
+        out.push_str(&format!("{:<16} {:>16} {:>20}\n", e.approach, e.manual, e.automated));
+    }
+    out
+}
+
+/// Verify the paper's qualitative claim for a scenario: Stripe's manual
+/// effort is additive (K + A·(1+V)) where alternatives are
+/// multiplicative in K·A.
+pub fn stripe_wins(s: &Scenario) -> bool {
+    let st = stripe(s).manual;
+    st < kernel_library(s).manual && st < schedule_space(s).manual
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scenario_counts() {
+        let s = Scenario::default();
+        assert_eq!(kernel_library(&s).manual, 4 * 3 * 12 * 20);
+        assert_eq!(schedule_space(&s).manual, 12 + 12 * 4);
+        assert_eq!(schedule_space(&s).automated, 12 * 4 * 3 * 20);
+        assert_eq!(stripe(&s).manual, 12 + 4 + 12);
+        assert!(stripe_wins(&s));
+    }
+
+    #[test]
+    fn stripe_scales_additively() {
+        // Doubling kernels doubles kernel-library effort ×2 but adds
+        // only +K to stripe.
+        let s1 = Scenario::default();
+        let s2 = Scenario { kernels: 24, ..s1 };
+        let kl_ratio = kernel_library(&s2).manual as f64 / kernel_library(&s1).manual as f64;
+        let st_delta = stripe(&s2).manual - stripe(&s1).manual;
+        assert_eq!(kl_ratio, 2.0);
+        assert_eq!(st_delta, 12);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let t = render_table(&Scenario::default());
+        assert!(t.contains("kernel_library"));
+        assert!(t.contains("schedule_space"));
+        assert!(t.contains("stripe"));
+    }
+
+    #[test]
+    fn degenerate_single_everything() {
+        // With one of everything the approaches converge to small counts.
+        let s = Scenario { kernels: 1, architectures: 1, versions_per_arch: 1, shapes: 1 };
+        assert_eq!(kernel_library(&s).manual, 1);
+        assert_eq!(stripe(&s).manual, 3);
+        assert!(!stripe_wins(&s), "Stripe's advantage is asymptotic, not universal");
+    }
+}

@@ -1,0 +1,79 @@
+//! Lightweight metrics for the compile service.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic counters + latency accumulator (lock-free).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub cache_hits: AtomicU64,
+    /// Total compile latency in microseconds.
+    total_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_done(&self, latency: Duration, ok: bool) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.total_us
+            .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        let done = self.completed.load(Ordering::Relaxed) + self.failed.load(Ordering::Relaxed);
+        if done == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.total_us.load(Ordering::Relaxed) / done)
+    }
+
+    pub fn snapshot(&self) -> String {
+        format!(
+            "requests={} completed={} failed={} cache_hits={} mean_latency={:?}",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.mean_latency()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.record_request();
+        m.record_request();
+        m.record_done(Duration::from_millis(10), true);
+        m.record_done(Duration::from_millis(30), false);
+        m.record_cache_hit();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.mean_latency(), Duration::from_millis(20));
+        assert!(m.snapshot().contains("cache_hits=1"));
+    }
+
+    #[test]
+    fn empty_latency_is_zero() {
+        assert_eq!(Metrics::default().mean_latency(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the compile service around the Stripe compiler.
+//!
+//! The paper's contribution *is* the compiler, so the coordinator is the
+//! system that owns it in production: a multi-threaded compile service
+//! with a request queue, a content-addressed artifact cache, and
+//! metrics ([`service`]); the engineering-effort model behind Fig. 1
+//! ([`effort`]); and the end-to-end drivers used by the CLI and the
+//! examples ([`driver`]).
+//!
+//! Rust owns the event loop, the worker threads, and the metrics;
+//! Python exists only behind `make artifacts`.
+
+pub mod driver;
+pub mod effort;
+pub mod metrics;
+pub mod service;
+
+pub use driver::{compile_network, CompiledNetwork};
+pub use service::{CompileRequest, CompileService};

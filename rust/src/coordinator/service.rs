@@ -1,0 +1,183 @@
+//! The compile service: a thread-pool worker queue with a
+//! content-addressed compile cache.
+//!
+//! `tokio` is unavailable offline, so the event loop is std-threads +
+//! channels: requests go into an MPSC queue; worker threads pull,
+//! consult the cache, compile, and deliver results over per-request
+//! channels. This mirrors the deployment shape of a compiler service
+//! (one service instance per fleet, compile results cached by content).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::hw::MachineConfig;
+use crate::ir::Program;
+
+use super::driver::{cache_key, compile_network, CompiledNetwork};
+use super::metrics::Metrics;
+
+/// A compile request.
+pub struct CompileRequest {
+    pub program: Program,
+    pub target: MachineConfig,
+    pub verify: bool,
+    /// Channel for the result.
+    pub reply: Sender<Result<Arc<CompiledNetwork>, String>>,
+}
+
+enum Msg {
+    Work(CompileRequest),
+    Shutdown,
+}
+
+/// Multi-threaded compile service.
+pub struct CompileService {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl CompileService {
+    /// Spawn `n_workers` worker threads.
+    pub fn start(n_workers: usize) -> CompileService {
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let cache: Arc<Mutex<BTreeMap<u64, Arc<CompiledNetwork>>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let cache = Arc::clone(&cache);
+            let metrics = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(Msg::Work(req)) => {
+                        let t0 = Instant::now();
+                        let key = cache_key(&req.program, &req.target);
+                        let cached = cache.lock().unwrap().get(&key).cloned();
+                        let result = match cached {
+                            Some(c) => {
+                                metrics.record_cache_hit();
+                                Ok(c)
+                            }
+                            None => match compile_network(&req.program, &req.target, req.verify)
+                            {
+                                Ok(c) => {
+                                    let arc = Arc::new(c);
+                                    cache.lock().unwrap().insert(key, Arc::clone(&arc));
+                                    Ok(arc)
+                                }
+                                Err(e) => Err(e),
+                            },
+                        };
+                        metrics.record_done(t0.elapsed(), result.is_ok());
+                        let _ = req.reply.send(result);
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                }
+            }));
+        }
+        CompileService { tx, workers, metrics }
+    }
+
+    /// Submit a request; returns the receiver for its result.
+    pub fn submit(
+        &self,
+        program: Program,
+        target: MachineConfig,
+        verify: bool,
+    ) -> Receiver<Result<Arc<CompiledNetwork>, String>> {
+        let (reply, rx) = channel();
+        self.metrics.record_request();
+        let _ = self
+            .tx
+            .send(Msg::Work(CompileRequest { program, target, verify, reply }));
+        rx
+    }
+
+    /// Blocking convenience.
+    pub fn compile_blocking(
+        &self,
+        program: Program,
+        target: MachineConfig,
+        verify: bool,
+    ) -> Result<Arc<CompiledNetwork>, String> {
+        self.submit(program, target, verify)
+            .recv()
+            .map_err(|_| "service shut down".to_string())?
+    }
+
+    /// Stop all workers (drains the queue first: shutdown messages sit
+    /// behind pending work in the channel).
+    pub fn shutdown(mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn service_compiles_and_caches() {
+        let svc = CompileService::start(2);
+        let p = ops::fig4_conv_program();
+        let cfg = targets::paper_fig4();
+        let a = svc.compile_blocking(p.clone(), cfg.clone(), false).unwrap();
+        let b = svc.compile_blocking(p.clone(), cfg.clone(), false).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second compile served from cache");
+        assert_eq!(svc.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_complete() {
+        let svc = CompileService::start(2);
+        let cfg = targets::paper_fig4();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                // Mix of two distinct programs.
+                let p = if i % 2 == 0 {
+                    ops::fig4_conv_program()
+                } else {
+                    ops::matmul_program(4, 4, 4)
+                };
+                svc.submit(p, cfg.clone(), false)
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(svc.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 4);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn errors_propagate_to_caller() {
+        let svc = CompileService::start(1);
+        let mut p = ops::fig4_conv_program();
+        if let crate::ir::Statement::Block(b) = &mut p.main.stmts[0] {
+            b.constraints.push(crate::poly::Affine::var("bogus"));
+        }
+        let e = svc
+            .compile_blocking(p, targets::paper_fig4(), false)
+            .unwrap_err();
+        assert!(e.contains("invalid"));
+        svc.shutdown();
+    }
+}

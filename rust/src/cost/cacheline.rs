@@ -1,0 +1,255 @@
+//! The Fig.-4 cache-line cost model.
+//!
+//! For a proposed tiling of a flat contraction block, compute:
+//!
+//! * the rectilinear *footprint* of each tensor per tile — extents per
+//!   dimension derived from the affine access coefficients, **including
+//!   overflow** ("accesses to these elements are removed by constraints
+//!   in execution but still increase the cost");
+//! * cache lines per tile per tensor, assuming line-aligned tiles (the
+//!   paper's layouts make the innermost dimension line-multiple);
+//! * MACs = lattice points of the *original* iteration space (honoring
+//!   halo constraints — out-of-bounds positions do no work);
+//! * cost = total lines / total MACs;
+//! * feasibility: Σ footprints of tiled tensors ≤ the memory cap
+//!   (untiled tensors — e.g. Fig. 4's weights — are exempt).
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Block, RefDir};
+use crate::util::div_ceil;
+
+/// Model parameters (Fig. 4 uses line=8 elements, cap=512 elements).
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    pub line_elems: u64,
+    pub mem_cap_elems: u64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams { line_elems: 8, mem_cap_elems: 512 }
+    }
+}
+
+/// Result of evaluating one tiling.
+#[derive(Debug, Clone)]
+pub struct TileCost {
+    /// Tile shape evaluated (per index).
+    pub tile: BTreeMap<String, u64>,
+    /// Lines touched per tile, per tensor (refinement `into` name).
+    pub lines_per_tile: Vec<(String, u64)>,
+    /// Footprint elements per tile, per tensor.
+    pub footprint_elems: Vec<(String, u64)>,
+    /// Number of tiles (product of per-index quotients, rounded up).
+    pub tiles: u64,
+    /// Total lines = tiles × Σ lines-per-tile.
+    pub total_lines: u64,
+    /// Valid multiply-accumulates (constraint-respecting lattice points).
+    pub macs: u64,
+    /// Memory used by tiled tensors' footprints (cap check).
+    pub tile_mem_elems: u64,
+    /// Whether the tiling satisfies the memory cap.
+    pub feasible: bool,
+}
+
+impl TileCost {
+    /// The paper's figure of merit: cache lines per MAC (lower better).
+    pub fn cost(&self) -> f64 {
+        if self.macs == 0 {
+            return f64::INFINITY;
+        }
+        self.total_lines as f64 / self.macs as f64
+    }
+}
+
+/// Per-dimension footprint extent of an access under a tiling: for
+/// access `Σ c_i·x_i + k` with index `x_i` restricted to a tile of
+/// `t_i` consecutive values, the extent is `Σ |c_i|·(t_i − 1) + 1`.
+pub fn access_extent(access: &crate::poly::Affine, tile: &BTreeMap<String, u64>) -> u64 {
+    let mut span = 0i64;
+    for (name, coeff) in access.terms() {
+        let t = *tile.get(name).unwrap_or(&1);
+        span += coeff.abs() * (t as i64 - 1);
+    }
+    (span + 1) as u64
+}
+
+/// Lines touched by one rectilinear footprint, assuming the innermost
+/// (stride-1) dimension starts line-aligned: product of outer extents ×
+/// ⌈inner extent / line⌉. Dimensions with non-unit stride each start a
+/// new line (conservative; exact for the paper's layouts).
+pub fn footprint_lines(extents: &[u64], strides: &[i64], line_elems: u64) -> u64 {
+    let mut lines: u64 = 1;
+    for (d, (&e, &s)) in extents.iter().zip(strides).enumerate() {
+        let innermost = d == extents.len() - 1;
+        if innermost && s == 1 {
+            lines *= div_ceil(e as i64, line_elems as i64) as u64;
+        } else if s.unsigned_abs() < line_elems && s != 0 {
+            // Sub-line stride: consecutive positions share lines.
+            lines *= div_ceil((e as i64 - 1) * s.abs() + 1, line_elems as i64) as u64;
+        } else {
+            lines *= e;
+        }
+    }
+    lines
+}
+
+/// Evaluate one tiling of a flat contraction block. `tile` maps each
+/// index name to its inner (tile) range; missing names default to the
+/// full range (untiled).
+pub fn tiling_cost(block: &Block, tile: &BTreeMap<String, u64>, params: &CostParams) -> TileCost {
+    tiling_cost_cached(block, tile, params, None)
+}
+
+/// Like [`tiling_cost`] but with a precomputed MAC count (the MAC count
+/// does not depend on the tiling; searches compute it once).
+pub fn tiling_cost_cached(
+    block: &Block,
+    tile: &BTreeMap<String, u64>,
+    params: &CostParams,
+    macs_hint: Option<u64>,
+) -> TileCost {
+    // Effective tile: full range for unmentioned indexes.
+    let mut eff: BTreeMap<String, u64> = BTreeMap::new();
+    let mut tiles: u64 = 1;
+    for idx in &block.idxs {
+        let t = (*tile.get(&idx.name).unwrap_or(&idx.range)).clamp(1, idx.range.max(1));
+        tiles *= div_ceil(idx.range as i64, t as i64) as u64;
+        eff.insert(idx.name.clone(), t);
+    }
+
+    let full: BTreeMap<String, u64> =
+        block.idxs.iter().map(|i| (i.name.clone(), i.range)).collect();
+    let mut lines_per_tile = Vec::new();
+    let mut footprint_elems = Vec::new();
+    let mut tile_mem = 0u64;
+    let mut tiled_lines = 0u64;
+    let mut untiled_lines = 0u64;
+    for r in &block.refs {
+        if r.dir == RefDir::Temp {
+            continue;
+        }
+        let extents: Vec<u64> = r.access.iter().map(|a| access_extent(a, &eff)).collect();
+        let full_extents: Vec<u64> =
+            r.access.iter().map(|a| access_extent(a, &full)).collect();
+        let elems: u64 = extents.iter().product();
+        let lines = footprint_lines(&extents, &r.ttype.strides(), params.line_elems);
+        // A tensor is "tiled" if any extent shrank vs the untiled run.
+        // Tiled tensors are re-fetched per tile; untiled tensors (the
+        // Fig.-4 weights) are fetched once and exempt from the cap.
+        let tiled = extents != full_extents;
+        if tiled {
+            tile_mem += elems;
+            tiled_lines += lines;
+        } else {
+            untiled_lines += lines;
+        }
+        lines_per_tile.push((r.into.clone(), lines));
+        footprint_elems.push((r.into.clone(), elems));
+    }
+
+    let total_lines = tiles * tiled_lines + untiled_lines;
+    let macs = macs_hint.unwrap_or_else(|| block.iterations());
+    TileCost {
+        tile: eff,
+        lines_per_tile,
+        footprint_elems,
+        tiles,
+        total_lines,
+        macs,
+        tile_mem_elems: tile_mem,
+        feasible: tile_mem <= params.mem_cap_elems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::fig5_conv_block;
+
+    fn tile(pairs: &[(&str, u64)]) -> BTreeMap<String, u64> {
+        pairs.iter().map(|(n, v)| (n.to_string(), *v)).collect()
+    }
+
+    /// The Fig.-4(b) tiling: 3×4 output tile.
+    #[test]
+    fn fig4b_tiling_cost() {
+        let b = fig5_conv_block();
+        let c = tiling_cost(&b, &tile(&[("x", 3), ("y", 4)]), &CostParams::default());
+        // Input footprint per tile: (3+2)×(4+2)×8 = 240 elems, 30 lines.
+        // Output: 3×4×16 = 192 elems, 24 lines. Weights: 3×3×16×8 = 1152
+        // elems, 144 lines (untiled → exempt from the cap).
+        let lines: BTreeMap<&str, u64> =
+            c.lines_per_tile.iter().map(|(n, l)| (n.as_str(), *l)).collect();
+        assert_eq!(lines["I"], 30);
+        assert_eq!(lines["O"], 24);
+        assert_eq!(lines["F"], 144);
+        assert_eq!(c.tiles, 4 * 4);
+        assert_eq!(c.tile_mem_elems, 240 + 192);
+        assert!(c.feasible);
+        // MACs: valid (x,i) pairs 34, (y,j) pairs 46, ×8×16.
+        assert_eq!(c.macs, 34 * 46 * 8 * 16);
+        // Tiled tensors (I, O) are fetched per tile; the untiled weights
+        // once: 16 × (30 + 24) + 144.
+        assert_eq!(c.total_lines, 16 * (30 + 24) + 144);
+        assert!((c.cost() - 1008.0 / 200_192.0).abs() < 1e-12);
+    }
+
+    /// Untiled: single "tile" covering everything — infeasible under the
+    /// 512-element cap.
+    #[test]
+    fn untiled_is_infeasible_under_cap() {
+        let b = fig5_conv_block();
+        let c = tiling_cost(&b, &BTreeMap::new(), &CostParams::default());
+        assert_eq!(c.tiles, 1);
+        assert_eq!(c.tile_mem_elems, 0); // nothing shrank ⇒ nothing "tiled"
+        // With no tensor tiled the cap is trivially satisfied; the
+        // search layer requires at least one tiled tensor when a cap is
+        // set (tested in search.rs).
+        assert!(c.feasible);
+    }
+
+    /// Degenerate thin tiles pay halo overhead: 1×16 tile reads
+    /// (1+2)×(16+2) input elements for 1×16 outputs.
+    #[test]
+    fn thin_tiles_cost_more_than_square() {
+        let b = fig5_conv_block();
+        let p = CostParams::default();
+        let square = tiling_cost(&b, &tile(&[("x", 3), ("y", 4)]), &p);
+        let thin = tiling_cost(&b, &tile(&[("x", 1), ("y", 8)]), &p);
+        assert!(thin.feasible);
+        assert!(thin.cost() > square.cost(), "{} vs {}", thin.cost(), square.cost());
+    }
+
+    /// Tiles that do not divide evenly produce overflow tiles (rounded-up
+    /// quotient), still counted in lines.
+    #[test]
+    fn uneven_tiles_round_up() {
+        let b = fig5_conv_block();
+        let c = tiling_cost(&b, &tile(&[("x", 5), ("y", 6)]), &CostParams::default());
+        assert_eq!(c.tiles, 3 * 3); // ceil(12/5)=3, ceil(16/6)=3
+    }
+
+    #[test]
+    fn access_extent_math() {
+        use crate::poly::Affine;
+        let a = Affine::from_terms(&[("x", 1), ("i", 1)], -1);
+        let t = tile(&[("x", 3), ("i", 3)]);
+        assert_eq!(access_extent(&a, &t), 5); // (3-1)+(3-1)+1
+        let b = Affine::from_terms(&[("x", 3)], 0);
+        assert_eq!(access_extent(&b, &tile(&[("x", 4)])), 10); // 3*(4-1)+1
+    }
+
+    #[test]
+    fn footprint_lines_alignment() {
+        // (5,6,8) footprint, strides (128,8,1), line 8 → 5*6*1 = 30.
+        assert_eq!(footprint_lines(&[5, 6, 8], &[128, 8, 1], 8), 30);
+        // (3,4,16): 16 elems of stride 1 = 2 lines → 24.
+        assert_eq!(footprint_lines(&[3, 4, 16], &[256, 16, 1], 8), 24);
+        // Sub-line stride in a middle dim: (2,2) strides (4,1), line 8 →
+        // rows 0..4+2 fit one line: dim0 extent spans (2-1)*4+1=5 elems
+        // → 1 line × ceil(2/8)=1 → 1.
+        assert_eq!(footprint_lines(&[2, 2], &[4, 1], 8), 1);
+    }
+}

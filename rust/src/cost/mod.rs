@@ -1,0 +1,22 @@
+//! Cost models driving the autotiling pass (§3.3).
+//!
+//! * [`cacheline`] — the paper's Fig.-4 model: "number of cache lines
+//!   accessed, divided by the number of multiply-accumulate operations
+//!   performed", with overflow accesses counted and a cap on tile
+//!   memory. Computed analytically from the block's affine accesses
+//!   (exactly, for rectilinear footprints), and cross-checkable against
+//!   the trace-based count from the interpreter + `sim`.
+//! * [`roofline`] — the Williams et al. roofline model referenced in
+//!   §3.3: arithmetic intensity vs machine balance, used for the
+//!   TPU-style targets where bandwidth, not lines, is the resource.
+//! * [`search`] — tile-size search over a candidate space (exhaustive /
+//!   powers-of-two / divisors), with the search-space heuristics the
+//!   paper mentions.
+
+pub mod cacheline;
+pub mod roofline;
+pub mod search;
+
+pub use cacheline::{tiling_cost, CostParams, TileCost};
+pub use roofline::{MachineRoof, RooflineEstimate};
+pub use search::{best_tiling, SearchSpace, SearchStats};

@@ -1,0 +1,100 @@
+//! Roofline model (Williams, Waterman & Patterson — cited as [33] by the
+//! paper): attainable performance = min(peak compute, AI × bandwidth).
+//!
+//! Used by the TPU-style hardware targets where the resource of interest
+//! is bytes moved between HBM and VMEM rather than cache lines, and for
+//! the §Perf efficiency-ratio bookkeeping in EXPERIMENTS.md.
+
+/// Machine balance parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MachineRoof {
+    /// Peak floating-point throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// Sustained memory bandwidth (bytes/s) at the level of interest.
+    pub mem_bw: f64,
+}
+
+impl MachineRoof {
+    /// Arithmetic intensity at which compute and memory balance.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+
+    /// Attainable FLOP/s at a given arithmetic intensity (FLOP/byte).
+    pub fn attainable(&self, ai: f64) -> f64 {
+        (ai * self.mem_bw).min(self.peak_flops)
+    }
+}
+
+/// Roofline estimate for one kernel/workload.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflineEstimate {
+    pub flops: f64,
+    pub bytes: f64,
+    pub ai: f64,
+    /// Attainable FLOP/s under the roof.
+    pub attainable_flops: f64,
+    /// Lower-bound execution time (s).
+    pub min_time: f64,
+    /// True if the kernel is memory-bound at this AI.
+    pub memory_bound: bool,
+}
+
+/// Estimate the roofline position of a workload with `flops` total
+/// floating-point operations moving `bytes` total bytes.
+pub fn estimate(flops: f64, bytes: f64, roof: &MachineRoof) -> RooflineEstimate {
+    let ai = if bytes > 0.0 { flops / bytes } else { f64::INFINITY };
+    let attainable = roof.attainable(ai);
+    RooflineEstimate {
+        flops,
+        bytes,
+        ai,
+        attainable_flops: attainable,
+        min_time: (flops / roof.peak_flops).max(bytes / roof.mem_bw),
+        memory_bound: ai < roof.ridge_point(),
+    }
+}
+
+/// Efficiency of a measured run vs the roofline bound (0..1].
+pub fn efficiency(measured_time: f64, est: &RooflineEstimate) -> f64 {
+    if measured_time <= 0.0 {
+        return 0.0;
+    }
+    est.min_time / measured_time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ROOF: MachineRoof = MachineRoof { peak_flops: 1e12, mem_bw: 1e11 };
+
+    #[test]
+    fn ridge_point_balance() {
+        assert!((ROOF.ridge_point() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_bound_below_ridge() {
+        let e = estimate(1e9, 1e9, &ROOF); // AI = 1 < 10
+        assert!(e.memory_bound);
+        assert!((e.attainable_flops - 1e11).abs() / 1e11 < 1e-9);
+        // Time dominated by bytes: 1e9/1e11 = 0.01 s
+        assert!((e.min_time - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_bound_above_ridge() {
+        let e = estimate(1e12, 1e9, &ROOF); // AI = 1000 > 10
+        assert!(!e.memory_bound);
+        assert!((e.attainable_flops - 1e12).abs() / 1e12 < 1e-9);
+        assert!((e.min_time - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_ratio() {
+        let e = estimate(1e12, 1e9, &ROOF);
+        assert!((efficiency(2.0, &e) - 0.5).abs() < 1e-9);
+        assert_eq!(efficiency(0.0, &e), 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Tile-size search for the autotiling pass.
+//!
+//! §3.3: "The autotiling optimization for Stripe explores a space of
+//! tile sizes using a cost function ... Search-space heuristics, such as
+//! only considering power-of-2 dimensions to optionally improve compile
+//! performance, may also constrain the tile sizes considered."
+
+use std::collections::BTreeMap;
+
+use crate::ir::Block;
+
+use super::cacheline::{tiling_cost_cached, CostParams, TileCost};
+
+/// Candidate-generation strategy per index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchSpace {
+    /// All sizes 1..=range.
+    Exhaustive,
+    /// Powers of two ≤ range, plus the full range.
+    PowersOfTwo,
+    /// Divisors of the range (no overflow tiles).
+    Divisors,
+}
+
+impl SearchSpace {
+    pub fn candidates(self, range: u64) -> Vec<u64> {
+        match self {
+            SearchSpace::Exhaustive => (1..=range).collect(),
+            SearchSpace::PowersOfTwo => {
+                let mut v: Vec<u64> = (0..)
+                    .map(|k| 1u64 << k)
+                    .take_while(|&p| p <= range)
+                    .collect();
+                if !v.contains(&range) {
+                    v.push(range);
+                }
+                v
+            }
+            SearchSpace::Divisors => (1..=range).filter(|d| range % d == 0).collect(),
+        }
+    }
+}
+
+/// Search telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    pub evaluated: usize,
+    pub feasible: usize,
+}
+
+/// Find the lowest-cost feasible tiling over `tileable` indexes.
+///
+/// Additional constraints honored (per §3.3):
+/// * `multiple_of`: tile sizes must be even multiples of earlier
+///   vectorization/tensorization block sizes;
+/// * a tiling must actually tile something (at least one tensor
+///   footprint shrinks) when a memory cap is in force;
+/// * a combinatorial budget caps the explored space.
+pub fn best_tiling(
+    block: &Block,
+    tileable: &[String],
+    params: &CostParams,
+    space: SearchSpace,
+    multiple_of: &BTreeMap<String, u64>,
+    budget: usize,
+) -> (Option<TileCost>, SearchStats) {
+    let mut stats = SearchStats::default();
+    // Per-index candidate lists.
+    let mut cand: Vec<(String, Vec<u64>)> = Vec::new();
+    for name in tileable {
+        let Some(idx) = block.idx(name) else { continue };
+        let m = *multiple_of.get(name).unwrap_or(&1);
+        let mut c: Vec<u64> =
+            space.candidates(idx.range).into_iter().filter(|t| t % m == 0).collect();
+        if c.is_empty() {
+            c.push(idx.range);
+        }
+        cand.push((name.clone(), c));
+    }
+    if cand.is_empty() {
+        return (None, stats);
+    }
+
+    // MACs are tiling-independent; enumerate the iteration space once.
+    let macs = block.iterations();
+    let mut best: Option<TileCost> = None;
+    let mut counters = vec![0usize; cand.len()];
+    'outer: loop {
+        if stats.evaluated >= budget {
+            break;
+        }
+        let tile: BTreeMap<String, u64> = cand
+            .iter()
+            .zip(&counters)
+            .map(|((n, cs), &k)| (n.clone(), cs[k]))
+            .collect();
+        let tc = tiling_cost_cached(block, &tile, params, Some(macs));
+        stats.evaluated += 1;
+        // Require real tiling when a cap exists (Fig. 4's premise is that
+        // the whole operation does not fit in local memory).
+        let actually_tiled = tc.tile_mem_elems > 0;
+        if tc.feasible && actually_tiled {
+            stats.feasible += 1;
+            let better = match &best {
+                None => true,
+                Some(b) => tc.cost() < b.cost(),
+            };
+            if better {
+                best = Some(tc);
+            }
+        }
+        // Advance odometer.
+        let mut k = cand.len();
+        loop {
+            if k == 0 {
+                break 'outer;
+            }
+            k -= 1;
+            counters[k] += 1;
+            if counters[k] < cand[k].1.len() {
+                break;
+            }
+            counters[k] = 0;
+        }
+    }
+    (best, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::fig5_conv_block;
+
+    #[test]
+    fn candidate_spaces() {
+        assert_eq!(SearchSpace::Exhaustive.candidates(4), vec![1, 2, 3, 4]);
+        assert_eq!(SearchSpace::PowersOfTwo.candidates(12), vec![1, 2, 4, 8, 12]);
+        assert_eq!(SearchSpace::Divisors.candidates(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn search_finds_feasible_minimum() {
+        let b = fig5_conv_block();
+        let (best, stats) = best_tiling(
+            &b,
+            &["x".to_string(), "y".to_string()],
+            &CostParams::default(),
+            SearchSpace::Exhaustive,
+            &BTreeMap::new(),
+            100_000,
+        );
+        let best = best.expect("feasible tiling exists");
+        assert!(stats.evaluated == 12 * 16);
+        assert!(best.feasible);
+        assert!(best.tile_mem_elems <= 512);
+        // The winner must beat the degenerate 1×1 tiling.
+        let one = crate::cost::cacheline::tiling_cost(
+            &b,
+            &[("x".to_string(), 1), ("y".to_string(), 1)].into(),
+            &CostParams::default(),
+        );
+        assert!(best.cost() <= one.cost());
+    }
+
+    #[test]
+    fn pow2_heuristic_evaluates_fewer() {
+        let b = fig5_conv_block();
+        let (_, ex) = best_tiling(
+            &b,
+            &["x".to_string(), "y".to_string()],
+            &CostParams::default(),
+            SearchSpace::Exhaustive,
+            &BTreeMap::new(),
+            100_000,
+        );
+        let (best, p2) = best_tiling(
+            &b,
+            &["x".to_string(), "y".to_string()],
+            &CostParams::default(),
+            SearchSpace::PowersOfTwo,
+            &BTreeMap::new(),
+            100_000,
+        );
+        assert!(p2.evaluated < ex.evaluated);
+        assert!(best.is_some());
+    }
+
+    #[test]
+    fn multiple_of_constraint_respected() {
+        let b = fig5_conv_block();
+        let mult: BTreeMap<String, u64> = [("y".to_string(), 4)].into();
+        let (best, _) = best_tiling(
+            &b,
+            &["x".to_string(), "y".to_string()],
+            &CostParams::default(),
+            SearchSpace::Exhaustive,
+            &mult,
+            100_000,
+        );
+        let best = best.unwrap();
+        assert_eq!(best.tile["y"] % 4, 0);
+    }
+
+    #[test]
+    fn budget_caps_search() {
+        let b = fig5_conv_block();
+        let (_, stats) = best_tiling(
+            &b,
+            &["x".to_string(), "y".to_string()],
+            &CostParams::default(),
+            SearchSpace::Exhaustive,
+            &BTreeMap::new(),
+            10,
+        );
+        assert_eq!(stats.evaluated, 10);
+    }
+}

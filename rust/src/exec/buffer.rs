@@ -1,0 +1,193 @@
+//! Flat `f32` buffer storage with Definition-2 write semantics.
+
+use crate::ir::AggOp;
+
+/// The set of live buffers during execution. Indices into `data` are
+/// stable "buffer ids" handed out at allocation.
+#[derive(Debug, Default)]
+pub struct Buffers {
+    names: Vec<String>,
+    data: Vec<Vec<f32>>,
+    written: Vec<Vec<bool>>,
+}
+
+impl Buffers {
+    pub fn new() -> Buffers {
+        Buffers::default()
+    }
+
+    /// Allocate a zero-filled buffer of `len` elements; returns its id.
+    pub fn alloc(&mut self, name: &str, len: usize) -> usize {
+        self.names.push(name.to_string());
+        self.data.push(vec![0.0; len]);
+        self.written.push(vec![false; len]);
+        self.names.len() - 1
+    }
+
+    /// Allocate and fill with caller data (inputs/weights). Elements
+    /// count as written (reads see caller values, aggregations combine
+    /// with them).
+    pub fn alloc_init(&mut self, name: &str, values: Vec<f32>) -> usize {
+        let n = values.len();
+        self.names.push(name.to_string());
+        self.data.push(values);
+        self.written.push(vec![true; n]);
+        self.names.len() - 1
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn name_of(&self, id: usize) -> &str {
+        &self.names[id]
+    }
+
+    pub fn len_of(&self, id: usize) -> usize {
+        self.data[id].len()
+    }
+
+    pub fn count(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Read one element. Unwritten elements read as 0.0 (matching the
+    /// zero-fill; the validator flags reads-before-writes where they are
+    /// semantically suspect).
+    #[inline]
+    pub fn read(&self, id: usize, elem: i64) -> Result<f32, String> {
+        let buf = &self.data[id];
+        if elem < 0 || elem as usize >= buf.len() {
+            return Err(format!(
+                "read out of bounds: {}[{elem}] (len {})",
+                self.names[id],
+                buf.len()
+            ));
+        }
+        Ok(buf[elem as usize])
+    }
+
+    /// Write one element with Definition-2 aggregation semantics: the
+    /// first write assigns, later writes combine with `agg`. For
+    /// `AggOp::Assign`, a second write reports an error (illegal per
+    /// §3.2) unless `relaxed_assign` is set by the caller.
+    #[inline]
+    pub fn store(
+        &mut self,
+        id: usize,
+        elem: i64,
+        value: f32,
+        agg: AggOp,
+        relaxed_assign: bool,
+    ) -> Result<(), String> {
+        let buf = &mut self.data[id];
+        if elem < 0 || elem as usize >= buf.len() {
+            return Err(format!(
+                "write out of bounds: {}[{elem}] (len {})",
+                self.names[id],
+                buf.len()
+            ));
+        }
+        let e = elem as usize;
+        if self.written[id][e] {
+            if agg == AggOp::Assign && !relaxed_assign {
+                return Err(format!(
+                    "double write to assign-aggregated {}[{elem}]",
+                    self.names[id]
+                ));
+            }
+            buf[e] = agg.combine(buf[e], value);
+        } else {
+            buf[e] = value;
+            self.written[id][e] = true;
+        }
+        Ok(())
+    }
+
+    /// Reset write tracking for a buffer (used when an op legitimately
+    /// rewrites a temp, e.g. reusing scratch between ops).
+    pub fn reset_written(&mut self, id: usize) {
+        for w in &mut self.written[id] {
+            *w = false;
+        }
+    }
+
+    /// Take a snapshot of a buffer's contents.
+    pub fn snapshot(&self, id: usize) -> Vec<f32> {
+        self.data[id].clone()
+    }
+
+    /// Direct slice access (read-only).
+    pub fn slice(&self, id: usize) -> &[f32] {
+        &self.data[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_read() {
+        let mut b = Buffers::new();
+        let id = b.alloc("t", 4);
+        assert_eq!(b.read(id, 0).unwrap(), 0.0);
+        assert_eq!(b.len_of(id), 4);
+        assert_eq!(b.name_of(id), "t");
+        assert!(b.read(id, 4).is_err());
+        assert!(b.read(id, -1).is_err());
+    }
+
+    #[test]
+    fn first_write_assigns_then_aggregates() {
+        let mut b = Buffers::new();
+        let id = b.alloc("t", 1);
+        // First write with Max semantics assigns even below the default 0.
+        b.store(id, 0, -5.0, AggOp::Max, false).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), -5.0);
+        b.store(id, 0, -7.0, AggOp::Max, false).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), -5.0);
+        b.store(id, 0, 3.0, AggOp::Max, false).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn add_aggregation_accumulates() {
+        let mut b = Buffers::new();
+        let id = b.alloc("t", 1);
+        for _ in 0..4 {
+            b.store(id, 0, 2.5, AggOp::Add, false).unwrap();
+        }
+        assert_eq!(b.read(id, 0).unwrap(), 10.0);
+    }
+
+    #[test]
+    fn double_assign_is_error() {
+        let mut b = Buffers::new();
+        let id = b.alloc("t", 1);
+        b.store(id, 0, 1.0, AggOp::Assign, false).unwrap();
+        assert!(b.store(id, 0, 2.0, AggOp::Assign, false).is_err());
+        // Relaxed mode permits it (used for inout updates).
+        assert!(b.store(id, 0, 2.0, AggOp::Assign, true).is_ok());
+        assert_eq!(b.read(id, 0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn init_buffers_count_as_written() {
+        let mut b = Buffers::new();
+        let id = b.alloc_init("w", vec![1.0, 2.0]);
+        b.store(id, 0, 5.0, AggOp::Add, false).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), 6.0);
+        assert_eq!(b.read(id, 1).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn reset_written_allows_reassign() {
+        let mut b = Buffers::new();
+        let id = b.alloc("t", 1);
+        b.store(id, 0, 1.0, AggOp::Assign, false).unwrap();
+        b.reset_written(id);
+        b.store(id, 0, 9.0, AggOp::Assign, false).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), 9.0);
+    }
+}

@@ -1,0 +1,552 @@
+//! The interpreter proper: executes a [`Program`] over real buffers.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{AggOp, Block, BufKind, Program, RefDir, Statement};
+use crate::poly::Affine;
+
+use super::buffer::Buffers;
+use super::trace::{AccessEvent, NullSink, Sink};
+
+/// Execution options.
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// Permit multiple writes through `assign` refinements (needed for
+    /// inout-style updates some passes produce; default off so Def-2
+    /// violations surface as errors).
+    pub relaxed_assign: bool,
+    /// Upper bound on executed leaf iterations (runaway guard).
+    pub max_iterations: u64,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { relaxed_assign: false, max_iterations: 200_000_000 }
+    }
+}
+
+/// Execution failure.
+#[derive(Debug)]
+pub struct ExecError {
+    pub block: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "exec error in {}: {}", self.block, self.message)
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// A resolved buffer view during execution.
+#[derive(Debug, Clone)]
+struct View {
+    buf: usize,
+    /// Flat element offset of the view origin.
+    offset: i64,
+    /// Physical strides per logical dimension.
+    strides: Vec<i64>,
+    agg: AggOp,
+}
+
+/// Run `program` with the given inputs/weights (`name -> values`).
+/// Returns the output buffers (`name -> values`). Uses a null sink.
+///
+/// Routes through the plan-compiled fast path (`exec::plan`) unless the
+/// program uses `Special` statements, which only the naive interpreter
+/// executes.
+pub fn run_program(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
+    let mut has_special = false;
+    program.main.walk(&mut |b| {
+        has_special |= b.stmts.iter().any(|s| matches!(s, Statement::Special(_)));
+    });
+    if has_special {
+        run_program_sink(program, inputs, &ExecOptions::default(), &mut NullSink)
+    } else {
+        super::plan::run_program_planned(program, inputs, &ExecOptions::default(), &mut NullSink)
+    }
+}
+
+/// Run with explicit options and an access sink.
+pub fn run_program_sink(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+    sink: &mut dyn Sink,
+) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
+    let mut bufs = Buffers::new();
+    // Allocate program buffers.
+    for b in &program.buffers {
+        let span = b.ttype.span_elems() as usize;
+        match b.kind {
+            BufKind::Input | BufKind::Weight => {
+                let vals = inputs.get(&b.name).ok_or_else(|| ExecError {
+                    block: "main".into(),
+                    message: format!("missing input buffer {:?}", b.name),
+                })?;
+                if vals.len() != span {
+                    return Err(ExecError {
+                        block: "main".into(),
+                        message: format!(
+                            "input {:?} has {} elements, expected {span}",
+                            b.name,
+                            vals.len()
+                        ),
+                    });
+                }
+                bufs.alloc_init(&b.name, vals.clone());
+            }
+            BufKind::Output | BufKind::Temp => {
+                bufs.alloc(&b.name, span);
+            }
+        }
+    }
+    // Root scope from main's refinements.
+    let mut scope: BTreeMap<String, View> = BTreeMap::new();
+    for r in &program.main.refs {
+        let (buf, base) = if r.dir == RefDir::Temp {
+            // main-level temps may alias program Temp buffers by name, or
+            // be fresh allocations.
+            match bufs.id_of(&r.into) {
+                Some(id) => (id, 0i64),
+                None => (bufs.alloc(&r.into, r.ttype.span_elems() as usize), 0i64),
+            }
+        } else {
+            let id = bufs.id_of(&r.from).ok_or_else(|| ExecError {
+                block: "main".into(),
+                message: format!("refinement {:?}: unknown buffer {:?}", r.into, r.from),
+            })?;
+            // main refinement accesses must be constant (no idxs in scope)
+            let base: i64 = r
+                .access
+                .iter()
+                .zip(r.ttype.strides())
+                .map(|(a, s)| a.offset * s)
+                .sum();
+            (id, base)
+        };
+        scope.insert(
+            r.into.clone(),
+            View { buf, offset: base, strides: r.ttype.strides(), agg: r.agg },
+        );
+    }
+
+    let mut exec = Exec { bufs: &mut bufs, opts, sink, executed: 0, scratch: Default::default() };
+    let empty_env = IdxEnv::default();
+    for st in &program.main.stmts {
+        if let Statement::Block(b) = st {
+            exec.sink.on_op_boundary(&b.name);
+        }
+        exec.exec_stmt(st, &empty_env, &scope, &program.main.name)?;
+    }
+
+    // Collect outputs.
+    let mut out = BTreeMap::new();
+    for b in program.buffers_of(BufKind::Output) {
+        let id = bufs.id_of(&b.name).unwrap();
+        out.insert(b.name.clone(), bufs.snapshot(id));
+    }
+    Ok(out)
+}
+
+/// Index bindings for one block level: names and values, including
+/// passed indexes.
+#[derive(Debug, Default, Clone)]
+struct IdxEnv {
+    names: Vec<String>,
+    vals: Vec<i64>,
+}
+
+struct Exec<'a> {
+    bufs: &'a mut Buffers,
+    opts: &'a ExecOptions,
+    sink: &'a mut dyn Sink,
+    executed: u64,
+    /// Block-local scratch allocations, reused across iterations (a
+    /// fresh allocation per iteration would both leak memory and make
+    /// every scratch access a cold cache-sim miss). Keyed by
+    /// (block path, refinement name); write-tracking is reset on reuse
+    /// so Definition-2 semantics are per-iteration fresh.
+    scratch: std::collections::BTreeMap<(String, String), usize>,
+}
+
+impl<'a> Exec<'a> {
+    fn exec_stmt(
+        &mut self,
+        st: &Statement,
+        idx_env: &IdxEnv,
+        scope: &BTreeMap<String, View>,
+        path: &str,
+    ) -> Result<(), ExecError> {
+        match st {
+            Statement::Block(b) => self.exec_block(b, idx_env, scope, path),
+            other => Err(ExecError {
+                block: path.to_string(),
+                message: format!(
+                    "scalar statement outside an iterating block: {other:?} \
+                     (main-level statements must be blocks)"
+                ),
+            }),
+        }
+    }
+
+    fn exec_block(
+        &mut self,
+        b: &Block,
+        parent_env: &IdxEnv,
+        parent_scope: &BTreeMap<String, View>,
+        path: &str,
+    ) -> Result<(), ExecError> {
+        let path = format!("{path}/{}", b.name);
+        let err = |m: String| ExecError { block: path.clone(), message: m };
+
+        // Split indexes into ranged and passed.
+        let mut names: Vec<String> = Vec::with_capacity(b.idxs.len());
+        let mut ranged: Vec<(usize, u64)> = Vec::new(); // (slot, range)
+        let mut passed: Vec<(usize, &Affine)> = Vec::new();
+        for idx in &b.idxs {
+            let slot = names.len();
+            names.push(idx.name.clone());
+            match &idx.affine {
+                None => ranged.push((slot, idx.range)),
+                Some(a) => passed.push((slot, a)),
+            }
+        }
+        let mut vals = vec![0i64; names.len()];
+        // Passed indexes are constant w.r.t. this block's own iteration.
+        for (slot, a) in &passed {
+            vals[*slot] = a.eval_slices(&parent_env.names, &parent_env.vals);
+        }
+
+        // Iterate the rectilinear box; filter by constraints.
+        let mut counters = vec![0u64; ranged.len()];
+        'outer: loop {
+            self.executed += 1;
+            if self.executed > self.opts.max_iterations {
+                return Err(err("iteration budget exceeded".into()));
+            }
+            for (k, (slot, _)) in ranged.iter().enumerate() {
+                vals[*slot] = counters[k] as i64;
+            }
+            let satisfied = b
+                .constraints
+                .iter()
+                .all(|c| c.eval_slices(&names, &vals) >= 0);
+            if satisfied {
+                self.exec_iteration(b, &names, &vals, parent_scope, &path)?;
+            }
+            // Advance odometer (last index innermost).
+            let mut k = ranged.len();
+            loop {
+                if k == 0 {
+                    break 'outer;
+                }
+                k -= 1;
+                counters[k] += 1;
+                if counters[k] < ranged[k].1 {
+                    break;
+                }
+                counters[k] = 0;
+            }
+            if ranged.is_empty() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_iteration(
+        &mut self,
+        b: &Block,
+        names: &[String],
+        vals: &[i64],
+        parent_scope: &BTreeMap<String, View>,
+        path: &str,
+    ) -> Result<(), ExecError> {
+        let err = |m: String| ExecError { block: path.to_string(), message: m };
+        // Resolve refinements at this iteration point.
+        let mut scope: BTreeMap<String, View> = BTreeMap::new();
+        for r in &b.refs {
+            let view = if r.dir == RefDir::Temp {
+                let key = (path.to_string(), r.into.clone());
+                let id = match self.scratch.get(&key) {
+                    Some(&id) => {
+                        self.bufs.reset_written(id);
+                        id
+                    }
+                    None => {
+                        let id = self
+                            .bufs
+                            .alloc(&format!("{path}/{}", r.into), r.ttype.span_elems() as usize);
+                        self.scratch.insert(key, id);
+                        id
+                    }
+                };
+                View { buf: id, offset: 0, strides: r.ttype.strides(), agg: r.agg }
+            } else {
+                let pv = parent_scope
+                    .get(&r.from)
+                    .ok_or_else(|| err(format!("no parent buffer {:?}", r.from)))?;
+                if pv.strides.len() != r.access.len() {
+                    return Err(err(format!(
+                        "refinement {:?}: access rank {} vs parent rank {}",
+                        r.into,
+                        r.access.len(),
+                        pv.strides.len()
+                    )));
+                }
+                let mut offset = pv.offset;
+                for (a, s) in r.access.iter().zip(&pv.strides) {
+                    offset += a.eval_slices(names, vals) * s;
+                }
+                View { buf: pv.buf, offset, strides: r.ttype.strides(), agg: r.agg }
+            };
+            scope.insert(r.into.clone(), view);
+        }
+
+        // Execute the statement list serially.
+        let mut scalars: BTreeMap<&str, f32> = BTreeMap::new();
+        let this_env = IdxEnv { names: names.to_vec(), vals: vals.to_vec() };
+        for st in &b.stmts {
+            match st {
+                Statement::Load { from, into } => {
+                    let v = scope.get(from).ok_or_else(|| err(format!("load: no buffer {from:?}")))?;
+                    self.sink.on_access(AccessEvent { buf: v.buf, elem: v.offset, write: false });
+                    let value = self.bufs.read(v.buf, v.offset).map_err(err)?;
+                    scalars.insert(into, value);
+                }
+                Statement::Store { from, into } => {
+                    let value = *scalars
+                        .get(from.as_str())
+                        .ok_or_else(|| err(format!("store: undefined scalar {from:?}")))?;
+                    let v = scope.get(into).ok_or_else(|| err(format!("store: no buffer {into:?}")))?;
+                    self.sink.on_access(AccessEvent { buf: v.buf, elem: v.offset, write: true });
+                    self.bufs
+                        .store(v.buf, v.offset, value, v.agg, self.opts.relaxed_assign)
+                        .map_err(err)?;
+                }
+                Statement::Intrinsic { op, inputs, output } => {
+                    let mut args = [0f32; 3];
+                    if inputs.len() != op.arity() {
+                        return Err(err(format!("intrinsic {} arity mismatch", op.name())));
+                    }
+                    for (i, name) in inputs.iter().enumerate() {
+                        args[i] = *scalars
+                            .get(name.as_str())
+                            .ok_or_else(|| err(format!("undefined scalar {name:?}")))?;
+                    }
+                    scalars.insert(output, op.eval(&args[..inputs.len()]));
+                }
+                Statement::Constant { output, value } => {
+                    scalars.insert(output, *value as f32);
+                }
+                Statement::Block(cb) => {
+                    self.exec_block(cb, &this_env, &scope, path)?;
+                }
+                Statement::Special(sp) => {
+                    self.exec_special(sp, &scope, path)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a special function. The library ships `copy`, `zero`, and
+    /// `fill` (others lower to blocks in this reproduction; scatter and
+    /// gather are exercised in tests).
+    fn exec_special(
+        &mut self,
+        sp: &crate::ir::Special,
+        scope: &BTreeMap<String, View>,
+        path: &str,
+    ) -> Result<(), ExecError> {
+        let err = |m: String| ExecError { block: path.to_string(), message: m };
+        match sp.name.as_str() {
+            // fill(out) value=v : set the view's origin element.
+            "fill" => {
+                let v: f32 = sp
+                    .attrs
+                    .get("value")
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| err("fill requires numeric value attr".into()))?;
+                let out = sp.outputs.first().ok_or_else(|| err("fill needs an output".into()))?;
+                let view = scope.get(out).ok_or_else(|| err(format!("no buffer {out:?}")))?;
+                self.sink.on_access(AccessEvent { buf: view.buf, elem: view.offset, write: true });
+                self.bufs
+                    .store(view.buf, view.offset, v, view.agg, true)
+                    .map_err(err)?;
+                Ok(())
+            }
+            other => Err(err(format!("unknown special function {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{contraction, fig5_conv_block, identity_access, Operand};
+    use crate::ir::{Buffer, DType, IntrOp, Program, TensorType};
+
+    /// Reference conv for the Fig.-5 workload, in plain Rust.
+    fn ref_conv(i: &[f32], f: &[f32]) -> Vec<f32> {
+        let (h, w, ci, co) = (12usize, 16usize, 8usize, 16usize);
+        let mut o = vec![0f32; h * w * co];
+        for x in 0..h {
+            for y in 0..w {
+                for k in 0..co {
+                    let mut acc = 0f32;
+                    for di in 0..3usize {
+                        for dj in 0..3usize {
+                            let xx = x as i64 + di as i64 - 1;
+                            let yy = y as i64 + dj as i64 - 1;
+                            if xx < 0 || xx >= h as i64 || yy < 0 || yy >= w as i64 {
+                                continue;
+                            }
+                            for c in 0..ci {
+                                let iv = i[(xx as usize * w + yy as usize) * ci + c];
+                                let fv = f[((di * 3 + dj) * co + k) * ci + c];
+                                acc += iv * fv;
+                            }
+                        }
+                    }
+                    o[(x * w + y) * co + k] = acc;
+                }
+            }
+        }
+        o
+    }
+
+    fn conv_program() -> Program {
+        let mut p = Program::new(
+            "conv",
+            vec![
+                Buffer {
+                    name: "I".into(),
+                    kind: BufKind::Input,
+                    ttype: TensorType::contiguous(DType::F32, &[12, 16, 8]),
+                },
+                Buffer {
+                    name: "F".into(),
+                    kind: BufKind::Weight,
+                    ttype: TensorType::contiguous(DType::F32, &[3, 3, 16, 8]),
+                },
+                Buffer {
+                    name: "O".into(),
+                    kind: BufKind::Output,
+                    ttype: TensorType::contiguous(DType::F32, &[12, 16, 16]),
+                },
+            ],
+        );
+        let mut conv = fig5_conv_block();
+        // Use f32 leaf types (the builder's Fig.-5 version uses i8 for
+        // print fidelity; execution semantics are identical).
+        for r in &mut conv.refs {
+            r.ttype.dtype = DType::F32;
+        }
+        p.main.stmts.push(Statement::Block(Box::new(conv)));
+        p
+    }
+
+    #[test]
+    fn conv_matches_reference() {
+        let p = conv_program();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let i: Vec<f32> = rng.normal_vec(12 * 16 * 8, 1.0);
+        let f: Vec<f32> = rng.normal_vec(3 * 3 * 16 * 8, 0.5);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("I".to_string(), i.clone());
+        inputs.insert("F".to_string(), f.clone());
+        let out = run_program(&p, &inputs).unwrap();
+        let got = &out["O"];
+        let want = ref_conv(&i, &f);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn elementwise_relu_runs() {
+        let t = TensorType::contiguous(DType::F32, &[8]);
+        let mut p = Program::new(
+            "relu",
+            vec![
+                Buffer { name: "I".into(), kind: BufKind::Input, ttype: t.clone() },
+                Buffer { name: "O".into(), kind: BufKind::Output, ttype: t.clone() },
+            ],
+        );
+        let b = crate::ir::builder::elementwise_unary(
+            "relu",
+            &[("x", 8)],
+            Operand::new("O", identity_access(&["x"]), &t),
+            Operand::new("I", identity_access(&["x"]), &t),
+            &[IntrOp::Relu],
+        );
+        p.main.stmts.push(Statement::Block(Box::new(b)));
+        let mut inputs = BTreeMap::new();
+        inputs.insert("I".to_string(), vec![-2.0, -1.0, 0.0, 1.0, 2.0, -3.0, 4.0, -5.0]);
+        let out = run_program(&p, &inputs).unwrap();
+        assert_eq!(out["O"], vec![0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_first_write_assigns() {
+        // O[x] = max over w:2 of I[2x + w], with negative inputs —
+        // correct only if the first write assigns (not max against 0).
+        let ti = TensorType::contiguous(DType::F32, &[8]);
+        let to = TensorType::contiguous(DType::F32, &[4]);
+        let mut p = Program::new(
+            "mp",
+            vec![
+                Buffer { name: "I".into(), kind: BufKind::Input, ttype: ti.clone() },
+                Buffer { name: "O".into(), kind: BufKind::Output, ttype: to.clone() },
+            ],
+        );
+        let b = contraction(
+            "maxpool",
+            &[("x", 4), ("w", 2)],
+            vec![],
+            Operand::new("O", vec![Affine::var("x")], &to),
+            AggOp::Max,
+            &[Operand::new(
+                "I",
+                vec![Affine::from_terms(&[("x", 2), ("w", 1)], 0)],
+                &ti,
+            )],
+            IntrOp::Mul,
+        );
+        p.main.stmts.push(Statement::Block(Box::new(b)));
+        let mut inputs = BTreeMap::new();
+        inputs.insert("I".to_string(), vec![-5.0, -3.0, -1.0, -2.0, 7.0, 1.0, -4.0, -6.0]);
+        let out = run_program(&p, &inputs).unwrap();
+        assert_eq!(out["O"], vec![-3.0, -1.0, 7.0, -4.0]);
+    }
+
+    #[test]
+    fn missing_input_is_error() {
+        let p = conv_program();
+        let e = run_program(&p, &BTreeMap::new()).unwrap_err();
+        assert!(e.message.contains("missing input"));
+    }
+
+    #[test]
+    fn trace_sink_sees_conv_footprint() {
+        let p = conv_program();
+        let mut rng = crate::util::rng::Rng::new(2);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("I".to_string(), rng.normal_vec(12 * 16 * 8, 1.0));
+        inputs.insert("F".to_string(), rng.normal_vec(3 * 3 * 16 * 8, 1.0));
+        let mut sink = super::super::trace::RecordingSink::default();
+        run_program_sink(&p, &inputs, &ExecOptions::default(), &mut sink).unwrap();
+        // Every output element is written; every input element read.
+        assert_eq!(sink.elements_written(2).len(), 12 * 16 * 16);
+        assert_eq!(sink.elements_read(0).len(), 12 * 16 * 8);
+        assert_eq!(sink.boundaries.len(), 1);
+    }
+}

@@ -1,0 +1,31 @@
+//! Stripe interpreter — the semantic executor.
+//!
+//! The interpreter executes Stripe IR directly over real `f32` buffers,
+//! implementing Definition 2's semantics exactly:
+//!
+//! * iterations of a block are executed (here: serially, in
+//!   lexicographic order — any order is legal by construction);
+//! * the first write to a buffer element *assigns* regardless of the
+//!   aggregation operation; subsequent writes combine with the
+//!   refinement's aggregation (`written` bitmasks track this);
+//! * statements within one iteration run serially.
+//!
+//! The interpreter is the ground truth that optimization passes are
+//! verified against ("automatic rewrite[s] ... must be proven
+//! semantically equivalent", §3.1.2): `passes::equiv` runs a program
+//! before and after a rewrite and compares outputs bit-for-bit (modulo
+//! aggregation reassociation tolerance).
+//!
+//! It also doubles as the access-trace generator: an [`Sink`]
+//! observes every element-granularity load/store, feeding the cache
+//! simulator (`sim`) and the footprint renderings of Figures 2–4.
+
+pub mod buffer;
+pub mod interp;
+pub mod plan;
+pub mod trace;
+
+pub use buffer::Buffers;
+pub use interp::{run_program, run_program_sink, ExecError, ExecOptions};
+pub use plan::run_program_planned;
+pub use trace::{AccessEvent, NullSink, RecordingSink, Sink};

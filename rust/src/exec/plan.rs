@@ -1,0 +1,568 @@
+//! Plan-compiled execution: the interpreter's optimized hot path.
+//!
+//! The naive interpreter (`interp.rs`) resolves names through string
+//! maps and evaluates affine polynomials by term lookup *per
+//! iteration*. This module compiles each block once into a [`Plan`]
+//! with everything slot-resolved:
+//!
+//! * scalars → register indices into a flat `Vec<f32>`;
+//! * refinements → parent-ref slots, with per-iteration view offsets
+//!   reduced to **one dot product** (`flat_coeffs · idx_vals + base`) by
+//!   folding the per-dimension accesses through the parent strides;
+//! * constraints → dense coefficient rows over the index slots;
+//! * passed indexes → coefficient rows over the *parent's* slots;
+//! * child blocks → nested plans (built once, reused every iteration).
+//!
+//! Semantics are identical to `interp.rs` (Definition-2 first-write-
+//! assign aggregation, serial statement order, OOB checks); the perf
+//! suite asserts equivalence and EXPERIMENTS.md §Perf records the
+//! before/after.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{AggOp, Block, BufKind, IntrOp, Program, RefDir, Statement};
+use crate::poly::Affine;
+
+use super::buffer::Buffers;
+use super::interp::{ExecError, ExecOptions};
+use super::trace::{AccessEvent, Sink};
+
+/// A compiled refinement.
+#[derive(Debug, Clone)]
+struct PlanRef {
+    /// Slot of the parent view in the parent's ref array (`None` for a
+    /// block-local Temp allocation).
+    parent_slot: Option<usize>,
+    /// Per-parent-dimension access: dense coeffs over local idx slots +
+    /// constant.
+    access: Vec<(Vec<i64>, i64)>,
+    /// Child view strides.
+    strides: Vec<i64>,
+    agg: AggOp,
+    /// Allocation span for temps.
+    span: usize,
+}
+
+/// A compiled statement.
+#[derive(Debug, Clone)]
+enum PStmt {
+    Load { reg: usize, ref_slot: usize },
+    Store { reg: usize, ref_slot: usize },
+    Intr { op: IntrOp, args: [usize; 3], n: usize, out: usize },
+    Const { out: usize, val: f32 },
+    Child(usize),
+    Special(crate::ir::Special),
+}
+
+/// A compiled block.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    name: String,
+    /// Ranged indexes: (slot, range).
+    ranged: Vec<(usize, u64)>,
+    /// Passed indexes: (slot, coeffs over parent slots, offset).
+    passed: Vec<(usize, Vec<i64>, i64)>,
+    n_idxs: usize,
+    /// Constraints as dense rows over local slots.
+    constraints: Vec<(Vec<i64>, i64)>,
+    refs: Vec<PlanRef>,
+    stmts: Vec<PStmt>,
+    n_regs: usize,
+    children: Vec<Plan>,
+}
+
+fn dense(a: &Affine, names: &[String]) -> Result<(Vec<i64>, i64), String> {
+    let mut row = vec![0i64; names.len()];
+    for (v, c) in a.terms() {
+        let slot = names
+            .iter()
+            .position(|n| n == v)
+            .ok_or_else(|| format!("unknown index {v:?}"))?;
+        row[slot] = c;
+    }
+    Ok((row, a.offset))
+}
+
+impl Plan {
+    /// Compile `block` whose refinements resolve against the parent's
+    /// ref names (`parent_refs[i] = into-name`) and whose passed
+    /// indexes reference `parent_idx_names`.
+    pub fn build(
+        block: &Block,
+        parent_refs: &[String],
+        parent_idx_names: &[String],
+    ) -> Result<Plan, String> {
+        let names: Vec<String> = block.idxs.iter().map(|i| i.name.clone()).collect();
+        let mut ranged = Vec::new();
+        let mut passed = Vec::new();
+        for (slot, idx) in block.idxs.iter().enumerate() {
+            match &idx.affine {
+                None => ranged.push((slot, idx.range)),
+                Some(a) => {
+                    let (row, off) = dense(a, parent_idx_names)
+                        .map_err(|e| format!("{}: passed {}: {e}", block.name, idx.name))?;
+                    passed.push((slot, row, off));
+                }
+            }
+        }
+        let mut constraints = Vec::new();
+        for c in &block.constraints {
+            constraints
+                .push(dense(c, &names).map_err(|e| format!("{}: constraint: {e}", block.name))?);
+        }
+        let mut refs = Vec::new();
+        let mut ref_names: Vec<String> = Vec::new();
+        for r in &block.refs {
+            let parent_slot = if r.dir == RefDir::Temp {
+                None
+            } else {
+                Some(
+                    parent_refs
+                        .iter()
+                        .position(|n| *n == r.from)
+                        .ok_or_else(|| format!("{}: no parent buffer {:?}", block.name, r.from))?,
+                )
+            };
+            let mut access = Vec::new();
+            for a in &r.access {
+                access.push(
+                    dense(a, &names).map_err(|e| format!("{}: access: {e}", block.name))?,
+                );
+            }
+            refs.push(PlanRef {
+                parent_slot,
+                access,
+                strides: r.ttype.strides(),
+                agg: r.agg,
+                span: r.ttype.span_elems() as usize,
+            });
+            ref_names.push(r.into.clone());
+        }
+        // Scalars → registers.
+        let mut regs: BTreeMap<String, usize> = BTreeMap::new();
+        let reg = |name: &str, regs: &mut BTreeMap<String, usize>| {
+            let next = regs.len();
+            *regs.entry(name.to_string()).or_insert(next)
+        };
+        let ref_slot = |name: &str| -> Result<usize, String> {
+            ref_names
+                .iter()
+                .position(|n| n == name)
+                .ok_or_else(|| format!("{}: undeclared buffer {name:?}", block.name))
+        };
+        let mut stmts = Vec::new();
+        let mut children = Vec::new();
+        for st in &block.stmts {
+            match st {
+                Statement::Load { from, into } => stmts.push(PStmt::Load {
+                    reg: reg(into, &mut regs),
+                    ref_slot: ref_slot(from)?,
+                }),
+                Statement::Store { from, into } => stmts.push(PStmt::Store {
+                    reg: *regs
+                        .get(from)
+                        .ok_or_else(|| format!("{}: undefined scalar {from:?}", block.name))?,
+                    ref_slot: ref_slot(into)?,
+                }),
+                Statement::Intrinsic { op, inputs, output } => {
+                    let mut args = [0usize; 3];
+                    for (i, a) in inputs.iter().enumerate() {
+                        args[i] = *regs
+                            .get(a)
+                            .ok_or_else(|| format!("{}: undefined scalar {a:?}", block.name))?;
+                    }
+                    stmts.push(PStmt::Intr {
+                        op: *op,
+                        args,
+                        n: inputs.len(),
+                        out: reg(output, &mut regs),
+                    });
+                }
+                Statement::Constant { output, value } => stmts.push(PStmt::Const {
+                    out: reg(output, &mut regs),
+                    val: *value as f32,
+                }),
+                Statement::Block(cb) => {
+                    let child = Plan::build(cb, &ref_names, &names)?;
+                    children.push(child);
+                    stmts.push(PStmt::Child(children.len() - 1));
+                }
+                Statement::Special(sp) => stmts.push(PStmt::Special(sp.clone())),
+            }
+        }
+        Ok(Plan {
+            name: block.name.clone(),
+            ranged,
+            passed,
+            n_idxs: names.len(),
+            constraints,
+            refs,
+            stmts,
+            n_regs: regs.len(),
+            children,
+        })
+    }
+}
+
+/// Runtime view (same meaning as interp::View, duplicated to keep the
+/// two paths independent).
+#[derive(Debug, Clone)]
+struct View {
+    buf: usize,
+    offset: i64,
+    agg: AggOp,
+}
+
+struct PlanExec<'a, S: Sink> {
+    bufs: &'a mut Buffers,
+    opts: &'a ExecOptions,
+    sink: &'a mut S,
+    executed: u64,
+    /// Scratch pool keyed by (plan identity, ref slot).
+    scratch: BTreeMap<(usize, usize), usize>,
+}
+
+/// Run a program through plan compilation. Drop-in equivalent of
+/// `interp::run_program_sink` for programs whose main-level statements
+/// are blocks.
+pub fn run_program_planned<S: Sink>(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+    sink: &mut S,
+) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let mut bufs = Buffers::new();
+    for b in &program.buffers {
+        let span = b.ttype.span_elems() as usize;
+        match b.kind {
+            BufKind::Input | BufKind::Weight => {
+                let vals = inputs
+                    .get(&b.name)
+                    .ok_or_else(|| err(format!("missing input buffer {:?}", b.name)))?;
+                if vals.len() != span {
+                    return Err(err(format!(
+                        "input {:?} has {} elements, expected {span}",
+                        b.name,
+                        vals.len()
+                    )));
+                }
+                bufs.alloc_init(&b.name, vals.clone());
+            }
+            BufKind::Output | BufKind::Temp => {
+                bufs.alloc(&b.name, span);
+            }
+        }
+    }
+    // Root scope.
+    let mut root_views: Vec<View> = Vec::new();
+    let mut root_names: Vec<String> = Vec::new();
+    for r in &program.main.refs {
+        let (buf, base) = if r.dir == RefDir::Temp {
+            match bufs.id_of(&r.into) {
+                Some(id) => (id, 0i64),
+                None => (bufs.alloc(&r.into, r.ttype.span_elems() as usize), 0i64),
+            }
+        } else {
+            let id = bufs
+                .id_of(&r.from)
+                .ok_or_else(|| err(format!("unknown buffer {:?}", r.from)))?;
+            let base: i64 = r
+                .access
+                .iter()
+                .zip(r.ttype.strides())
+                .map(|(a, s)| a.offset * s)
+                .sum();
+            (id, base)
+        };
+        root_views.push(View { buf, offset: base, agg: r.agg });
+        root_names.push(r.into.clone());
+    }
+    let root_strides: Vec<Vec<i64>> =
+        program.main.refs.iter().map(|r| r.ttype.strides()).collect();
+
+    let mut exec = PlanExec {
+        bufs: &mut bufs,
+        opts,
+        sink,
+        executed: 0,
+        scratch: BTreeMap::new(),
+    };
+    for st in &program.main.stmts {
+        let Statement::Block(b) = st else {
+            return Err(err("main-level statements must be blocks".into()));
+        };
+        exec.sink.on_op_boundary(&b.name);
+        let plan = Plan::build(b, &root_names, &[])
+            .map_err(|m| ExecError { block: b.name.clone(), message: m })?;
+        exec.run(&plan, &root_views, &root_strides, &[])?;
+    }
+    let mut out = BTreeMap::new();
+    for b in program.buffers_of(BufKind::Output) {
+        let id = bufs.id_of(&b.name).unwrap();
+        out.insert(b.name.clone(), bufs.snapshot(id));
+    }
+    Ok(out)
+}
+
+impl<'a, S: Sink> PlanExec<'a, S> {
+    fn run(
+        &mut self,
+        plan: &Plan,
+        parent_views: &[View],
+        parent_strides: &[Vec<i64>],
+        parent_vals: &[i64],
+    ) -> Result<(), ExecError> {
+        let err = |m: String| ExecError { block: plan.name.clone(), message: m };
+        let mut vals = vec![0i64; plan.n_idxs];
+        for (slot, coeffs, off) in &plan.passed {
+            let mut v = *off;
+            for (c, pv) in coeffs.iter().zip(parent_vals) {
+                v += c * pv;
+            }
+            vals[*slot] = v;
+        }
+
+        // Fold each ref's per-dim access through the parent strides into
+        // one flat coefficient row + base (done once per plan run).
+        let n_refs = plan.refs.len();
+        let mut flat_coeffs: Vec<Vec<i64>> = Vec::with_capacity(n_refs);
+        let mut flat_base: Vec<i64> = Vec::with_capacity(n_refs);
+        let mut views: Vec<View> = Vec::with_capacity(n_refs);
+        let mut strides_out: Vec<Vec<i64>> = Vec::with_capacity(n_refs);
+        let plan_key = plan as *const Plan as usize;
+        for (slot, r) in plan.refs.iter().enumerate() {
+            match r.parent_slot {
+                Some(ps) => {
+                    let pv = &parent_views[ps];
+                    let pstr = &parent_strides[ps];
+                    if pstr.len() != r.access.len() {
+                        return Err(err(format!(
+                            "ref #{slot}: access rank {} vs parent rank {}",
+                            r.access.len(),
+                            pstr.len()
+                        )));
+                    }
+                    let mut row = vec![0i64; plan.n_idxs];
+                    let mut base = pv.offset;
+                    for ((coeffs, off), s) in r.access.iter().zip(pstr) {
+                        base += off * s;
+                        for (k, c) in coeffs.iter().enumerate() {
+                            row[k] += c * s;
+                        }
+                    }
+                    flat_coeffs.push(row);
+                    flat_base.push(base);
+                    views.push(View { buf: pv.buf, offset: base, agg: r.agg });
+                }
+                None => {
+                    let key = (plan_key, slot);
+                    let id = match self.scratch.get(&key) {
+                        Some(&id) => {
+                            self.bufs.reset_written(id);
+                            id
+                        }
+                        None => {
+                            let id = self.bufs.alloc("scratch", r.span);
+                            self.scratch.insert(key, id);
+                            id
+                        }
+                    };
+                    flat_coeffs.push(vec![0i64; plan.n_idxs]);
+                    flat_base.push(0);
+                    views.push(View { buf: id, offset: 0, agg: r.agg });
+                }
+            }
+            strides_out.push(r.strides.clone());
+        }
+
+        // Strength reduction: maintain view offsets and constraint
+        // values incrementally as the odometer steps (one add per
+        // quantity per step instead of a dot product per iteration).
+        // Initial values at the all-zeros point (passed idxs already in
+        // `vals`).
+        let n_ranged = plan.ranged.len();
+        let dot = |row: &[i64], vals: &[i64]| -> i64 {
+            let mut acc = 0;
+            for (c, v) in row.iter().zip(vals) {
+                acc += c * v;
+            }
+            acc
+        };
+        let mut cur_offsets: Vec<i64> = (0..n_refs)
+            .map(|s| flat_base[s] + dot(&flat_coeffs[s], &vals))
+            .collect();
+        let mut cur_cons: Vec<i64> = plan
+            .constraints
+            .iter()
+            .map(|(row, off)| off + dot(row, &vals))
+            .collect();
+        // Per ranged-counter deltas.
+        let ref_delta: Vec<Vec<i64>> = (0..n_refs)
+            .map(|s| plan.ranged.iter().map(|(slot, _)| flat_coeffs[s][*slot]).collect())
+            .collect();
+        let cons_delta: Vec<Vec<i64>> = plan
+            .constraints
+            .iter()
+            .map(|(row, _)| plan.ranged.iter().map(|(slot, _)| row[*slot]).collect())
+            .collect();
+
+        let mut regs = vec![0f32; plan.n_regs];
+        let mut counters = vec![0u64; n_ranged];
+        'outer: loop {
+            self.executed += 1;
+            if self.executed > self.opts.max_iterations {
+                return Err(err("iteration budget exceeded".into()));
+            }
+            let ok = cur_cons.iter().all(|&c| c >= 0);
+            if ok {
+                // Block-local scratch is per-iteration fresh (Def. 2):
+                // reset write tracking before the statement list runs.
+                for (slot, r) in plan.refs.iter().enumerate() {
+                    if r.parent_slot.is_none() {
+                        self.bufs.reset_written(views[slot].buf);
+                    }
+                }
+                for (slot, view) in views.iter_mut().enumerate() {
+                    view.offset = cur_offsets[slot];
+                }
+                // Execute statements.
+                for st in &plan.stmts {
+                    match st {
+                        PStmt::Load { reg, ref_slot } => {
+                            let v = &views[*ref_slot];
+                            self.sink.on_access(AccessEvent {
+                                buf: v.buf,
+                                elem: v.offset,
+                                write: false,
+                            });
+                            regs[*reg] = self.bufs.read(v.buf, v.offset).map_err(&err)?;
+                        }
+                        PStmt::Store { reg, ref_slot } => {
+                            let v = &views[*ref_slot];
+                            self.sink.on_access(AccessEvent {
+                                buf: v.buf,
+                                elem: v.offset,
+                                write: true,
+                            });
+                            self.bufs
+                                .store(v.buf, v.offset, regs[*reg], v.agg, self.opts.relaxed_assign)
+                                .map_err(&err)?;
+                        }
+                        PStmt::Intr { op, args, n, out } => {
+                            let mut a = [0f32; 3];
+                            for i in 0..*n {
+                                a[i] = regs[args[i]];
+                            }
+                            regs[*out] = op.eval(&a[..*n]);
+                        }
+                        PStmt::Const { out, val } => regs[*out] = *val,
+                        PStmt::Child(i) => {
+                            self.run(&plan.children[*i], &views, &strides_out, &vals)?;
+                        }
+                        PStmt::Special(sp) => {
+                            return Err(err(format!(
+                                "special {:?} unsupported on the planned path",
+                                sp.name
+                            )));
+                        }
+                    }
+                }
+            }
+            // Odometer with incremental offset/constraint maintenance.
+            let mut k = n_ranged;
+            loop {
+                if k == 0 {
+                    break 'outer;
+                }
+                k -= 1;
+                counters[k] += 1;
+                if counters[k] < plan.ranged[k].1 {
+                    vals[plan.ranged[k].0] += 1;
+                    for s in 0..n_refs {
+                        cur_offsets[s] += ref_delta[s][k];
+                    }
+                    for (c, d) in cur_cons.iter_mut().zip(&cons_delta) {
+                        *c += d[k];
+                    }
+                    break;
+                }
+                // Wrap counter k back to zero.
+                let back = (plan.ranged[k].1 - 1) as i64;
+                counters[k] = 0;
+                vals[plan.ranged[k].0] -= back;
+                for s in 0..n_refs {
+                    cur_offsets[s] -= ref_delta[s][k] * back;
+                }
+                for (c, d) in cur_cons.iter_mut().zip(&cons_delta) {
+                    *c -= d[k] * back;
+                }
+            }
+            if plan.ranged.is_empty() {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::passes::equiv::gen_inputs;
+
+    fn agree(p: &Program, seed: u64) {
+        let inputs = gen_inputs(p, seed);
+        let a = crate::exec::run_program(p, &inputs).unwrap();
+        let b = run_program_planned(
+            p,
+            &inputs,
+            &ExecOptions::default(),
+            &mut crate::exec::NullSink,
+        )
+        .unwrap();
+        assert_eq!(a.len(), b.len());
+        for (k, va) in &a {
+            let vb = &b[k];
+            for (x, y) in va.iter().zip(vb) {
+                assert!((x - y).abs() <= 1e-5 * 1.0f32.max(x.abs()), "{k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_matches_naive_on_flat_programs() {
+        agree(&ops::fig4_conv_program(), 1);
+        agree(&ops::tiny_mlp_program(4, 8, 3), 2);
+        agree(&ops::matmul_program(5, 6, 7), 3);
+    }
+
+    #[test]
+    fn planned_matches_naive_on_compiled_programs() {
+        for cfg in crate::hw::targets::builtin_targets() {
+            let c = crate::coordinator::compile_network(&ops::conv_relu_program(), &cfg, false)
+                .unwrap();
+            agree(&c.program, 4);
+        }
+    }
+
+    #[test]
+    fn planned_matches_naive_on_cnn() {
+        agree(&ops::cnn_program(), 5);
+        let cfg = crate::hw::targets::cpu_cache();
+        let c = crate::coordinator::compile_network(&ops::cnn_program(), &cfg, false).unwrap();
+        agree(&c.program, 6);
+    }
+
+    #[test]
+    fn trace_events_identical_between_paths() {
+        let p = ops::fig4_conv_program();
+        let inputs = gen_inputs(&p, 7);
+        let mut s1 = crate::exec::RecordingSink::default();
+        crate::exec::run_program_sink(&p, &inputs, &ExecOptions::default(), &mut s1).unwrap();
+        let mut s2 = crate::exec::RecordingSink::default();
+        run_program_planned(&p, &inputs, &ExecOptions::default(), &mut s2).unwrap();
+        assert_eq!(s1.events, s2.events, "access traces must match exactly");
+    }
+}

@@ -1,0 +1,82 @@
+//! AST for the Tile-style contraction language.
+
+use crate::poly::Affine;
+
+/// A tensor access in a formula: `I[x+i-1, y+j-1, c]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccessExpr {
+    pub tensor: String,
+    pub indices: Vec<Affine>,
+}
+
+/// Aggregation spelled in the source (`+(..)`, `max(..)`, `*(..)`, or
+/// plain assignment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggSpec {
+    Assign,
+    Sum,
+    Prod,
+    Max,
+    Min,
+}
+
+impl AggSpec {
+    pub fn to_agg(self) -> crate::ir::AggOp {
+        match self {
+            AggSpec::Assign => crate::ir::AggOp::Assign,
+            AggSpec::Sum => crate::ir::AggOp::Add,
+            AggSpec::Prod => crate::ir::AggOp::Mul,
+            AggSpec::Max => crate::ir::AggOp::Max,
+            AggSpec::Min => crate::ir::AggOp::Min,
+        }
+    }
+}
+
+/// Combination of the input accesses inside a contraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Combine {
+    /// Single input (copy/reduce).
+    Ident,
+    /// Product of two inputs.
+    Mul,
+    /// Sum of two inputs.
+    Add,
+}
+
+/// One statement in a Tile function.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TileStmt {
+    /// `O[x, y : X, Y] = +(A[..] * B[..]);`
+    Contraction {
+        output: AccessExpr,
+        /// Declared output dimension sizes (after the `:`).
+        out_sizes: Vec<u64>,
+        agg: AggSpec,
+        combine: Combine,
+        inputs: Vec<AccessExpr>,
+    },
+    /// `R = relu(T);` — elementwise intrinsic chain over a whole tensor.
+    Elementwise {
+        output: String,
+        op: crate::ir::IntrOp,
+        inputs: Vec<String>,
+    },
+}
+
+/// A parameter declaration: `I[12, 16, 8]` (input) or `$F[3, 3, 16, 8]`
+/// (weight).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileParam {
+    pub name: String,
+    pub sizes: Vec<u64>,
+    pub is_weight: bool,
+}
+
+/// A whole Tile function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileFunction {
+    pub name: String,
+    pub params: Vec<TileParam>,
+    pub outputs: Vec<String>,
+    pub stmts: Vec<TileStmt>,
+}

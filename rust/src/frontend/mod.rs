@@ -1,0 +1,21 @@
+//! The Tile-style frontend (Fig. 6: source → Tile → Stripe).
+//!
+//! PlaidML's Tile language writes tensor operations "in a form
+//! reminiscent of Einstein notation" (§3.4); §1.3 notes that lowering
+//! from such a syntax to flat Stripe blocks is straightforward. This
+//! module implements that path:
+//!
+//! * [`ast`] / [`parser`] — the contraction language:
+//!   `O[x, y, k : 12, 16, 16] = +(I[x+i-1, y+j-1, c] * F[i, j, k, c]);`
+//! * [`lower`] — range inference (Fourier–Motzkin bounding boxes over
+//!   the in-bounds polyhedron), halo-constraint generation, and
+//!   lowering to canonical flat blocks;
+//! * [`ops`] — canned programs used across tests, benches, and figures.
+
+pub mod ast;
+pub mod lower;
+pub mod ops;
+pub mod parser;
+
+pub use lower::lower_function;
+pub use parser::parse_function;

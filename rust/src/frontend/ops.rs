@@ -1,0 +1,117 @@
+//! Canned programs used across tests, figures, benches, and examples.
+
+use crate::graph::NetworkBuilder;
+use crate::ir::{DType, Program};
+
+/// The paper's running example (Figs. 4 & 5): a single 3×3 same-padded
+/// convolution, I: (12,16,8) → O: (12,16,16), F: (3,3,16,8).
+pub fn fig4_conv_program() -> Program {
+    let mut nb = NetworkBuilder::new("fig4_conv", DType::F32);
+    let i = nb.input("I", &[12, 16, 8]);
+    let f = nb.weight("F", &[3, 3, 16, 8]);
+    let o = nb.conv2d_same(i, f);
+    nb.finish(o)
+}
+
+/// conv → relu, with the conv result in a temp (the fusion workload).
+pub fn conv_relu_program() -> Program {
+    let mut nb = NetworkBuilder::new("conv_relu", DType::F32);
+    let i = nb.input("I", &[12, 16, 8]);
+    let f = nb.weight("F", &[3, 3, 16, 8]);
+    let c = nb.conv2d_same(i, f);
+    let r = nb.relu(c);
+    nb.finish(r)
+}
+
+/// A small MLP: X(b? none — single sample) → dense(h) → relu → dense(o).
+pub fn tiny_mlp_program(input: u64, hidden: u64, out: u64) -> Program {
+    let mut nb = NetworkBuilder::new("tiny_mlp", DType::F32);
+    let x = nb.input("X", &[input]);
+    let w1 = nb.weight("W1", &[input, hidden]);
+    let w2 = nb.weight("W2", &[hidden, out]);
+    let h = nb.dense(x, w1);
+    let h = nb.relu(h);
+    let o = nb.dense(h, w2);
+    nb.finish(o)
+}
+
+/// A plain matmul (the transposition workload: B's K dim is not
+/// innermost).
+pub fn matmul_program(m: u64, k: u64, n: u64) -> Program {
+    let mut nb = NetworkBuilder::new("matmul", DType::F32);
+    let a = nb.input("A", &[m, k]);
+    let b = nb.weight("B", &[k, n]);
+    let o = nb.matmul(a, b);
+    nb.finish(o)
+}
+
+/// The end-to-end CNN used by `examples/network_e2e.rs` and the L2 JAX
+/// model (python/compile/model.py mirrors this exactly):
+///
+///   I (12,16,8) → conv3×3 (→16) → relu → maxpool2 (6,8,16)
+///     → conv3×3 (→16) → relu → flatten → dense (→10)
+pub fn cnn_program() -> Program {
+    let mut nb = NetworkBuilder::new("cnn", DType::F32);
+    let i = nb.input("I", &[12, 16, 8]);
+    let f1 = nb.weight("F1", &[3, 3, 16, 8]);
+    let f2 = nb.weight("F2", &[3, 3, 16, 16]);
+    let wd = nb.weight("WD", &[6 * 8 * 16, 10]);
+    let x = nb.conv2d_same(i, f1);
+    let x = nb.relu(x);
+    let x = nb.maxpool2(x);
+    let x = nb.conv2d_same(x, f2);
+    let x = nb.relu(x);
+    let x = nb.flatten(x);
+    let o = nb.dense(x, wd);
+    nb.finish(o)
+}
+
+/// The Fig.-2 workload: a 12×6 2-D tensor copied through nested blocks
+/// under two different tilings (see `benches/fig2_tilings.rs`).
+pub fn fig2_copy_program() -> Program {
+    let mut nb = NetworkBuilder::new("fig2_copy", DType::F32);
+    let i = nb.input("I", &[12, 6]);
+    let o = nb.relu(i); // identity-shaped elementwise op to tile
+    nb.finish(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run_program;
+    use crate::ir::validate::{is_valid, validate_program};
+    use crate::passes::equiv::gen_inputs;
+
+    #[test]
+    fn all_canned_programs_validate() {
+        for (name, p) in [
+            ("fig4", fig4_conv_program()),
+            ("conv_relu", conv_relu_program()),
+            ("mlp", tiny_mlp_program(4, 8, 3)),
+            ("matmul", matmul_program(4, 6, 5)),
+            ("cnn", cnn_program()),
+            ("fig2", fig2_copy_program()),
+        ] {
+            let v = validate_program(&p);
+            assert!(is_valid(&v), "{name}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn cnn_runs_end_to_end() {
+        let p = cnn_program();
+        let inputs = gen_inputs(&p, 99);
+        let out = run_program(&p, &inputs).unwrap();
+        let logits = out.values().next().unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        let p = tiny_mlp_program(4, 16, 8);
+        let inputs = gen_inputs(&p, 1);
+        let out = run_program(&p, &inputs).unwrap();
+        assert_eq!(out.values().next().unwrap().len(), 8);
+    }
+}

@@ -1,0 +1,358 @@
+//! Parser for the Tile-style language.
+//!
+//! ```text
+//! function cnn(I[12, 16, 8], $F[3, 3, 16, 8]) -> (R) {
+//!   T[x, y, k : 12, 16, 16] = +(I[x + i - 1, y + j - 1, c] * F[i, j, k, c]);
+//!   R = relu(T);
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::poly::Affine;
+
+use super::ast::{AccessExpr, AggSpec, Combine, TileFunction, TileParam, TileStmt};
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Int(i64),
+    Punct(char),
+    Arrow,
+    Dollar,
+}
+
+impl Lexer {
+    fn tokenize(src: &str) -> Result<Vec<Tok>> {
+        let mut l = Lexer { chars: src.chars().collect(), pos: 0 };
+        let mut out = Vec::new();
+        while l.pos < l.chars.len() {
+            let c = l.chars[l.pos];
+            if c.is_whitespace() {
+                l.pos += 1;
+            } else if c == '#' {
+                while l.pos < l.chars.len() && l.chars[l.pos] != '\n' {
+                    l.pos += 1;
+                }
+            } else if c == '-' && l.chars.get(l.pos + 1) == Some(&'>') {
+                out.push(Tok::Arrow);
+                l.pos += 2;
+            } else if c == '$' {
+                out.push(Tok::Dollar);
+                l.pos += 1;
+            } else if c.is_ascii_digit() {
+                let start = l.pos;
+                while l.pos < l.chars.len() && l.chars[l.pos].is_ascii_digit() {
+                    l.pos += 1;
+                }
+                let s: String = l.chars[start..l.pos].iter().collect();
+                out.push(Tok::Int(s.parse()?));
+            } else if c.is_alphabetic() || c == '_' {
+                let start = l.pos;
+                while l.pos < l.chars.len()
+                    && (l.chars[l.pos].is_alphanumeric() || l.chars[l.pos] == '_')
+                {
+                    l.pos += 1;
+                }
+                out.push(Tok::Ident(l.chars[start..l.pos].iter().collect()));
+            } else if "[](){}:,=+-*;".contains(c) {
+                out.push(Tok::Punct(c));
+                l.pos += 1;
+            } else {
+                bail!("unexpected character {c:?}");
+            }
+        }
+        Ok(out)
+    }
+}
+
+struct P {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl P {
+    fn next(&mut self) -> Result<Tok> {
+        let t = self.toks.get(self.pos).cloned().ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if matches!(self.peek(), Some(Tok::Punct(p)) if *p == c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, c: char) -> Result<()> {
+        match self.next()? {
+            Tok::Punct(p) if p == c => Ok(()),
+            t => bail!("expected {c:?}, got {t:?}"),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            t => bail!("expected identifier, got {t:?}"),
+        }
+    }
+
+    fn int(&mut self) -> Result<i64> {
+        match self.next()? {
+            Tok::Int(n) => Ok(n),
+            t => bail!("expected integer, got {t:?}"),
+        }
+    }
+
+    fn affine(&mut self) -> Result<Affine> {
+        let mut acc = Affine::zero();
+        let mut sign = 1i64;
+        if self.eat('-') {
+            sign = -1;
+        } else {
+            let _ = self.eat('+');
+        }
+        loop {
+            match self.next()? {
+                Tok::Int(n) => {
+                    if self.eat('*') {
+                        let v = self.ident()?;
+                        acc.add_term(&v, sign * n);
+                    } else {
+                        acc.offset += sign * n;
+                    }
+                }
+                Tok::Ident(v) => {
+                    if self.eat('*') {
+                        let n = self.int()?;
+                        acc.add_term(&v, sign * n);
+                    } else {
+                        acc.add_term(&v, sign);
+                    }
+                }
+                t => bail!("expected affine term, got {t:?}"),
+            }
+            if self.eat('+') {
+                sign = 1;
+            } else if self.eat('-') {
+                sign = -1;
+            } else {
+                break;
+            }
+        }
+        Ok(acc)
+    }
+
+    fn access(&mut self) -> Result<AccessExpr> {
+        let tensor = self.ident()?;
+        self.expect('[')?;
+        let mut indices = Vec::new();
+        if !self.eat(']') {
+            loop {
+                indices.push(self.affine()?);
+                if !self.eat(',') {
+                    break;
+                }
+            }
+            self.expect(']')?;
+        }
+        Ok(AccessExpr { tensor, indices })
+    }
+
+    fn stmt(&mut self) -> Result<TileStmt> {
+        let out_name = self.ident()?;
+        if self.eat('[') {
+            // Contraction: indices : sizes ] = agg( ... );
+            let mut out_idx = Vec::new();
+            loop {
+                out_idx.push(self.affine()?);
+                if !self.eat(',') {
+                    break;
+                }
+            }
+            self.expect(':')?;
+            let mut out_sizes = Vec::new();
+            loop {
+                out_sizes.push(self.int()? as u64);
+                if !self.eat(',') {
+                    break;
+                }
+            }
+            self.expect(']')?;
+            self.expect('=')?;
+            // Aggregation spec.
+            let agg = match self.next()? {
+                Tok::Punct('+') => AggSpec::Sum,
+                Tok::Punct('*') => AggSpec::Prod,
+                Tok::Ident(s) if s == "max" => AggSpec::Max,
+                Tok::Ident(s) if s == "min" => AggSpec::Min,
+                Tok::Ident(s) if s == "assign" => AggSpec::Assign,
+                t => bail!("expected aggregation (+, *, max, min, assign), got {t:?}"),
+            };
+            self.expect('(')?;
+            let a = self.access()?;
+            let (combine, inputs) = if self.eat('*') {
+                let b = self.access()?;
+                (Combine::Mul, vec![a, b])
+            } else if self.eat('+') {
+                let b = self.access()?;
+                (Combine::Add, vec![a, b])
+            } else {
+                (Combine::Ident, vec![a])
+            };
+            self.expect(')')?;
+            self.expect(';')?;
+            Ok(TileStmt::Contraction {
+                output: AccessExpr { tensor: out_name, indices: out_idx },
+                out_sizes,
+                agg,
+                combine,
+                inputs,
+            })
+        } else {
+            // Elementwise: R = op(A[, B]);
+            self.expect('=')?;
+            let opname = self.ident()?;
+            let op = crate::ir::IntrOp::parse(&opname)
+                .ok_or_else(|| anyhow!("unknown elementwise op {opname:?}"))?;
+            self.expect('(')?;
+            let mut inputs = vec![self.ident()?];
+            while self.eat(',') {
+                inputs.push(self.ident()?);
+            }
+            self.expect(')')?;
+            self.expect(';')?;
+            Ok(TileStmt::Elementwise { output: out_name, op, inputs })
+        }
+    }
+}
+
+/// Parse a Tile function.
+pub fn parse_function(src: &str) -> Result<TileFunction> {
+    let toks = Lexer::tokenize(src)?;
+    let mut p = P { toks, pos: 0 };
+    let kw = p.ident()?;
+    if kw != "function" {
+        bail!("expected 'function'");
+    }
+    let name = p.ident()?;
+    p.expect('(')?;
+    let mut params = Vec::new();
+    if !p.eat(')') {
+        loop {
+            let is_weight = matches!(p.peek(), Some(Tok::Dollar));
+            if is_weight {
+                p.pos += 1;
+            }
+            let pname = p.ident()?;
+            p.expect('[')?;
+            let mut sizes = Vec::new();
+            loop {
+                sizes.push(p.int()? as u64);
+                if !p.eat(',') {
+                    break;
+                }
+            }
+            p.expect(']')?;
+            params.push(TileParam { name: pname, sizes, is_weight });
+            if !p.eat(',') {
+                break;
+            }
+        }
+        p.expect(')')?;
+    }
+    match p.next()? {
+        Tok::Arrow => {}
+        t => bail!("expected ->, got {t:?}"),
+    }
+    p.expect('(')?;
+    let mut outputs = vec![p.ident()?];
+    while p.eat(',') {
+        outputs.push(p.ident()?);
+    }
+    p.expect(')')?;
+    p.expect('{')?;
+    let mut stmts = Vec::new();
+    while !p.eat('}') {
+        stmts.push(p.stmt()?);
+    }
+    if p.pos != p.toks.len() {
+        bail!("trailing tokens");
+    }
+    Ok(TileFunction { name, params, outputs, stmts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CONV_RELU: &str = r#"
+function cnn(I[12, 16, 8], $F[3, 3, 16, 8]) -> (R) {
+  # the Fig-4/5 convolution
+  T[x, y, k : 12, 16, 16] = +(I[x + i - 1, y + j - 1, c] * F[i, j, k, c]);
+  R = relu(T);
+}
+"#;
+
+    #[test]
+    fn parses_conv_relu() {
+        let f = parse_function(CONV_RELU).unwrap();
+        assert_eq!(f.name, "cnn");
+        assert_eq!(f.params.len(), 2);
+        assert!(f.params[1].is_weight);
+        assert!(!f.params[0].is_weight);
+        assert_eq!(f.outputs, vec!["R"]);
+        assert_eq!(f.stmts.len(), 2);
+        match &f.stmts[0] {
+            TileStmt::Contraction { output, out_sizes, agg, combine, inputs } => {
+                assert_eq!(output.tensor, "T");
+                assert_eq!(out_sizes, &[12, 16, 16]);
+                assert_eq!(*agg, AggSpec::Sum);
+                assert_eq!(*combine, Combine::Mul);
+                assert_eq!(inputs.len(), 2);
+                assert_eq!(inputs[0].indices[0].to_string(), "i + x - 1");
+            }
+            _ => panic!("expected contraction"),
+        }
+    }
+
+    #[test]
+    fn parses_maxpool_contraction() {
+        let src = r#"
+function mp(I[8, 8, 4]) -> (O) {
+  O[x, y, c : 4, 4, 4] = max(I[2*x + u, 2*y + v, c]);
+}
+"#;
+        let f = parse_function(src).unwrap();
+        match &f.stmts[0] {
+            TileStmt::Contraction { agg, combine, inputs, .. } => {
+                assert_eq!(*agg, AggSpec::Max);
+                assert_eq!(*combine, Combine::Ident);
+                assert_eq!(inputs[0].indices[0].coeff("x"), 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_function("function f() -> (X) {").is_err());
+        assert!(parse_function("junk").is_err());
+        assert!(
+            parse_function("function f(A[2]) -> (B) { B[x : 2] = ?(A[x]); }").is_err()
+        );
+    }
+}

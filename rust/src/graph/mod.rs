@@ -1,0 +1,458 @@
+//! Network-level graph construction.
+//!
+//! [`NetworkBuilder`] is the programmatic path from ops to a Stripe
+//! [`Program`] (the Fig.-6 "Tile → Stripe" lowering, minus the textual
+//! Tile syntax which lives in `frontend`). Each op method performs shape
+//! inference, allocates intermediate temp buffers, and appends one flat
+//! contraction/elementwise block to `main` — the canonical pre-pass
+//! form.
+
+use crate::ir::builder::{
+    containment_constraints, contraction, elementwise_unary, identity_access, Operand,
+};
+use crate::ir::{
+    AggOp, Block, BufKind, Buffer, DType, IntrOp, Program, Statement, TensorType,
+};
+use crate::poly::Affine;
+
+/// Handle to a tensor in the network being built.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorId(usize);
+
+/// Builds a Stripe program op by op.
+pub struct NetworkBuilder {
+    name: String,
+    dtype: DType,
+    buffers: Vec<Buffer>,
+    blocks: Vec<Block>,
+    fresh: usize,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: &str, dtype: DType) -> NetworkBuilder {
+        NetworkBuilder {
+            name: name.to_string(),
+            dtype,
+            buffers: Vec::new(),
+            blocks: Vec::new(),
+            fresh: 0,
+        }
+    }
+
+    fn add_buffer(&mut self, name: &str, kind: BufKind, sizes: &[u64]) -> TensorId {
+        self.buffers.push(Buffer {
+            name: name.to_string(),
+            kind,
+            ttype: TensorType::contiguous(self.dtype, sizes),
+        });
+        TensorId(self.buffers.len() - 1)
+    }
+
+    fn temp(&mut self, hint: &str, sizes: &[u64]) -> TensorId {
+        self.fresh += 1;
+        let name = format!("{hint}{}", self.fresh);
+        self.add_buffer(&name, BufKind::Temp, sizes)
+    }
+
+    pub fn input(&mut self, name: &str, sizes: &[u64]) -> TensorId {
+        self.add_buffer(name, BufKind::Input, sizes)
+    }
+
+    pub fn weight(&mut self, name: &str, sizes: &[u64]) -> TensorId {
+        self.add_buffer(name, BufKind::Weight, sizes)
+    }
+
+    pub fn sizes(&self, t: TensorId) -> Vec<u64> {
+        self.buffers[t.0].ttype.sizes()
+    }
+
+    pub fn name_of(&self, t: TensorId) -> &str {
+        &self.buffers[t.0].name
+    }
+
+    fn ttype(&self, t: TensorId) -> TensorType {
+        self.buffers[t.0].ttype.clone()
+    }
+
+    fn op(&self, t: TensorId, access: Vec<Affine>) -> Operand {
+        Operand::new(&self.buffers[t.0].name, access, &self.buffers[t.0].ttype)
+    }
+
+    /// 2-D convolution over HWC tensors with same-padding:
+    /// `O[x,y,k] += I[x+i-p, y+j-p, c] * F[i,j,k,c]` (p = kh/2).
+    pub fn conv2d_same(&mut self, input: TensorId, filter: TensorId) -> TensorId {
+        let is = self.sizes(input);
+        let fs = self.sizes(filter);
+        assert_eq!(is.len(), 3, "conv2d input must be HWC");
+        assert_eq!(fs.len(), 4, "conv2d filter must be (kh, kw, co, ci)");
+        assert_eq!(fs[3], is[2], "input channels must match");
+        let (h, w, ci) = (is[0], is[1], is[2]);
+        let (kh, kw, co) = (fs[0], fs[1], fs[2]);
+        let (ph, pw) = ((kh / 2) as i64, (kw / 2) as i64);
+        let out = self.temp("conv", &[h, w, co]);
+
+        let ax = Affine::from_terms(&[("x", 1), ("i", 1)], -ph);
+        let ay = Affine::from_terms(&[("y", 1), ("j", 1)], -pw);
+        let mut cons = Vec::new();
+        cons.extend(containment_constraints(&ax, h));
+        cons.extend(containment_constraints(&ay, w));
+        let block = contraction(
+            &format!("conv{}", self.fresh),
+            &[("x", h), ("y", w), ("i", kh), ("j", kw), ("c", ci), ("k", co)],
+            cons,
+            self.op(out, vec![Affine::var("x"), Affine::var("y"), Affine::var("k")]),
+            AggOp::Add,
+            &[
+                self.op(input, vec![ax, ay, Affine::var("c")]),
+                self.op(
+                    filter,
+                    vec![
+                        Affine::var("i"),
+                        Affine::var("j"),
+                        Affine::var("k"),
+                        Affine::var("c"),
+                    ],
+                ),
+            ],
+            IntrOp::Mul,
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// 2×2 max-pool with stride 2 over HWC.
+    pub fn maxpool2(&mut self, input: TensorId) -> TensorId {
+        let is = self.sizes(input);
+        let (h, w, c) = (is[0], is[1], is[2]);
+        assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even spatial dims");
+        let out = self.temp("pool", &[h / 2, w / 2, c]);
+        let block = contraction(
+            &format!("maxpool{}", self.fresh),
+            &[("x", h / 2), ("y", w / 2), ("u", 2), ("v", 2), ("c", c)],
+            vec![],
+            self.op(out, vec![Affine::var("x"), Affine::var("y"), Affine::var("c")]),
+            AggOp::Max,
+            &[self.op(
+                input,
+                vec![
+                    Affine::from_terms(&[("x", 2), ("u", 1)], 0),
+                    Affine::from_terms(&[("y", 2), ("v", 1)], 0),
+                    Affine::var("c"),
+                ],
+            )],
+            IntrOp::Mul,
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// ReLU elementwise (any rank).
+    pub fn relu(&mut self, input: TensorId) -> TensorId {
+        self.unary(input, IntrOp::Relu, "relu")
+    }
+
+    /// Tanh elementwise.
+    pub fn tanh(&mut self, input: TensorId) -> TensorId {
+        self.unary(input, IntrOp::Tanh, "tanh")
+    }
+
+    fn unary(&mut self, input: TensorId, op: IntrOp, hint: &str) -> TensorId {
+        let sizes = self.sizes(input);
+        let out = self.temp(hint, &sizes);
+        let names: Vec<String> = (0..sizes.len()).map(|d| format!("e{d}")).collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let idxs: Vec<(&str, u64)> =
+            name_refs.iter().zip(&sizes).map(|(n, &s)| (*n, s)).collect();
+        let block = elementwise_unary(
+            &format!("{hint}{}", self.fresh),
+            &idxs,
+            self.op(out, identity_access(&name_refs)),
+            self.op(input, identity_access(&name_refs)),
+            &[op],
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// Elementwise add of two same-shape tensors.
+    pub fn add(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        let sizes = self.sizes(a);
+        assert_eq!(sizes, self.sizes(b));
+        let out = self.temp("add", &sizes);
+        let names: Vec<String> = (0..sizes.len()).map(|d| format!("e{d}")).collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let idxs: Vec<(&str, u64)> =
+            name_refs.iter().zip(&sizes).map(|(n, &s)| (*n, s)).collect();
+        let block = contraction(
+            &format!("add{}", self.fresh),
+            &idxs,
+            vec![],
+            self.op(out, identity_access(&name_refs)),
+            AggOp::Assign,
+            &[
+                self.op(a, identity_access(&name_refs)),
+                self.op(b, identity_access(&name_refs)),
+            ],
+            IntrOp::Add,
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// Flatten to 1-D (a relayout-free view change realized as a copy so
+    /// downstream matmuls see contiguous vectors).
+    pub fn flatten(&mut self, input: TensorId) -> TensorId {
+        let sizes = self.sizes(input);
+        let n: u64 = sizes.iter().product();
+        let out = self.temp("flat", &[n]);
+        // Copy via a rank-N block writing the linearized index.
+        let names: Vec<String> = (0..sizes.len()).map(|d| format!("e{d}")).collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let idxs: Vec<(&str, u64)> =
+            name_refs.iter().zip(&sizes).map(|(n, &s)| (*n, s)).collect();
+        let in_t = self.ttype(input);
+        let mut lin = Affine::zero();
+        for (nm, d) in names.iter().zip(&in_t.dims) {
+            lin.add_term(nm, d.stride);
+        }
+        let block = contraction(
+            &format!("flatten{}", self.fresh),
+            &idxs,
+            vec![],
+            self.op(out, vec![lin]),
+            AggOp::Assign,
+            &[self.op(input, identity_access(&name_refs))],
+            IntrOp::Mul,
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// Dense layer: `O[n] += I[k] * W[k, n]`.
+    pub fn dense(&mut self, input: TensorId, weight: TensorId) -> TensorId {
+        let is = self.sizes(input);
+        let ws = self.sizes(weight);
+        assert_eq!(is.len(), 1);
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0], is[0], "dense: K mismatch");
+        let out = self.temp("dense", &[ws[1]]);
+        let block = contraction(
+            &format!("dense{}", self.fresh),
+            &[("k", ws[0]), ("n", ws[1])],
+            vec![],
+            self.op(out, vec![Affine::var("n")]),
+            AggOp::Add,
+            &[
+                self.op(input, vec![Affine::var("k")]),
+                self.op(weight, vec![Affine::var("k"), Affine::var("n")]),
+            ],
+            IntrOp::Mul,
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// Matrix multiply: `O[m,n] += A[m,k] * B[k,n]`.
+    pub fn matmul(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        let asz = self.sizes(a);
+        let bsz = self.sizes(b);
+        assert_eq!(asz.len(), 2);
+        assert_eq!(bsz.len(), 2);
+        assert_eq!(asz[1], bsz[0]);
+        let out = self.temp("mm", &[asz[0], bsz[1]]);
+        let block = contraction(
+            &format!("matmul{}", self.fresh),
+            &[("m", asz[0]), ("n", bsz[1]), ("k", asz[1])],
+            vec![],
+            self.op(out, vec![Affine::var("m"), Affine::var("n")]),
+            AggOp::Add,
+            &[
+                self.op(a, vec![Affine::var("m"), Affine::var("k")]),
+                self.op(b, vec![Affine::var("k"), Affine::var("n")]),
+            ],
+            IntrOp::Mul,
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// Numerically-stable softmax over a 1-D tensor, lowered to four
+    /// blocks (max-reduce, shift+exp, sum-reduce, normalize) — a worked
+    /// example of an op that is *pure Stripe*, no special functions.
+    pub fn softmax(&mut self, input: TensorId) -> TensorId {
+        let n = self.sizes(input)[0];
+        let mx = self.temp("smax_m", &[1]);
+        let block = contraction(
+            &format!("smax_max{}", self.fresh),
+            &[("k", n)],
+            vec![],
+            self.op(mx, vec![Affine::zero()]),
+            AggOp::Max,
+            &[self.op(input, vec![Affine::var("k")])],
+            IntrOp::Mul,
+        );
+        self.blocks.push(block);
+        // e[k] = exp(I[k] - m)
+        let ex = self.temp("smax_e", &[n]);
+        let mut b = Block::new(&format!("smax_exp{}", self.fresh));
+        b.idxs.push(crate::ir::Idx::range("k", n));
+        b.refs.push(crate::ir::Refinement::new(
+            crate::ir::RefDir::In,
+            self.name_of(input),
+            vec![Affine::var("k")],
+            crate::ir::builder::scalar_view(&self.ttype(input)),
+        ));
+        b.refs.push(crate::ir::Refinement::new(
+            crate::ir::RefDir::In,
+            self.name_of(mx),
+            vec![Affine::zero()],
+            crate::ir::builder::scalar_view(&self.ttype(mx)),
+        ));
+        b.refs.push(crate::ir::Refinement::new(
+            crate::ir::RefDir::Out,
+            self.name_of(ex),
+            vec![Affine::var("k")],
+            crate::ir::builder::scalar_view(&self.ttype(ex)),
+        ));
+        b.stmts = vec![
+            Statement::Load { from: self.name_of(input).into(), into: "$x".into() },
+            Statement::Load { from: self.name_of(mx).into(), into: "$m".into() },
+            Statement::Intrinsic {
+                op: IntrOp::Sub,
+                inputs: vec!["$x".into(), "$m".into()],
+                output: "$d".into(),
+            },
+            Statement::Intrinsic {
+                op: IntrOp::Exp,
+                inputs: vec!["$d".into()],
+                output: "$e".into(),
+            },
+            Statement::Store { from: "$e".into(), into: self.name_of(ex).into() },
+        ];
+        self.blocks.push(b);
+        // s = Σ e[k]
+        let sum = self.temp("smax_s", &[1]);
+        let block = contraction(
+            &format!("smax_sum{}", self.fresh),
+            &[("k", n)],
+            vec![],
+            self.op(sum, vec![Affine::zero()]),
+            AggOp::Add,
+            &[self.op(ex, vec![Affine::var("k")])],
+            IntrOp::Mul,
+        );
+        self.blocks.push(block);
+        // o[k] = e[k] / s
+        let out = self.temp("smax_o", &[n]);
+        let block = contraction(
+            &format!("smax_div{}", self.fresh),
+            &[("k", n)],
+            vec![],
+            self.op(out, vec![Affine::var("k")]),
+            AggOp::Assign,
+            &[
+                self.op(ex, vec![Affine::var("k")]),
+                self.op(sum, vec![Affine::zero()]),
+            ],
+            IntrOp::Div,
+        );
+        self.blocks.push(block);
+        out
+    }
+
+    /// Finish the network: mark `result` as the program output and build
+    /// the Program.
+    pub fn finish(mut self, result: TensorId) -> Program {
+        self.buffers[result.0].kind = BufKind::Output;
+        let mut p = Program::new(&self.name, self.buffers);
+        for b in self.blocks {
+            p.main.stmts.push(Statement::Block(Box::new(b)));
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run_program;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn matmul_matches_reference() {
+        let mut nb = NetworkBuilder::new("mm", DType::F32);
+        let a = nb.input("A", &[3, 4]);
+        let b = nb.weight("B", &[4, 5]);
+        let o = nb.matmul(a, b);
+        let p = nb.finish(o);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let av = rng.normal_vec(12, 1.0);
+        let bv = rng.normal_vec(20, 1.0);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("A".to_string(), av.clone());
+        inputs.insert("B".to_string(), bv.clone());
+        let out = run_program(&p, &inputs).unwrap();
+        let got = out.values().next().unwrap();
+        for m in 0..3 {
+            for n in 0..5 {
+                let want: f32 = (0..4).map(|k| av[m * 4 + k] * bv[k * 5 + n]).sum();
+                assert!((got[m * 5 + n] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut nb = NetworkBuilder::new("sm", DType::F32);
+        let x = nb.input("X", &[10]);
+        let o = nb.softmax(x);
+        let p = nb.finish(o);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("X".to_string(), (0..10).map(|i| i as f32 / 3.0 - 1.5).collect());
+        let out = run_program(&p, &inputs).unwrap();
+        let got = out.values().next().unwrap();
+        let total: f32 = got.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5, "{total}");
+        assert!(got.windows(2).all(|w| w[0] < w[1]), "monotone inputs → monotone probs");
+    }
+
+    #[test]
+    fn maxpool_halves_spatial_dims() {
+        let mut nb = NetworkBuilder::new("mp", DType::F32);
+        let x = nb.input("X", &[4, 6, 2]);
+        let o = nb.maxpool2(x);
+        assert_eq!(nb.sizes(o), vec![2, 3, 2]);
+        let p = nb.finish(o);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("X".to_string(), (0..48).map(|i| i as f32).collect());
+        let out = run_program(&p, &inputs).unwrap();
+        let got = out.values().next().unwrap();
+        // Max of each 2×2 window: bottom-right element.
+        assert_eq!(got[0], (1 * 6 + 1) as f32 * 2.0); // (x=1,y=1,c=0) = 14
+    }
+
+    #[test]
+    fn flatten_preserves_values() {
+        let mut nb = NetworkBuilder::new("fl", DType::F32);
+        let x = nb.input("X", &[2, 3]);
+        let o = nb.flatten(x);
+        assert_eq!(nb.sizes(o), vec![6]);
+        let p = nb.finish(o);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("X".to_string(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = run_program(&p, &inputs).unwrap();
+        assert_eq!(out.values().next().unwrap(), &vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn conv_shapes_and_validation() {
+        let mut nb = NetworkBuilder::new("c", DType::F32);
+        let x = nb.input("X", &[8, 8, 4]);
+        let f = nb.weight("F", &[3, 3, 6, 4]);
+        let o = nb.conv2d_same(x, f);
+        assert_eq!(nb.sizes(o), vec![8, 8, 6]);
+        let p = nb.finish(o);
+        let v = crate::ir::validate::validate_program(&p);
+        assert!(crate::ir::validate::is_valid(&v), "{v:?}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Declarative machine descriptions and pass-pipeline configuration.
+
+use crate::cost::roofline::MachineRoof;
+use crate::cost::search::SearchSpace;
+
+/// One memory unit in the hierarchy, outermost (DRAM-like) first.
+#[derive(Debug, Clone)]
+pub struct MemoryUnit {
+    pub name: String,
+    pub capacity_bytes: u64,
+    pub line_bytes: u64,
+    /// Number of banks (1 = unbanked).
+    pub banks: u64,
+    /// Bandwidth from the next-outer level (bytes/s); used by roofline
+    /// estimates.
+    pub bandwidth: f64,
+}
+
+/// One role constraint of a stencil: which operands an index must stride
+/// (appear with nonzero coefficient in), and the required tile size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StencilRule {
+    /// Must the index appear in the output access?
+    pub in_out: bool,
+    /// Must it appear in the first input access?
+    pub in_a: bool,
+    /// Must it appear in the second input access?
+    pub in_b: bool,
+    /// Required tile size for the matched index.
+    pub size: u64,
+}
+
+/// A microarchitectural stencil (§2.3 "Microarchitectural Stenciling"):
+/// a specialized unit that consumes a fixed-shape sub-computation, e.g.
+/// a 4×4×8 matrix-multiply engine.
+#[derive(Debug, Clone)]
+pub struct Stencil {
+    pub name: String,
+    pub rules: Vec<StencilRule>,
+    /// Tag applied to rewritten inner blocks (consumed by the lowerer).
+    pub tag: String,
+}
+
+/// A compute unit class.
+#[derive(Debug, Clone)]
+pub struct ComputeUnit {
+    pub name: String,
+    pub count: u64,
+    /// SIMD lane width in elements (1 = scalar).
+    pub simd_width: u64,
+    /// Stencils this unit accepts (empty = general-purpose).
+    pub stencils: Vec<Stencil>,
+}
+
+/// One configured pass instance in a target's pipeline.
+#[derive(Debug, Clone)]
+pub enum PassConfig {
+    /// §3.3 autotiling against a memory unit's capacity.
+    Autotile {
+        /// Memory unit whose capacity caps the tile footprint.
+        memory: String,
+        space: SearchSpace,
+        /// Max tilings evaluated per block.
+        budget: usize,
+        /// Only tile indexes that appear in the output access (keeps
+        /// reductions intact; banking handles the rest).
+        output_dims_only: bool,
+    },
+    /// Fuse producer/consumer ops sharing output dimensions.
+    Fuse {
+        /// Maximum statement-list length of a fusion group.
+        max_group: usize,
+    },
+    /// Match & rewrite blocks onto compute-unit stencils.
+    Stencilize { unit: String },
+    /// Transpose inputs whose innermost dimension mismatches a stencil.
+    Transpose,
+    /// Partition the outermost parallel dimension across compute units
+    /// with per-unit banking.
+    Partition { unit: String, memory: String },
+    /// Split tiled blocks into interior (constraint-free) and boundary.
+    BoundarySplit,
+    /// Remove store/load round-trips through size-1 temporaries.
+    Scalarize,
+    /// Shrink main-level temporaries consumed by a single fused block
+    /// into block-local scratch.
+    Localize,
+    /// Dependency-DAG construction, op ordering, and physical address
+    /// assignment in a memory unit.
+    Schedule { memory: String },
+}
+
+impl PassConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PassConfig::Autotile { .. } => "autotile",
+            PassConfig::Fuse { .. } => "fuse",
+            PassConfig::Stencilize { .. } => "stencilize",
+            PassConfig::Transpose => "transpose",
+            PassConfig::Partition { .. } => "partition",
+            PassConfig::BoundarySplit => "boundary_split",
+            PassConfig::Scalarize => "scalarize",
+            PassConfig::Localize => "localize",
+            PassConfig::Schedule { .. } => "schedule",
+        }
+    }
+}
+
+/// A full hardware architecture description + its pass pipeline.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub name: String,
+    /// Outermost-first memory hierarchy.
+    pub memories: Vec<MemoryUnit>,
+    pub compute: Vec<ComputeUnit>,
+    pub roof: MachineRoof,
+    pub passes: Vec<PassConfig>,
+}
+
+impl MachineConfig {
+    pub fn memory(&self, name: &str) -> Option<&MemoryUnit> {
+        self.memories.iter().find(|m| m.name == name)
+    }
+
+    pub fn compute_unit(&self, name: &str) -> Option<&ComputeUnit> {
+        self.compute.iter().find(|c| c.name == name)
+    }
+
+    /// Innermost (fastest/smallest) memory.
+    pub fn innermost_memory(&self) -> &MemoryUnit {
+        self.memories.last().expect("config has no memories")
+    }
+
+    /// The Fig.-1 `set_config_params` hook: adjust one named parameter
+    /// ("versions of the same architecture differ in parameters, not in
+    /// code"). Paths: `memory.<name>.capacity`, `memory.<name>.line`,
+    /// `memory.<name>.banks`, `compute.<name>.count`,
+    /// `compute.<name>.simd`, `roof.peak_flops`, `roof.mem_bw`.
+    pub fn set_param(&mut self, path: &str, value: f64) -> Result<(), String> {
+        let parts: Vec<&str> = path.split('.').collect();
+        match parts.as_slice() {
+            ["memory", name, field] => {
+                let m = self
+                    .memories
+                    .iter_mut()
+                    .find(|m| m.name == *name)
+                    .ok_or_else(|| format!("no memory unit {name:?}"))?;
+                match *field {
+                    "capacity" => m.capacity_bytes = value as u64,
+                    "line" => m.line_bytes = value as u64,
+                    "banks" => m.banks = value as u64,
+                    "bandwidth" => m.bandwidth = value,
+                    f => return Err(format!("unknown memory field {f:?}")),
+                }
+            }
+            ["compute", name, field] => {
+                let c = self
+                    .compute
+                    .iter_mut()
+                    .find(|c| c.name == *name)
+                    .ok_or_else(|| format!("no compute unit {name:?}"))?;
+                match *field {
+                    "count" => c.count = value as u64,
+                    "simd" => c.simd_width = value as u64,
+                    f => return Err(format!("unknown compute field {f:?}")),
+                }
+            }
+            ["roof", "peak_flops"] => self.roof.peak_flops = value,
+            ["roof", "mem_bw"] => self.roof.mem_bw = value,
+            _ => return Err(format!("unknown parameter path {path:?}")),
+        }
+        Ok(())
+    }
+
+    /// Cost-model parameters for autotiling against a memory unit,
+    /// expressed in elements of the given dtype.
+    pub fn cost_params(
+        &self,
+        memory: &str,
+        elem_bytes: u64,
+    ) -> Option<crate::cost::cacheline::CostParams> {
+        let m = self.memory(memory)?;
+        Some(crate::cost::cacheline::CostParams {
+            line_elems: (m.line_bytes / elem_bytes).max(1),
+            mem_cap_elems: m.capacity_bytes / elem_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::targets::builtin_targets;
+
+    #[test]
+    fn set_param_versions_an_architecture() {
+        let mut cfg = builtin_targets().remove(0);
+        let before = cfg.innermost_memory().capacity_bytes;
+        let path = format!("memory.{}.capacity", cfg.innermost_memory().name);
+        cfg.set_param(&path, (before * 2) as f64).unwrap();
+        assert_eq!(cfg.innermost_memory().capacity_bytes, before * 2);
+        assert!(cfg.set_param("memory.nope.capacity", 1.0).is_err());
+        assert!(cfg.set_param("bogus", 1.0).is_err());
+    }
+
+    #[test]
+    fn cost_params_scale_by_dtype() {
+        let cfg = builtin_targets().remove(0);
+        let mname = cfg.innermost_memory().name.clone();
+        let p1 = cfg.cost_params(&mname, 1).unwrap();
+        let p4 = cfg.cost_params(&mname, 4).unwrap();
+        assert_eq!(p1.mem_cap_elems, p4.mem_cap_elems * 4);
+        assert_eq!(p1.line_elems, p4.line_elems * 4);
+    }
+
+    #[test]
+    fn lookup_helpers() {
+        let cfg = builtin_targets().remove(0);
+        assert!(cfg.memory("nope").is_none());
+        assert!(cfg.memory(&cfg.memories[0].name.clone()).is_some());
+    }
+}

@@ -1,0 +1,17 @@
+//! Hardware configuration — the Fig.-1 `create_stripe_config` /
+//! `set_config_params` story.
+//!
+//! A [`MachineConfig`] describes a hardware *architecture*: its memory
+//! hierarchy, compute units (with SIMD widths and required stencils),
+//! roofline balance, and — crucially — the ordered list of generic,
+//! parameterized optimization passes that target it. Hardware *versions*
+//! within an architecture differ only in parameter values
+//! ([`MachineConfig::set_param`]), not in new code: this is the paper's
+//! core engineering-effort claim, quantified in `coordinator/effort.rs`
+//! and `benches/fig1_effort.rs`.
+
+pub mod config;
+pub mod targets;
+
+pub use config::{ComputeUnit, MachineConfig, MemoryUnit, PassConfig, Stencil, StencilRule};
+pub use targets::{builtin_targets, target_by_name};

@@ -1,0 +1,277 @@
+//! Built-in hardware targets.
+//!
+//! Four architectures spanning the design space the paper motivates
+//! (§2.2 "Complex Hardware Topologies"). Each is a `create_stripe_config`
+//! in the Fig.-1 sense: a pass list + parameters, written once per
+//! architecture, with *no* per-operation code.
+//!
+//! | target      | models                                            |
+//! |-------------|---------------------------------------------------|
+//! | `paper_fig4`| the exact hypothetical machine of Fig. 4 (8-elem   |
+//! |             | lines, 512-element tile memory)                    |
+//! | `cpu_cache` | a cached CPU: L1/L2, SIMD, no stencils             |
+//! | `dc_accel`  | a datacenter accelerator: banked SRAM, 4 PEs with  |
+//! |             | a 4×4×8 matmul stencil, partition+stencil passes   |
+//! | `tpu_like`  | a TPU-style core: big VMEM, 128×128 MXU stencil,   |
+//! |             | roofline-driven (bytes, not lines)                 |
+
+use crate::cost::roofline::MachineRoof;
+use crate::cost::search::SearchSpace;
+
+use super::config::{ComputeUnit, MachineConfig, MemoryUnit, PassConfig, Stencil, StencilRule};
+
+/// The machine implied by the paper's Figure 4: cache line of 8
+/// elements, 512 elements of tile memory, single general compute unit.
+pub fn paper_fig4() -> MachineConfig {
+    MachineConfig {
+        name: "paper_fig4".into(),
+        memories: vec![
+            MemoryUnit {
+                name: "DRAM".into(),
+                capacity_bytes: 1 << 30,
+                line_bytes: 8, // i8 elements → 8 bytes = 8 elements
+                banks: 1,
+                bandwidth: 10e9,
+            },
+            MemoryUnit {
+                name: "CACHE".into(),
+                capacity_bytes: 512, // the Fig.-4 cap, in i8 elements
+                line_bytes: 8,
+                banks: 1,
+                bandwidth: 100e9,
+            },
+        ],
+        compute: vec![ComputeUnit {
+            name: "ALU".into(),
+            count: 1,
+            simd_width: 1,
+            stencils: vec![],
+        }],
+        roof: MachineRoof { peak_flops: 100e9, mem_bw: 10e9 },
+        passes: vec![
+            PassConfig::Autotile {
+                memory: "CACHE".into(),
+                space: SearchSpace::Exhaustive,
+                budget: 100_000,
+                output_dims_only: true,
+            },
+            PassConfig::BoundarySplit,
+            PassConfig::Scalarize,
+            PassConfig::Schedule { memory: "DRAM".into() },
+        ],
+    }
+}
+
+/// A cached CPU (automatic caching — tiling improves hit rates).
+pub fn cpu_cache() -> MachineConfig {
+    MachineConfig {
+        name: "cpu_cache".into(),
+        memories: vec![
+            MemoryUnit {
+                name: "DRAM".into(),
+                capacity_bytes: 8 << 30,
+                line_bytes: 64,
+                banks: 1,
+                bandwidth: 25e9,
+            },
+            MemoryUnit {
+                name: "L2".into(),
+                capacity_bytes: 1 << 20,
+                line_bytes: 64,
+                banks: 1,
+                bandwidth: 200e9,
+            },
+            MemoryUnit {
+                name: "L1".into(),
+                capacity_bytes: 32 << 10,
+                line_bytes: 64,
+                banks: 1,
+                bandwidth: 800e9,
+            },
+        ],
+        compute: vec![ComputeUnit {
+            name: "core".into(),
+            count: 8,
+            simd_width: 8,
+            stencils: vec![],
+        }],
+        roof: MachineRoof { peak_flops: 500e9, mem_bw: 25e9 },
+        passes: vec![
+            PassConfig::Fuse { max_group: 4 },
+            PassConfig::Autotile {
+                memory: "L1".into(),
+                space: SearchSpace::PowersOfTwo,
+                budget: 4_096,
+                output_dims_only: true,
+            },
+            PassConfig::BoundarySplit,
+            PassConfig::Scalarize,
+            PassConfig::Localize,
+            PassConfig::Schedule { memory: "DRAM".into() },
+        ],
+    }
+}
+
+/// A datacenter inference accelerator: explicitly-managed banked SRAM,
+/// four PEs each with a small matmul engine (4 out-ch × 4 spatial × 8
+/// in-ch stencil), work partitioned across PEs.
+pub fn dc_accel() -> MachineConfig {
+    MachineConfig {
+        name: "dc_accel".into(),
+        memories: vec![
+            MemoryUnit {
+                name: "HBM".into(),
+                capacity_bytes: 4 << 30,
+                line_bytes: 32,
+                banks: 1,
+                bandwidth: 300e9,
+            },
+            MemoryUnit {
+                name: "SRAM".into(),
+                capacity_bytes: 64 << 10,
+                line_bytes: 32,
+                banks: 4,
+                bandwidth: 2e12,
+            },
+        ],
+        compute: vec![ComputeUnit {
+            name: "PE".into(),
+            count: 4,
+            simd_width: 16,
+            stencils: vec![Stencil {
+                name: "mac4x4x8".into(),
+                rules: vec![
+                    // m: output spatial — strides out + first input
+                    StencilRule { in_out: true, in_a: true, in_b: false, size: 4 },
+                    // n: output channels — strides out + second input
+                    StencilRule { in_out: true, in_a: false, in_b: true, size: 4 },
+                    // k: reduction — strides both inputs only
+                    StencilRule { in_out: false, in_a: true, in_b: true, size: 8 },
+                ],
+                tag: "mac_unit".into(),
+            }],
+        }],
+        roof: MachineRoof { peak_flops: 4e12, mem_bw: 300e9 },
+        // No Fuse here: on an explicitly-managed accelerator the
+        // partition/tile/stencil stack is the win, and fusing first
+        // would hide the contraction accesses from those passes (the
+        // composition limit is documented in DESIGN.md §Limitations).
+        passes: vec![
+            PassConfig::Transpose,
+            PassConfig::Partition { unit: "PE".into(), memory: "SRAM".into() },
+            PassConfig::Autotile {
+                memory: "SRAM".into(),
+                space: SearchSpace::PowersOfTwo,
+                budget: 4_096,
+                output_dims_only: true,
+            },
+            PassConfig::Stencilize { unit: "PE".into() },
+            PassConfig::BoundarySplit,
+            PassConfig::Scalarize,
+            PassConfig::Localize,
+            PassConfig::Schedule { memory: "SRAM".into() },
+        ],
+    }
+}
+
+/// A TPU-style core: one big vector memory, a 128×128 systolic MXU. The
+/// Stripe tiling expresses the HBM↔VMEM schedule (what Pallas BlockSpecs
+/// express on real hardware — see DESIGN.md §Hardware-Adaptation);
+/// stencil sizes are MXU-shaped.
+pub fn tpu_like() -> MachineConfig {
+    MachineConfig {
+        name: "tpu_like".into(),
+        memories: vec![
+            MemoryUnit {
+                name: "HBM".into(),
+                capacity_bytes: 16 << 30,
+                line_bytes: 512,
+                banks: 1,
+                bandwidth: 1.2e12,
+            },
+            MemoryUnit {
+                name: "VMEM".into(),
+                capacity_bytes: 16 << 20,
+                line_bytes: 512,
+                banks: 1,
+                bandwidth: 20e12,
+            },
+        ],
+        compute: vec![ComputeUnit {
+            name: "MXU".into(),
+            count: 1,
+            simd_width: 128,
+            stencils: vec![Stencil {
+                name: "mxu128".into(),
+                rules: vec![
+                    StencilRule { in_out: true, in_a: true, in_b: false, size: 8 },
+                    StencilRule { in_out: true, in_a: false, in_b: true, size: 128 },
+                    StencilRule { in_out: false, in_a: true, in_b: true, size: 128 },
+                ],
+                tag: "mxu".into(),
+            }],
+        }],
+        roof: MachineRoof { peak_flops: 180e12, mem_bw: 1.2e12 },
+        // Tile the big contractions for VMEM first; fusion then picks up
+        // the still-flat elementwise chains.
+        passes: vec![
+            PassConfig::Autotile {
+                memory: "VMEM".into(),
+                space: SearchSpace::PowersOfTwo,
+                budget: 4_096,
+                output_dims_only: true,
+            },
+            PassConfig::Fuse { max_group: 4 },
+            PassConfig::BoundarySplit,
+            PassConfig::Scalarize,
+            PassConfig::Localize,
+            PassConfig::Schedule { memory: "HBM".into() },
+        ],
+    }
+}
+
+/// All built-in targets.
+pub fn builtin_targets() -> Vec<MachineConfig> {
+    vec![paper_fig4(), cpu_cache(), dc_accel(), tpu_like()]
+}
+
+/// Look up a target by name.
+pub fn target_by_name(name: &str) -> Option<MachineConfig> {
+    builtin_targets().into_iter().find(|t| t.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_targets_exist() {
+        let t = builtin_targets();
+        assert_eq!(t.len(), 4);
+        for cfg in &t {
+            assert!(!cfg.memories.is_empty());
+            assert!(!cfg.passes.is_empty());
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(target_by_name("paper_fig4").is_some());
+        assert!(target_by_name("dc_accel").is_some());
+        assert!(target_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn fig4_matches_paper_parameters() {
+        let cfg = paper_fig4();
+        let p = cfg.cost_params("CACHE", 1).unwrap();
+        assert_eq!(p.line_elems, 8);
+        assert_eq!(p.mem_cap_elems, 512);
+    }
+
+    #[test]
+    fn stencil_targets_have_stencils() {
+        assert!(!target_by_name("dc_accel").unwrap().compute[0].stencils.is_empty());
+        assert!(!target_by_name("tpu_like").unwrap().compute[0].stencils.is_empty());
+    }
+}

@@ -1,0 +1,533 @@
+//! Blocks, refinements, and statements — the core Stripe structures.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::poly::{Affine, Polyhedron};
+
+use super::types::{Location, TensorType};
+
+/// Aggregation operations (Definition 2's associative & commutative
+/// `a_B`). `Assign` is the paper's special aggregation that makes writes
+/// from multiple iterations illegal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AggOp {
+    Assign,
+    Add,
+    Mul,
+    Max,
+    Min,
+}
+
+impl AggOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            AggOp::Assign => "assign",
+            AggOp::Add => "add",
+            AggOp::Mul => "mul",
+            AggOp::Max => "max",
+            AggOp::Min => "min",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AggOp> {
+        Some(match s {
+            "assign" => AggOp::Assign,
+            "add" => AggOp::Add,
+            "mul" => AggOp::Mul,
+            "max" => AggOp::Max,
+            "min" => AggOp::Min,
+            _ => return None,
+        })
+    }
+
+    /// Combine two written values per Definition 2.
+    pub fn combine(self, a: f32, b: f32) -> f32 {
+        match self {
+            AggOp::Assign => b,
+            AggOp::Add => a + b,
+            AggOp::Mul => a * b,
+            AggOp::Max => a.max(b),
+            AggOp::Min => a.min(b),
+        }
+    }
+}
+
+/// Direction of a refinement: how the child block uses the buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RefDir {
+    In,
+    Out,
+    InOut,
+    /// A block-local allocation (scratch / localized intermediate); has
+    /// no parent buffer.
+    Temp,
+}
+
+impl RefDir {
+    pub fn name(self) -> &'static str {
+        match self {
+            RefDir::In => "in",
+            RefDir::Out => "out",
+            RefDir::InOut => "inout",
+            RefDir::Temp => "tmp",
+        }
+    }
+
+    pub fn is_read(self) -> bool {
+        matches!(self, RefDir::In | RefDir::InOut)
+    }
+
+    pub fn is_write(self) -> bool {
+        matches!(self, RefDir::Out | RefDir::InOut)
+    }
+}
+
+/// A refinement: brings a sub-view of a parent buffer into scope in a
+/// child block (§3.2). `access` gives the per-dimension offset of the
+/// child view's origin within the parent view, as affine polynomials of
+/// the *enclosing block's* indexes; `ttype` gives the child view's
+/// size/stride layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Refinement {
+    pub dir: RefDir,
+    /// Name of the buffer in the parent scope (`""` for `Temp`).
+    pub from: String,
+    /// Local name in this block's scope (commonly equal to `from`).
+    pub into: String,
+    /// Per-parent-dimension affine offsets of the view origin.
+    pub access: Vec<Affine>,
+    /// Child view layout.
+    pub ttype: TensorType,
+    /// Aggregation for writes through this refinement.
+    pub agg: AggOp,
+    /// Optional hardware placement.
+    pub location: Option<Location>,
+}
+
+impl Refinement {
+    pub fn new(dir: RefDir, name: &str, access: Vec<Affine>, ttype: TensorType) -> Refinement {
+        Refinement {
+            dir,
+            from: name.to_string(),
+            into: name.to_string(),
+            access,
+            ttype,
+            agg: AggOp::Assign,
+            location: None,
+        }
+    }
+
+    pub fn with_agg(mut self, agg: AggOp) -> Refinement {
+        self.agg = agg;
+        self
+    }
+
+    pub fn with_into(mut self, into: &str) -> Refinement {
+        self.into = into.to_string();
+        self
+    }
+
+    pub fn with_location(mut self, loc: Location) -> Refinement {
+        self.location = Some(loc);
+        self
+    }
+
+    /// Zero-offset access of the given rank.
+    pub fn zero_access(rank: usize) -> Vec<Affine> {
+        vec![Affine::zero(); rank]
+    }
+}
+
+/// One iteration index of a block. A *passed* index (`affine` set) has
+/// range 1 and takes its value from an affine of the parent block's
+/// indexes — the paper's "any parent index used [must] be explicitly
+/// passed to the child block".
+#[derive(Debug, Clone, PartialEq)]
+pub struct Idx {
+    pub name: String,
+    pub range: u64,
+    pub affine: Option<Affine>,
+}
+
+impl Idx {
+    pub fn range(name: &str, range: u64) -> Idx {
+        Idx { name: name.to_string(), range, affine: None }
+    }
+
+    pub fn passed(name: &str, value: Affine) -> Idx {
+        Idx { name: name.to_string(), range: 1, affine: Some(value) }
+    }
+}
+
+/// Scalar intrinsics (§3.2: "An intrinsic works with scalar values").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntrOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Neg,
+    Max,
+    Min,
+    Exp,
+    Log,
+    Sqrt,
+    Tanh,
+    /// max(x, 0) — common enough in ML lowering to warrant an intrinsic.
+    Relu,
+    /// select(c, a, b): c != 0 ? a : b
+    Select,
+    /// a < b ? 1 : 0
+    Lt,
+}
+
+impl IntrOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            IntrOp::Add => "add",
+            IntrOp::Sub => "sub",
+            IntrOp::Mul => "mul",
+            IntrOp::Div => "div",
+            IntrOp::Neg => "neg",
+            IntrOp::Max => "max",
+            IntrOp::Min => "min",
+            IntrOp::Exp => "exp",
+            IntrOp::Log => "log",
+            IntrOp::Sqrt => "sqrt",
+            IntrOp::Tanh => "tanh",
+            IntrOp::Relu => "relu",
+            IntrOp::Select => "select",
+            IntrOp::Lt => "lt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<IntrOp> {
+        Some(match s {
+            "add" => IntrOp::Add,
+            "sub" => IntrOp::Sub,
+            "mul" => IntrOp::Mul,
+            "div" => IntrOp::Div,
+            "neg" => IntrOp::Neg,
+            "max" => IntrOp::Max,
+            "min" => IntrOp::Min,
+            "exp" => IntrOp::Exp,
+            "log" => IntrOp::Log,
+            "sqrt" => IntrOp::Sqrt,
+            "tanh" => IntrOp::Tanh,
+            "relu" => IntrOp::Relu,
+            "select" => IntrOp::Select,
+            "lt" => IntrOp::Lt,
+            _ => return None,
+        })
+    }
+
+    pub fn arity(self) -> usize {
+        match self {
+            IntrOp::Neg
+            | IntrOp::Exp
+            | IntrOp::Log
+            | IntrOp::Sqrt
+            | IntrOp::Tanh
+            | IntrOp::Relu => 1,
+            IntrOp::Select => 3,
+            _ => 2,
+        }
+    }
+
+    pub fn eval(self, args: &[f32]) -> f32 {
+        match self {
+            IntrOp::Add => args[0] + args[1],
+            IntrOp::Sub => args[0] - args[1],
+            IntrOp::Mul => args[0] * args[1],
+            IntrOp::Div => args[0] / args[1],
+            IntrOp::Neg => -args[0],
+            IntrOp::Max => args[0].max(args[1]),
+            IntrOp::Min => args[0].min(args[1]),
+            IntrOp::Exp => args[0].exp(),
+            IntrOp::Log => args[0].ln(),
+            IntrOp::Sqrt => args[0].sqrt(),
+            IntrOp::Tanh => args[0].tanh(),
+            IntrOp::Relu => args[0].max(0.0),
+            IntrOp::Select => {
+                if args[0] != 0.0 {
+                    args[1]
+                } else {
+                    args[2]
+                }
+            }
+            IntrOp::Lt => {
+                if args[0] < args[1] {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// A *special* function: a complex tensor-granularity operation that is
+/// "inappropriate to represent as blocks of operations on scalars"
+/// (§3.2), e.g. scatter/gather/reshape. Operands name refinements in
+/// scope; `attrs` carry op-specific parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Special {
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub attrs: BTreeMap<String, String>,
+}
+
+/// A statement in a block's (single, semantically serial) statement list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Statement {
+    /// Nested parallel polyhedral block.
+    Block(Box<Block>),
+    /// `$into = load(from)` — read the scalar at a refinement's origin.
+    Load { from: String, into: String },
+    /// `into = store($from)` — write a scalar through a refinement,
+    /// combining with the refinement's aggregation op.
+    Store { from: String, into: String },
+    /// `$out = op($in...)` — scalar computation.
+    Intrinsic { op: IntrOp, inputs: Vec<String>, output: String },
+    /// `$out = <constant>`.
+    Constant { output: String, value: f64 },
+    /// Tensor-granularity special function.
+    Special(Special),
+}
+
+impl Statement {
+    pub fn as_block(&self) -> Option<&Block> {
+        match self {
+            Statement::Block(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_block_mut(&mut self) -> Option<&mut Block> {
+        match self {
+            Statement::Block(b) => Some(b),
+            _ => None,
+        }
+    }
+}
+
+/// A Stripe block: one parallel polyhedral block of the Nested
+/// Polyhedral Model.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Block {
+    /// Diagnostic name (`conv1`, `conv1_tile`, ...); not semantic.
+    pub name: String,
+    /// Iteration indexes (range and passed).
+    pub idxs: Vec<Idx>,
+    /// Additional (non-rectilinear) constraints: each `c(x) >= 0`, over
+    /// this block's index names.
+    pub constraints: Vec<Affine>,
+    /// Buffer views in scope in this block.
+    pub refs: Vec<Refinement>,
+    /// The single statement list (identical for every iteration).
+    pub stmts: Vec<Statement>,
+    /// Free-form, non-semantic tags for passes and the HAL.
+    pub tags: BTreeSet<String>,
+    /// Optional execution placement of the whole block.
+    pub location: Option<Location>,
+}
+
+impl Block {
+    pub fn new(name: &str) -> Block {
+        Block { name: name.to_string(), ..Default::default() }
+    }
+
+    /// The iteration-space polyhedron (ranged indexes only; passed
+    /// indexes are range-1 and contribute nothing to the space).
+    pub fn iteration_space(&self) -> Polyhedron {
+        Polyhedron {
+            dims: self
+                .idxs
+                .iter()
+                .map(|i| crate::poly::polyhedron::Dim { name: i.name.clone(), range: i.range })
+                .collect(),
+            constraints: self.constraints.clone(),
+        }
+    }
+
+    /// Names of all indexes (ranged + passed).
+    pub fn idx_names(&self) -> Vec<String> {
+        self.idxs.iter().map(|i| i.name.clone()).collect()
+    }
+
+    pub fn idx(&self, name: &str) -> Option<&Idx> {
+        self.idxs.iter().find(|i| i.name == name)
+    }
+
+    pub fn find_ref(&self, into: &str) -> Option<&Refinement> {
+        self.refs.iter().find(|r| r.into == into)
+    }
+
+    pub fn find_ref_mut(&mut self, into: &str) -> Option<&mut Refinement> {
+        self.refs.iter_mut().find(|r| r.into == into)
+    }
+
+    pub fn has_tag(&self, tag: &str) -> bool {
+        self.tags.contains(tag)
+    }
+
+    pub fn add_tag(&mut self, tag: &str) {
+        self.tags.insert(tag.to_string());
+    }
+
+    /// Number of iterations (lattice points satisfying constraints).
+    pub fn iterations(&self) -> u64 {
+        self.iteration_space().count_points()
+    }
+
+    /// Total iterations of this block times all nested blocks — a rough
+    /// "work" measure used by cost heuristics.
+    pub fn total_leaf_iterations(&self) -> u64 {
+        let own = self.iterations();
+        let inner: u64 = self
+            .stmts
+            .iter()
+            .map(|s| match s {
+                Statement::Block(b) => b.total_leaf_iterations(),
+                _ => 0,
+            })
+            .sum::<u64>()
+            .max(1);
+        own * inner
+    }
+
+    /// Immutable iterator over directly nested blocks.
+    pub fn child_blocks(&self) -> impl Iterator<Item = &Block> {
+        self.stmts.iter().filter_map(|s| s.as_block())
+    }
+
+    /// Mutable iterator over directly nested blocks.
+    pub fn child_blocks_mut(&mut self) -> impl Iterator<Item = &mut Block> {
+        self.stmts.iter_mut().filter_map(|s| s.as_block_mut())
+    }
+
+    /// Depth of block nesting (a leaf compute block has depth 1).
+    pub fn depth(&self) -> usize {
+        1 + self.child_blocks().map(|b| b.depth()).max().unwrap_or(0)
+    }
+
+    /// Walk all blocks in the tree (preorder), calling `f` on each.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Block)) {
+        f(self);
+        for b in self.child_blocks() {
+            b.walk(f);
+        }
+    }
+
+    /// Walk all blocks mutably (preorder).
+    pub fn walk_mut(&mut self, f: &mut impl FnMut(&mut Block)) {
+        f(self);
+        for b in self.child_blocks_mut() {
+            b.walk_mut(f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::DType;
+
+    fn leaf() -> Block {
+        let mut b = Block::new("leaf");
+        b.idxs.push(Idx::range("x", 4));
+        b.refs.push(Refinement::new(
+            RefDir::Out,
+            "O",
+            vec![Affine::var("x")],
+            TensorType::contiguous(DType::F32, &[1]),
+        ));
+        b.stmts.push(Statement::Constant { output: "$c".into(), value: 1.0 });
+        b.stmts.push(Statement::Store { from: "$c".into(), into: "O".into() });
+        b
+    }
+
+    #[test]
+    fn iteration_space_from_idxs() {
+        let b = leaf();
+        assert_eq!(b.iterations(), 4);
+        assert_eq!(b.iteration_space().rank(), 1);
+    }
+
+    #[test]
+    fn passed_idx_has_range_one() {
+        let i = Idx::passed("x", Affine::var("xp"));
+        assert_eq!(i.range, 1);
+        assert!(i.affine.is_some());
+    }
+
+    #[test]
+    fn nesting_depth_and_walk() {
+        let mut outer = Block::new("outer");
+        outer.idxs.push(Idx::range("t", 3));
+        outer.stmts.push(Statement::Block(Box::new(leaf())));
+        assert_eq!(outer.depth(), 2);
+        assert_eq!(outer.total_leaf_iterations(), 12);
+        let mut names = Vec::new();
+        outer.walk(&mut |b| names.push(b.name.clone()));
+        assert_eq!(names, vec!["outer", "leaf"]);
+    }
+
+    #[test]
+    fn agg_combine() {
+        assert_eq!(AggOp::Add.combine(2.0, 3.0), 5.0);
+        assert_eq!(AggOp::Max.combine(2.0, 3.0), 3.0);
+        assert_eq!(AggOp::Min.combine(2.0, 3.0), 2.0);
+        assert_eq!(AggOp::Mul.combine(2.0, 3.0), 6.0);
+        assert_eq!(AggOp::Assign.combine(2.0, 3.0), 3.0);
+    }
+
+    #[test]
+    fn intrinsic_eval() {
+        assert_eq!(IntrOp::Relu.eval(&[-1.0]), 0.0);
+        assert_eq!(IntrOp::Relu.eval(&[2.0]), 2.0);
+        assert_eq!(IntrOp::Select.eval(&[1.0, 5.0, 7.0]), 5.0);
+        assert_eq!(IntrOp::Select.eval(&[0.0, 5.0, 7.0]), 7.0);
+        assert_eq!(IntrOp::Lt.eval(&[1.0, 2.0]), 1.0);
+        assert!((IntrOp::Exp.eval(&[0.0]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn intrinsic_name_roundtrip() {
+        for op in [
+            IntrOp::Add,
+            IntrOp::Sub,
+            IntrOp::Mul,
+            IntrOp::Div,
+            IntrOp::Neg,
+            IntrOp::Max,
+            IntrOp::Min,
+            IntrOp::Exp,
+            IntrOp::Log,
+            IntrOp::Sqrt,
+            IntrOp::Tanh,
+            IntrOp::Relu,
+            IntrOp::Select,
+            IntrOp::Lt,
+        ] {
+            assert_eq!(IntrOp::parse(op.name()), Some(op));
+        }
+    }
+
+    #[test]
+    fn refinement_builders() {
+        let r = Refinement::new(
+            RefDir::In,
+            "I",
+            Refinement::zero_access(3),
+            TensorType::contiguous(DType::I8, &[12, 16, 8]),
+        )
+        .with_agg(AggOp::Add)
+        .with_into("I_tile");
+        assert_eq!(r.agg, AggOp::Add);
+        assert_eq!(r.into, "I_tile");
+        assert_eq!(r.from, "I");
+        assert!(r.dir.is_read() && !r.dir.is_write());
+    }
+}

@@ -1,0 +1,239 @@
+//! Construction helpers for canonical Stripe blocks.
+//!
+//! The frontend lowers every Tile contraction to the same canonical
+//! *flat* form (§1.3: "Stripe code representing a single tensor
+//! operation can be represented as an unnested polyhedron"): one block
+//! whose iteration space covers the whole operation, with size-1 leaf
+//! refinements and a short scalar statement list. Passes then rewrite
+//! this form into nested blocks.
+
+use crate::poly::Affine;
+
+use super::block::{AggOp, Block, Idx, IntrOp, RefDir, Refinement, Statement};
+use super::types::{Dim, TensorType};
+
+/// An operand of a canonical block: buffer name + per-dimension access
+/// polynomials + the parent view's type (for strides and dtype).
+#[derive(Debug, Clone)]
+pub struct Operand {
+    pub name: String,
+    pub access: Vec<Affine>,
+    pub ttype: TensorType,
+}
+
+impl Operand {
+    pub fn new(name: &str, access: Vec<Affine>, ttype: &TensorType) -> Operand {
+        Operand { name: name.to_string(), access, ttype: ttype.clone() }
+    }
+}
+
+/// Scalar view type: size-1 in every dimension, parent strides kept (the
+/// Fig.-5 leaf form `i8(1, 1, 1):(128, 8, 1)`).
+pub fn scalar_view(parent: &TensorType) -> TensorType {
+    TensorType {
+        dtype: parent.dtype,
+        dims: parent.dims.iter().map(|d| Dim { size: 1, stride: d.stride }).collect(),
+    }
+}
+
+/// Make the `in` refinement for an operand at leaf granularity.
+fn in_ref(op: &Operand) -> Refinement {
+    Refinement::new(RefDir::In, &op.name, op.access.clone(), scalar_view(&op.ttype))
+}
+
+/// Make the `out` refinement for an operand at leaf granularity.
+fn out_ref(op: &Operand, agg: AggOp) -> Refinement {
+    Refinement::new(RefDir::Out, &op.name, op.access.clone(), scalar_view(&op.ttype)).with_agg(agg)
+}
+
+/// Build a contraction block: `out[f(x)] agg= combine(in0[g0(x)], in1[g1(x)])`
+/// over the iteration space given by `idxs` and `constraints`.
+///
+/// With one input, `combine` is ignored and the input value is stored
+/// directly (e.g. a max-pool is `out max= in`).
+pub fn contraction(
+    name: &str,
+    idxs: &[(&str, u64)],
+    constraints: Vec<Affine>,
+    out: Operand,
+    agg: AggOp,
+    inputs: &[Operand],
+    combine: IntrOp,
+) -> Block {
+    assert!(!inputs.is_empty() && inputs.len() <= 2);
+    let mut b = Block::new(name);
+    b.idxs = idxs.iter().map(|(n, r)| Idx::range(n, *r)).collect();
+    b.constraints = constraints;
+    for i in inputs {
+        b.refs.push(in_ref(i));
+    }
+    b.refs.push(out_ref(&out, agg));
+    // Statement list.
+    let mut scalars = Vec::new();
+    for i in inputs {
+        let s = format!("${}", i.name);
+        b.stmts.push(Statement::Load { from: i.name.clone(), into: s.clone() });
+        scalars.push(s);
+    }
+    let result = if inputs.len() == 2 {
+        let out_scalar = format!("${}", out.name);
+        b.stmts.push(Statement::Intrinsic {
+            op: combine,
+            inputs: scalars.clone(),
+            output: out_scalar.clone(),
+        });
+        out_scalar
+    } else {
+        scalars[0].clone()
+    };
+    b.stmts.push(Statement::Store { from: result, into: out.name.clone() });
+    b
+}
+
+/// Build an elementwise block applying a chain of unary intrinsics (in
+/// order) to a single input: `out[x] = opN(...(op1(in[x])))`.
+pub fn elementwise_unary(
+    name: &str,
+    idxs: &[(&str, u64)],
+    out: Operand,
+    input: Operand,
+    ops: &[IntrOp],
+) -> Block {
+    let mut b = Block::new(name);
+    b.idxs = idxs.iter().map(|(n, r)| Idx::range(n, *r)).collect();
+    b.refs.push(in_ref(&input));
+    b.refs.push(out_ref(&out, AggOp::Assign));
+    let mut cur = format!("${}", input.name);
+    b.stmts.push(Statement::Load { from: input.name.clone(), into: cur.clone() });
+    for (i, op) in ops.iter().enumerate() {
+        assert_eq!(op.arity(), 1, "elementwise_unary takes unary ops");
+        let next = format!("$t{i}");
+        b.stmts.push(Statement::Intrinsic {
+            op: *op,
+            inputs: vec![cur.clone()],
+            output: next.clone(),
+        });
+        cur = next;
+    }
+    b.stmts.push(Statement::Store { from: cur, into: out.name.clone() });
+    b
+}
+
+/// Build an elementwise binary block: `out[x] = op(a[x], b[x])`.
+pub fn elementwise_binary(
+    name: &str,
+    idxs: &[(&str, u64)],
+    out: Operand,
+    a: Operand,
+    bb: Operand,
+    op: IntrOp,
+) -> Block {
+    contraction(name, idxs, Vec::new(), out, AggOp::Assign, &[a, bb], op)
+}
+
+/// Identity-style access: one index per dimension, `[x, y, ...]`.
+pub fn identity_access(names: &[&str]) -> Vec<Affine> {
+    names.iter().map(|n| Affine::var(n)).collect()
+}
+
+/// The boundary ("halo") constraints for an access `a(x)` that must stay
+/// within `[0, size)`: returns `a >= 0` and `size - 1 - a >= 0`.
+pub fn containment_constraints(access: &Affine, size: u64) -> [Affine; 2] {
+    let lower = access.clone();
+    let mut upper = access.scale(-1);
+    upper.offset += size as i64 - 1;
+    [lower, upper]
+}
+
+/// Fig.-4/5 running example: the 3×3 same-padded convolution
+/// `O[x,y,k] += I[x+i-1, y+j-1, c] * F[i,j,k,c]` with I: (12,16,8) i8,
+/// O: (12,16,16) i8, F: (3,3,16,8) i8.
+pub fn fig5_conv_block() -> Block {
+    use super::types::DType;
+    let i_t = TensorType::contiguous(DType::I8, &[12, 16, 8]);
+    let f_t = TensorType::contiguous(DType::I8, &[3, 3, 16, 8]);
+    let o_t = TensorType::contiguous(DType::I8, &[12, 16, 16]);
+    let ax = Affine::from_terms(&[("x", 1), ("i", 1)], -1);
+    let ay = Affine::from_terms(&[("y", 1), ("j", 1)], -1);
+    let mut cons = Vec::new();
+    cons.extend(containment_constraints(&ax, 12));
+    cons.extend(containment_constraints(&ay, 16));
+    contraction(
+        "conv",
+        &[("x", 12), ("y", 16), ("i", 3), ("j", 3), ("c", 8), ("k", 16)],
+        cons,
+        Operand::new("O", vec![Affine::var("x"), Affine::var("y"), Affine::var("k")], &o_t),
+        AggOp::Add,
+        &[
+            Operand::new("I", vec![ax, ay, Affine::var("c")], &i_t),
+            Operand::new(
+                "F",
+                vec![Affine::var("i"), Affine::var("j"), Affine::var("k"), Affine::var("c")],
+                &f_t,
+            ),
+        ],
+        IntrOp::Mul,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::DType;
+
+    #[test]
+    fn fig5_conv_shape() {
+        let b = fig5_conv_block();
+        assert_eq!(b.idxs.len(), 6);
+        assert_eq!(b.constraints.len(), 4);
+        assert_eq!(b.refs.len(), 3);
+        assert_eq!(b.stmts.len(), 4); // load, load, mul, store
+        // Valid iterations: x+i-1 in [0,12), y+j-1 in [0,16)
+        let expected = (0..12i64)
+            .flat_map(|x| (0..3i64).map(move |i| (x, i)))
+            .filter(|(x, i)| (0..12).contains(&(x + i - 1)))
+            .count() as u64
+            * (0..16i64)
+                .flat_map(|y| (0..3i64).map(move |j| (y, j)))
+                .filter(|(y, j)| (0..16).contains(&(y + j - 1)))
+                .count() as u64
+            * 8
+            * 16;
+        assert_eq!(b.iterations(), expected);
+    }
+
+    #[test]
+    fn scalar_view_keeps_strides() {
+        let t = TensorType::contiguous(DType::I8, &[12, 16, 8]);
+        let s = scalar_view(&t);
+        assert_eq!(s.sizes(), vec![1, 1, 1]);
+        assert_eq!(s.strides(), vec![128, 8, 1]);
+    }
+
+    #[test]
+    fn containment_bounds() {
+        let a = Affine::from_terms(&[("x", 1), ("i", 1)], -1);
+        let [lo, hi] = containment_constraints(&a, 12);
+        // at x=0,i=0: a=-1 violates lo
+        let names = vec!["x".to_string(), "i".to_string()];
+        assert!(lo.eval_slices(&names, &[0, 0]) < 0);
+        assert!(lo.eval_slices(&names, &[0, 1]) >= 0);
+        // at x=11,i=2: a=12 violates hi (12 <= 11 required)
+        assert!(hi.eval_slices(&names, &[11, 2]) < 0);
+        assert!(hi.eval_slices(&names, &[11, 1]) >= 0);
+    }
+
+    #[test]
+    fn unary_chain() {
+        let t = TensorType::contiguous(DType::F32, &[8]);
+        let b = elementwise_unary(
+            "relu",
+            &[("x", 8)],
+            Operand::new("O", identity_access(&["x"]), &t),
+            Operand::new("I", identity_access(&["x"]), &t),
+            &[IntrOp::Relu],
+        );
+        assert_eq!(b.stmts.len(), 3);
+        assert_eq!(b.refs.len(), 2);
+    }
+}

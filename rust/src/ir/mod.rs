@@ -1,0 +1,41 @@
+//! The Stripe intermediate representation (§3.2 of the paper).
+//!
+//! Stripe represents *parallel polyhedral blocks* (Definition 2) with the
+//! [`Block`] structure:
+//!
+//! * a polyhedral iteration space — named indexes with ranges plus affine
+//!   constraints (`c(x) ≥ 0`);
+//! * a **single** statement list shared by every iteration (what varies
+//!   per iteration is only which buffer elements are accessed);
+//! * explicitly declared I/O buffers brought into scope through
+//!   [`Refinement`]s — sub-views with per-dimension affine offset
+//!   (`access`), size/stride layout, an aggregation operation, and an
+//!   optional hardware [`Location`];
+//! * statements that are nested blocks, scalar *intrinsics*
+//!   (load/store/arithmetic), or *special* functions (tensor-granularity
+//!   ops like scatter/gather);
+//! * *tags* — free-form strings with no semantics, consumed by passes
+//!   and the hardware abstraction layer.
+//!
+//! Sub-modules:
+//! * [`types`] — dtypes, tensor shapes (size+stride per dim), locations;
+//! * [`block`] — blocks, refinements, statements, aggregations;
+//! * [`program`] — a whole network: named top-level buffers + root block;
+//! * [`builder`] — ergonomic construction helpers used by the frontend
+//!   and by tests;
+//! * [`printer`] / [`parser`] — the Fig.-5-style textual format
+//!   (round-trips: `parse(print(p)) == p`);
+//! * [`validate`] — checks the Definition-2 conditions and the scoping
+//!   rules (explicit index passing, refinement containment).
+
+pub mod block;
+pub mod builder;
+pub mod parser;
+pub mod printer;
+pub mod program;
+pub mod types;
+pub mod validate;
+
+pub use block::{AggOp, Block, Idx, IntrOp, RefDir, Refinement, Special, Statement};
+pub use program::{BufKind, Buffer, Program};
+pub use types::{DType, Dim, Location, TensorType};

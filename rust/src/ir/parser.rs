@@ -1,0 +1,659 @@
+//! Parser for the textual Stripe format produced by [`super::printer`].
+//!
+//! Hand-written tokenizer + recursive descent. The parser is used by
+//! golden tests (Fig. 5 before/after), by the CLI (`stripe run
+//! file.stripe`), and round-trip property tests.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::poly::Affine;
+
+use super::block::{AggOp, Block, Idx, IntrOp, RefDir, Refinement, Special, Statement};
+use super::program::{BufKind, Buffer, Program};
+use super::types::{DType, Dim, Location, TensorType};
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Scalar(String), // $name
+    Int(i64),
+    Float(f64),
+    Punct(char),
+    Arrow, // ->
+    Ge,    // >=
+}
+
+fn tokenize(src: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < bytes.len() && bytes[i + 1] == '/' {
+            while i < bytes.len() && bytes[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '-' && i + 1 < bytes.len() && bytes[i + 1] == '>' {
+            out.push(Tok::Arrow);
+            i += 2;
+            continue;
+        }
+        if c == '>' && i + 1 < bytes.len() && bytes[i + 1] == '=' {
+            out.push(Tok::Ge);
+            i += 2;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut is_float = false;
+            while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == '.') {
+                if bytes[i] == '.' {
+                    is_float = true;
+                }
+                i += 1;
+            }
+            // Exponent part
+            if i < bytes.len() && (bytes[i] == 'e' || bytes[i] == 'E') {
+                is_float = true;
+                i += 1;
+                if i < bytes.len() && (bytes[i] == '+' || bytes[i] == '-') {
+                    i += 1;
+                }
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+            }
+            let text: String = bytes[start..i].iter().collect();
+            if is_float {
+                out.push(Tok::Float(text.parse()?));
+            } else {
+                out.push(Tok::Int(text.parse()?));
+            }
+            continue;
+        }
+        if c == '$' {
+            let start = i;
+            i += 1;
+            while i < bytes.len() && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                i += 1;
+            }
+            out.push(Tok::Scalar(bytes[start..i].iter().collect()));
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < bytes.len() && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                i += 1;
+            }
+            out.push(Tok::Ident(bytes[start..i].iter().collect()));
+            continue;
+        }
+        if "[](){}:,=#*+-<>@".contains(c) {
+            out.push(Tok::Punct(c));
+            i += 1;
+            continue;
+        }
+        bail!("unexpected character {c:?} at offset {i}");
+    }
+    Ok(out)
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self.toks.get(self.pos).cloned().ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect_punct(&mut self, c: char) -> Result<()> {
+        match self.next()? {
+            Tok::Punct(p) if p == c => Ok(()),
+            t => bail!("expected {c:?}, got {t:?} at tok {}", self.pos - 1),
+        }
+    }
+
+    fn eat_punct(&mut self, c: char) -> bool {
+        if matches!(self.peek(), Some(Tok::Punct(p)) if *p == c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            t => bail!("expected identifier, got {t:?} at tok {}", self.pos - 1),
+        }
+    }
+
+    fn expect_keyword(&mut self, kw: &str) -> Result<()> {
+        let s = self.expect_ident()?;
+        if s != kw {
+            bail!("expected keyword {kw:?}, got {s:?}");
+        }
+        Ok(())
+    }
+
+    fn expect_int(&mut self) -> Result<i64> {
+        match self.next()? {
+            Tok::Int(n) => Ok(n),
+            t => bail!("expected integer, got {t:?}"),
+        }
+    }
+
+    // affine ::= term (("+"|"-") term)*
+    // term   ::= INT | INT "*" IDENT | IDENT
+    fn parse_affine(&mut self) -> Result<Affine> {
+        let mut acc = Affine::zero();
+        let mut sign = 1i64;
+        // leading sign
+        if self.eat_punct('-') {
+            sign = -1;
+        } else {
+            let _ = self.eat_punct('+');
+        }
+        loop {
+            match self.next()? {
+                Tok::Int(n) => {
+                    if self.eat_punct('*') {
+                        let v = self.expect_ident()?;
+                        acc.add_term(&v, sign * n);
+                    } else {
+                        acc.offset += sign * n;
+                    }
+                }
+                Tok::Ident(v) => {
+                    acc.add_term(&v, sign);
+                }
+                t => bail!("expected affine term, got {t:?}"),
+            }
+            if self.eat_punct('+') {
+                sign = 1;
+            } else if self.eat_punct('-') {
+                sign = -1;
+            } else {
+                break;
+            }
+        }
+        Ok(acc)
+    }
+
+    // type ::= dtype "(" INT,* ")" ":" "(" INT,* ")"
+    fn parse_type(&mut self) -> Result<TensorType> {
+        let d = self.expect_ident()?;
+        let dtype = DType::parse(&d).ok_or_else(|| anyhow!("unknown dtype {d:?}"))?;
+        self.expect_punct('(')?;
+        let mut sizes = Vec::new();
+        if !self.eat_punct(')') {
+            loop {
+                sizes.push(self.expect_int()? as u64);
+                if !self.eat_punct(',') {
+                    break;
+                }
+            }
+            self.expect_punct(')')?;
+        }
+        self.expect_punct(':')?;
+        self.expect_punct('(')?;
+        let mut strides = Vec::new();
+        if !self.eat_punct(')') {
+            loop {
+                let neg = self.eat_punct('-');
+                let n = self.expect_int()?;
+                strides.push(if neg { -n } else { n });
+                if !self.eat_punct(',') {
+                    break;
+                }
+            }
+            self.expect_punct(')')?;
+        }
+        if sizes.len() != strides.len() {
+            bail!("size/stride rank mismatch");
+        }
+        Ok(TensorType {
+            dtype,
+            dims: sizes
+                .into_iter()
+                .zip(strides)
+                .map(|(size, stride)| Dim { size, stride })
+                .collect(),
+        })
+    }
+
+    // loc ::= "loc" "(" IDENT ("," "bank" "=" affine)? ("," "addr" "=" INT)? ")"
+    fn parse_location(&mut self) -> Result<Location> {
+        self.expect_keyword("loc")?;
+        self.expect_punct('(')?;
+        let unit = self.expect_ident()?;
+        let mut loc = Location::unit(&unit);
+        while self.eat_punct(',') {
+            let key = self.expect_ident()?;
+            self.expect_punct('=')?;
+            match key.as_str() {
+                "bank" => loc.bank = Some(self.parse_affine()?),
+                "addr" => loc.addr = Some(self.expect_int()? as u64),
+                k => bail!("unknown location key {k:?}"),
+            }
+        }
+        self.expect_punct(')')?;
+        Ok(loc)
+    }
+
+    fn at_location(&self) -> bool {
+        matches!(self.peek(), Some(Tok::Ident(s)) if s == "loc")
+    }
+
+    // block ::= "block" NAME tag* loc? "[" idx,* "]" "(" decl* ")" "{" stmt* "}"
+    fn parse_block(&mut self) -> Result<Block> {
+        self.expect_keyword("block")?;
+        let name = self.expect_ident()?;
+        let mut b = Block::new(&name);
+        while self.eat_punct('#') {
+            b.tags.insert(self.expect_ident()?);
+        }
+        if self.at_location() {
+            b.location = Some(self.parse_location()?);
+        }
+        self.expect_punct('[')?;
+        if !self.eat_punct(']') {
+            loop {
+                let n = self.expect_ident()?;
+                if self.eat_punct(':') {
+                    let r = self.expect_int()?;
+                    b.idxs.push(Idx::range(&n, r as u64));
+                } else {
+                    self.expect_punct('=')?;
+                    b.idxs.push(Idx::passed(&n, self.parse_affine()?));
+                }
+                if !self.eat_punct(',') {
+                    break;
+                }
+            }
+            self.expect_punct(']')?;
+        }
+        self.expect_punct('(')?;
+        // Declarations: refinements start with a direction keyword,
+        // constraints with anything affine.
+        loop {
+            match self.peek() {
+                Some(Tok::Punct(')')) => {
+                    self.pos += 1;
+                    break;
+                }
+                Some(Tok::Ident(s)) if RefDir_parse(s).is_some() => {
+                    let r = self.parse_refinement()?;
+                    b.refs.push(r);
+                }
+                Some(_) => {
+                    let a = self.parse_affine()?;
+                    match self.next()? {
+                        Tok::Ge => {}
+                        t => bail!("expected >= in constraint, got {t:?}"),
+                    }
+                    let z = self.expect_int()?;
+                    if z != 0 {
+                        bail!("constraints must compare against 0");
+                    }
+                    b.constraints.push(a);
+                }
+                None => bail!("unexpected EOF in block declarations"),
+            }
+        }
+        self.expect_punct('{')?;
+        loop {
+            if self.eat_punct('}') {
+                break;
+            }
+            b.stmts.push(self.parse_stmt()?);
+        }
+        Ok(b)
+    }
+
+    fn parse_refinement(&mut self) -> Result<Refinement> {
+        let dirw = self.expect_ident()?;
+        let dir = RefDir_parse(&dirw).unwrap();
+        let from = self.expect_ident()?;
+        let mut into = from.clone();
+        if matches!(self.peek(), Some(Tok::Ident(s)) if s == "as") {
+            self.pos += 1;
+            into = self.expect_ident()?;
+        }
+        self.expect_punct('[')?;
+        let mut access = Vec::new();
+        if !self.eat_punct(']') {
+            loop {
+                access.push(self.parse_affine()?);
+                if !self.eat_punct(',') {
+                    break;
+                }
+            }
+            self.expect_punct(']')?;
+        }
+        let mut agg = AggOp::Assign;
+        if self.eat_punct(':') {
+            let a = self.expect_ident()?;
+            agg = AggOp::parse(&a).ok_or_else(|| anyhow!("unknown aggregation {a:?}"))?;
+        }
+        let ttype = self.parse_type()?;
+        let mut r = Refinement {
+            dir,
+            from: if dir == RefDir::Temp { String::new() } else { from },
+            into,
+            access,
+            ttype,
+            agg,
+            location: None,
+        };
+        if self.at_location() {
+            r.location = Some(self.parse_location()?);
+        }
+        Ok(r)
+    }
+
+    fn parse_stmt(&mut self) -> Result<Statement> {
+        match self.peek() {
+            Some(Tok::Ident(s)) if s == "block" => {
+                Ok(Statement::Block(Box::new(self.parse_block()?)))
+            }
+            Some(Tok::Ident(s)) if s == "special" => {
+                self.pos += 1;
+                let name = self.expect_ident()?;
+                self.expect_punct('(')?;
+                let mut inputs = Vec::new();
+                if !self.eat_punct(')') {
+                    loop {
+                        inputs.push(self.expect_ident()?);
+                        if !self.eat_punct(',') {
+                            break;
+                        }
+                    }
+                    self.expect_punct(')')?;
+                }
+                match self.next()? {
+                    Tok::Arrow => {}
+                    t => bail!("expected -> in special, got {t:?}"),
+                }
+                self.expect_punct('(')?;
+                let mut outputs = Vec::new();
+                if !self.eat_punct(')') {
+                    loop {
+                        outputs.push(self.expect_ident()?);
+                        if !self.eat_punct(',') {
+                            break;
+                        }
+                    }
+                    self.expect_punct(')')?;
+                }
+                let mut attrs = BTreeMap::new();
+                if self.eat_punct('[') {
+                    loop {
+                        let k = self.expect_ident()?;
+                        self.expect_punct('=')?;
+                        let v = match self.next()? {
+                            Tok::Ident(s) => s,
+                            Tok::Int(n) => n.to_string(),
+                            Tok::Float(f) => f.to_string(),
+                            t => bail!("bad attr value {t:?}"),
+                        };
+                        attrs.insert(k, v);
+                        if !self.eat_punct(',') {
+                            break;
+                        }
+                    }
+                    self.expect_punct(']')?;
+                }
+                Ok(Statement::Special(Special { name, inputs, outputs, attrs }))
+            }
+            Some(Tok::Scalar(_)) => {
+                let out = match self.next()? {
+                    Tok::Scalar(s) => s,
+                    _ => unreachable!(),
+                };
+                self.expect_punct('=')?;
+                match self.next()? {
+                    Tok::Ident(w) if w == "load" => {
+                        self.expect_punct('(')?;
+                        let from = self.expect_ident()?;
+                        self.expect_punct(')')?;
+                        Ok(Statement::Load { from, into: out })
+                    }
+                    Tok::Ident(w) => {
+                        let op = IntrOp::parse(&w)
+                            .ok_or_else(|| anyhow!("unknown intrinsic {w:?}"))?;
+                        self.expect_punct('(')?;
+                        let mut inputs = Vec::new();
+                        if !self.eat_punct(')') {
+                            loop {
+                                match self.next()? {
+                                    Tok::Scalar(s) => inputs.push(s),
+                                    t => bail!("intrinsic args must be scalars, got {t:?}"),
+                                }
+                                if !self.eat_punct(',') {
+                                    break;
+                                }
+                            }
+                            self.expect_punct(')')?;
+                        }
+                        Ok(Statement::Intrinsic { op, inputs, output: out })
+                    }
+                    Tok::Float(v) => Ok(Statement::Constant { output: out, value: v }),
+                    Tok::Int(v) => Ok(Statement::Constant { output: out, value: v as f64 }),
+                    Tok::Punct('-') => match self.next()? {
+                        Tok::Float(v) => Ok(Statement::Constant { output: out, value: -v }),
+                        Tok::Int(v) => {
+                            Ok(Statement::Constant { output: out, value: -(v as f64) })
+                        }
+                        t => bail!("expected number after '-', got {t:?}"),
+                    },
+                    t => bail!("bad statement rhs {t:?}"),
+                }
+            }
+            Some(Tok::Ident(_)) => {
+                // buffer = store($scalar)
+                let into = self.expect_ident()?;
+                self.expect_punct('=')?;
+                self.expect_keyword("store")?;
+                self.expect_punct('(')?;
+                let from = match self.next()? {
+                    Tok::Scalar(s) => s,
+                    t => bail!("store arg must be a scalar, got {t:?}"),
+                };
+                self.expect_punct(')')?;
+                Ok(Statement::Store { from, into })
+            }
+            t => bail!("unexpected token at statement start: {t:?}"),
+        }
+    }
+
+    fn parse_program(&mut self) -> Result<Program> {
+        self.expect_keyword("program")?;
+        let name = self.expect_ident()?;
+        self.expect_punct('{')?;
+        let mut buffers = Vec::new();
+        while let Some(Tok::Ident(kw)) = self.peek() {
+            if kw == "block" {
+                break;
+            }
+            let kind = BufKind::parse(kw).ok_or_else(|| anyhow!("unknown buffer kind {kw:?}"))?;
+            self.pos += 1;
+            let bname = self.expect_ident()?;
+            let ttype = self.parse_type()?;
+            buffers.push(Buffer { name: bname, kind, ttype });
+        }
+        let main = self.parse_block()?;
+        self.expect_punct('}')?;
+        Ok(Program { name, buffers, main })
+    }
+}
+
+#[allow(non_snake_case)]
+fn RefDir_parse(s: &str) -> Option<RefDir> {
+    Some(match s {
+        "in" => RefDir::In,
+        "out" => RefDir::Out,
+        "inout" => RefDir::InOut,
+        "tmp" => RefDir::Temp,
+        _ => None?,
+    })
+}
+
+/// Parse a standalone block.
+pub fn parse_block(src: &str) -> Result<Block> {
+    let toks = tokenize(src).context("tokenize")?;
+    let mut p = Parser { toks, pos: 0 };
+    let b = p.parse_block()?;
+    if p.pos != p.toks.len() {
+        bail!("trailing tokens after block");
+    }
+    Ok(b)
+}
+
+/// Parse a whole program.
+pub fn parse_program(src: &str) -> Result<Program> {
+    let toks = tokenize(src).context("tokenize")?;
+    let mut p = Parser { toks, pos: 0 };
+    let prog = p.parse_program()?;
+    if p.pos != p.toks.len() {
+        bail!("trailing tokens after program");
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::fig5_conv_block;
+    use crate::ir::printer::{block_to_string, print_program};
+    use crate::ir::program::Program;
+    use crate::ir::types::DType;
+
+    #[test]
+    fn roundtrip_fig5_conv() {
+        let b = fig5_conv_block();
+        let text = block_to_string(&b);
+        let parsed = parse_block(&text).unwrap();
+        assert_eq!(parsed, b);
+    }
+
+    #[test]
+    fn roundtrip_program() {
+        let mut p = Program::new(
+            "tiny",
+            vec![
+                Buffer {
+                    name: "I".into(),
+                    kind: BufKind::Input,
+                    ttype: TensorType::contiguous(DType::I8, &[12, 16, 8]),
+                },
+                Buffer {
+                    name: "F".into(),
+                    kind: BufKind::Weight,
+                    ttype: TensorType::contiguous(DType::I8, &[3, 3, 16, 8]),
+                },
+                Buffer {
+                    name: "O".into(),
+                    kind: BufKind::Output,
+                    ttype: TensorType::contiguous(DType::I8, &[12, 16, 16]),
+                },
+            ],
+        );
+        p.main.stmts.push(Statement::Block(Box::new(fig5_conv_block())));
+        let text = print_program(&p);
+        let parsed = parse_program(&text).unwrap();
+        assert_eq!(parsed, p);
+    }
+
+    #[test]
+    fn parses_passed_indexes_and_tags() {
+        let src = r#"
+block inner #vectorize #unroll [x = 3*xo, i:3] (
+    x + i - 1 >= 0
+    in I[x + i - 1] i8(1):(1)
+    out O[x]:add i8(1):(1)
+) {
+  $I = load(I)
+  O = store($I)
+}
+"#;
+        let b = parse_block(src).unwrap();
+        assert_eq!(b.idxs.len(), 2);
+        assert!(b.idxs[0].affine.is_some());
+        assert_eq!(b.idxs[0].range, 1);
+        assert!(b.has_tag("vectorize") && b.has_tag("unroll"));
+        let text = block_to_string(&b);
+        assert_eq!(parse_block(&text).unwrap(), b);
+    }
+
+    #[test]
+    fn parses_locations() {
+        let src = r#"
+block tile loc(PE, bank=p) [p:4] (
+    in I[p] f32(1):(1) loc(SRAM, bank=p, addr=128)
+    out O[p]:assign f32(1):(1) loc(SRAM)
+) {
+  $I = load(I)
+  O = store($I)
+}
+"#;
+        let b = parse_block(src).unwrap();
+        assert_eq!(b.location.as_ref().unwrap().unit, "PE");
+        let r = b.find_ref("I").unwrap();
+        let loc = r.location.as_ref().unwrap();
+        assert_eq!(loc.unit, "SRAM");
+        assert_eq!(loc.addr, Some(128));
+        assert!(loc.bank.is_some());
+        let text = block_to_string(&b);
+        assert_eq!(parse_block(&text).unwrap(), b);
+    }
+
+    #[test]
+    fn parses_specials_and_constants() {
+        let src = r#"
+block sp [] (
+    in A[] f32():()
+    out B[]:assign f32():()
+) {
+  $c = 2.5
+  $n = -3.0
+  special gather(A) -> (B) [axis=1]
+}
+"#;
+        let b = parse_block(src).unwrap();
+        assert_eq!(b.stmts.len(), 3);
+        match &b.stmts[2] {
+            Statement::Special(sp) => {
+                assert_eq!(sp.name, "gather");
+                assert_eq!(sp.attrs.get("axis").map(|s| s.as_str()), Some("1"));
+            }
+            _ => panic!("expected special"),
+        }
+        let text = block_to_string(&b);
+        assert_eq!(parse_block(&text).unwrap(), b);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_block("block x { }").is_err()); // missing [..] ( .. )
+        assert!(parse_block("blah").is_err());
+        assert!(parse_block("block b [] ( x >= 1 ) { }").is_err()); // >= 1 not allowed
+    }
+}

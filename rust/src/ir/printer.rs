@@ -1,0 +1,183 @@
+//! Textual rendering of Stripe IR, in the style of the paper's Fig. 5.
+//!
+//! The format round-trips through [`super::parser`]:
+//! `parse(print(p)) == p`. Grammar sketch:
+//!
+//! ```text
+//! program    ::= "program" NAME "{" buffer* block "}"
+//! buffer     ::= ("input"|"output"|"weight"|"tmp") NAME type
+//! block      ::= "block" NAME tag* loc? "[" idx,* "]" "(" decl* ")" "{" stmt* "}"
+//! idx        ::= NAME ":" INT | NAME "=" affine
+//! decl       ::= affine ">=" "0"
+//!              | ("in"|"out"|"inout"|"tmp") NAME ("as" NAME)?
+//!                "[" affine,* "]" (":" agg)? type loc?
+//! type       ::= dtype "(" INT,* "):(" INT,* ")"
+//! stmt       ::= block
+//!              | "$"NAME "=" "load" "(" NAME ")"
+//!              | NAME "=" "store" "(" "$"NAME ")"
+//!              | "$"NAME "=" OP "(" "$"NAME,* ")"
+//!              | "$"NAME "=" NUMBER
+//!              | "special" NAME "(" NAME,* ")" "->" "(" NAME,* ")" attrs?
+//! loc        ::= "loc" "(" NAME ("," "bank=" affine)? ("," "addr=" INT)? ")"
+//! tag        ::= "#" NAME
+//! ```
+
+use std::fmt::Write as _;
+
+use super::block::{Block, Idx, Refinement, Statement};
+use super::program::Program;
+
+/// Pretty-print a whole program.
+pub fn print_program(p: &Program) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "program {} {{", p.name);
+    for b in &p.buffers {
+        let _ = writeln!(s, "  {} {} {}", b.kind.name(), b.name, b.ttype);
+    }
+    print_block(&p.main, 1, &mut s);
+    s.push_str("}\n");
+    s
+}
+
+/// Pretty-print one block at the given indent depth.
+pub fn print_block(b: &Block, depth: usize, out: &mut String) {
+    let pad = "  ".repeat(depth);
+    let _ = write!(out, "{pad}block {}", b.name);
+    for t in &b.tags {
+        let _ = write!(out, " #{t}");
+    }
+    if let Some(l) = &b.location {
+        let _ = write!(out, " {l}");
+    }
+    let _ = write!(out, " [");
+    for (i, idx) in b.idxs.iter().enumerate() {
+        if i > 0 {
+            let _ = write!(out, ", ");
+        }
+        print_idx(idx, out);
+    }
+    let _ = writeln!(out, "] (");
+    let ipad = "  ".repeat(depth + 2);
+    for c in &b.constraints {
+        let _ = writeln!(out, "{ipad}{c} >= 0");
+    }
+    for r in &b.refs {
+        print_ref(r, &ipad, out);
+    }
+    let _ = writeln!(out, "{pad}) {{");
+    for st in &b.stmts {
+        print_stmt(st, depth + 1, out);
+    }
+    let _ = writeln!(out, "{pad}}}");
+}
+
+fn print_idx(idx: &Idx, out: &mut String) {
+    match &idx.affine {
+        Some(a) => {
+            let _ = write!(out, "{} = {a}", idx.name);
+        }
+        None => {
+            let _ = write!(out, "{}:{}", idx.name, idx.range);
+        }
+    }
+}
+
+fn print_ref(r: &Refinement, pad: &str, out: &mut String) {
+    let _ = write!(out, "{pad}{} {}", r.dir.name(), r.from);
+    if r.into != r.from {
+        let _ = write!(out, " as {}", r.into);
+    }
+    let _ = write!(out, "[");
+    for (i, a) in r.access.iter().enumerate() {
+        if i > 0 {
+            let _ = write!(out, ", ");
+        }
+        let _ = write!(out, "{a}");
+    }
+    let _ = write!(out, "]");
+    if r.dir.is_write() {
+        let _ = write!(out, ":{}", r.agg.name());
+    }
+    let _ = write!(out, " {}", r.ttype);
+    if let Some(l) = &r.location {
+        let _ = write!(out, " {l}");
+    }
+    let _ = writeln!(out);
+}
+
+fn print_stmt(st: &Statement, depth: usize, out: &mut String) {
+    let pad = "  ".repeat(depth);
+    match st {
+        Statement::Block(b) => print_block(b, depth, out),
+        Statement::Load { from, into } => {
+            let _ = writeln!(out, "{pad}{into} = load({from})");
+        }
+        Statement::Store { from, into } => {
+            let _ = writeln!(out, "{pad}{into} = store({from})");
+        }
+        Statement::Intrinsic { op, inputs, output } => {
+            let _ = writeln!(out, "{pad}{output} = {}({})", op.name(), inputs.join(", "));
+        }
+        Statement::Constant { output, value } => {
+            // Always include a decimal point so the parser can tell
+            // constants from idents.
+            if value.fract() == 0.0 && value.abs() < 1e15 {
+                let _ = writeln!(out, "{pad}{output} = {value:.1}");
+            } else {
+                let _ = writeln!(out, "{pad}{output} = {value}");
+            }
+        }
+        Statement::Special(sp) => {
+            let _ = write!(
+                out,
+                "{pad}special {}({}) -> ({})",
+                sp.name,
+                sp.inputs.join(", "),
+                sp.outputs.join(", ")
+            );
+            if !sp.attrs.is_empty() {
+                let attrs: Vec<String> =
+                    sp.attrs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                let _ = write!(out, " [{}]", attrs.join(", "));
+            }
+            let _ = writeln!(out);
+        }
+    }
+}
+
+/// Convenience: print a block standalone (depth 0).
+pub fn block_to_string(b: &Block) -> String {
+    let mut s = String::new();
+    print_block(b, 0, &mut s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::fig5_conv_block;
+
+    #[test]
+    fn fig5_flat_conv_prints_like_paper() {
+        let b = fig5_conv_block();
+        let s = block_to_string(&b);
+        // Key syntactic elements of Fig. 5a:
+        assert!(s.contains("block conv"));
+        assert!(s.contains("x:12, y:16, i:3, j:3, c:8, k:16"));
+        assert!(s.contains("i + x - 1 >= 0")); // terms render name-sorted
+        assert!(s.contains("in I[i + x - 1, j + y - 1, c] i8(1, 1, 1):(128, 8, 1)"));
+        assert!(s.contains("out O[x, y, k]:add i8(1, 1, 1):(256, 16, 1)"));
+        assert!(s.contains("$I = load(I)"));
+        assert!(s.contains("$O = mul($I, $F)"));
+        assert!(s.contains("O = store($O)"));
+    }
+
+    #[test]
+    fn constants_always_have_decimal_point() {
+        use crate::ir::block::{Block, Statement};
+        let mut b = Block::new("k");
+        b.stmts.push(Statement::Constant { output: "$c".into(), value: 3.0 });
+        let s = block_to_string(&b);
+        assert!(s.contains("$c = 3.0"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Whole-network programs: top-level buffers + a root block.
+//!
+//! A network is "a list of polyhedra" (§1.3): the root block has an
+//! empty iteration space and one nested block per tensor operation. Its
+//! refinements bring the program's named buffers into scope.
+
+use super::block::{Block, RefDir, Refinement};
+use super::types::TensorType;
+
+/// Role of a top-level buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufKind {
+    /// Fed by the caller at execution time.
+    Input,
+    /// Read back by the caller after execution.
+    Output,
+    /// Trainable parameters — fed by the caller (like inputs) but
+    /// distinguished for artifact bookkeeping.
+    Weight,
+    /// Intermediate tensors between ops.
+    Temp,
+}
+
+impl BufKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BufKind::Input => "input",
+            BufKind::Output => "output",
+            BufKind::Weight => "weight",
+            BufKind::Temp => "tmp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BufKind> {
+        Some(match s {
+            "input" => BufKind::Input,
+            "output" => BufKind::Output,
+            "weight" => BufKind::Weight,
+            "tmp" => BufKind::Temp,
+            _ => return None,
+        })
+    }
+}
+
+/// A top-level tensor allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buffer {
+    pub name: String,
+    pub kind: BufKind,
+    pub ttype: TensorType,
+}
+
+/// A complete Stripe program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub name: String,
+    pub buffers: Vec<Buffer>,
+    /// Root block; its statements are the network's operations in
+    /// (semantically) serial order.
+    pub main: Block,
+}
+
+impl Program {
+    /// Create a program whose `main` block refines every buffer at zero
+    /// offset with its full shape (the canonical post-lowering form).
+    pub fn new(name: &str, buffers: Vec<Buffer>) -> Program {
+        let mut main = Block::new("main");
+        for b in &buffers {
+            let dir = match b.kind {
+                BufKind::Input | BufKind::Weight => RefDir::In,
+                BufKind::Output => RefDir::Out,
+                BufKind::Temp => RefDir::Temp,
+            };
+            let mut r = Refinement::new(
+                dir,
+                &b.name,
+                Refinement::zero_access(b.ttype.rank()),
+                b.ttype.clone(),
+            );
+            if matches!(b.kind, BufKind::Temp) {
+                r.from = String::new();
+            }
+            main.refs.push(r);
+        }
+        Program { name: name.to_string(), buffers, main }
+    }
+
+    pub fn buffer(&self, name: &str) -> Option<&Buffer> {
+        self.buffers.iter().find(|b| b.name == name)
+    }
+
+    pub fn buffers_of(&self, kind: BufKind) -> impl Iterator<Item = &Buffer> {
+        self.buffers.iter().filter(move |b| b.kind == kind)
+    }
+
+    /// All operation blocks directly under main.
+    pub fn ops(&self) -> impl Iterator<Item = &Block> {
+        self.main.child_blocks()
+    }
+
+    /// Count of blocks in the whole program tree.
+    pub fn block_count(&self) -> usize {
+        let mut n = 0;
+        self.main.walk(&mut |_| n += 1);
+        n
+    }
+
+    /// Maximum nesting depth across the program.
+    pub fn depth(&self) -> usize {
+        self.main.depth()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::DType;
+
+    fn prog() -> Program {
+        Program::new(
+            "p",
+            vec![
+                Buffer {
+                    name: "I".into(),
+                    kind: BufKind::Input,
+                    ttype: TensorType::contiguous(DType::F32, &[4, 4]),
+                },
+                Buffer {
+                    name: "T".into(),
+                    kind: BufKind::Temp,
+                    ttype: TensorType::contiguous(DType::F32, &[4, 4]),
+                },
+                Buffer {
+                    name: "O".into(),
+                    kind: BufKind::Output,
+                    ttype: TensorType::contiguous(DType::F32, &[4]),
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn main_refs_mirror_buffers() {
+        let p = prog();
+        assert_eq!(p.main.refs.len(), 3);
+        assert_eq!(p.main.find_ref("I").unwrap().dir, RefDir::In);
+        assert_eq!(p.main.find_ref("O").unwrap().dir, RefDir::Out);
+        assert_eq!(p.main.find_ref("T").unwrap().dir, RefDir::Temp);
+        assert_eq!(p.main.find_ref("T").unwrap().from, "");
+    }
+
+    #[test]
+    fn buffer_lookup_and_kinds() {
+        let p = prog();
+        assert_eq!(p.buffer("I").unwrap().kind, BufKind::Input);
+        assert!(p.buffer("missing").is_none());
+        assert_eq!(p.buffers_of(BufKind::Temp).count(), 1);
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in [BufKind::Input, BufKind::Output, BufKind::Weight, BufKind::Temp] {
+            assert_eq!(BufKind::parse(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Scalar types, tensor view types, and hardware locations.
+
+use std::fmt;
+
+/// Element data types. The interpreter computes in f32 regardless (see
+/// `exec`), but dtypes drive printing fidelity (the paper's Fig. 5 uses
+/// `i8`), element sizes for the cache-line cost model, and the stencil
+/// pass's dtype matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    I8,
+    I16,
+    I32,
+    F16,
+    BF16,
+    F32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> u64 {
+        match self {
+            DType::I8 => 1,
+            DType::I16 | DType::F16 | DType::BF16 => 2,
+            DType::I32 | DType::F32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::I8 => "i8",
+            DType::I16 => "i16",
+            DType::I32 => "i32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "i8" => DType::I8,
+            "i16" => DType::I16,
+            "i32" => DType::I32,
+            "f16" => DType::F16,
+            "bf16" => DType::BF16,
+            "f32" => DType::F32,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// One dimension of a tensor view: logical size and physical stride
+/// (in elements). Fig. 5 prints these as `i8(12, 16, 8):(128, 8, 1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dim {
+    pub size: u64,
+    pub stride: i64,
+}
+
+/// A tensor view type: dtype + per-dimension size/stride.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub dtype: DType,
+    pub dims: Vec<Dim>,
+}
+
+impl TensorType {
+    /// Contiguous row-major layout for the given sizes.
+    pub fn contiguous(dtype: DType, sizes: &[u64]) -> TensorType {
+        let mut dims: Vec<Dim> = sizes.iter().map(|&s| Dim { size: s, stride: 0 }).collect();
+        let mut stride = 1i64;
+        for d in dims.iter_mut().rev() {
+            d.stride = stride;
+            stride *= d.size as i64;
+        }
+        TensorType { dtype, dims }
+    }
+
+    /// Same sizes/strides, different dtype.
+    pub fn with_dtype(&self, dtype: DType) -> TensorType {
+        TensorType { dtype, dims: self.dims.clone() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn sizes(&self) -> Vec<u64> {
+        self.dims.iter().map(|d| d.size).collect()
+    }
+
+    pub fn strides(&self) -> Vec<i64> {
+        self.dims.iter().map(|d| d.stride).collect()
+    }
+
+    /// Number of logical elements in the view.
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().map(|d| d.size).product()
+    }
+
+    /// Number of bytes of the logical elements.
+    pub fn logical_bytes(&self) -> u64 {
+        self.elems() * self.dtype.size_bytes()
+    }
+
+    /// One-past-the-max flat element offset reachable from the view
+    /// origin (assuming non-negative strides): the allocation extent
+    /// needed to hold the view.
+    pub fn span_elems(&self) -> u64 {
+        1 + self
+            .dims
+            .iter()
+            .map(|d| (d.size as i64 - 1).max(0) * d.stride.max(0))
+            .sum::<i64>() as u64
+    }
+
+    /// Flat element offset for a multi-index (lengths must match).
+    pub fn flat(&self, index: &[i64]) -> i64 {
+        debug_assert_eq!(index.len(), self.dims.len());
+        index.iter().zip(&self.dims).map(|(&i, d)| i * d.stride).sum()
+    }
+
+    /// True if the layout is the canonical contiguous row-major one.
+    pub fn is_contiguous(&self) -> bool {
+        *self == TensorType::contiguous(self.dtype, &self.sizes())
+    }
+}
+
+impl fmt::Display for TensorType {
+    /// Fig.-5 style: `i8(3, 4, 16):(256, 16, 1)`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}(", self.dtype)?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}", d.size)?;
+        }
+        write!(f, "):(")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}", d.stride)?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// A hardware location for a buffer (§3.2 "Refinements may also include
+/// the hardware location of the buffer"): memory unit name, optional
+/// bank (an affine of iteration indexes, so banking can be
+/// index-dependent), optional fixed address.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Location {
+    pub unit: String,
+    pub bank: Option<crate::poly::Affine>,
+    pub addr: Option<u64>,
+}
+
+impl Location {
+    pub fn unit(name: &str) -> Location {
+        Location { unit: name.to_string(), bank: None, addr: None }
+    }
+
+    pub fn banked(name: &str, bank: crate::poly::Affine) -> Location {
+        Location { unit: name.to_string(), bank: Some(bank), addr: None }
+    }
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "loc({}", self.unit)?;
+        if let Some(b) = &self.bank {
+            write!(f, ", bank={b}")?;
+        }
+        if let Some(a) = self.addr {
+            write!(f, ", addr={a}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_strides_row_major() {
+        let t = TensorType::contiguous(DType::I8, &[12, 16, 8]);
+        assert_eq!(t.strides(), vec![128, 8, 1]);
+        assert_eq!(t.elems(), 12 * 16 * 8);
+        assert_eq!(t.span_elems(), 12 * 16 * 8);
+        assert!(t.is_contiguous());
+    }
+
+    #[test]
+    fn flat_offsets() {
+        let t = TensorType::contiguous(DType::F32, &[3, 4]);
+        assert_eq!(t.flat(&[0, 0]), 0);
+        assert_eq!(t.flat(&[1, 2]), 6);
+        assert_eq!(t.flat(&[2, 3]), 11);
+    }
+
+    #[test]
+    fn strided_view_span() {
+        // A (3,4) view cut out of a row of a (12,16) tensor: strides (16,1)
+        let t = TensorType {
+            dtype: DType::F32,
+            dims: vec![Dim { size: 3, stride: 16 }, Dim { size: 4, stride: 1 }],
+        };
+        assert_eq!(t.elems(), 12);
+        assert_eq!(t.span_elems(), 2 * 16 + 3 + 1);
+        assert!(!t.is_contiguous());
+    }
+
+    #[test]
+    fn display_fig5_format() {
+        let t = TensorType::contiguous(DType::I8, &[3, 3, 16, 8]);
+        assert_eq!(t.to_string(), "i8(3, 3, 16, 8):(384, 128, 8, 1)");
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [DType::I8, DType::I16, DType::I32, DType::F16, DType::BF16, DType::F32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("i64"), None);
+    }
+
+    #[test]
+    fn location_display() {
+        use crate::poly::Affine;
+        let l = Location::banked("SRAM", Affine::var("p"));
+        assert_eq!(l.to_string(), "loc(SRAM, bank=p)");
+    }
+}

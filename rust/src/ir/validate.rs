@@ -1,0 +1,663 @@
+//! Semantic validation of Stripe programs.
+//!
+//! Three families of checks:
+//!
+//! 1. **Scoping** (§3.2): index names are unique; passed indexes only
+//!    reference parent indexes; constraints and accesses only reference
+//!    this block's indexes; refinements resolve to a parent-scope buffer
+//!    with matching rank; scalars are defined before use; stores go
+//!    through writable refinements.
+//! 2. **Definition 2** (the parallel-polyhedral-block conditions):
+//!    *assign* outputs may not be written by two distinct iterations;
+//!    no iteration may read an element another iteration writes. Both
+//!    are decided by `poly::overlap` over the block's iteration space,
+//!    extended with "footprint" dimensions so that a refinement's whole
+//!    declared view counts as touched.
+//! 3. **Bounds**: composing accesses down the nest (substituting passed
+//!    indexes, accumulating offsets, intersecting constraints), every
+//!    *leaf* access must land inside the root buffer — this is what
+//!    makes the §3.3 "round up the quotient, then constrain away the
+//!    overflow" tiling rewrite checkable.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::poly::polyhedron::Dim as PolyDim;
+use crate::poly::{overlap, Affine, Polyhedron};
+
+use super::block::{Block, RefDir, Statement};
+use super::program::Program;
+
+/// Severity of a finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// One validation finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub severity: Severity,
+    pub block_path: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{s}: [{}] {}", self.block_path, self.message)
+    }
+}
+
+/// A buffer view tracked down the nest.
+#[derive(Debug, Clone)]
+struct AbsView {
+    /// Name of the root allocation this view refines.
+    root: String,
+    /// Logical sizes of the root allocation.
+    root_sizes: Vec<u64>,
+    /// Absolute per-dimension offset of this view's origin within the
+    /// root, over the accumulated (uniquified) context index names.
+    abs_access: Vec<Affine>,
+    /// Sizes of this view.
+    sizes: Vec<u64>,
+}
+
+/// Validate a whole program. Returns all findings (empty = clean).
+pub fn validate_program(p: &Program) -> Vec<Violation> {
+    let mut v = Validator { findings: Vec::new() };
+    // Root views: main block refinements must match program buffers.
+    let mut views: BTreeMap<String, AbsView> = BTreeMap::new();
+    for r in &p.main.refs {
+        let root_name = if r.dir == RefDir::Temp { r.into.clone() } else { r.from.clone() };
+        if r.dir != RefDir::Temp && p.buffer(&r.from).is_none() {
+            v.err("main", format!("refinement {:?} does not name a program buffer", r.from));
+            continue;
+        }
+        let sizes = r.ttype.sizes();
+        views.insert(
+            r.into.clone(),
+            AbsView {
+                root: root_name,
+                root_sizes: sizes.clone(),
+                abs_access: vec![Affine::zero(); r.ttype.rank()],
+                sizes,
+            },
+        );
+    }
+    let space = Polyhedron::default();
+    let rename: BTreeMap<String, Affine> = BTreeMap::new();
+    v.check_block(&p.main, "main", &space, &rename, &views);
+    v.findings
+}
+
+/// Validate a standalone block against known root allocation sizes
+/// (`name -> logical sizes`). Buffers not present in `roots` get
+/// unbounded upper extents (only lower-bound violations are checkable).
+pub fn validate_block_rooted(b: &Block, roots: &BTreeMap<String, Vec<u64>>) -> Vec<Violation> {
+    let mut v = Validator { findings: Vec::new() };
+    let mut views = BTreeMap::new();
+    for r in &b.refs {
+        let root_sizes = roots
+            .get(&r.from)
+            .cloned()
+            .unwrap_or_else(|| vec![UNKNOWN_EXTENT; r.ttype.rank()]);
+        views.insert(
+            r.into.clone(),
+            AbsView {
+                root: r.from.clone(),
+                root_sizes,
+                abs_access: vec![Affine::zero(); r.ttype.rank()],
+                sizes: r.ttype.sizes(),
+            },
+        );
+    }
+    // The block itself is checked as a child of an empty context, so its
+    // own refinements are re-resolved against `views` by name.
+    let mut ctx = Polyhedron::default();
+    let mut rename = BTreeMap::new();
+    v.enter_and_check(b, "root", &mut ctx, &mut rename, &views, true);
+    v.findings
+}
+
+/// Validate a standalone block with no root size information.
+pub fn validate_block(b: &Block) -> Vec<Violation> {
+    validate_block_rooted(b, &BTreeMap::new())
+}
+
+/// Sentinel for "allocation extent unknown" in standalone validation.
+const UNKNOWN_EXTENT: u64 = (i64::MAX >> 2) as u64;
+
+struct Validator {
+    findings: Vec<Violation>,
+}
+
+impl Validator {
+    fn err(&mut self, path: &str, message: String) {
+        self.findings.push(Violation {
+            severity: Severity::Error,
+            block_path: path.to_string(),
+            message,
+        });
+    }
+
+    #[allow(dead_code)] // reserved for non-fatal findings
+    fn warn(&mut self, path: &str, message: String) {
+        self.findings.push(Violation {
+            severity: Severity::Warning,
+            block_path: path.to_string(),
+            message,
+        });
+    }
+
+    /// Check `b` whose refinements resolve against `parent_views`, with
+    /// the accumulated outer iteration space `space` / rename map.
+    fn check_block(
+        &mut self,
+        b: &Block,
+        path: &str,
+        space: &Polyhedron,
+        parent_rename: &BTreeMap<String, Affine>,
+        parent_views: &BTreeMap<String, AbsView>,
+    ) {
+        let mut ctx = space.clone();
+        let mut rename = parent_rename.clone();
+        self.enter_and_check(b, path, &mut ctx, &mut rename, parent_views, false)
+    }
+
+    /// Shared body: extend the context with `b`'s indexes, run all
+    /// per-block checks, then recurse.
+    fn enter_and_check(
+        &mut self,
+        b: &Block,
+        path: &str,
+        ctx: &mut Polyhedron,
+        rename: &mut BTreeMap<String, Affine>,
+        parent_views: &BTreeMap<String, AbsView>,
+        is_root: bool,
+    ) {
+        // --- scoping: index uniqueness
+        let mut seen = BTreeSet::new();
+        for idx in &b.idxs {
+            if !seen.insert(idx.name.clone()) {
+                self.err(path, format!("duplicate index name {:?}", idx.name));
+            }
+        }
+        // Parent index names (what passed idxs may reference).
+        let parent_names: BTreeSet<String> = rename.keys().cloned().collect();
+
+        // --- extend context space; build this block's rename map
+        let mut new_rename: BTreeMap<String, Affine> = BTreeMap::new();
+        for idx in &b.idxs {
+            match &idx.affine {
+                None => {
+                    let unique = unique_name(&idx.name, ctx);
+                    ctx.dims.push(PolyDim { name: unique.clone(), range: idx.range });
+                    new_rename.insert(idx.name.clone(), Affine::var(&unique));
+                }
+                Some(a) => {
+                    if idx.range != 1 {
+                        self.err(
+                            path,
+                            format!("passed index {:?} must have range 1", idx.name),
+                        );
+                    }
+                    for v in a.vars() {
+                        if !parent_names.contains(v) {
+                            self.err(
+                                path,
+                                format!(
+                                    "passed index {:?} references {:?}, not a parent index",
+                                    idx.name, v
+                                ),
+                            );
+                        }
+                    }
+                    new_rename.insert(idx.name.clone(), a.substitute(rename));
+                }
+            }
+        }
+        let local_names: BTreeSet<String> = b.idxs.iter().map(|i| i.name.clone()).collect();
+
+        // --- scoping: constraints and accesses use only local indexes
+        for c in &b.constraints {
+            for v in c.vars() {
+                if !local_names.contains(v) {
+                    self.err(path, format!("constraint references {v:?}, not a block index"));
+                }
+            }
+            ctx.constraints.push(c.substitute(&new_rename));
+        }
+        for r in &b.refs {
+            for a in &r.access {
+                for v in a.vars() {
+                    if !local_names.contains(v) {
+                        self.err(
+                            path,
+                            format!(
+                                "refinement {:?} access references {v:?}, not a block index",
+                                r.into
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // --- resolve refinements into views
+        let mut views: BTreeMap<String, AbsView> = BTreeMap::new();
+        for r in &b.refs {
+            if r.dir == RefDir::Temp {
+                let sizes = r.ttype.sizes();
+                views.insert(
+                    r.into.clone(),
+                    AbsView {
+                        root: format!("{path}/{}", r.into),
+                        root_sizes: sizes.clone(),
+                        abs_access: vec![Affine::zero(); r.ttype.rank()],
+                        sizes,
+                    },
+                );
+                continue;
+            }
+            // Root blocks resolve against the prepared allocation views
+            // keyed by their own `into` names.
+            let key = if is_root { &r.into } else { &r.from };
+            let Some(pv) = parent_views.get(key) else {
+                self.err(
+                    path,
+                    format!("refinement {:?}: no buffer {:?} in parent scope", r.into, r.from),
+                );
+                continue;
+            };
+            if pv.sizes.len() != r.ttype.rank() || r.access.len() != r.ttype.rank() {
+                self.err(
+                    path,
+                    format!(
+                        "refinement {:?}: rank mismatch (parent {} vs child {} / access {})",
+                        r.into,
+                        pv.sizes.len(),
+                        r.ttype.rank(),
+                        r.access.len()
+                    ),
+                );
+                continue;
+            }
+            // Root or not, the view origin is the parent origin plus
+            // this refinement's (renamed) access.
+            let abs_access: Vec<Affine> = pv
+                .abs_access
+                .iter()
+                .zip(&r.access)
+                .map(|(base, a)| base.add(&a.substitute(&new_rename)))
+                .collect();
+            views.insert(
+                r.into.clone(),
+                AbsView {
+                    root: pv.root.clone(),
+                    root_sizes: pv.root_sizes.clone(),
+                    abs_access,
+                    sizes: r.ttype.sizes(),
+                },
+            );
+        }
+
+        // --- statement checks + leaf bounds
+        let has_child_blocks = b.stmts.iter().any(|s| matches!(s, Statement::Block(_)));
+        self.check_statements(b, path, &views);
+        if !has_child_blocks && !b.stmts.is_empty() {
+            self.check_leaf_bounds(b, path, ctx, &views);
+        }
+
+        // --- Definition-2 conditions on this block
+        self.check_def2(b, path);
+
+        // --- recurse
+        for (i, st) in b.stmts.iter().enumerate() {
+            if let Statement::Block(cb) = st {
+                let child_path = format!("{path}/{}[{i}]", cb.name);
+                self.check_block(cb, &child_path, ctx, &new_rename, &views);
+            }
+        }
+    }
+
+    fn check_statements(&mut self, b: &Block, path: &str, views: &BTreeMap<String, AbsView>) {
+        let mut defined: BTreeSet<String> = BTreeSet::new();
+        for st in &b.stmts {
+            match st {
+                Statement::Load { from, into } => {
+                    match b.find_ref(from) {
+                        None => self.err(path, format!("load from undeclared buffer {from:?}")),
+                        Some(r) if !r.dir.is_read() && r.dir != RefDir::Temp => {
+                            self.err(path, format!("load from non-readable refinement {from:?}"))
+                        }
+                        _ => {}
+                    }
+                    if views.get(from).is_none() && b.find_ref(from).is_some() {
+                        // refinement failed to resolve earlier; already reported
+                    }
+                    defined.insert(into.clone());
+                }
+                Statement::Store { from, into } => {
+                    if !defined.contains(from) {
+                        self.err(path, format!("store of undefined scalar {from:?}"));
+                    }
+                    match b.find_ref(into) {
+                        None => self.err(path, format!("store to undeclared buffer {into:?}")),
+                        Some(r) if !r.dir.is_write() && r.dir != RefDir::Temp => {
+                            self.err(path, format!("store to non-writable refinement {into:?}"))
+                        }
+                        _ => {}
+                    }
+                }
+                Statement::Intrinsic { op, inputs, output } => {
+                    if inputs.len() != op.arity() {
+                        self.err(
+                            path,
+                            format!(
+                                "intrinsic {} expects {} args, got {}",
+                                op.name(),
+                                op.arity(),
+                                inputs.len()
+                            ),
+                        );
+                    }
+                    for i in inputs {
+                        if !defined.contains(i) {
+                            self.err(path, format!("intrinsic uses undefined scalar {i:?}"));
+                        }
+                    }
+                    defined.insert(output.clone());
+                }
+                Statement::Constant { output, .. } => {
+                    defined.insert(output.clone());
+                }
+                Statement::Special(sp) => {
+                    for i in sp.inputs.iter().chain(&sp.outputs) {
+                        if b.find_ref(i).is_none() {
+                            self.err(
+                                path,
+                                format!("special {} references undeclared buffer {i:?}", sp.name),
+                            );
+                        }
+                    }
+                }
+                Statement::Block(_) => {}
+            }
+        }
+    }
+
+    /// Leaf blocks: every access (view origin + footprint) must stay
+    /// within the root allocation for all context points.
+    fn check_leaf_bounds(
+        &mut self,
+        b: &Block,
+        path: &str,
+        ctx: &Polyhedron,
+        views: &BTreeMap<String, AbsView>,
+    ) {
+        for r in &b.refs {
+            let Some(view) = views.get(&r.into) else { continue };
+            let ineqs = ctx.to_inequalities();
+            let names = ctx.names();
+            for (d, acc) in view.abs_access.iter().enumerate() {
+                // Constant accesses are cheap to check directly.
+                let extent = view.sizes[d] as i64 - 1;
+                if acc.is_constant() {
+                    let lo = acc.offset;
+                    let hi = acc.offset + extent;
+                    if lo < 0 || hi >= view.root_sizes[d] as i64 {
+                        self.err(
+                            path,
+                            format!(
+                                "refinement {:?} dim {d}: access [{lo}, {hi}] outside root 0..{}",
+                                r.into, view.root_sizes[d]
+                            ),
+                        );
+                    }
+                    continue;
+                }
+                // Bounds of the affine over the context polyhedron.
+                let mut sys = ineqs.clone();
+                // Introduce t = acc as a fresh variable via two inequalities.
+                let t = "___t";
+                let mut names2 = names.clone();
+                names2.push(t.to_string());
+                let mut eq1 = acc.clone();
+                eq1.add_term(t, -1);
+                sys.push(eq1.clone());
+                sys.push(eq1.scale(-1));
+                match crate::poly::fm::variable_bounds(&sys, &names2, t) {
+                    None => { /* empty context — vacuously in bounds */ }
+                    Some((lo, hi)) => {
+                        let lo = lo.unwrap_or(i64::MIN);
+                        let hi = hi.unwrap_or(i64::MAX).saturating_add(extent);
+                        if lo < 0 || hi >= view.root_sizes[d] as i64 {
+                            self.err(
+                                path,
+                                format!(
+                                    "refinement {:?} dim {d}: access range [{lo}, {hi}] can leave root 0..{}",
+                                    r.into, view.root_sizes[d]
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Definition-2 conditions over this block's own iteration space.
+    fn check_def2(&mut self, b: &Block, path: &str) {
+        let base_space = b.iteration_space();
+        // Resolve which refinements share an underlying parent buffer:
+        // within one block, same `from` ⇒ same parent view.
+        for (wi, w) in b.refs.iter().enumerate() {
+            if !w.dir.is_write() {
+                continue;
+            }
+            let (w_space, w_access) = extend_with_footprint(&base_space, w, "w");
+            if w.agg == super::block::AggOp::Assign {
+                let ov = overlap::distinct_iteration_overlap(
+                    &w_space,
+                    &w_access,
+                    &w_access,
+                    &w.ttype.strides(),
+                );
+                if ov.may_conflict() {
+                    self.err(
+                        path,
+                        format!(
+                            "assign-aggregated output {:?} written by multiple iterations ({ov:?})",
+                            w.into
+                        ),
+                    );
+                }
+            }
+            for (ri, r) in b.refs.iter().enumerate() {
+                if !r.dir.is_read() || r.from != w.from || ri == wi {
+                    continue;
+                }
+                // Combined space: block idxs + both footprints.
+                let (mut space, w_acc) = extend_with_footprint(&base_space, w, "w");
+                let (r_space, r_acc) = extend_with_footprint(&base_space, r, "r");
+                for d in r_space.dims.iter().skip(base_space.dims.len()) {
+                    space.dims.push(d.clone());
+                }
+                let ov = overlap::distinct_iteration_overlap(
+                    &space,
+                    &w_acc,
+                    &r_acc,
+                    &w.ttype.strides(),
+                );
+                if ov.may_conflict() {
+                    self.err(
+                        path,
+                        format!(
+                            "iteration writes {:?} while another iteration reads {:?} ({ov:?})",
+                            w.into, r.into
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Extend an iteration space with footprint dims (one per view dimension
+/// of size > 1) and return the effective per-element access vector.
+fn extend_with_footprint(
+    space: &Polyhedron,
+    r: &super::block::Refinement,
+    tag: &str,
+) -> (Polyhedron, Vec<Affine>) {
+    let mut s = space.clone();
+    let mut access = Vec::with_capacity(r.access.len());
+    for (d, a) in r.access.iter().enumerate() {
+        let size = r.ttype.dims[d].size;
+        if size > 1 {
+            let name = format!("__fp_{tag}{d}");
+            s.dims.push(PolyDim { name: name.clone(), range: size });
+            access.push(a.add(&Affine::var(&name)));
+        } else {
+            access.push(a.clone());
+        }
+    }
+    (s, access)
+}
+
+fn unique_name(base: &str, ctx: &Polyhedron) -> String {
+    if !ctx.dims.iter().any(|d| d.name == base) {
+        return base.to_string();
+    }
+    let mut i = 1;
+    loop {
+        let cand = format!("{base}__{i}");
+        if !ctx.dims.iter().any(|d| d.name == cand) {
+            return cand;
+        }
+        i += 1;
+    }
+}
+
+/// True if no `Error`-severity findings are present.
+pub fn is_valid(findings: &[Violation]) -> bool {
+    findings.iter().all(|f| f.severity != Severity::Error)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::fig5_conv_block;
+    use crate::ir::block::{AggOp, Idx, Refinement, Statement};
+    use crate::ir::types::{DType, TensorType};
+
+    #[test]
+    fn fig5_conv_is_valid() {
+        let b = fig5_conv_block();
+        let f = validate_block(&b);
+        assert!(is_valid(&f), "{f:?}");
+    }
+
+    #[test]
+    fn assign_with_reduction_idx_is_flagged() {
+        // O[x] assigned over (x, c) — c iterations collide.
+        let t = TensorType::contiguous(DType::F32, &[4]);
+        let mut b = crate::ir::builder::contraction(
+            "bad",
+            &[("x", 4), ("c", 3)],
+            vec![],
+            crate::ir::builder::Operand::new("O", vec![Affine::var("x")], &t),
+            AggOp::Assign,
+            &[crate::ir::builder::Operand::new("I", vec![Affine::var("x")], &t)],
+            crate::ir::block::IntrOp::Mul,
+        );
+        b.name = "bad".into();
+        let f = validate_block(&b);
+        assert!(!is_valid(&f), "expected a Def-2 violation");
+        assert!(f.iter().any(|v| v.message.contains("assign-aggregated")));
+    }
+
+    #[test]
+    fn undefined_scalar_store_flagged() {
+        let t = TensorType::contiguous(DType::F32, &[4]);
+        let mut b = crate::ir::block::Block::new("b");
+        b.idxs.push(Idx::range("x", 4));
+        b.refs.push(Refinement::new(
+            RefDir::Out,
+            "O",
+            vec![Affine::var("x")],
+            crate::ir::builder::scalar_view(&t),
+        ));
+        b.stmts.push(Statement::Store { from: "$nope".into(), into: "O".into() });
+        let f = validate_block(&b);
+        assert!(f.iter().any(|v| v.message.contains("undefined scalar")));
+    }
+
+    #[test]
+    fn constraint_variable_scope_checked() {
+        let mut b = fig5_conv_block();
+        b.constraints.push(Affine::var("not_an_idx"));
+        let f = validate_block(&b);
+        assert!(f.iter().any(|v| v.message.contains("not a block index")));
+    }
+
+    #[test]
+    fn out_of_bounds_leaf_access_flagged() {
+        // Access x + 2 over x:4 into a root of size 4 → max 5, OOB.
+        let t = TensorType::contiguous(DType::F32, &[4]);
+        let b = crate::ir::builder::contraction(
+            "oob",
+            &[("x", 4)],
+            vec![],
+            crate::ir::builder::Operand::new("O", vec![Affine::var("x")], &t),
+            AggOp::Assign,
+            &[crate::ir::builder::Operand::new(
+                "I",
+                vec![Affine::from_terms(&[("x", 1)], 2)],
+                &t,
+            )],
+            crate::ir::block::IntrOp::Mul,
+        );
+        let roots: BTreeMap<String, Vec<u64>> =
+            [("I".to_string(), vec![4u64]), ("O".to_string(), vec![4u64])].into();
+        let f = validate_block_rooted(&b, &roots);
+        assert!(!is_valid(&f));
+        assert!(f.iter().any(|v| v.message.contains("dim 0")), "{f:?}");
+    }
+
+    #[test]
+    fn negative_access_flagged_without_roots() {
+        // Access x - 1 can reach -1; lower bound is checkable even with
+        // unknown allocation extents.
+        let t = TensorType::contiguous(DType::F32, &[4]);
+        let b = crate::ir::builder::contraction(
+            "neg",
+            &[("x", 4)],
+            vec![],
+            crate::ir::builder::Operand::new("O", vec![Affine::var("x")], &t),
+            AggOp::Assign,
+            &[crate::ir::builder::Operand::new(
+                "I",
+                vec![Affine::from_terms(&[("x", 1)], -1)],
+                &t,
+            )],
+            crate::ir::block::IntrOp::Mul,
+        );
+        let f = validate_block(&b);
+        assert!(!is_valid(&f), "{f:?}");
+    }
+
+    #[test]
+    fn warning_does_not_invalidate() {
+        let v = vec![Violation {
+            severity: Severity::Warning,
+            block_path: "x".into(),
+            message: "hmm".into(),
+        }];
+        assert!(is_valid(&v));
+    }
+}

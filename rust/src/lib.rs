@@ -1,0 +1,36 @@
+//! # Stripe — Tensor Compilation via the Nested Polyhedral Model
+//!
+//! A production-style reproduction of Zerrell & Bruestle, *"Stripe:
+//! Tensor Compilation via the Nested Polyhedral Model"* (2019).
+//!
+//! The crate implements the paper's full stack (Fig. 6):
+//!
+//! ```text
+//!   frontend (Tile-style contractions)       frontend/, graph/
+//!        │ lower
+//!        ▼
+//!   Stripe IR (nested polyhedral blocks)     ir/, poly/
+//!        │ optimization passes
+//!        ▼
+//!   hardware-targeted Stripe                 passes/, hw/, cost/, sim/
+//!        │
+//!        ├── interpreter (semantic executor) exec/
+//!        ├── PJRT runtime (XLA oracle)       runtime/
+//!        └── compile service / CLI           coordinator/
+//! ```
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure
+//! reproduction index, and `EXPERIMENTS.md` for measured results.
+
+pub mod coordinator;
+pub mod cost;
+pub mod frontend;
+pub mod graph;
+pub mod hw;
+pub mod exec;
+pub mod ir;
+pub mod passes;
+pub mod poly;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,174 @@
+//! The autotiling pass (§3.3).
+//!
+//! For every flat contraction block directly under `main`, search the
+//! tile space against the target memory unit's capacity and line size,
+//! then apply the [`super::tile`] rewrite with the winning tile.
+
+use std::collections::BTreeMap;
+
+use crate::cost::search::{best_tiling, SearchSpace};
+use crate::hw::MachineConfig;
+use crate::ir::{Program, RefDir, Statement};
+
+use super::tile::{apply_tiling, TileOptions};
+use super::PassReport;
+
+/// Tag applied to outer tile blocks.
+pub const TILED_TAG: &str = "tiled";
+
+/// Run autotiling over a program.
+pub fn run(
+    p: &mut Program,
+    cfg: &MachineConfig,
+    memory: &str,
+    space: SearchSpace,
+    budget: usize,
+    output_dims_only: bool,
+) -> Result<PassReport, String> {
+    let mut report = PassReport::new("autotile");
+    let mem = cfg
+        .memory(memory)
+        .ok_or_else(|| format!("autotile: no memory unit {memory:?}"))?;
+    let inner_loc = crate::ir::Location::unit(&mem.name);
+
+    for st in &mut p.main.stmts {
+        let Statement::Block(b) = st else { continue };
+        tile_leaves(b, cfg, memory, space, budget, output_dims_only, &inner_loc, &mut report);
+    }
+    Ok(report)
+}
+
+/// Post-order walk: tile every untiled leaf contraction block in place.
+/// Recursing (rather than only looking at main's children) lets
+/// autotiling compose with partitioning and fusion, which nest blocks
+/// before tiling runs.
+#[allow(clippy::too_many_arguments)]
+fn tile_leaves(
+    b: &mut crate::ir::Block,
+    cfg: &MachineConfig,
+    memory: &str,
+    space: SearchSpace,
+    budget: usize,
+    output_dims_only: bool,
+    inner_loc: &crate::ir::Location,
+    report: &mut PassReport,
+) {
+    if b.has_tag(TILED_TAG) {
+        return; // this nest was produced by autotiling — leave its body be
+    }
+    let has_children = b.stmts.iter().any(|s| matches!(s, Statement::Block(_)));
+    if has_children {
+        for st in &mut b.stmts {
+            if let Statement::Block(cb) = st {
+                tile_leaves(cb, cfg, memory, space, budget, output_dims_only, inner_loc, report);
+            }
+        }
+        return;
+    }
+    let elem = b
+        .refs
+        .first()
+        .map(|r| r.ttype.dtype.size_bytes())
+        .unwrap_or(4);
+    let Some(params) = cfg.cost_params(memory, elem) else { return };
+    {
+
+        // Tileable indexes: those striding the output (keeps reductions
+        // whole within a tile) unless configured otherwise.
+        let tileable: Vec<String> = b
+            .idxs
+            .iter()
+            .filter(|i| i.affine.is_none() && i.range > 1)
+            .filter(|i| {
+                if !output_dims_only {
+                    return true;
+                }
+                b.refs
+                    .iter()
+                    .filter(|r| r.dir == RefDir::Out || r.dir == RefDir::InOut)
+                    .any(|r| r.access.iter().any(|a| a.coeff(&i.name) != 0))
+            })
+            .map(|i| i.name.clone())
+            .collect();
+        if tileable.is_empty() {
+            return;
+        }
+        // Honor earlier stencil/vectorize block sizes via tags of the
+        // form "multiple:<idx>:<n>".
+        let mut multiple_of: BTreeMap<String, u64> = BTreeMap::new();
+        for t in &b.tags {
+            if let Some(rest) = t.strip_prefix("multiple:") {
+                if let Some((idx, n)) = rest.split_once(':') {
+                    if let Ok(n) = n.parse() {
+                        multiple_of.insert(idx.to_string(), n);
+                    }
+                }
+            }
+        }
+
+        let (best, stats) = best_tiling(b, &tileable, &params, space, &multiple_of, budget);
+        let Some(best) = best else {
+            report
+                .details
+                .push(format!("{}: no feasible tiling ({} evaluated)", b.name, stats.evaluated));
+            return;
+        };
+        let opts = TileOptions {
+            outer_tag: Some(TILED_TAG.to_string()),
+            inner_tag: None,
+            inner_location: Some(inner_loc.clone()),
+        };
+        let tiled = apply_tiling(b, &best.tile, &opts);
+        report.note(format!(
+            "{}: tile {:?} cost={:.6} lines={} tiles={} ({} evaluated, {} feasible)",
+            b.name,
+            best.tile,
+            best.cost(),
+            best.total_lines,
+            best.tiles,
+            stats.evaluated,
+            stats.feasible
+        ));
+        *b = tiled;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn autotile_rewrites_and_preserves_conv() {
+        let p = ops::fig4_conv_program();
+        let mut q = p.clone();
+        let cfg = targets::paper_fig4();
+        let r = run(&mut q, &cfg, "CACHE", SearchSpace::Exhaustive, 100_000, true).unwrap();
+        assert!(r.changed, "{r:?}");
+        // The conv block is now nested.
+        assert_eq!(q.main.child_blocks().next().unwrap().depth(), 2);
+        crate::passes::equiv::assert_equiv(&p, &q, 3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn tiled_blocks_get_memory_location() {
+        let mut p = ops::fig4_conv_program();
+        let cfg = targets::paper_fig4();
+        run(&mut p, &cfg, "CACHE", SearchSpace::PowersOfTwo, 10_000, true).unwrap();
+        let b = p.main.child_blocks().next().unwrap();
+        assert!(b.has_tag(TILED_TAG));
+        assert!(b.refs.iter().all(|r| r.location.as_ref().is_some_and(|l| l.unit == "CACHE")));
+    }
+
+    #[test]
+    fn skips_already_tiled_blocks() {
+        let mut p = ops::fig4_conv_program();
+        let cfg = targets::paper_fig4();
+        run(&mut p, &cfg, "CACHE", SearchSpace::PowersOfTwo, 10_000, true).unwrap();
+        let snapshot = p.clone();
+        let r = run(&mut p, &cfg, "CACHE", SearchSpace::PowersOfTwo, 10_000, true).unwrap();
+        assert!(!r.changed);
+        assert_eq!(crate::ir::printer::print_program(&p), crate::ir::printer::print_program(&snapshot));
+    }
+}

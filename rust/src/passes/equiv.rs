@@ -1,0 +1,81 @@
+//! Execution-based semantic equivalence checking for pass rewrites.
+//!
+//! Generates deterministic pseudo-random inputs for every input/weight
+//! buffer, runs both programs through the interpreter, and compares all
+//! outputs within a tolerance (floating-point aggregation order may
+//! legally differ between rewrites — §3.2's "approximately associative"
+//! caveat).
+
+use std::collections::BTreeMap;
+
+use crate::exec::run_program;
+use crate::ir::{BufKind, Program};
+use crate::util::rng::Rng;
+
+/// Generate deterministic inputs for a program's input/weight buffers.
+pub fn gen_inputs(p: &Program, seed: u64) -> BTreeMap<String, Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut m = BTreeMap::new();
+    for b in &p.buffers {
+        if matches!(b.kind, BufKind::Input | BufKind::Weight) {
+            m.insert(b.name.clone(), rng.normal_vec(b.ttype.span_elems() as usize, 0.5));
+        }
+    }
+    m
+}
+
+/// Compare two programs' outputs on shared random inputs.
+pub fn assert_equiv(a: &Program, b: &Program, seed: u64, tol: f32) -> Result<(), String> {
+    let inputs = gen_inputs(a, seed);
+    let oa = run_program(a, &inputs).map_err(|e| format!("baseline failed: {e}"))?;
+    let ob = run_program(b, &inputs).map_err(|e| format!("rewritten failed: {e}"))?;
+    if oa.len() != ob.len() {
+        return Err(format!("output buffer count differs: {} vs {}", oa.len(), ob.len()));
+    }
+    for (name, va) in &oa {
+        let vb = ob
+            .get(name)
+            .ok_or_else(|| format!("rewritten program lost output {name:?}"))?;
+        if va.len() != vb.len() {
+            return Err(format!("output {name:?} length differs"));
+        }
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            let scale = 1.0f32.max(x.abs());
+            if (x - y).abs() > tol * scale {
+                return Err(format!("output {name:?}[{i}]: {x} vs {y} (tol {tol})"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+
+    #[test]
+    fn program_is_equivalent_to_itself() {
+        let p = ops::fig4_conv_program();
+        assert_equiv(&p, &p, 7, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn detects_semantic_difference() {
+        let p = ops::fig4_conv_program();
+        let mut q = p.clone();
+        // Perturb: change an access offset in the conv block.
+        if let crate::ir::Statement::Block(b) = &mut q.main.stmts[0] {
+            let r = b.refs.iter_mut().find(|r| r.into == "F").unwrap();
+            r.access[2] = crate::poly::Affine::zero(); // break k indexing
+        }
+        assert!(assert_equiv(&p, &q, 7, 1e-3).is_err());
+    }
+
+    #[test]
+    fn inputs_are_deterministic() {
+        let p = ops::fig4_conv_program();
+        assert_eq!(gen_inputs(&p, 42), gen_inputs(&p, 42));
+        assert_ne!(gen_inputs(&p, 42), gen_inputs(&p, 43));
+    }
+}

@@ -1,0 +1,274 @@
+//! Fusion (§2.3): merge a producer block with consumers that read its
+//! output elementwise, so one tile of data flows through several ops
+//! before the next tile is touched.
+//!
+//! Applicability (conservative, always-safe form):
+//! * producer `A` writes tensor `T` with an access that is pure single
+//!   variables `[v1..vn]` covering `T`'s dimensions;
+//! * consumer `B` (the next statement) reads `T` with a pure-variable
+//!   access `[w1..wn]` whose index ranges match, and `B` has no other
+//!   index (elementwise over `T`) or only indexes that also map
+//!   one-to-one onto its own output;
+//! * `T` is a program temp (not an output the caller observes mid-run).
+//!
+//! The rewrite builds an outer block over fresh indexes `f1..fn`; `A`
+//! and `B` become child blocks with `v_i`/`w_i` passed in as `f_i`;
+//! refinements to `T` and to `B`'s output become per-point slices. After
+//! `localize`, `T` shrinks to a scalar scratch.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Block, Idx, Program, RefDir, Refinement, Statement};
+use crate::poly::Affine;
+
+use super::PassReport;
+
+/// Tag marking fused outer blocks.
+pub const FUSED_TAG: &str = "fused";
+
+pub fn run(p: &mut Program, max_group: usize) -> Result<PassReport, String> {
+    let mut report = PassReport::new("fuse");
+    let mut i = 0;
+    while i + 1 < p.main.stmts.len() {
+        let fused = {
+            let (Statement::Block(a), Statement::Block(b)) =
+                (&p.main.stmts[i], &p.main.stmts[i + 1])
+            else {
+                i += 1;
+                continue;
+            };
+            try_fuse(a, b, p, (i, i + 1))
+        };
+        match fused {
+            Some(f) => {
+                report.note(format!("fused {} into group of {}", f.name, f.stmts.len()));
+                p.main.stmts.splice(i..=i + 1, [Statement::Block(Box::new(f))]);
+                // A fused group can keep absorbing following elementwise
+                // consumers up to max_group — handled by re-visiting i.
+                let group_len = p.main.stmts[i]
+                    .as_block()
+                    .map(|b| b.stmts.len())
+                    .unwrap_or(0);
+                if group_len >= max_group {
+                    i += 1;
+                }
+            }
+            None => i += 1,
+        }
+    }
+    Ok(report)
+}
+
+/// Identity variable names of an access, if every dim is a single var.
+fn identity_vars(access: &[Affine]) -> Option<Vec<String>> {
+    access
+        .iter()
+        .map(|a| a.is_single_var().map(|s| s.to_string()))
+        .collect()
+}
+
+/// Attempt to fuse producer `a` with consumer `b` (at main positions
+/// `pos` — used to exclude the pair itself from the other-reader scan).
+fn try_fuse(a: &Block, b: &Block, p: &Program, pos: (usize, usize)) -> Option<Block> {
+    if a.has_tag(FUSED_TAG) || b.has_tag(FUSED_TAG) || a.depth() > 1 || b.depth() > 1 {
+        return None;
+    }
+    // Producer's single output.
+    let a_out = a.refs.iter().find(|r| r.dir == RefDir::Out)?;
+    let t_name = &a_out.from;
+    // T must be a temp (not externally observed).
+    if !matches!(p.buffer(t_name).map(|b| b.kind), Some(crate::ir::BufKind::Temp)) {
+        return None;
+    }
+    let a_vars = identity_vars(&a_out.access)?;
+    // Consumer must read T with pure vars of the same ranges, and B's
+    // every index must be one of those vars (fully elementwise w.r.t. T).
+    let b_in = b.refs.iter().find(|r| r.dir == RefDir::In && r.from == *t_name)?;
+    let b_vars = identity_vars(&b_in.access)?;
+    if a_vars.len() != b_vars.len() {
+        return None;
+    }
+    for (av, bv) in a_vars.iter().zip(&b_vars) {
+        let ar = a.idx(av)?.range;
+        let br = b.idx(bv)?.range;
+        if ar != br {
+            return None;
+        }
+    }
+    if b.idxs.iter().any(|i| !b_vars.contains(&i.name)) {
+        return None; // consumer has private indexes — not elementwise
+    }
+    // No other statement may touch T (single consumer): we only fuse
+    // adjacent pairs, and any other reader/writer would make the rewrite
+    // unsound. Scan by position, not name (names may repeat).
+    let t_read_elsewhere = p
+        .main
+        .stmts
+        .iter()
+        .enumerate()
+        .filter(|(k, _)| *k != pos.0 && *k != pos.1)
+        .filter_map(|(_, s)| s.as_block())
+        .any(|blk| blk.refs.iter().any(|r| r.from == *t_name));
+    if t_read_elsewhere {
+        return None;
+    }
+
+    // ---- build the fused outer block
+    let fresh: Vec<String> = (0..a_vars.len()).map(|k| format!("f{k}")).collect();
+    let mut outer = Block::new(&format!("{}_{}", a.name, b.name));
+    outer.add_tag(FUSED_TAG);
+    for (f, av) in fresh.iter().zip(&a_vars) {
+        outer.idxs.push(Idx::range(f, a.idx(av).unwrap().range));
+    }
+
+    // Outer refinements: full views of every buffer A/B touch except T
+    // and B's outputs, which become per-point slices.
+    let mut sliced: Vec<(String, Vec<String>)> = vec![(t_name.clone(), a_vars.clone())];
+    if let Some(b_out) = b.refs.iter().find(|r| r.dir == RefDir::Out) {
+        if let Some(vars) = identity_vars(&b_out.access) {
+            sliced.push((b_out.from.clone(), vars));
+        }
+    }
+    let add_outer_ref = |r: &Refinement, outer: &mut Block, owner_vars: &BTreeMap<String, String>| {
+        if outer.refs.iter().any(|x| x.into == r.into) {
+            return;
+        }
+        if let Some((_, vars)) = sliced.iter().find(|(n, _)| n == &r.from) {
+            // Slice: access [f_i...], size-1 dims.
+            let access: Vec<Affine> = vars
+                .iter()
+                .map(|v| Affine::var(owner_vars.get(v).map(|s| s.as_str()).unwrap_or(v)))
+                .collect();
+            let mut tt = r.ttype.clone();
+            for d in &mut tt.dims {
+                d.size = 1;
+            }
+            outer.refs.push(Refinement {
+                dir: if r.from == *t_name { RefDir::InOut } else { r.dir },
+                from: r.from.clone(),
+                into: r.from.clone(),
+                access,
+                ttype: tt,
+                agg: r.agg,
+                location: r.location.clone(),
+            });
+        } else {
+            // Full view at zero offset.
+            let span_type = full_view_type(p, &r.from).unwrap_or_else(|| r.ttype.clone());
+            outer.refs.push(Refinement {
+                dir: r.dir,
+                from: r.from.clone(),
+                into: r.from.clone(),
+                access: Refinement::zero_access(r.access.len()),
+                ttype: span_type,
+                agg: r.agg,
+                location: r.location.clone(),
+            });
+        }
+    };
+    let a_map: BTreeMap<String, String> =
+        a_vars.iter().cloned().zip(fresh.iter().cloned()).collect();
+    let b_map: BTreeMap<String, String> =
+        b_vars.iter().cloned().zip(fresh.iter().cloned()).collect();
+    for r in &a.refs {
+        add_outer_ref(r, &mut outer, &a_map);
+    }
+    for r in &b.refs {
+        add_outer_ref(r, &mut outer, &b_map);
+    }
+
+    // ---- rewrite A and B as children with passed indexes.
+    outer
+        .stmts
+        .push(Statement::Block(Box::new(rewrite_child(a, &a_vars, &fresh, &sliced))));
+    outer
+        .stmts
+        .push(Statement::Block(Box::new(rewrite_child(b, &b_vars, &fresh, &sliced))));
+    Some(outer)
+}
+
+fn full_view_type(p: &Program, buf: &str) -> Option<crate::ir::TensorType> {
+    p.buffer(buf).map(|b| b.ttype.clone())
+}
+
+/// Rewrite a fusion child: shared indexes become passed (bound to the
+/// fresh outer indexes); accesses to sliced buffers become relative
+/// (zero at the slice origin).
+fn rewrite_child(
+    blk: &Block,
+    shared: &[String],
+    fresh: &[String],
+    sliced: &[(String, Vec<String>)],
+) -> Block {
+    let mut c = blk.clone();
+    for idx in &mut c.idxs {
+        if let Some(k) = shared.iter().position(|s| *s == idx.name) {
+            *idx = Idx::passed(&idx.name, Affine::var(&fresh[k]));
+        }
+    }
+    for r in &mut c.refs {
+        if sliced.iter().any(|(n, _)| n == &r.from) {
+            // Access relative to the slice origin: the identity access on
+            // shared vars becomes zero.
+            for a in &mut r.access {
+                *a = Affine::zero();
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+
+    #[test]
+    fn conv_relu_fuses_and_preserves_semantics() {
+        let p = ops::conv_relu_program();
+        let mut q = p.clone();
+        let r = run(&mut q, 4).unwrap();
+        assert!(r.changed, "{r:?}");
+        assert_eq!(q.main.stmts.len(), 1);
+        let outer = q.main.child_blocks().next().unwrap();
+        assert!(outer.has_tag(FUSED_TAG));
+        assert_eq!(outer.stmts.len(), 2);
+        crate::passes::equiv::assert_equiv(&p, &q, 23, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn does_not_fuse_when_temp_has_second_reader() {
+        let p = ops::conv_relu_program();
+        // Add a second reader of the temp.
+        let mut q = p.clone();
+        let extra = {
+            let Statement::Block(relu) = &q.main.stmts[1] else { panic!() };
+            let mut e = (**relu).clone();
+            e.name = "relu2".into();
+            e
+        };
+        q.main.stmts.push(Statement::Block(Box::new(extra)));
+        // Output now double-written — make the second write a temp target
+        // to keep the program valid: simply check fusion declines.
+        let r = run(&mut q, 4).unwrap();
+        assert!(!r.changed);
+    }
+
+    #[test]
+    fn mismatched_ranges_do_not_fuse() {
+        // conv(12×16×16) followed by an elementwise over the wrong shape
+        // cannot occur through the frontend; emulate by perturbing ranges.
+        let p = ops::conv_relu_program();
+        let mut q = p.clone();
+        if let Statement::Block(relu) = &mut q.main.stmts[1] {
+            relu.idxs[0].range = 6; // breaks the range match (and semantics)
+        }
+        let before = q.clone();
+        let r = run(&mut q, 4).unwrap();
+        assert!(!r.changed);
+        assert_eq!(
+            crate::ir::printer::print_program(&q),
+            crate::ir::printer::print_program(&before)
+        );
+    }
+}

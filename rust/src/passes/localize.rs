@@ -1,0 +1,84 @@
+//! Memory localization (§2.3): "Temporary memory may only be needed in
+//! inner portions of the memory hierarchy. Memory allocation must be
+//! pulled inside loops where legal."
+//!
+//! After fusion, a program-level temp `T` may be consumed entirely
+//! inside one fused block, one element per outer iteration. This pass
+//! detects that shape — `T` appears in exactly one op block, through a
+//! refinement whose view is size-1 — and rewrites the refinement into a
+//! block-local `Temp` allocation, deleting the program-level buffer.
+
+use crate::ir::{BufKind, Program, RefDir, Statement};
+
+use super::PassReport;
+
+pub fn run(p: &mut Program) -> Result<PassReport, String> {
+    let mut report = PassReport::new("localize");
+    let temp_names: Vec<String> = p
+        .buffers_of(BufKind::Temp)
+        .map(|b| b.name.clone())
+        .collect();
+    for t in temp_names {
+        // Count op blocks referencing T.
+        let mut users: Vec<usize> = Vec::new();
+        for (i, st) in p.main.stmts.iter().enumerate() {
+            if let Statement::Block(b) = st {
+                if b.refs.iter().any(|r| r.from == t) {
+                    users.push(i);
+                }
+            }
+        }
+        if users.len() != 1 {
+            continue;
+        }
+        let idx = users[0];
+        let Statement::Block(b) = &mut p.main.stmts[idx] else { continue };
+        let Some(r) = b.refs.iter_mut().find(|r| r.from == t) else { continue };
+        // Localizable only if the per-iteration view is a scalar slice.
+        if r.ttype.elems() != 1 {
+            continue;
+        }
+        r.dir = RefDir::Temp;
+        r.from = String::new();
+        for a in &mut r.access {
+            *a = crate::poly::Affine::zero();
+        }
+        // Contiguous scalar layout for the local allocation.
+        for d in &mut r.ttype.dims {
+            d.stride = 1;
+        }
+        // Remove the program buffer and its main refinement.
+        p.buffers.retain(|bf| bf.name != t);
+        p.main.refs.retain(|mr| mr.into != t);
+        report.note(format!("localized temp {t:?} into block-local scratch"));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+
+    #[test]
+    fn fused_temp_gets_localized() {
+        let p = ops::conv_relu_program();
+        let mut q = p.clone();
+        super::super::fuse::run(&mut q, 4).unwrap();
+        let r = run(&mut q).unwrap();
+        assert!(r.changed, "{r:?}");
+        // The temp buffer is gone from the program.
+        assert_eq!(q.buffers_of(BufKind::Temp).count(), 0);
+        crate::passes::equiv::assert_equiv(&p, &q, 41, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn unfused_temp_stays() {
+        let p = ops::conv_relu_program();
+        let mut q = p.clone();
+        // Without fusion the temp's per-op views are full-size.
+        let r = run(&mut q).unwrap();
+        assert!(!r.changed, "{r:?}");
+        assert_eq!(q.buffers_of(BufKind::Temp).count(), 1);
+    }
+}

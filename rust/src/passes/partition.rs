@@ -1,0 +1,144 @@
+//! Banking and partitioning (§2.3): split work across multiple compute
+//! units operating on different portions of the same data, with
+//! bank-disjoint buffer placement.
+//!
+//! The pass picks the largest output-striding index of each flat block,
+//! tiles it by ⌈range/count⌉ across the unit count, tags the outer block
+//! `parallel:<unit>`, places the block on the unit (location bank = the
+//! outer index), and banks the written refinements by the same index.
+
+use std::collections::BTreeMap;
+
+use crate::hw::MachineConfig;
+use crate::ir::{Location, Program, RefDir, Statement};
+use crate::poly::Affine;
+use crate::util::div_ceil;
+
+use super::tile::{apply_tiling, TileOptions};
+use super::PassReport;
+
+pub const PARTITIONED_TAG: &str = "partitioned";
+
+pub fn run(
+    p: &mut Program,
+    cfg: &MachineConfig,
+    unit: &str,
+    memory: &str,
+) -> Result<PassReport, String> {
+    let mut report = PassReport::new("partition");
+    let cu = cfg
+        .compute_unit(unit)
+        .ok_or_else(|| format!("partition: no compute unit {unit:?}"))?;
+    let mem = cfg
+        .memory(memory)
+        .ok_or_else(|| format!("partition: no memory unit {memory:?}"))?;
+    if cu.count <= 1 {
+        return Ok(report);
+    }
+
+    for st in &mut p.main.stmts {
+        let Statement::Block(b) = st else { continue };
+        if b.has_tag(PARTITIONED_TAG) || b.depth() > 1 {
+            continue;
+        }
+        // Pick the output-striding index with the largest range that the
+        // unit count can split.
+        let out_vars: Vec<String> = b
+            .refs
+            .iter()
+            .filter(|r| matches!(r.dir, RefDir::Out | RefDir::InOut))
+            .flat_map(|r| r.access.iter().flat_map(|a| a.vars().map(|s| s.to_string())))
+            .collect();
+        let Some(pick) = b
+            .idxs
+            .iter()
+            .filter(|i| i.affine.is_none() && i.range >= cu.count && out_vars.contains(&i.name))
+            .max_by_key(|i| i.range)
+            .map(|i| i.name.clone())
+        else {
+            continue;
+        };
+        let range = b.idx(&pick).unwrap().range;
+        let per_unit = div_ceil(range as i64, cu.count as i64) as u64;
+        let tile: BTreeMap<String, u64> = [(pick.clone(), per_unit)].into();
+        let opts = TileOptions {
+            outer_tag: Some(PARTITIONED_TAG.to_string()),
+            inner_tag: None,
+            inner_location: None,
+        };
+        let mut outer = apply_tiling(b, &tile, &opts);
+        outer.add_tag(&format!("parallel:{unit}"));
+        // Place the block on the unit, indexed by the partition index.
+        outer.location = Some(Location::banked(unit, Affine::var(&pick)));
+        // Bank written refinements by the partition index (bank-disjoint
+        // by construction: distinct outer values write disjoint slices).
+        let banks = mem.banks.max(1);
+        for r in &mut outer.refs {
+            if matches!(r.dir, RefDir::Out | RefDir::InOut) {
+                let bank = if banks >= cu.count {
+                    Affine::var(&pick)
+                } else {
+                    // Fold onto available banks conservatively.
+                    Affine::var(&pick)
+                };
+                r.location = Some(Location::banked(&mem.name, bank));
+            }
+        }
+        report.note(format!(
+            "{}: split {:?} over {} {unit}(s), {} iteration(s) each",
+            outer.name, pick, cu.count, per_unit
+        ));
+        **b = outer;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn partitions_conv_across_pes() {
+        let p = ops::fig4_conv_program();
+        let mut q = p.clone();
+        let cfg = targets::dc_accel();
+        let r = run(&mut q, &cfg, "PE", "SRAM").unwrap();
+        assert!(r.changed, "{r:?}");
+        let b = q.main.child_blocks().next().unwrap();
+        assert!(b.has_tag(PARTITIONED_TAG));
+        assert!(b.has_tag("parallel:PE"));
+        assert_eq!(b.location.as_ref().unwrap().unit, "PE");
+        // Output refinement banked by the partition index.
+        let o = b.refs.iter().find(|r| r.dir == RefDir::Out).unwrap();
+        assert_eq!(o.location.as_ref().unwrap().unit, "SRAM");
+        assert!(o.location.as_ref().unwrap().bank.is_some());
+        crate::passes::equiv::assert_equiv(&p, &q, 7, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn partition_dim_is_output_striding() {
+        // Partitioning a pure reduction dim would break Def-2; verify the
+        // picked dim strides the output (k:16 is the largest out dim).
+        let mut q = ops::fig4_conv_program();
+        let cfg = targets::dc_accel();
+        run(&mut q, &cfg, "PE", "SRAM").unwrap();
+        let b = q.main.child_blocks().next().unwrap();
+        let bank = b.location.as_ref().unwrap().bank.as_ref().unwrap();
+        let picked: Vec<&str> = bank.vars().collect();
+        assert_eq!(picked.len(), 1);
+        // Largest output-striding dims of the Fig-4 conv are y:16 / k:16;
+        // reductions (i, j, c) must never be picked.
+        assert!(["y", "k"].contains(&picked[0]), "{picked:?}");
+    }
+
+    #[test]
+    fn single_unit_is_noop() {
+        let mut q = ops::fig4_conv_program();
+        let mut cfg = targets::dc_accel();
+        cfg.set_param("compute.PE.count", 1.0).unwrap();
+        let r = run(&mut q, &cfg, "PE", "SRAM").unwrap();
+        assert!(!r.changed);
+    }
+}

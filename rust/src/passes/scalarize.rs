@@ -1,0 +1,222 @@
+//! Scalarization (§2.3): transient intermediates produced in registers
+//! need not round-trip through memory.
+//!
+//! Within a leaf block's statement list, a `store($s, R)` followed by a
+//! `load(R, $t)` through the *same* refinement — with no intervening
+//! store to `R` — can forward `$s` directly to the uses of `$t`. If the
+//! stored value is never observed elsewhere (refinement is a local temp
+//! slice with no other readers), the store itself is dropped and, when
+//! it becomes unused, the refinement too.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Block, Program, RefDir, Statement};
+
+use super::PassReport;
+
+pub fn run(p: &mut Program) -> Result<PassReport, String> {
+    let mut report = PassReport::new("scalarize");
+    let total = scalarize_program(p);
+    if total > 0 {
+        report.note(format!("forwarded {total} store/load round-trip(s)"));
+    }
+    Ok(report)
+}
+
+/// Forward store→load pairs in one block; returns rewrites performed.
+#[allow(clippy::needless_range_loop)]
+fn scalarize_block_mut(b: &mut Block) -> usize {
+    let mut rewrites = 0;
+    // Map: refinement name -> index of the latest store statement + scalar.
+    let mut last_store: BTreeMap<String, (usize, String)> = BTreeMap::new();
+    // Scalar renaming map applied to subsequent statements.
+    let mut rename: BTreeMap<String, String> = BTreeMap::new();
+    let mut drop_loads: Vec<usize> = Vec::new();
+    for i in 0..b.stmts.len() {
+        // Apply pending renames to this statement's scalar inputs.
+        match &mut b.stmts[i] {
+            Statement::Intrinsic { inputs, .. } => {
+                for inp in inputs {
+                    if let Some(r) = rename.get(inp) {
+                        *inp = r.clone();
+                    }
+                }
+            }
+            Statement::Store { from, .. } => {
+                if let Some(r) = rename.get(from) {
+                    *from = r.clone();
+                }
+            }
+            _ => {}
+        }
+        match &b.stmts[i] {
+            Statement::Store { from, into } => {
+                last_store.insert(into.clone(), (i, from.clone()));
+            }
+            Statement::Load { from, into } => {
+                if let Some((_, scalar)) = last_store.get(from) {
+                    // Forward: later uses of `into` read `scalar`.
+                    rename.insert(into.clone(), scalar.clone());
+                    drop_loads.push(i);
+                    rewrites += 1;
+                }
+            }
+            Statement::Block(_) => {
+                // Nested block may observe memory: invalidate knowledge.
+                last_store.clear();
+            }
+            _ => {}
+        }
+    }
+    // Drop forwarded loads.
+    for &i in drop_loads.iter().rev() {
+        b.stmts.remove(i);
+    }
+    // Drop stores to write-only local temps that nobody reads anymore:
+    // a Temp refinement with no Load and no child-block use.
+    let mut removable: Vec<String> = Vec::new();
+    for r in &b.refs {
+        if r.dir != RefDir::Temp {
+            continue;
+        }
+        let used = b.stmts.iter().any(|s| match s {
+            Statement::Load { from, .. } => *from == r.into,
+            Statement::Block(cb) => cb.refs.iter().any(|cr| cr.from == r.into),
+            Statement::Special(sp) => {
+                sp.inputs.contains(&r.into) || sp.outputs.contains(&r.into)
+            }
+            _ => false,
+        });
+        if !used {
+            removable.push(r.into.clone());
+        }
+    }
+    if !removable.is_empty() {
+        b.stmts.retain(|s| match s {
+            Statement::Store { into, .. } => !removable.contains(into),
+            _ => true,
+        });
+        b.refs.retain(|r| !removable.contains(&r.into));
+        rewrites += removable.len();
+    }
+    rewrites
+}
+
+// Re-bind the walker to the mutable implementation.
+pub fn scalarize_program(p: &mut Program) -> usize {
+    let mut total = 0;
+    p.main.walk_mut(&mut |b| total += scalarize_block_mut(b));
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::scalar_view;
+    use crate::ir::{AggOp, Idx, IntrOp, Refinement, TensorType};
+    use crate::poly::Affine;
+
+    /// Block computing O[x] = relu(I[x] * 2) through a needless temp:
+    ///   $a = load(I); $two = 2; $m = mul($a,$two);
+    ///   T = store($m); $t = load(T); $r = relu($t); O = store($r)
+    fn roundtrip_block() -> Block {
+        let t = TensorType::contiguous(crate::ir::DType::F32, &[8]);
+        let mut b = Block::new("rt");
+        b.idxs.push(Idx::range("x", 8));
+        b.refs.push(Refinement::new(
+            RefDir::In,
+            "I",
+            vec![Affine::var("x")],
+            scalar_view(&t),
+        ));
+        let mut tmp = Refinement::new(
+            RefDir::Temp,
+            "T",
+            vec![Affine::zero()],
+            TensorType::contiguous(crate::ir::DType::F32, &[1]),
+        );
+        tmp.from = String::new();
+        b.refs.push(tmp);
+        b.refs.push(
+            Refinement::new(RefDir::Out, "O", vec![Affine::var("x")], scalar_view(&t))
+                .with_agg(AggOp::Assign),
+        );
+        b.stmts = vec![
+            Statement::Load { from: "I".into(), into: "$a".into() },
+            Statement::Constant { output: "$two".into(), value: 2.0 },
+            Statement::Intrinsic {
+                op: IntrOp::Mul,
+                inputs: vec!["$a".into(), "$two".into()],
+                output: "$m".into(),
+            },
+            Statement::Store { from: "$m".into(), into: "T".into() },
+            Statement::Load { from: "T".into(), into: "$t".into() },
+            Statement::Intrinsic {
+                op: IntrOp::Relu,
+                inputs: vec!["$t".into()],
+                output: "$r".into(),
+            },
+            Statement::Store { from: "$r".into(), into: "O".into() },
+        ];
+        b
+    }
+
+    fn wrap(b: Block) -> crate::ir::Program {
+        let t = TensorType::contiguous(crate::ir::DType::F32, &[8]);
+        let mut p = crate::ir::Program::new(
+            "p",
+            vec![
+                crate::ir::Buffer { name: "I".into(), kind: crate::ir::BufKind::Input, ttype: t.clone() },
+                crate::ir::Buffer { name: "O".into(), kind: crate::ir::BufKind::Output, ttype: t },
+            ],
+        );
+        p.main.stmts.push(Statement::Block(Box::new(b)));
+        p
+    }
+
+    #[test]
+    fn forwards_and_removes_roundtrip() {
+        let p = wrap(roundtrip_block());
+        let mut q = p.clone();
+        let n = scalarize_program(&mut q);
+        assert!(n >= 2, "forwarded load + dropped store, got {n}");
+        let blk = q.main.child_blocks().next().unwrap();
+        // The temp refinement and its store/load are gone.
+        assert!(blk.find_ref("T").is_none());
+        assert_eq!(
+            blk.stmts.len(),
+            5,
+            "load, const, mul, relu, store — got {:#?}",
+            blk.stmts
+        );
+        crate::passes::equiv::assert_equiv(&p, &q, 31, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn keeps_temps_read_by_child_blocks() {
+        let mut b = roundtrip_block();
+        // Remove the direct load; add a child block that reads T.
+        b.stmts.remove(4); // load T
+        let mut child = Block::new("reader");
+        child.refs.push(Refinement::new(
+            RefDir::In,
+            "T",
+            vec![Affine::zero()],
+            TensorType::contiguous(crate::ir::DType::F32, &[1]),
+        ));
+        child.stmts.push(Statement::Load { from: "T".into(), into: "$x".into() });
+        b.stmts.insert(4, Statement::Block(Box::new(child)));
+        let before_refs = b.refs.len();
+        let mut bb = b;
+        scalarize_block_mut(&mut bb);
+        assert_eq!(bb.refs.len(), before_refs, "T must survive");
+    }
+
+    #[test]
+    fn pass_reports_changes() {
+        let mut p = wrap(roundtrip_block());
+        let r = run(&mut p).unwrap();
+        // run() uses the placeholder-free path below.
+        let _ = r;
+    }
+}

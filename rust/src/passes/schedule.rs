@@ -1,0 +1,255 @@
+//! Scheduling (§2.3): "assigning physical memory locations for logical
+//! tensor data, scheduling data movement ... and reordering the
+//! operations to take advantage of data locality."
+//!
+//! Three steps over `main`'s statement list:
+//!
+//! 1. **Dependency DAG** — edges from buffer read/write sets (RAW, WAR,
+//!    WAW), exactly the §3.2 multi-statement-block scheduling story.
+//! 2. **Reorder** — a locality-greedy topological order: after emitting
+//!    a statement, prefer successors that consume its outputs (keeps a
+//!    producer's tile hot for its consumer).
+//! 3. **Placement** — liveness intervals for temp buffers over the new
+//!    order, then linear-scan assignment of byte addresses in the target
+//!    memory unit; addresses land in `main` refinement locations.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::hw::MachineConfig;
+use crate::ir::{Location, Program, Statement};
+
+use super::PassReport;
+
+/// Read/write buffer sets of one main-level statement.
+fn rw_sets(st: &Statement) -> (BTreeSet<String>, BTreeSet<String>) {
+    let mut reads = BTreeSet::new();
+    let mut writes = BTreeSet::new();
+    if let Statement::Block(b) = st {
+        for r in &b.refs {
+            if r.dir.is_read() {
+                reads.insert(r.from.clone());
+            }
+            if r.dir.is_write() {
+                writes.insert(r.from.clone());
+            }
+        }
+    }
+    (reads, writes)
+}
+
+/// Build the dependency DAG: `deps[i]` = statements that must precede i.
+pub fn dependency_dag(p: &Program) -> Vec<BTreeSet<usize>> {
+    let sets: Vec<_> = p.main.stmts.iter().map(rw_sets).collect();
+    let n = sets.len();
+    let mut deps: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    for i in 0..n {
+        for j in 0..i {
+            let (ri, wi) = &sets[i];
+            let (rj, wj) = &sets[j];
+            let raw = ri.intersection(wj).next().is_some();
+            let war = wi.intersection(rj).next().is_some();
+            let waw = wi.intersection(wj).next().is_some();
+            if raw || war || waw {
+                deps[i].insert(j);
+            }
+        }
+    }
+    deps
+}
+
+pub fn run(p: &mut Program, cfg: &MachineConfig, memory: &str) -> Result<PassReport, String> {
+    let mut report = PassReport::new("schedule");
+    let mem = cfg
+        .memory(memory)
+        .ok_or_else(|| format!("schedule: no memory unit {memory:?}"))?;
+    let n = p.main.stmts.len();
+    if n == 0 {
+        return Ok(report);
+    }
+    let deps = dependency_dag(p);
+    let sets: Vec<_> = p.main.stmts.iter().map(rw_sets).collect();
+
+    // Locality-greedy topological order.
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut emitted = vec![false; n];
+    let mut last_writes: BTreeSet<String> = BTreeSet::new();
+    while order.len() < n {
+        let ready: Vec<usize> = (0..n)
+            .filter(|&i| !emitted[i] && deps[i].iter().all(|&d| emitted[d]))
+            .collect();
+        debug_assert!(!ready.is_empty(), "dependency cycle is impossible by construction");
+        // Prefer a ready statement that reads what we just wrote.
+        let pick = *ready
+            .iter()
+            .find(|&&i| sets[i].0.intersection(&last_writes).next().is_some())
+            .unwrap_or(&ready[0]);
+        emitted[pick] = true;
+        last_writes = sets[pick].1.clone();
+        order.push(pick);
+    }
+    let reordered = order.iter().enumerate().any(|(pos, &i)| pos != i);
+    if reordered {
+        let mut new_stmts: Vec<Statement> = Vec::with_capacity(n);
+        for &i in &order {
+            new_stmts.push(p.main.stmts[i].clone());
+        }
+        p.main.stmts = new_stmts;
+        report.note(format!("reordered ops: {order:?}"));
+    }
+
+    // Liveness + linear-scan placement for temps (inputs/outputs are
+    // caller-placed); addresses assigned in `memory`.
+    let sets: Vec<_> = p.main.stmts.iter().map(rw_sets).collect();
+    let mut live: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for (i, (reads, writes)) in sets.iter().enumerate() {
+        for b in writes {
+            let e = live.entry(b.clone()).or_insert((i, i));
+            e.1 = i;
+        }
+        for b in reads {
+            if let Some(e) = live.get_mut(b) {
+                e.1 = i;
+            }
+        }
+    }
+    // Sort temps by interval start; assign first-fit addresses.
+    let mut placed = 0usize;
+    let mut allocations: Vec<(u64, u64, usize)> = Vec::new(); // (addr, size, end)
+    let temp_names: Vec<String> = p
+        .buffers_of(crate::ir::BufKind::Temp)
+        .map(|b| b.name.clone())
+        .collect();
+    for t in &temp_names {
+        let Some(&(start, end)) = live.get(t) else { continue };
+        let size = p.buffer(t).unwrap().ttype.logical_bytes();
+        // Free expired allocations.
+        allocations.retain(|&(_, _, e)| e >= start);
+        // First-fit scan.
+        let mut addr = 0u64;
+        let mut sorted = allocations.clone();
+        sorted.sort();
+        for &(a, s, _) in &sorted {
+            if addr + size <= a {
+                break;
+            }
+            addr = a + s;
+        }
+        if addr + size > mem.capacity_bytes {
+            report
+                .details
+                .push(format!("{t}: does not fit in {memory} ({} B)", mem.capacity_bytes));
+            continue;
+        }
+        allocations.push((addr, size, end));
+        if let Some(r) = p.main.refs.iter_mut().find(|r| r.into == *t) {
+            let mut loc = r.location.clone().unwrap_or_else(|| Location::unit(&mem.name));
+            loc.unit = mem.name.clone();
+            loc.addr = Some(addr);
+            r.location = Some(loc);
+            placed += 1;
+        }
+    }
+    if placed > 0 {
+        report.note(format!("placed {placed} temp buffer(s) in {memory}"));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn dag_sees_producer_consumer_edge() {
+        let p = ops::conv_relu_program();
+        let deps = dependency_dag(&p);
+        assert_eq!(deps.len(), 2);
+        assert!(deps[1].contains(&0), "relu depends on conv via T");
+    }
+
+    #[test]
+    fn schedule_places_temps_and_keeps_semantics() {
+        let p = ops::conv_relu_program();
+        let mut q = p.clone();
+        let cfg = targets::cpu_cache();
+        let r = run(&mut q, &cfg, "DRAM").unwrap();
+        assert!(r.changed, "{r:?}");
+        let temp = q
+            .buffers_of(crate::ir::BufKind::Temp)
+            .next()
+            .unwrap()
+            .name
+            .clone();
+        let t_ref = q.main.refs.iter().find(|r| r.into == temp).unwrap();
+        let loc = t_ref.location.as_ref().unwrap();
+        assert_eq!(loc.unit, "DRAM");
+        assert_eq!(loc.addr, Some(0));
+        crate::passes::equiv::assert_equiv(&p, &q, 47, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn disjoint_lifetimes_reuse_addresses() {
+        // Two independent conv+relu chains: their temps can share addr 0.
+        let p1 = ops::conv_relu_program();
+        let mut p = p1.clone();
+        // Clone chain with renamed buffers.
+        let mut second = p1.clone();
+        for b in &mut second.buffers {
+            b.name = format!("{}2", b.name);
+        }
+        let rename = |b: &mut crate::ir::Block| {
+            for r in &mut b.refs {
+                if !r.from.is_empty() {
+                    r.from = format!("{}2", r.from);
+                }
+                r.into = format!("{}2", r.into);
+            }
+            for st in &mut b.stmts {
+                match st {
+                    Statement::Load { from, .. } => *from = format!("{from}2"),
+                    Statement::Store { into, .. } => *into = format!("{into}2"),
+                    _ => {}
+                }
+            }
+        };
+        let mut renamed_main = second.main.clone();
+        renamed_main.refs = Vec::new();
+        for r in &second.main.refs {
+            let mut r2 = r.clone();
+            if !r2.from.is_empty() {
+                r2.from = format!("{}2", r2.from);
+            }
+            r2.into = format!("{}2", r2.into);
+            renamed_main.refs.push(r2);
+        }
+        renamed_main.stmts = second
+            .main
+            .stmts
+            .iter()
+            .map(|s| {
+                let Statement::Block(b) = s else { unreachable!() };
+                let mut b2 = (**b).clone();
+                b2.name = format!("{}2", b2.name);
+                rename(&mut b2);
+                Statement::Block(Box::new(b2))
+            })
+            .collect();
+        p.buffers.extend(second.buffers);
+        p.main.refs.extend(renamed_main.refs);
+        p.main.stmts.extend(renamed_main.stmts);
+
+        let cfg = targets::cpu_cache();
+        run(&mut p, &cfg, "DRAM").unwrap();
+        let temps: Vec<String> = p
+            .buffers_of(crate::ir::BufKind::Temp)
+            .map(|b| b.name.clone())
+            .collect();
+        assert_eq!(temps.len(), 2, "{temps:?}");
+        let a1 = p.main.refs.iter().find(|r| r.into == temps[0]).unwrap().location.as_ref();
+        let a2 = p.main.refs.iter().find(|r| r.into == temps[1]).unwrap().location.as_ref();
+        assert_eq!(a1.unwrap().addr, Some(0));
+        assert_eq!(a2.unwrap().addr, Some(0), "disjoint lifetime ⇒ reuse");
+    }
+}

@@ -1,0 +1,177 @@
+//! Microarchitectural stenciling (§2.3): find code that could use a
+//! specialized compute unit if its data matched a fixed stencil shape,
+//! and rewrite it to that shape.
+//!
+//! Matching: a stencil is a list of [`StencilRule`]s — each rule wants
+//! an index that strides a given subset of {output, input A, input B}
+//! with a required size. An index matches a rule if its operand
+//! membership equals the rule's and the rule size divides its range
+//! (overflow-stencils are left to the boundary pass by preferring exact
+//! division; non-dividing candidates are rejected here).
+//!
+//! Rewriting: tile the matched indexes by the stencil sizes via
+//! [`super::tile::apply_tiling`], tag the inner block with the stencil's
+//! tag (the lowerer's signal, e.g. `#mac_unit`), and record
+//! `multiple:<idx>:<n>` tags on the outer block so later autotiling
+//! keeps tile sizes stencil-aligned (§3.3's "even multiple" constraint).
+
+use std::collections::BTreeMap;
+
+use crate::hw::{MachineConfig, Stencil};
+use crate::ir::{Block, Program, RefDir, Statement};
+
+use super::tile::{apply_tiling, TileOptions};
+use super::PassReport;
+
+pub fn run(p: &mut Program, cfg: &MachineConfig, unit: &str) -> Result<PassReport, String> {
+    let mut report = PassReport::new("stencilize");
+    let cu = cfg
+        .compute_unit(unit)
+        .ok_or_else(|| format!("stencilize: no compute unit {unit:?}"))?;
+    if cu.stencils.is_empty() {
+        return Ok(report);
+    }
+    for st in &mut p.main.stmts {
+        let Statement::Block(b) = st else { continue };
+        // Find the deepest not-yet-stenciled contraction block.
+        let target = find_contraction_mut(b);
+        let Some(blk) = target else { continue };
+        for stencil in &cu.stencils {
+            if let Some(assign) = match_stencil(blk, stencil) {
+                let tile: BTreeMap<String, u64> = assign.clone().into_iter().collect();
+                let opts = TileOptions {
+                    outer_tag: None,
+                    inner_tag: Some(stencil.tag.clone()),
+                    inner_location: None,
+                };
+                let mut outer = apply_tiling(blk, &tile, &opts);
+                for (idx, size) in &assign {
+                    outer.add_tag(&format!("multiple:{idx}:{size}"));
+                }
+                outer.add_tag(&format!("stencil:{}", stencil.name));
+                report.note(format!(
+                    "{}: matched stencil {} on {:?}",
+                    blk.name, stencil.name, assign
+                ));
+                *blk = outer;
+                break;
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Walk to the deepest block that looks like a 2-input contraction and
+/// has not been stenciled yet.
+fn find_contraction_mut(b: &mut Block) -> Option<&mut Block> {
+    // If a child block exists, prefer recursing (stencil the leaf-most
+    // iterating block — post-tiling that is the tile body).
+    let has_child = b.stmts.iter().any(|s| matches!(s, Statement::Block(_)));
+    if has_child {
+        for st in &mut b.stmts {
+            if let Statement::Block(cb) = st {
+                if let Some(found) = find_contraction_mut(cb) {
+                    return Some(found);
+                }
+            }
+        }
+        return None;
+    }
+    let ins = b.refs.iter().filter(|r| r.dir == RefDir::In).count();
+    let outs = b.refs.iter().filter(|r| r.dir == RefDir::Out).count();
+    if ins == 2 && outs == 1 && !b.tags.iter().any(|t| t.starts_with("stencil")) {
+        Some(b)
+    } else {
+        None
+    }
+}
+
+/// Try to assign block indexes to stencil rules. Returns
+/// `[(idx name, size)]` on success.
+fn match_stencil(b: &Block, stencil: &Stencil) -> Option<Vec<(String, u64)>> {
+    let out = b.refs.iter().find(|r| r.dir == RefDir::Out)?;
+    let ins: Vec<_> = b.refs.iter().filter(|r| r.dir == RefDir::In).collect();
+    if ins.len() != 2 {
+        return None;
+    }
+    let strides_of = |r: &crate::ir::Refinement, v: &str| -> bool {
+        r.access.iter().any(|a| a.coeff(v) != 0)
+    };
+    let mut used: Vec<String> = Vec::new();
+    let mut assign: Vec<(String, u64)> = Vec::new();
+    for rule in &stencil.rules {
+        let candidate = b.idxs.iter().find(|i| {
+            i.affine.is_none()
+                && !used.contains(&i.name)
+                && strides_of(out, &i.name) == rule.in_out
+                && strides_of(ins[0], &i.name) == rule.in_a
+                && strides_of(ins[1], &i.name) == rule.in_b
+                && i.range % rule.size == 0
+        });
+        // Operand order is symmetric; retry with A/B swapped.
+        let candidate = candidate.or_else(|| {
+            b.idxs.iter().find(|i| {
+                i.affine.is_none()
+                    && !used.contains(&i.name)
+                    && strides_of(out, &i.name) == rule.in_out
+                    && strides_of(ins[0], &i.name) == rule.in_b
+                    && strides_of(ins[1], &i.name) == rule.in_a
+                    && i.range % rule.size == 0
+            })
+        });
+        let c = candidate?;
+        used.push(c.name.clone());
+        assign.push((c.name.clone(), rule.size));
+    }
+    Some(assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn conv_matches_mac_stencil() {
+        // Fig-4 conv: k:16 (out+F), x:12 or y:16 (out+I), c:8 (I+F).
+        let p = ops::fig4_conv_program();
+        let mut q = p.clone();
+        let cfg = targets::dc_accel();
+        let r = run(&mut q, &cfg, "PE").unwrap();
+        assert!(r.changed, "{r:?}");
+        let outer = q.main.child_blocks().next().unwrap();
+        assert!(outer.tags.iter().any(|t| t.starts_with("stencil:mac4x4x8")));
+        assert!(outer.tags.iter().any(|t| t.starts_with("multiple:")));
+        let inner = outer.child_blocks().next().unwrap();
+        assert!(inner.has_tag("mac_unit"));
+        crate::passes::equiv::assert_equiv(&p, &q, 19, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn stencil_sizes_divide_matched_ranges() {
+        let mut q = ops::fig4_conv_program();
+        let cfg = targets::dc_accel();
+        run(&mut q, &cfg, "PE").unwrap();
+        let outer = q.main.child_blocks().next().unwrap();
+        let inner = outer.child_blocks().next().unwrap();
+        // Matched indexes have exactly the stencil sizes in the inner
+        // block: one 4 (out+a), one 4 (out+b), one 8 (a+b).
+        let mut sizes: Vec<u64> = inner
+            .idxs
+            .iter()
+            .filter(|i| i.affine.is_none() && i.range > 1)
+            .map(|i| i.range)
+            .collect();
+        sizes.sort();
+        assert!(sizes.windows(2).any(|w| w == [4, 8] || w == [4, 4]), "{sizes:?}");
+    }
+
+    #[test]
+    fn no_stencils_is_noop() {
+        let mut q = ops::fig4_conv_program();
+        let cfg = targets::cpu_cache();
+        let r = run(&mut q, &cfg, "core").unwrap();
+        assert!(!r.changed);
+    }
+}

@@ -1,0 +1,443 @@
+//! The §3.3 nested-rewrite machinery: split a flat block's iteration
+//! space into an outer block of tiles and an inner block per tile.
+//!
+//! Given a flat block with indexes `v: range_v` and a tile map
+//! `v ↦ t_v`, the rewrite produces (Fig. 5b):
+//!
+//! * **outer block** — indexes `v: ⌈range_v / t_v⌉`; refinements whose
+//!   accesses are the original accesses with `v ↦ t_v·v` and a constant
+//!   "corner" shift so the view origin is the minimum address the tile
+//!   touches; view sizes are the per-tile footprint extents; strides are
+//!   the parent's (same physical layout).
+//! * **inner block** — indexes `v: t_v`; the original statement list;
+//!   accesses relative to the tile origin; original constraints with
+//!   `v ↦ t_v·v_outer + v` (outer values explicitly *passed* in, per the
+//!   paper's scoping rule); plus overflow constraints
+//!   `range_v − 1 − (t_v·v_outer + v) ≥ 0` where `t_v ∤ range_v`.
+
+use std::collections::BTreeMap;
+
+use crate::cost::cacheline::access_extent;
+use crate::ir::{Block, Dim, Idx, Refinement, Statement, TensorType};
+use crate::poly::Affine;
+use crate::util::div_ceil;
+
+/// Options for the tiling rewrite.
+#[derive(Debug, Clone, Default)]
+pub struct TileOptions {
+    /// Tag for the outer block (e.g. `"tiled"`).
+    pub outer_tag: Option<String>,
+    /// Tag for the inner block (e.g. a stencil tag).
+    pub inner_tag: Option<String>,
+    /// Optional hardware location for inner refinements (tile residence,
+    /// e.g. SRAM).
+    pub inner_location: Option<crate::ir::Location>,
+}
+
+/// Suffix used for passed-in outer index values in inner blocks.
+pub const OUTER_SUFFIX: &str = "__o";
+
+/// Apply the tiling rewrite. `tile` gives the inner range per index;
+/// indexes absent from `tile` (or mapped to their full range) are left
+/// untiled (outer range 1, whole term kept in the inner access).
+pub fn apply_tiling(block: &Block, tile: &BTreeMap<String, u64>, opts: &TileOptions) -> Block {
+    // Effective tile sizes (passed indexes are never tiled: their value
+    // comes from the parent and is simply re-passed down the new nest).
+    let eff: BTreeMap<String, u64> = block
+        .idxs
+        .iter()
+        .map(|i| {
+            let t = if i.affine.is_some() {
+                1
+            } else {
+                (*tile.get(&i.name).unwrap_or(&i.range)).clamp(1, i.range.max(1))
+            };
+            (i.name.clone(), t)
+        })
+        .collect();
+    let is_passed = |name: &str| block.idx(name).is_some_and(|i| i.affine.is_some());
+    let is_tiled = |name: &str| {
+        let idx = block.idx(name).unwrap();
+        idx.affine.is_none() && eff[name] < idx.range
+    };
+
+    // ---- outer block skeleton
+    let mut outer = Block::new(&block.name);
+    outer.tags = block.tags.clone();
+    if let Some(t) = &opts.outer_tag {
+        outer.add_tag(t);
+    }
+    outer.location = block.location.clone();
+    for idx in &block.idxs {
+        match &idx.affine {
+            Some(_) => outer.idxs.push(idx.clone()),
+            None => {
+                let t = eff[&idx.name];
+                outer
+                    .idxs
+                    .push(Idx::range(&idx.name, div_ceil(idx.range as i64, t as i64) as u64));
+            }
+        }
+    }
+
+    // ---- inner block skeleton
+    let mut inner = Block::new(&format!("{}_tile", block.name));
+    if let Some(t) = &opts.inner_tag {
+        inner.add_tag(t);
+    }
+    for idx in &block.idxs {
+        match &idx.affine {
+            Some(_) => inner.idxs.push(Idx::passed(&idx.name, Affine::var(&idx.name))),
+            None => inner.idxs.push(Idx::range(&idx.name, eff[&idx.name])),
+        }
+    }
+
+    // Which indexes need their outer value passed in? Those appearing in
+    // original constraints, plus overflow dims.
+    let mut need_passed: Vec<String> = Vec::new();
+    let need = |name: &str, need_passed: &mut Vec<String>| {
+        if is_tiled(name) && !need_passed.iter().any(|n| n == name) {
+            need_passed.push(name.to_string());
+        }
+    };
+    for c in &block.constraints {
+        for v in c.vars() {
+            need(v, &mut need_passed);
+        }
+    }
+    for idx in &block.idxs {
+        let t = eff[&idx.name];
+        if idx.range % t != 0 {
+            need(&idx.name, &mut need_passed);
+        }
+    }
+    // Fresh, collision-free names for the passed outer values (re-tiling
+    // a block that already carries an `n__o` must not mint a second one).
+    let mut outer_name: BTreeMap<String, String> = BTreeMap::new();
+    for name in &need_passed {
+        let mut cand = format!("{name}{OUTER_SUFFIX}");
+        while block.idxs.iter().any(|i| i.name == cand)
+            || inner.idxs.iter().any(|i| i.name == cand)
+        {
+            cand.push('x');
+        }
+        inner.idxs.push(Idx::passed(&cand, Affine::var(name)));
+        outer_name.insert(name.clone(), cand);
+    }
+
+    // Substitution for constraints: v ↦ t_v·v__o + v (tiled), v ↦ v.
+    let mut cons_subst: BTreeMap<String, Affine> = BTreeMap::new();
+    for name in &need_passed {
+        let t = eff[name] as i64;
+        let mut a = Affine::term(&outer_name[name], t);
+        a.add_term(name, 1);
+        cons_subst.insert(name.clone(), a);
+    }
+    for c in &block.constraints {
+        inner.constraints.push(c.substitute(&cons_subst));
+    }
+    // Overflow constraints.
+    for idx in &block.idxs {
+        let t = eff[&idx.name];
+        if idx.affine.is_none() && idx.range % t != 0 {
+            // range - 1 - (t·v__o + v) >= 0
+            let mut c = Affine::constant(idx.range as i64 - 1);
+            c.add_term(&outer_name[&idx.name], -(t as i64));
+            c.add_term(&idx.name, -1);
+            inner.constraints.push(c);
+        }
+    }
+
+    // ---- refinements
+    for r in &block.refs {
+        let mut outer_access = Vec::with_capacity(r.access.len());
+        let mut inner_access = Vec::with_capacity(r.access.len());
+        let mut outer_dims = Vec::with_capacity(r.access.len());
+        for (d, a) in r.access.iter().enumerate() {
+            // Corner shift: minimum of the variable part over the tile.
+            let mut corner = 0i64;
+            let mut o = Affine::constant(a.offset);
+            let mut n = Affine::zero();
+            for (v, c) in a.terms() {
+                let t = eff[v] as i64;
+                let idx_range = block.idx(v).unwrap().range as i64;
+                if is_passed(v) {
+                    // Constant per outer iteration: lives entirely in the
+                    // outer access (the inner view origin absorbs it).
+                    o.add_term(v, c);
+                    continue;
+                }
+                if is_tiled(v) {
+                    o.add_term(v, c * t);
+                    if c < 0 {
+                        corner += c * (t - 1);
+                    }
+                } else if c < 0 {
+                    corner += c * (idx_range - 1);
+                }
+                n.add_term(v, c);
+            }
+            o.offset += corner;
+            n.offset -= corner;
+            outer_access.push(o);
+            inner_access.push(n);
+            let extent = access_extent(a, &eff);
+            outer_dims.push(Dim { size: extent, stride: r.ttype.dims[d].stride });
+        }
+        let mut outer_ref = Refinement {
+            dir: r.dir,
+            from: r.from.clone(),
+            into: r.into.clone(),
+            access: outer_access,
+            ttype: TensorType { dtype: r.ttype.dtype, dims: outer_dims },
+            agg: r.agg,
+            location: r.location.clone(),
+        };
+        if let Some(loc) = &opts.inner_location {
+            outer_ref.location = Some(loc.clone());
+        }
+        outer.refs.push(outer_ref);
+        inner.refs.push(Refinement {
+            dir: r.dir,
+            from: r.into.clone(),
+            into: r.into.clone(),
+            access: inner_access,
+            ttype: r.ttype.clone(),
+            agg: r.agg,
+            location: None,
+        });
+    }
+
+    inner.stmts = block.stmts.clone();
+    outer.stmts.push(Statement::Block(Box::new(inner)));
+    outer
+}
+
+/// Split one ranged index of a block at `at`, yielding a `lo` block
+/// (range `at`) and a `hi` block (range `range − at`, index shifted by
+/// `+at` everywhere it appears). The two blocks together iterate exactly
+/// the original space. Used by the boundary-separation pass.
+pub fn split_index(block: &Block, name: &str, at: u64) -> Option<(Block, Block)> {
+    let idx = block.idx(name)?;
+    if idx.affine.is_some() || at == 0 || at >= idx.range {
+        return None;
+    }
+    let mut lo = block.clone();
+    lo.name = format!("{}_lo", block.name);
+    for i in &mut lo.idxs {
+        if i.name == name {
+            i.range = at;
+        }
+    }
+    let mut hi = block.clone();
+    hi.name = format!("{}_hi", block.name);
+    for i in &mut hi.idxs {
+        if i.name == name {
+            i.range = idx.range - at;
+        }
+    }
+    // Shift: v ↦ v + at in hi's constraints, accesses, and any child
+    // passed-index affines that reference v.
+    let mut subst = BTreeMap::new();
+    subst.insert(name.to_string(), Affine::from_terms(&[(name, 1)], at as i64));
+    for c in &mut hi.constraints {
+        *c = c.substitute(&subst);
+    }
+    for r in &mut hi.refs {
+        for a in &mut r.access {
+            *a = a.substitute(&subst);
+        }
+        if let Some(loc) = &mut r.location {
+            if let Some(b) = &mut loc.bank {
+                *b = b.substitute(&subst);
+            }
+        }
+    }
+    for st in &mut hi.stmts {
+        if let Statement::Block(cb) = st {
+            for i in &mut cb.idxs {
+                if let Some(a) = &mut i.affine {
+                    *a = a.substitute(&subst);
+                }
+            }
+        }
+    }
+    Some((lo, hi))
+}
+
+/// Drop constraints of `block` that are provably satisfied over its own
+/// iteration space extended with the given outer ranges for passed
+/// indexes (`passed_ranges[name__o] = outer range`). Returns how many
+/// were dropped.
+pub fn drop_redundant_constraints(
+    block: &mut Block,
+    passed_ranges: &BTreeMap<String, u64>,
+) -> usize {
+    use crate::poly::polyhedron::Dim as PDim;
+    use crate::poly::Polyhedron;
+
+    // Build the space: ranged idxs as-is; passed idxs whose parent range
+    // is known become ranged dims; others are skipped (can't prove).
+    let mut space = Polyhedron::default();
+    let mut known = true;
+    for idx in &block.idxs {
+        match &idx.affine {
+            None => space.dims.push(PDim { name: idx.name.clone(), range: idx.range }),
+            Some(a) => {
+                // Passed idx: representable if it is a plain parent var
+                // with a known range.
+                if let Some(parent) = a.is_single_var() {
+                    if let Some(r) = passed_ranges.get(parent) {
+                        space.dims.push(PDim { name: idx.name.clone(), range: *r });
+                        continue;
+                    }
+                }
+                known = false;
+            }
+        }
+    }
+    if !known {
+        return 0;
+    }
+    let names = space.names();
+    let ineqs = space.to_inequalities();
+    let before = block.constraints.len();
+    block.constraints.retain(|c| {
+        // Keep c unless min(c) >= 0 over the space.
+        let t = "___t";
+        let mut names2 = names.clone();
+        names2.push(t.to_string());
+        let mut sys = ineqs.clone();
+        let mut eq = c.clone();
+        eq.add_term(t, -1);
+        sys.push(eq.clone());
+        sys.push(eq.scale(-1));
+        match crate::poly::fm::variable_bounds(&sys, &names2, t) {
+            Some((Some(lo), _)) => lo < 0, // provably ≥ 0 ⇒ drop
+            _ => true,
+        }
+    });
+    before - block.constraints.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::fig5_conv_block;
+    use crate::ir::printer::block_to_string;
+
+    fn tile(pairs: &[(&str, u64)]) -> BTreeMap<String, u64> {
+        pairs.iter().map(|(n, v)| (n.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn fig5b_structure() {
+        let b = fig5_conv_block();
+        let out = apply_tiling(&b, &tile(&[("x", 3), ("y", 4)]), &TileOptions::default());
+        // Outer: x:4, y:4, others 1.
+        let ranges: BTreeMap<&str, u64> =
+            out.idxs.iter().map(|i| (i.name.as_str(), i.range)).collect();
+        assert_eq!(ranges["x"], 4);
+        assert_eq!(ranges["y"], 4);
+        assert_eq!(ranges["i"], 1);
+        assert_eq!(ranges["c"], 1);
+        // Outer I access is 3x-1, 4y-1, 0 with footprint (5,6,8).
+        let i_ref = out.find_ref("I").unwrap();
+        assert_eq!(i_ref.access[0].to_string(), "3*x - 1");
+        assert_eq!(i_ref.access[1].to_string(), "4*y - 1");
+        assert_eq!(i_ref.access[2].to_string(), "0");
+        assert_eq!(i_ref.ttype.sizes(), vec![5, 6, 8]);
+        assert_eq!(i_ref.ttype.strides(), vec![128, 8, 1]);
+        // Outer O access 3x, 4y with (3,4,16) and agg add.
+        let o_ref = out.find_ref("O").unwrap();
+        assert_eq!(o_ref.access[0].to_string(), "3*x");
+        assert_eq!(o_ref.ttype.sizes(), vec![3, 4, 16]);
+        // Inner: original ranges for untiled idxs, tile size for tiled,
+        // passed x__o/y__o for the halo constraints.
+        let inner = out.child_blocks().next().unwrap();
+        let iranges: BTreeMap<&str, u64> =
+            inner.idxs.iter().map(|i| (i.name.as_str(), i.range)).collect();
+        assert_eq!(iranges["x"], 3);
+        assert_eq!(iranges["y"], 4);
+        assert_eq!(iranges["i"], 3);
+        assert!(inner.idx("x__o").unwrap().affine.is_some());
+        // Inner I access is relative: x + i (corner −1 folded out).
+        let ii = inner.find_ref("I").unwrap();
+        assert_eq!(ii.access[0].to_string(), "i + x");
+        // Constraints rewritten over 3·x__o + x.
+        assert!(inner.constraints.iter().any(|c| c.coeff("x__o") == 3));
+        // Printable (golden check exercised in benches/fig5_rewrite.rs).
+        assert!(block_to_string(&out).contains("block conv"));
+    }
+
+    #[test]
+    fn tiling_preserves_semantics() {
+        use crate::frontend::ops;
+        let p = ops::fig4_conv_program();
+        let mut q = p.clone();
+        if let Statement::Block(b) = &mut q.main.stmts[0] {
+            **b = apply_tiling(b, &tile(&[("x", 3), ("y", 4)]), &TileOptions::default());
+        }
+        crate::passes::equiv::assert_equiv(&p, &q, 11, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn uneven_tiling_adds_overflow_constraint_and_stays_correct() {
+        use crate::frontend::ops;
+        let p = ops::fig4_conv_program();
+        let mut q = p.clone();
+        if let Statement::Block(b) = &mut q.main.stmts[0] {
+            // 5 does not divide 12; 6 does not divide 16.
+            **b = apply_tiling(b, &tile(&[("x", 5), ("y", 6)]), &TileOptions::default());
+            let inner = b.child_blocks().next().unwrap();
+            assert!(inner.constraints.len() > 4, "overflow constraints added");
+        }
+        crate::passes::equiv::assert_equiv(&p, &q, 13, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn split_index_partitions_space() {
+        let b = fig5_conv_block();
+        let (lo, hi) = split_index(&b, "x", 8).unwrap();
+        assert_eq!(lo.idx("x").unwrap().range, 8);
+        assert_eq!(hi.idx("x").unwrap().range, 4);
+        // hi accesses shifted by 8.
+        assert_eq!(hi.find_ref("O").unwrap().access[0].to_string(), "x + 8");
+        assert_eq!(lo.iterations() + hi.iterations(), b.iterations());
+    }
+
+    #[test]
+    fn split_preserves_semantics() {
+        use crate::frontend::ops;
+        let p = ops::fig4_conv_program();
+        let mut q = p.clone();
+        let Statement::Block(b) = &q.main.stmts[0].clone() else { panic!() };
+        let (lo, hi) = split_index(b, "x", 7).unwrap();
+        q.main.stmts = vec![
+            Statement::Block(Box::new(lo)),
+            Statement::Block(Box::new(hi)),
+        ];
+        crate::passes::equiv::assert_equiv(&p, &q, 17, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn redundant_constraint_dropping() {
+        // Inner block of an even 3|12 tiling with a halo constraint that
+        // still binds (x+i-1 at x__o=0) must keep it; a constraint that
+        // is always satisfied must go.
+        let b = fig5_conv_block();
+        let out = apply_tiling(&b, &tile(&[("x", 3), ("y", 4)]), &TileOptions::default());
+        let mut inner = out.child_blocks().next().unwrap().clone();
+        let n0 = inner.constraints.len();
+        // All four halo constraints still bind at the edges → none drop.
+        let ranges: BTreeMap<String, u64> =
+            [("x".to_string(), 4u64), ("y".to_string(), 4u64)].into();
+        let dropped = drop_redundant_constraints(&mut inner, &ranges);
+        assert_eq!(dropped, 0);
+        assert_eq!(inner.constraints.len(), n0);
+        // Add a vacuous constraint: x + 100 >= 0 — dropped.
+        inner.constraints.push(Affine::from_terms(&[("x", 1)], 100));
+        let dropped = drop_redundant_constraints(&mut inner, &ranges);
+        assert_eq!(dropped, 1);
+    }
+}

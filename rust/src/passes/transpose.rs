@@ -1,0 +1,244 @@
+//! Microarchitectural transposition (§2.3): specialized units may need
+//! their operands in a specific layout; code that could use them "if its
+//! data were transposed must be found, and the transposition performed".
+//!
+//! Rule implemented: in every stenciled (or plain 2-input) contraction,
+//! the *reduction* dimension — the one striding both inputs but not the
+//! output — should be the stride-1 (innermost) dimension of each input
+//! it indexes, so the specialized unit streams contiguous vectors. For
+//! an input whose stride-1 dimension is something else, the pass:
+//!
+//! 1. allocates a transposed temp `<buf>_T` with the permuted layout,
+//! 2. inserts a copy block `(<buf>_T[perm(d)] = <buf>[d])` before the op,
+//! 3. rewrites the op's refinement to read `<buf>_T` with permuted
+//!    access and contiguous strides.
+
+use crate::ir::builder::{contraction, identity_access, Operand};
+use crate::ir::{AggOp, Block, BufKind, Buffer, IntrOp, Program, RefDir, Statement, TensorType};
+
+use super::PassReport;
+
+pub fn run(p: &mut Program) -> Result<PassReport, String> {
+    let mut report = PassReport::new("transpose");
+    let mut inserts: Vec<(usize, Statement, Buffer)> = Vec::new();
+    for (si, st) in p.main.stmts.iter_mut().enumerate() {
+        let Statement::Block(b) = st else { continue };
+        // Find the leaf contraction (possibly nested post-tiling).
+        let Some((reduction, fixes)) = analyze(b, p_buffers_snapshot(&p.buffers)) else {
+            continue;
+        };
+        for fix in fixes {
+            let (copy_block, new_buf) = build_transpose(&fix);
+            apply_fix(b, &fix);
+            report.note(format!(
+                "{}: transposed {:?} so reduction {:?} is innermost (perm {:?})",
+                b.name, fix.buf.name, reduction, fix.perm
+            ));
+            inserts.push((si, Statement::Block(Box::new(copy_block)), new_buf));
+        }
+    }
+    // Insert copies (later indexes first so positions stay valid) and
+    // register the new buffers + main refinements.
+    inserts.sort_by_key(|(i, _, _)| std::cmp::Reverse(*i));
+    for (i, stmt, buf) in inserts {
+        p.main.stmts.insert(i, stmt);
+        p.main.refs.push({
+            let mut r = crate::ir::Refinement::new(
+                RefDir::Temp,
+                &buf.name,
+                crate::ir::Refinement::zero_access(buf.ttype.rank()),
+                buf.ttype.clone(),
+            );
+            r.from = String::new();
+            r
+        });
+        p.buffers.push(buf);
+    }
+    Ok(report)
+}
+
+fn p_buffers_snapshot(bufs: &[Buffer]) -> Vec<Buffer> {
+    bufs.to_vec()
+}
+
+/// A needed transposition.
+#[derive(Debug, Clone)]
+struct Fix {
+    buf: Buffer,
+    /// Permutation: new dim d comes from old dim perm[d].
+    perm: Vec<usize>,
+}
+
+/// Find the leaf contraction inside `b` and decide which inputs need
+/// transposing. Returns the reduction index name and fixes.
+fn analyze(b: &Block, buffers: Vec<Buffer>) -> Option<(String, Vec<Fix>)> {
+    // Flat ops only: the pass runs before tiling/stenciling in every
+    // built-in pipeline, so refinement rewrites stay single-level.
+    if b.child_blocks().next().is_some() {
+        return None;
+    }
+    let leaf = Some(b)?;
+    let out = leaf.refs.iter().find(|r| r.dir == RefDir::Out)?;
+    let ins: Vec<_> = leaf.refs.iter().filter(|r| r.dir == RefDir::In).collect();
+    if ins.len() != 2 {
+        return None;
+    }
+    // Reduction var: strides both inputs, not the output. Among the
+    // reductions, the one to make innermost is the one that already
+    // indexes some input's stride-1 dimension (streaming that input is
+    // free); transposing chases the other operand into agreement.
+    let strides_in = |r: &crate::ir::Refinement, v: &str| r.access.iter().any(|a| a.coeff(v) != 0);
+    let reductions: Vec<String> = leaf
+        .idxs
+        .iter()
+        .filter(|i| {
+            i.affine.is_none()
+                && strides_in(ins[0], &i.name)
+                && strides_in(ins[1], &i.name)
+                && !strides_in(out, &i.name)
+        })
+        .map(|i| i.name.clone())
+        .collect();
+    let indexes_inner = |r: &crate::ir::Refinement, v: &str| {
+        r.ttype
+            .dims
+            .iter()
+            .position(|d| d.stride == 1)
+            .is_some_and(|d| r.access[d].coeff(v) != 0)
+    };
+    let reduction = reductions
+        .iter()
+        .find(|v| ins.iter().any(|r| indexes_inner(r, v)))?
+        .clone();
+    let mut fixes = Vec::new();
+    for r in &ins {
+        // Which dim does the reduction index? Which dim has stride 1?
+        let red_dim = r.access.iter().position(|a| a.coeff(&reduction) != 0);
+        let inner_dim = r.ttype.dims.iter().position(|d| d.stride == 1);
+        let (Some(rd), Some(id)) = (red_dim, inner_dim) else { continue };
+        if rd == id {
+            continue; // already innermost
+        }
+        // Only transpose plain program buffers (weights/inputs), not
+        // views created by earlier passes.
+        let Some(buf) = buffers.iter().find(|bf| bf.name == r.from) else { continue };
+        if !matches!(buf.kind, BufKind::Weight | BufKind::Input) {
+            continue;
+        }
+        // Permutation: move rd to the end, keep others in order.
+        let rank = r.ttype.rank();
+        let mut perm: Vec<usize> = (0..rank).filter(|&d| d != rd).collect();
+        perm.push(rd);
+        fixes.push(Fix { buf: buf.clone(), perm });
+    }
+    if fixes.is_empty() {
+        None
+    } else {
+        Some((reduction, fixes))
+    }
+}
+
+/// Build the copy block and the transposed buffer.
+fn build_transpose(fix: &Fix) -> (Block, Buffer) {
+    let old = &fix.buf.ttype;
+    let new_sizes: Vec<u64> = fix.perm.iter().map(|&d| old.dims[d].size).collect();
+    let new_t = TensorType::contiguous(old.dtype, &new_sizes);
+    let new_name = format!("{}_T", fix.buf.name);
+    // Copy block: idxs d0..dn over old sizes; in old[d0..], out new[perm].
+    let idx_names: Vec<String> = (0..old.rank()).map(|d| format!("d{d}")).collect();
+    let idx_refs: Vec<&str> = idx_names.iter().map(|s| s.as_str()).collect();
+    let idxs: Vec<(&str, u64)> = idx_refs
+        .iter()
+        .zip(old.dims.iter())
+        .map(|(n, d)| (*n, d.size))
+        .collect();
+    let out_access: Vec<crate::poly::Affine> = fix
+        .perm
+        .iter()
+        .map(|&d| crate::poly::Affine::var(&idx_names[d]))
+        .collect();
+    let block = contraction(
+        &format!("transpose_{}", fix.buf.name),
+        &idxs,
+        vec![],
+        Operand::new(&new_name, out_access, &new_t),
+        AggOp::Assign,
+        &[Operand::new(&fix.buf.name, identity_access(&idx_refs), old)],
+        IntrOp::Mul, // ignored for single input
+    );
+    let buf = Buffer { name: new_name, kind: BufKind::Temp, ttype: new_t };
+    (block, buf)
+}
+
+/// Rewrite refinements of `fix.buf` inside the op nest to read the
+/// transposed temp with permuted access/strides.
+fn apply_fix(b: &mut Block, fix: &Fix) {
+    let new_name = format!("{}_T", fix.buf.name);
+    let new_t = {
+        let sizes: Vec<u64> = fix.perm.iter().map(|&d| fix.buf.ttype.dims[d].size).collect();
+        TensorType::contiguous(fix.buf.ttype.dtype, &sizes)
+    };
+    for r in &mut b.refs {
+        if r.from != fix.buf.name {
+            continue;
+        }
+        r.from = new_name.clone();
+        // Keep `into` stable so the statement list is untouched.
+        r.access = fix.perm.iter().map(|&d| r.access[d].clone()).collect();
+        let dims: Vec<crate::ir::Dim> = fix
+            .perm
+            .iter()
+            .enumerate()
+            .map(|(nd, &od)| crate::ir::Dim {
+                size: r.ttype.dims[od].size,
+                stride: new_t.dims[nd].stride,
+            })
+            .collect();
+        r.ttype = TensorType { dtype: r.ttype.dtype, dims };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+
+    #[test]
+    fn matmul_weight_gets_transposed() {
+        // B is (K, N): reduction K strides dim 0, but dim 1 (N) is
+        // innermost → transpose to (N, K).
+        let p = ops::matmul_program(6, 8, 10);
+        let mut q = p.clone();
+        let r = run(&mut q).unwrap();
+        assert!(r.changed, "{r:?}");
+        // A copy op was inserted before the matmul.
+        assert_eq!(q.main.stmts.len(), 2);
+        let copy = q.main.child_blocks().next().unwrap();
+        assert!(copy.name.starts_with("transpose_"));
+        // The matmul now reads B_T with K innermost.
+        let mm = q.main.child_blocks().nth(1).unwrap();
+        let bt = mm.refs.iter().find(|r| r.from == "B_T").expect("rewritten ref");
+        let red_dim = bt.access.iter().position(|a| a.coeff("k") != 0).unwrap();
+        let inner_dim = bt.ttype.dims.iter().position(|d| d.stride == 1).unwrap();
+        assert_eq!(red_dim, inner_dim);
+        crate::passes::equiv::assert_equiv(&p, &q, 51, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn conv_layout_already_good_is_noop() {
+        // The conv's reduction (c) is already innermost for both inputs.
+        let mut q = ops::fig4_conv_program();
+        let r = run(&mut q).unwrap();
+        assert!(!r.changed, "{r:?}");
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut q = ops::matmul_program(4, 4, 4);
+        run(&mut q).unwrap();
+        let snapshot = crate::ir::printer::print_program(&q);
+        let r = run(&mut q).unwrap();
+        assert!(!r.changed);
+        assert_eq!(crate::ir::printer::print_program(&q), snapshot);
+    }
+}

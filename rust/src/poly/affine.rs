@@ -1,0 +1,274 @@
+//! Affine polynomials over named integer indices.
+//!
+//! Stripe requires every buffer access and every iteration-space
+//! constraint to be an affine polynomial of index names (§2.1, §3.2).
+//! `Affine` is the workhorse type for accesses, constraints, passed-in
+//! index values, and bank selectors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// An affine polynomial `Σ coeff_i · idx_i + offset` with i64 coefficients.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Affine {
+    /// Map from index name to coefficient. Zero coefficients are never
+    /// stored (normalized form), so `Eq`/`Hash` are structural.
+    terms: BTreeMap<String, i64>,
+    /// Constant offset.
+    pub offset: i64,
+}
+
+impl Affine {
+    /// The zero polynomial.
+    pub fn zero() -> Affine {
+        Affine::default()
+    }
+
+    /// A constant polynomial.
+    pub fn constant(c: i64) -> Affine {
+        Affine { terms: BTreeMap::new(), offset: c }
+    }
+
+    /// The polynomial `1·name`.
+    pub fn var(name: &str) -> Affine {
+        Affine::term(name, 1)
+    }
+
+    /// The polynomial `coeff·name`.
+    pub fn term(name: &str, coeff: i64) -> Affine {
+        let mut t = BTreeMap::new();
+        if coeff != 0 {
+            t.insert(name.to_string(), coeff);
+        }
+        Affine { terms: t, offset: 0 }
+    }
+
+    /// Build from (name, coeff) pairs plus an offset.
+    pub fn from_terms(pairs: &[(&str, i64)], offset: i64) -> Affine {
+        let mut a = Affine::constant(offset);
+        for (n, c) in pairs {
+            a.add_term(n, *c);
+        }
+        a
+    }
+
+    /// Coefficient of `name` (0 if absent).
+    pub fn coeff(&self, name: &str) -> i64 {
+        *self.terms.get(name).unwrap_or(&0)
+    }
+
+    /// Add `coeff` to the coefficient of `name`, keeping normal form.
+    pub fn add_term(&mut self, name: &str, coeff: i64) {
+        let c = self.terms.entry(name.to_string()).or_insert(0);
+        *c += coeff;
+        if *c == 0 {
+            self.terms.remove(name);
+        }
+    }
+
+    /// Iterate over (name, coeff) pairs, sorted by name.
+    pub fn terms(&self) -> impl Iterator<Item = (&str, i64)> {
+        self.terms.iter().map(|(n, c)| (n.as_str(), *c))
+    }
+
+    /// Names of indices with nonzero coefficient.
+    pub fn vars(&self) -> impl Iterator<Item = &str> {
+        self.terms.keys().map(|s| s.as_str())
+    }
+
+    /// True if the polynomial is a constant.
+    pub fn is_constant(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// True if exactly `1·name + 0`.
+    pub fn is_single_var(&self) -> Option<&str> {
+        if self.offset == 0 && self.terms.len() == 1 {
+            let (n, c) = self.terms.iter().next().unwrap();
+            if *c == 1 {
+                return Some(n.as_str());
+            }
+        }
+        None
+    }
+
+    /// Polynomial sum.
+    pub fn add(&self, other: &Affine) -> Affine {
+        let mut out = self.clone();
+        out.offset += other.offset;
+        for (n, c) in other.terms() {
+            out.add_term(n, c);
+        }
+        out
+    }
+
+    /// Polynomial difference `self - other`.
+    pub fn sub(&self, other: &Affine) -> Affine {
+        self.add(&other.scale(-1))
+    }
+
+    /// Scale by an integer.
+    pub fn scale(&self, k: i64) -> Affine {
+        if k == 0 {
+            return Affine::zero();
+        }
+        Affine {
+            terms: self.terms.iter().map(|(n, c)| (n.clone(), c * k)).collect(),
+            offset: self.offset * k,
+        }
+    }
+
+    /// Substitute each variable present in `bindings` with an affine
+    /// polynomial (used when inlining a passed parent index, or when
+    /// rewriting accesses during tiling: `x ↦ tile·x_o + x_i`).
+    pub fn substitute(&self, bindings: &BTreeMap<String, Affine>) -> Affine {
+        let mut out = Affine::constant(self.offset);
+        for (n, c) in self.terms() {
+            match bindings.get(n) {
+                Some(repl) => out = out.add(&repl.scale(c)),
+                None => out.add_term(n, c),
+            }
+        }
+        out
+    }
+
+    /// Rename a single variable.
+    pub fn rename(&self, from: &str, to: &str) -> Affine {
+        let mut b = BTreeMap::new();
+        b.insert(from.to_string(), Affine::var(to));
+        self.substitute(&b)
+    }
+
+    /// Evaluate at a point (missing names default to 0).
+    pub fn eval(&self, point: &BTreeMap<String, i64>) -> i64 {
+        self.offset
+            + self
+                .terms()
+                .map(|(n, c)| c * point.get(n).copied().unwrap_or(0))
+                .sum::<i64>()
+    }
+
+    /// Evaluate using a slice lookup `names[i] -> vals[i]` (hot path in
+    /// the interpreter; avoids building maps per iteration).
+    pub fn eval_slices(&self, names: &[String], vals: &[i64]) -> i64 {
+        let mut acc = self.offset;
+        for (n, c) in self.terms() {
+            if let Some(i) = names.iter().position(|x| x == n) {
+                acc += c * vals[i];
+            }
+        }
+        acc
+    }
+}
+
+impl fmt::Display for Affine {
+    /// Renders in the Fig.-5 style: `3*x - 1`, `x + i`, `-y - j + 15`, `0`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (n, c) in self.terms() {
+            if first {
+                match c {
+                    1 => write!(f, "{n}")?,
+                    -1 => write!(f, "-{n}")?,
+                    _ => write!(f, "{c}*{n}")?,
+                }
+                first = false;
+            } else if c >= 0 {
+                if c == 1 {
+                    write!(f, " + {n}")?;
+                } else {
+                    write!(f, " + {c}*{n}")?;
+                }
+            } else if c == -1 {
+                write!(f, " - {n}")?;
+            } else {
+                write!(f, " - {}*{n}", -c)?;
+            }
+        }
+        if first {
+            write!(f, "{}", self.offset)?;
+        } else if self.offset > 0 {
+            write!(f, " + {}", self.offset)?;
+        } else if self.offset < 0 {
+            write!(f, " - {}", -self.offset)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(n, v)| (n.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn construct_and_eval() {
+        let a = Affine::from_terms(&[("x", 3), ("i", 1)], -1); // 3x + i - 1
+        assert_eq!(a.eval(&pt(&[("x", 2), ("i", 1)])), 6);
+        assert_eq!(a.coeff("x"), 3);
+        assert_eq!(a.coeff("missing"), 0);
+    }
+
+    #[test]
+    fn normal_form_drops_zero_coeffs() {
+        let mut a = Affine::var("x");
+        a.add_term("x", -1);
+        assert!(a.is_constant());
+        assert_eq!(a, Affine::zero());
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Affine::from_terms(&[("x", 2)], 1);
+        let b = Affine::from_terms(&[("x", -2), ("y", 5)], 4);
+        let s = a.add(&b);
+        assert_eq!(s.coeff("x"), 0);
+        assert_eq!(s.coeff("y"), 5);
+        assert_eq!(s.offset, 5);
+        let d = a.sub(&a);
+        assert_eq!(d, Affine::zero());
+    }
+
+    #[test]
+    fn substitute_tiling_rewrite() {
+        // x ↦ 3*x_o + x_i (the canonical tiling substitution from §3.3)
+        let acc = Affine::from_terms(&[("x", 1), ("i", 1)], -1);
+        let mut b = BTreeMap::new();
+        b.insert("x".to_string(), Affine::from_terms(&[("x_o", 3), ("x_i", 1)], 0));
+        let r = acc.substitute(&b);
+        assert_eq!(r.coeff("x_o"), 3);
+        assert_eq!(r.coeff("x_i"), 1);
+        assert_eq!(r.coeff("i"), 1);
+        assert_eq!(r.offset, -1);
+    }
+
+    #[test]
+    fn display_fig5_style() {
+        assert_eq!(Affine::from_terms(&[("x", 3)], -1).to_string(), "3*x - 1");
+        assert_eq!(Affine::from_terms(&[("x", 1), ("i", 1)], 0).to_string(), "i + x");
+        // Terms render in sorted-name order.
+        assert_eq!(
+            Affine::from_terms(&[("y", -1), ("j", -1)], 15).to_string(),
+            "-j - y + 15"
+        );
+        assert_eq!(Affine::zero().to_string(), "0");
+    }
+
+    #[test]
+    fn single_var_detection() {
+        assert_eq!(Affine::var("k").is_single_var(), Some("k"));
+        assert_eq!(Affine::term("k", 2).is_single_var(), None);
+        assert_eq!(Affine::from_terms(&[("k", 1)], 1).is_single_var(), None);
+    }
+
+    #[test]
+    fn eval_slices_matches_eval() {
+        let a = Affine::from_terms(&[("x", 3), ("y", -2)], 7);
+        let names = vec!["x".to_string(), "y".to_string()];
+        let vals = vec![5, 4];
+        assert_eq!(a.eval_slices(&names, &vals), a.eval(&pt(&[("x", 5), ("y", 4)])));
+    }
+}

@@ -1,0 +1,282 @@
+//! Fourier–Motzkin elimination over the rationals.
+//!
+//! Used for two things:
+//! 1. **Emptiness**: if the rational relaxation of a constraint system is
+//!    empty, the integer system is certainly empty (sound direction used
+//!    by the validator — we only ever *certify* emptiness, never
+//!    non-emptiness, from FM alone).
+//! 2. **Bounds inference**: eliminating all variables but one yields the
+//!    tightest rational bounds on that variable, which we round inward
+//!    for integer bounds.
+//!
+//! Coefficients are kept as i128 fractions-free integers; each derived
+//! row is divided by the gcd of its coefficients to control growth.
+
+use super::affine::Affine;
+
+/// A linear inequality `Σ coeffs[i]·x_i + offset >= 0` over an indexed
+/// variable list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Row {
+    pub coeffs: Vec<i128>,
+    pub offset: i128,
+}
+
+impl Row {
+    fn normalize(&mut self) {
+        let mut g: i128 = 0;
+        for &c in &self.coeffs {
+            g = gcd128(g, c);
+        }
+        // Do NOT fold the offset into the gcd: dividing offset by gcd is
+        // only valid with floor rounding; over rationals we can divide
+        // everything when offset divides too, otherwise keep as-is.
+        if g > 1 && self.offset % g == 0 {
+            for c in &mut self.coeffs {
+                *c /= g;
+            }
+            self.offset /= g;
+        }
+    }
+
+    fn is_constant(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 0)
+    }
+}
+
+fn gcd128(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Convert affine `a(x) >= 0` rows into dense [`Row`]s over `names`.
+pub fn to_rows(ineqs: &[Affine], names: &[String]) -> Vec<Row> {
+    ineqs
+        .iter()
+        .map(|a| Row {
+            coeffs: names.iter().map(|n| a.coeff(n) as i128).collect(),
+            offset: a.offset as i128,
+        })
+        .collect()
+}
+
+/// Eliminate variable `var` (by index) from the system.
+pub fn eliminate(rows: &[Row], var: usize) -> Vec<Row> {
+    let mut lower: Vec<&Row> = Vec::new(); // coeff > 0  => gives lower bound
+    let mut upper: Vec<&Row> = Vec::new(); // coeff < 0  => gives upper bound
+    let mut rest: Vec<Row> = Vec::new();
+    for r in rows {
+        match r.coeffs[var].cmp(&0) {
+            std::cmp::Ordering::Greater => lower.push(r),
+            std::cmp::Ordering::Less => upper.push(r),
+            std::cmp::Ordering::Equal => rest.push(r.clone()),
+        }
+    }
+    for l in &lower {
+        for u in &upper {
+            let a = l.coeffs[var];
+            let b = -u.coeffs[var];
+            debug_assert!(a > 0 && b > 0);
+            let mut combo = Row {
+                coeffs: l
+                    .coeffs
+                    .iter()
+                    .zip(&u.coeffs)
+                    .map(|(lc, uc)| lc * b + uc * a)
+                    .collect(),
+                offset: l.offset * b + u.offset * a,
+            };
+            combo.coeffs[var] = 0;
+            combo.normalize();
+            rest.push(combo);
+        }
+    }
+    rest
+}
+
+/// True if the *rational* relaxation of the system is infeasible.
+/// (Sound certificate of integer infeasibility.)
+pub fn rational_empty(ineqs: &[Affine], names: &[String]) -> bool {
+    let mut rows = to_rows(ineqs, names);
+    for v in 0..names.len() {
+        rows = eliminate(&rows, v);
+        // Prune constant rows early.
+        let mut contradict = false;
+        rows.retain(|r| {
+            if r.is_constant() {
+                if r.offset < 0 {
+                    contradict = true;
+                }
+                false
+            } else {
+                true
+            }
+        });
+        if contradict {
+            return true;
+        }
+        if rows.len() > 4000 {
+            // FM blow-up guard: give up (conservatively "not proven empty").
+            return false;
+        }
+    }
+    false
+}
+
+/// Rational bounds for `name` implied by the system: eliminate all other
+/// variables; remaining rows `c·x + d >= 0` give `x >= -d/c` (c>0) or
+/// `x <= d/(-c)` (c<0). Rounded inward to integers. Returns `None` if a
+/// constant contradiction is found (system empty); `Some((lo, hi))` with
+/// either side possibly unbounded (`None` within) otherwise.
+#[allow(clippy::type_complexity)]
+pub fn variable_bounds(
+    ineqs: &[Affine],
+    names: &[String],
+    name: &str,
+) -> Option<(Option<i64>, Option<i64>)> {
+    let target = names.iter().position(|n| n == name)?;
+    let mut rows = to_rows(ineqs, names);
+    for v in 0..names.len() {
+        if v == target {
+            continue;
+        }
+        rows = eliminate(&rows, v);
+        for r in &rows {
+            if r.is_constant() && r.offset < 0 {
+                return None;
+            }
+        }
+        if rows.len() > 4000 {
+            return Some((None, None));
+        }
+    }
+    let mut lo: Option<i64> = None;
+    let mut hi: Option<i64> = None;
+    for r in &rows {
+        let c = r.coeffs[target];
+        if c > 0 {
+            // x >= ceil(-offset / c)
+            let b = div_ceil_i128(-r.offset, c);
+            lo = Some(lo.map_or(b as i64, |l| l.max(b as i64)));
+        } else if c < 0 {
+            // x <= floor(offset / -c)
+            let b = div_floor_i128(r.offset, -c);
+            hi = Some(hi.map_or(b as i64, |h| h.min(b as i64)));
+        } else if r.offset < 0 {
+            return None;
+        }
+    }
+    if let (Some(l), Some(h)) = (lo, hi) {
+        if l > h {
+            return None; // contradictory bounds ⇒ empty system
+        }
+    }
+    Some((lo, hi))
+}
+
+fn div_floor_i128(a: i128, b: i128) -> i128 {
+    debug_assert!(b > 0);
+    if a >= 0 {
+        a / b
+    } else {
+        -((-a + b - 1) / b)
+    }
+}
+
+fn div_ceil_i128(a: i128, b: i128) -> i128 {
+    debug_assert!(b > 0);
+    if a >= 0 {
+        (a + b - 1) / b
+    } else {
+        -(-a / b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn empty_simple() {
+        // x >= 10 and x <= 4  (as 4 - x >= 0)
+        let sys = vec![
+            Affine::from_terms(&[("x", 1)], -10),
+            Affine::from_terms(&[("x", -1)], 4),
+        ];
+        assert!(rational_empty(&sys, &names(&["x"])));
+    }
+
+    #[test]
+    fn nonempty_simple() {
+        let sys = vec![
+            Affine::from_terms(&[("x", 1)], 0),
+            Affine::from_terms(&[("x", -1)], 4),
+        ];
+        assert!(!rational_empty(&sys, &names(&["x"])));
+    }
+
+    #[test]
+    fn empty_two_vars() {
+        // x + y >= 10, x <= 3, y <= 3
+        let sys = vec![
+            Affine::from_terms(&[("x", 1), ("y", 1)], -10),
+            Affine::from_terms(&[("x", -1)], 3),
+            Affine::from_terms(&[("y", -1)], 3),
+        ];
+        assert!(rational_empty(&sys, &names(&["x", "y"])));
+    }
+
+    #[test]
+    fn bounds_through_elimination() {
+        // 0 <= x <= 11, 0 <= i <= 2, x + i - 1 >= 0 → x >= -1 (so lo = -1
+        // before box), with i eliminated: x >= 1 - i ⇒ x >= -1.
+        let sys = vec![
+            Affine::from_terms(&[("x", 1), ("i", 1)], -1),
+            Affine::var("i"),
+            Affine::from_terms(&[("i", -1)], 2),
+            Affine::var("x"),
+            Affine::from_terms(&[("x", -1)], 11),
+        ];
+        let (lo, hi) = variable_bounds(&sys, &names(&["x", "i"]), "x").unwrap();
+        assert_eq!(lo, Some(0)); // max(-1, 0) — box row x>=0 dominates
+        assert_eq!(hi, Some(11));
+    }
+
+    #[test]
+    fn bounds_tightened_by_constraint() {
+        // 0 <= x <= 11 and 2x <= 9 ⇒ x <= 4 (floor 4.5)
+        let sys = vec![
+            Affine::var("x"),
+            Affine::from_terms(&[("x", -1)], 11),
+            Affine::from_terms(&[("x", -2)], 9),
+        ];
+        let (lo, hi) = variable_bounds(&sys, &names(&["x"]), "x").unwrap();
+        assert_eq!((lo, hi), (Some(0), Some(4)));
+    }
+
+    #[test]
+    fn contradiction_reports_none() {
+        let sys = vec![
+            Affine::from_terms(&[("x", 1)], -10),
+            Affine::from_terms(&[("x", -1)], 4),
+        ];
+        assert_eq!(variable_bounds(&sys, &names(&["x"]), "x"), None);
+    }
+
+    #[test]
+    fn floor_ceil_div() {
+        assert_eq!(div_floor_i128(7, 2), 3);
+        assert_eq!(div_floor_i128(-7, 2), -4);
+        assert_eq!(div_ceil_i128(7, 2), 4);
+        assert_eq!(div_ceil_i128(-7, 2), -3);
+    }
+}

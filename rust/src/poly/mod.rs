@@ -1,0 +1,26 @@
+//! Polyhedral mathematics underlying the Nested Polyhedral Model.
+//!
+//! The paper (Definition 1) defines an *integer polyhedron* as the
+//! intersection of a lattice with a real convex polyhedron:
+//! all x ∈ ℚⁿ with `A·x + b ≥ 0` and `A·x + b ∈ ℤᵐ`. Stripe restricts
+//! iteration spaces to *bounded* integer polyhedra expressed as a
+//! rectilinear box (a range per index) plus optional affine constraints
+//! (§3.2 "its syntax encourages the use of rectilinear constraints").
+//!
+//! This module provides:
+//! * [`affine`] — affine polynomials over named indices (the access and
+//!   constraint language of Stripe);
+//! * [`polyhedron`] — bounded integer polyhedra: point enumeration,
+//!   cardinality, emptiness;
+//! * [`fm`] — Fourier–Motzkin elimination for bounds inference and
+//!   (rational-relaxation) emptiness checks;
+//! * [`overlap`] — the write/write and read/write overlap tests used by
+//!   the Definition-2 validator in `ir::validate`.
+
+pub mod affine;
+pub mod fm;
+pub mod overlap;
+pub mod polyhedron;
+
+pub use affine::Affine;
+pub use polyhedron::Polyhedron;

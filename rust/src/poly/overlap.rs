@@ -1,0 +1,246 @@
+//! Overlap analysis for Definition 2 of the Nested Polyhedral Model.
+//!
+//! Condition 2 of Definition 2: if iteration `i` writes a buffer element,
+//! no *other* iteration `j ≠ i` may read that element. Condition on
+//! `assign` aggregation (§3.2): no element may be written by two distinct
+//! iterations. Both reduce to the same question over affine accesses:
+//!
+//!   ∃ i ≠ j ∈ P  with  f(i) = g(j) ?
+//!
+//! where `f` is the writer's access polynomial vector and `g` the
+//! reader's (or second writer's). We answer it two ways:
+//!
+//! * **Exact enumeration** when `|P|²` is small enough — the common case
+//!   for unit tests and figure-sized workloads.
+//! * **Fourier–Motzkin certification** otherwise: we build the combined
+//!   system over duplicated variables and case-split `i ≠ j` into
+//!   `i_k < j_k` / `i_k > j_k` per dimension. FM proving every branch
+//!   empty certifies "no overlap"; otherwise we conservatively report
+//!   "may overlap" (sound for a validator: false alarms are possible,
+//!   missed conflicts are not — up to the rational relaxation, which is
+//!   exact for the unit-coefficient accesses Stripe produces).
+
+use std::collections::BTreeMap;
+
+use super::affine::Affine;
+use super::fm;
+use super::polyhedron::Polyhedron;
+
+/// Outcome of an overlap query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Overlap {
+    /// Proven: no two distinct iterations collide.
+    None,
+    /// A colliding pair exists (found by enumeration).
+    Definite,
+    /// Not proven absent (FM relaxation could not certify emptiness).
+    Possible,
+}
+
+impl Overlap {
+    pub fn may_conflict(self) -> bool {
+        !matches!(self, Overlap::None)
+    }
+}
+
+/// Enumeration budget: exact enumeration is O(|P|) (hash the writer
+/// addresses, scan the reader side), so a few million points is cheap —
+/// and necessary, since the FM relaxation cannot certify strided-tile
+/// disjointness over the rationals (x' = x + 1/3 satisfies 3x+u = 3x'+u').
+const ENUM_BUDGET: u64 = 4_000_000;
+
+/// Do two distinct iterations of `space` map to the same element under
+/// access vectors `f` and `g` (per-dimension affine offsets, combined
+/// with `strides` into a flat element address)?
+///
+/// `f` and `g` are both evaluated over `space`'s index names.
+pub fn distinct_iteration_overlap(
+    space: &Polyhedron,
+    f: &[Affine],
+    g: &[Affine],
+    strides: &[i64],
+) -> Overlap {
+    debug_assert_eq!(f.len(), strides.len());
+    debug_assert_eq!(g.len(), strides.len());
+    let n_points = space.count_points();
+    if n_points <= ENUM_BUDGET {
+        return enumerate_overlap(space, f, g, strides);
+    }
+    fm_overlap(space, f, g)
+}
+
+/// Flat address of an access vector at a point.
+fn flat_addr(access: &[Affine], strides: &[i64], names: &[String], point: &[i64]) -> i64 {
+    access
+        .iter()
+        .zip(strides)
+        .map(|(a, s)| a.eval_slices(names, point) * s)
+        .sum()
+}
+
+fn enumerate_overlap(space: &Polyhedron, f: &[Affine], g: &[Affine], strides: &[i64]) -> Overlap {
+    let names = space.names();
+    let pts: Vec<Vec<i64>> = space.points().collect();
+    // Hash writer addresses → first writing point; then scan reader side.
+    let mut writes: BTreeMap<i64, &Vec<i64>> = BTreeMap::new();
+    for p in &pts {
+        writes.entry(flat_addr(f, strides, &names, p)).or_insert(p);
+    }
+    let same_access = f == g;
+    for q in &pts {
+        let addr = flat_addr(g, strides, &names, q);
+        if let Some(p) = writes.get(&addr) {
+            if *p != q {
+                return Overlap::Definite;
+            }
+            if same_access {
+                continue; // f(i)=g(i) trivially; only distinct pairs matter
+            }
+            // p == q but different access vectors mapping to same addr at
+            // the same point is not a Def-2 violation; check other writers.
+            // (Handled implicitly: map stores only first writer; a second
+            // writer at the same address with a different point would have
+            // been caught when inserted? No — entry() keeps first. So do a
+            // full duplicate check for f below.)
+        }
+    }
+    // For write/write (f==g) queries, detect duplicate writer addresses.
+    if same_access {
+        let mut seen: BTreeMap<i64, &Vec<i64>> = BTreeMap::new();
+        for p in &pts {
+            let a = flat_addr(f, strides, &names, p);
+            if let Some(prev) = seen.insert(a, p) {
+                if prev != p {
+                    return Overlap::Definite;
+                }
+            }
+        }
+    }
+    Overlap::None
+}
+
+/// FM-based certification over duplicated variables.
+fn fm_overlap(space: &Polyhedron, f: &[Affine], g: &[Affine]) -> Overlap {
+    let names = space.names();
+    let prime = |n: &str| format!("{n}__p");
+    let mut all_names: Vec<String> = names.clone();
+    all_names.extend(names.iter().map(|n| prime(n)));
+
+    // Base system: P(i) ∧ P(j) ∧ f_d(i) = g_d(j) ∀d  (per-dimension
+    // equality is stricter than flat-address equality — sound for
+    // certification since distinct per-dim indices with equal flat
+    // addresses only arise with non-canonical strides, which the exact
+    // path handles).
+    let mut base: Vec<Affine> = space.to_inequalities();
+    for ineq in space.to_inequalities() {
+        let mut renamed = ineq.clone();
+        for n in &names {
+            renamed = renamed.rename(n, &prime(n));
+        }
+        base.push(renamed);
+    }
+    for (fd, gd) in f.iter().zip(g) {
+        let mut gp = gd.clone();
+        for n in &names {
+            gp = gp.rename(n, &prime(n));
+        }
+        let diff = fd.sub(&gp);
+        base.push(diff.clone()); // diff >= 0
+        base.push(diff.scale(-1)); // diff <= 0
+    }
+
+    // Case split on i ≠ j: some dimension k with i_k <= j_k - 1 or >=.
+    for k in &names {
+        for dir in [1i64, -1] {
+            let mut sys = base.clone();
+            // dir=1:  j_k - i_k - 1 >= 0 ; dir=-1: i_k - j_k - 1 >= 0
+            let mut c = Affine::term(&prime(k), dir);
+            c.add_term(k, -dir);
+            c.offset -= 1;
+            sys.push(c);
+            if !fm::rational_empty(&sys, &all_names) {
+                return Overlap::Possible;
+            }
+        }
+    }
+    Overlap::None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_writes_no_overlap() {
+        // O[x] over x:8 — each iteration writes its own element.
+        let p = Polyhedron::new(&[("x", 8)]);
+        let f = vec![Affine::var("x")];
+        assert_eq!(distinct_iteration_overlap(&p, &f, &f, &[1]), Overlap::None);
+    }
+
+    #[test]
+    fn aggregating_writes_overlap() {
+        // O[x] with iteration (x, c): all c values write the same O[x].
+        let p = Polyhedron::new(&[("x", 4), ("c", 3)]);
+        let f = vec![Affine::var("x")];
+        assert_eq!(distinct_iteration_overlap(&p, &f, &f, &[1]), Overlap::Definite);
+    }
+
+    #[test]
+    fn conv_reads_vs_writes_overlap() {
+        // writer O[x], reader I[x+i-1] over x:12, i:3 — distinct
+        // iterations read what others "own" positionally; here we test
+        // writer f = x vs reader g = x + i - 1 on the same buffer.
+        let p = Polyhedron::new(&[("x", 12), ("i", 3)]);
+        let f = vec![Affine::var("x")];
+        let g = vec![Affine::from_terms(&[("x", 1), ("i", 1)], -1)];
+        assert_eq!(
+            distinct_iteration_overlap(&p, &f, &g, &[1]),
+            Overlap::Definite
+        );
+    }
+
+    #[test]
+    fn strided_tiles_disjoint() {
+        // Tiled write: O[3*xo + xi] over xo:4, xi:3 — bijective onto 0..12.
+        let p = Polyhedron::new(&[("xo", 4), ("xi", 3)]);
+        let f = vec![Affine::from_terms(&[("xo", 3), ("xi", 1)], 0)];
+        assert_eq!(distinct_iteration_overlap(&p, &f, &f, &[1]), Overlap::None);
+    }
+
+    #[test]
+    fn fm_path_certifies_disjoint() {
+        // Big enough space to route through FM: identity access is
+        // trivially injective.
+        let p = Polyhedron::new(&[("x", 4096), ("y", 4096)]);
+        let f = vec![Affine::var("x"), Affine::var("y")];
+        assert_eq!(
+            distinct_iteration_overlap(&p, &f, &f, &[4096, 1]),
+            Overlap::None
+        );
+    }
+
+    #[test]
+    fn fm_path_flags_aggregation() {
+        let p = Polyhedron::new(&[("x", 4096), ("c", 4096)]);
+        let f = vec![Affine::var("x")];
+        assert_eq!(
+            distinct_iteration_overlap(&p, &f, &f, &[1]),
+            Overlap::Possible
+        );
+    }
+
+    #[test]
+    fn two_dim_block_access_disjoint() {
+        // 2-D tiling of Fig. 2: access (3*xo+xi, 2*yo+yi).
+        let p = Polyhedron::new(&[("xo", 4), ("yo", 3), ("xi", 3), ("yi", 2)]);
+        let f = vec![
+            Affine::from_terms(&[("xo", 3), ("xi", 1)], 0),
+            Affine::from_terms(&[("yo", 2), ("yi", 1)], 0),
+        ];
+        assert_eq!(
+            distinct_iteration_overlap(&p, &f, &f, &[6, 1]),
+            Overlap::None
+        );
+    }
+}

@@ -1,0 +1,265 @@
+//! Bounded integer polyhedra: Stripe iteration spaces.
+//!
+//! Per §3.2, a Stripe iteration space is a rectilinear box — a
+//! `(name, range)` per index — intersected with optional affine
+//! constraints `c(x) ≥ 0`. This matches Definition 1 restricted to
+//! bounded subsets of ℤⁿ (the lattice is the unit lattice; strided
+//! lattices arise through nesting + affine accesses rather than through
+//! the iteration space itself).
+
+use std::collections::BTreeMap;
+
+use super::affine::Affine;
+use super::fm;
+
+/// One iteration dimension: a named index with range `[0, range)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dim {
+    pub name: String,
+    pub range: u64,
+}
+
+/// A bounded integer polyhedron in box+constraints form.
+#[derive(Debug, Clone, Default)]
+pub struct Polyhedron {
+    pub dims: Vec<Dim>,
+    /// Each constraint is `a(x) >= 0`.
+    pub constraints: Vec<Affine>,
+}
+
+impl Polyhedron {
+    pub fn new(dims: &[(&str, u64)]) -> Polyhedron {
+        Polyhedron {
+            dims: dims
+                .iter()
+                .map(|(n, r)| Dim { name: n.to_string(), range: *r })
+                .collect(),
+            constraints: Vec::new(),
+        }
+    }
+
+    pub fn with_constraints(mut self, cs: Vec<Affine>) -> Polyhedron {
+        self.constraints = cs;
+        self
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Volume of the bounding box (number of lattice points ignoring
+    /// constraints).
+    pub fn box_size(&self) -> u64 {
+        self.dims.iter().map(|d| d.range.max(1)).product()
+    }
+
+    /// Check whether a point (aligned with `self.dims` order) satisfies
+    /// the box bounds and all constraints.
+    pub fn contains(&self, point: &[i64]) -> bool {
+        debug_assert_eq!(point.len(), self.dims.len());
+        for (d, &v) in self.dims.iter().zip(point) {
+            if v < 0 || v as u64 >= d.range.max(1) {
+                return false;
+            }
+        }
+        let names: Vec<String> = self.dims.iter().map(|d| d.name.clone()).collect();
+        self.constraints.iter().all(|c| c.eval_slices(&names, point) >= 0)
+    }
+
+    /// Enumerate all points satisfying box + constraints, in
+    /// lexicographic order. Suitable for the moderate spaces used in
+    /// tests and figure reproduction; the interpreter uses its own
+    /// incremental walker.
+    pub fn points(&self) -> PointIter<'_> {
+        let n = self.dims.len();
+        PointIter {
+            poly: self,
+            names: self.dims.iter().map(|d| d.name.clone()).collect(),
+            current: vec![0; n],
+            done: self.dims.iter().any(|d| d.range == 0),
+            fresh: true,
+        }
+    }
+
+    /// Exact number of lattice points (enumerative; spaces here are the
+    /// size of tensor-op iteration domains, which tests keep moderate).
+    pub fn count_points(&self) -> u64 {
+        if self.constraints.is_empty() {
+            return self.box_size();
+        }
+        self.points().count() as u64
+    }
+
+    /// True if no integer point satisfies the constraints.
+    ///
+    /// Fast path: Fourier–Motzkin rational emptiness (sound for
+    /// "definitely empty" on its own); if FM says non-empty we fall back
+    /// to enumeration for an exact integer answer when the box is small,
+    /// otherwise we report non-empty (conservative for validation usage).
+    pub fn is_empty(&self) -> bool {
+        if self.dims.iter().any(|d| d.range == 0) {
+            return true;
+        }
+        let sys = self.to_inequalities();
+        if fm::rational_empty(&sys, &self.names()) {
+            return true;
+        }
+        if self.box_size() <= 1 << 16 {
+            return self.points().next().is_none();
+        }
+        false
+    }
+
+    /// All constraints including box bounds, as `a(x) >= 0` rows.
+    pub fn to_inequalities(&self) -> Vec<Affine> {
+        let mut out = Vec::with_capacity(self.constraints.len() + 2 * self.dims.len());
+        for d in &self.dims {
+            // x >= 0
+            out.push(Affine::var(&d.name));
+            // range - 1 - x >= 0
+            let mut u = Affine::term(&d.name, -1);
+            u.offset += d.range as i64 - 1;
+            out.push(u);
+        }
+        out.extend(self.constraints.iter().cloned());
+        out
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.dims.iter().map(|d| d.name.clone()).collect()
+    }
+
+    /// Inclusive lower/upper bounds for one dimension implied by box and
+    /// (via FM) constraints. Returns `None` if infeasible.
+    pub fn bounds(&self, name: &str) -> Option<(i64, i64)> {
+        let d = self.dims.iter().find(|d| d.name == name)?;
+        let mut lo = 0i64;
+        let mut hi = d.range as i64 - 1;
+        let names = self.names();
+        let (clo, chi) = fm::variable_bounds(&self.to_inequalities(), &names, name)?;
+        lo = lo.max(clo.unwrap_or(lo));
+        hi = hi.min(chi.unwrap_or(hi));
+        if lo > hi {
+            None
+        } else {
+            Some((lo, hi))
+        }
+    }
+}
+
+/// Lexicographic point iterator over a polyhedron.
+pub struct PointIter<'a> {
+    poly: &'a Polyhedron,
+    names: Vec<String>,
+    current: Vec<i64>,
+    done: bool,
+    fresh: bool,
+}
+
+impl<'a> Iterator for PointIter<'a> {
+    type Item = Vec<i64>;
+
+    fn next(&mut self) -> Option<Vec<i64>> {
+        if self.done {
+            return None;
+        }
+        loop {
+            if self.fresh {
+                self.fresh = false;
+            } else if !self.advance() {
+                return None;
+            }
+            let ok = self
+                .poly
+                .constraints
+                .iter()
+                .all(|c| c.eval_slices(&self.names, &self.current) >= 0);
+            if ok {
+                return Some(self.current.clone());
+            }
+        }
+    }
+}
+
+impl<'a> PointIter<'a> {
+    fn advance(&mut self) -> bool {
+        let n = self.current.len();
+        if n == 0 {
+            self.done = true;
+            return false;
+        }
+        let mut i = n;
+        while i > 0 {
+            i -= 1;
+            self.current[i] += 1;
+            if (self.current[i] as u64) < self.poly.dims[i].range {
+                return true;
+            }
+            self.current[i] = 0;
+        }
+        self.done = true;
+        false
+    }
+}
+
+/// Convenience: a point as a name→value map.
+pub fn point_map(names: &[String], vals: &[i64]) -> BTreeMap<String, i64> {
+    names.iter().cloned().zip(vals.iter().copied()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn box_enumeration() {
+        let p = Polyhedron::new(&[("x", 2), ("y", 3)]);
+        let pts: Vec<_> = p.points().collect();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], vec![0, 0]);
+        assert_eq!(pts[5], vec![1, 2]);
+        assert_eq!(p.count_points(), 6);
+    }
+
+    #[test]
+    fn constrained_conv_halo() {
+        // The Fig.-5 conv iteration space: x:12, i:3 with 0 <= x+i-1 <= 11
+        let p = Polyhedron::new(&[("x", 12), ("i", 3)]).with_constraints(vec![
+            Affine::from_terms(&[("x", 1), ("i", 1)], -1),
+            Affine::from_terms(&[("x", -1), ("i", -1)], 12),
+        ]);
+        // x=0,i=0 violates x+i-1 >= 0; x=11,i=2 violates 12-x-i >= 0.
+        assert!(!p.contains(&[0, 0]));
+        assert!(p.contains(&[0, 1]));
+        assert!(!p.contains(&[11, 2]));
+        assert_eq!(p.count_points(), 12 * 3 - 2);
+    }
+
+    #[test]
+    fn empty_detection() {
+        let p = Polyhedron::new(&[("x", 4)])
+            .with_constraints(vec![Affine::from_terms(&[("x", 1)], -10)]); // x >= 10
+        assert!(p.is_empty());
+        let q = Polyhedron::new(&[("x", 4)]);
+        assert!(!q.is_empty());
+        let z = Polyhedron::new(&[("x", 0)]);
+        assert!(z.is_empty());
+    }
+
+    #[test]
+    fn bounds_with_constraints() {
+        let p = Polyhedron::new(&[("x", 12)])
+            .with_constraints(vec![Affine::from_terms(&[("x", 1)], -3)]); // x >= 3
+        assert_eq!(p.bounds("x"), Some((3, 11)));
+        let q = Polyhedron::new(&[("x", 12)])
+            .with_constraints(vec![Affine::from_terms(&[("x", -1)], 5)]); // x <= 5
+        assert_eq!(q.bounds("x"), Some((0, 5)));
+    }
+
+    #[test]
+    fn zero_rank_polyhedron_has_one_point() {
+        let p = Polyhedron::new(&[]);
+        let pts: Vec<_> = p.points().collect();
+        assert_eq!(pts, vec![Vec::<i64>::new()]);
+    }
+}

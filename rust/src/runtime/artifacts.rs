@@ -1,0 +1,85 @@
+//! Artifact locations and existence checks.
+
+use std::path::{Path, PathBuf};
+
+/// Root of the artifacts directory: `$STRIPE_ARTIFACTS` or
+/// `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("STRIPE_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Walk up from the current dir looking for `artifacts/`.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Path of a named artifact (e.g. `model` → `artifacts/model.hlo.txt`).
+pub fn artifact_path(name: &str) -> PathBuf {
+    artifacts_dir().join(format!("{name}.hlo.txt"))
+}
+
+/// True if the artifact exists (used to skip oracle comparisons when
+/// `make artifacts` has not run).
+pub fn artifact_available(name: &str) -> bool {
+    artifact_path(name).is_file()
+}
+
+/// All artifacts present on disk.
+pub fn list_artifacts() -> Vec<String> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(artifacts_dir()) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if let Some(base) = name.strip_suffix(".hlo.txt") {
+                out.push(base.to_string());
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Check `path` exists, with a helpful message otherwise.
+pub fn require(path: &Path) -> Result<(), String> {
+    if path.is_file() {
+        Ok(())
+    } else {
+        Err(format!(
+            "artifact {path:?} not found — run `make artifacts` first \
+             (python lowers the JAX/Pallas model to HLO text once; rust \
+             never invokes python at runtime)"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths_are_hlo_text() {
+        let p = artifact_path("model");
+        assert!(p.to_string_lossy().ends_with("model.hlo.txt"));
+    }
+
+    #[test]
+    fn require_gives_actionable_error() {
+        let e = require(Path::new("/nonexistent/foo.hlo.txt")).unwrap_err();
+        assert!(e.contains("make artifacts"));
+    }
+
+    #[test]
+    fn env_override_wins() {
+        std::env::set_var("STRIPE_ARTIFACTS", "/tmp/stripe_artifacts_test");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/stripe_artifacts_test"));
+        std::env::remove_var("STRIPE_ARTIFACTS");
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts.
+//!
+//! The build-time Python side (`python/compile/aot.py`) lowers the L2
+//! JAX model — whose hot spot is the L1 Pallas kernel — to **HLO text**
+//! in `artifacts/`. This module loads those artifacts through the `xla`
+//! crate's PJRT CPU client and executes them from Rust, with Python
+//! nowhere on the execution path.
+//!
+//! In this reproduction the runtime serves as the *numeric oracle* for
+//! the Stripe interpreter: `examples/network_e2e.rs` runs the same CNN
+//! through (a) frontend → passes → interpreter and (b) the XLA artifact,
+//! and compares outputs elementwise.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{artifact_path, artifacts_dir};
+pub use client::{Runtime, RuntimeError};

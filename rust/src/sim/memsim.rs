@@ -1,0 +1,131 @@
+//! Multi-level memory hierarchy simulation.
+//!
+//! Models an inclusive hierarchy: an access goes to L1; on miss it
+//! proceeds to L2, and so on; a miss at the last cache level counts as
+//! main-memory traffic. Each level tracks accesses/misses and the bytes
+//! moved in from below.
+
+use super::cache::{Cache, CacheConfig, CacheStats};
+
+/// Per-level observation.
+#[derive(Debug, Clone)]
+pub struct LevelStats {
+    pub name: String,
+    pub stats: CacheStats,
+    /// Bytes filled into this level from the level below.
+    pub fill_bytes: u64,
+}
+
+/// A stack of caches, innermost first.
+#[derive(Debug)]
+pub struct Hierarchy {
+    levels: Vec<(String, Cache)>,
+    /// Accesses that missed every level.
+    pub dram_accesses: u64,
+    /// Bytes transferred from DRAM.
+    pub dram_bytes: u64,
+}
+
+impl Hierarchy {
+    pub fn new(levels: Vec<(String, CacheConfig)>) -> Hierarchy {
+        Hierarchy {
+            levels: levels.into_iter().map(|(n, c)| (n, Cache::new(c))).collect(),
+            dram_accesses: 0,
+            dram_bytes: 0,
+        }
+    }
+
+    /// Convenience: one level.
+    pub fn single(name: &str, cfg: CacheConfig) -> Hierarchy {
+        Hierarchy::new(vec![(name.to_string(), cfg)])
+    }
+
+    /// Access a byte address; fills all missing levels.
+    pub fn access(&mut self, addr: u64) {
+        for (_, cache) in &mut self.levels {
+            if cache.access(addr) {
+                return;
+            }
+        }
+        self.dram_accesses += 1;
+        let line = self.levels.last().map(|(_, c)| c.config().line_bytes).unwrap_or(64);
+        self.dram_bytes += line;
+    }
+
+    pub fn stats(&self) -> Vec<LevelStats> {
+        self.levels
+            .iter()
+            .map(|(n, c)| LevelStats {
+                name: n.clone(),
+                stats: c.stats,
+                fill_bytes: c.stats.misses * c.config().line_bytes,
+            })
+            .collect()
+    }
+
+    pub fn flush(&mut self) {
+        for (_, c) in &mut self.levels {
+            c.flush();
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        for (_, c) in &mut self.levels {
+            c.reset_stats();
+        }
+        self.dram_accesses = 0;
+        self.dram_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_level() -> Hierarchy {
+        Hierarchy::new(vec![
+            ("L1".into(), CacheConfig { line_bytes: 16, sets: 2, ways: 1 }),
+            ("L2".into(), CacheConfig { line_bytes: 16, sets: 8, ways: 2 }),
+        ])
+    }
+
+    #[test]
+    fn miss_cascades_to_lower_levels() {
+        let mut h = two_level();
+        h.access(0); // miss L1, miss L2, dram
+        h.access(0); // hit L1
+        let s = h.stats();
+        assert_eq!(s[0].stats.accesses, 2);
+        assert_eq!(s[0].stats.misses, 1);
+        assert_eq!(s[1].stats.accesses, 1);
+        assert_eq!(s[1].stats.misses, 1);
+        assert_eq!(h.dram_accesses, 1);
+        assert_eq!(h.dram_bytes, 16);
+    }
+
+    #[test]
+    fn l2_absorbs_l1_conflict_misses() {
+        let mut h = two_level();
+        // Lines 0 and 2 conflict in L1 (2 sets, 1 way) but coexist in L2.
+        h.access(0);
+        h.access(32);
+        h.access(0);
+        h.access(32);
+        let s = h.stats();
+        assert_eq!(s[0].stats.misses, 4); // thrashing in L1
+        assert_eq!(s[1].stats.misses, 2); // only cold misses in L2
+        assert_eq!(h.dram_accesses, 2);
+    }
+
+    #[test]
+    fn reset_stats_keeps_contents() {
+        let mut h = two_level();
+        h.access(0);
+        h.reset_stats();
+        h.access(0); // still cached
+        let s = h.stats();
+        assert_eq!(s[0].stats.accesses, 1);
+        assert_eq!(s[0].stats.misses, 0);
+        assert_eq!(h.dram_accesses, 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Hardware substrate simulation.
+//!
+//! The paper's evaluation artifacts (Fig. 4 especially) are cost-model
+//! illustrations; the authors did not run on silicon in this paper, and
+//! §1.3 argues that Stripe's compilation model "doesn't require physical
+//! hardware or even a cycle-accurate model". We nevertheless build a
+//! concrete substrate so pass *benefit* claims are measurable:
+//!
+//! * [`cache`] — a set-associative LRU cache model;
+//! * [`memsim`] — a multi-level hierarchy built from caches, counting
+//!   hits/misses/bytes per level;
+//! * [`trace`] — an [`crate::exec::Sink`] adapter that feeds interpreter
+//!   access events through the hierarchy, giving per-op hit rates for
+//!   tiling/fusion ablations (`benches/ablations.rs`).
+
+pub mod cache;
+pub mod memsim;
+pub mod trace;
+
+pub use cache::{Cache, CacheConfig, CacheStats};
+pub use memsim::{Hierarchy, LevelStats};
+pub use trace::CacheSink;

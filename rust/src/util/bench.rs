@@ -1,0 +1,139 @@
+//! Minimal micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Benches under `benches/` use `harness = false` and call
+//! [`Bench::run`] / [`Bench::run_with_result`]. The harness warms up,
+//! runs timed iterations until a wall-clock budget or max-iteration count
+//! is reached, and prints min / median / mean / max per iteration, plus
+//! an optional throughput line. Output is a stable, grep-friendly table
+//! so `bench_output.txt` can be diffed between perf iterations.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters={:<5} min={:>12?} median={:>12?} mean={:>12?} max={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.max
+        );
+    }
+
+    /// Print a derived throughput figure, e.g. items/sec based on median.
+    pub fn print_throughput(&self, items_per_iter: f64, unit: &str) {
+        let per_sec = items_per_iter / self.median.as_secs_f64();
+        println!(
+            "bench {:<44} throughput={} {unit}/s (median)",
+            self.name,
+            crate::util::human_count(per_sec)
+        );
+    }
+}
+
+/// Benchmark runner with a wall-clock budget.
+pub struct Bench {
+    /// Total measurement budget per benchmark.
+    pub budget: Duration,
+    /// Upper bound on timed iterations.
+    pub max_iters: usize,
+    /// Warmup iterations (untimed).
+    pub warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { budget: Duration::from_millis(1500), max_iters: 200, warmup: 2 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { budget: Duration::from_millis(400), max_iters: 50, warmup: 1 }
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut samples: Vec<Duration> = Vec::new();
+        while samples.len() < self.max_iters
+            && (samples.len() < 3 || start.elapsed() < self.budget)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        Self::stats(name, samples)
+    }
+
+    /// Run `f`, keeping its result alive (prevents dead-code elimination)
+    /// and returning the last result together with stats.
+    pub fn run_with_result<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> (Stats, T) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let start = Instant::now();
+        let mut samples: Vec<Duration> = Vec::new();
+        let mut last = None;
+        while samples.len() < self.max_iters
+            && (samples.len() < 3 || start.elapsed() < self.budget)
+        {
+            let t = Instant::now();
+            let r = std::hint::black_box(f());
+            samples.push(t.elapsed());
+            last = Some(r);
+        }
+        (Self::stats(name, samples), last.unwrap())
+    }
+
+    fn stats(name: &str, mut samples: Vec<Duration>) -> Stats {
+        samples.sort();
+        let iters = samples.len();
+        let min = samples[0];
+        let max = samples[iters - 1];
+        let median = samples[iters / 2];
+        let mean = samples.iter().sum::<Duration>() / iters as u32;
+        let s = Stats { name: name.to_string(), iters, min, median, mean, max };
+        s.print();
+        s
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench { budget: Duration::from_millis(20), max_iters: 10, warmup: 1 };
+        let mut n = 0u64;
+        let s = b.run("noop", || n += 1);
+        assert!(s.iters >= 3);
+        assert!(n as usize >= s.iters);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn run_with_result_returns_value() {
+        let b = Bench { budget: Duration::from_millis(10), max_iters: 5, warmup: 0 };
+        let (s, v) = b.run_with_result("sum", || (0..100u64).sum::<u64>());
+        assert_eq!(v, 4950);
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Specification of one option for help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (not including argv[0]).
+    /// `value_opts` lists option names that consume a following value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&body) {
+                    let v = it.next().unwrap_or_default();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render help text for a command.
+pub fn help(cmd: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\nOptions:\n");
+    for o in opts {
+        let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+        let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  {arg:<26} {}{def}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], value_opts: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), value_opts)
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = parse(&["--verbose", "--target", "cpu_cache", "pos1"], &["target"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("target"), Some("cpu_cache"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["--n=42", "--rate=0.5"], &[]);
+        assert_eq!(a.get_usize("n", 0), 42);
+        assert!((a.get_f64("rate", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = help(
+            "stripe fig4",
+            "reproduce Figure 4",
+            &[OptSpec { name: "cap", takes_value: true, help: "memory cap", default: Some("512") }],
+        );
+        assert!(h.contains("--cap <v>"));
+        assert!(h.contains("[default: 512]"));
+    }
+}

@@ -1,0 +1,78 @@
+//! Small self-contained utilities used across the compiler.
+//!
+//! The build environment is fully offline, so this module replaces the
+//! usual third-party helpers (rand, criterion, clap, proptest) with
+//! minimal, deterministic, std-only implementations:
+//!
+//! * [`rng`] — a seedable xorshift/splitmix PRNG used by tests,
+//!   property-style sweeps, and synthetic data generation.
+//! * [`bench`] — a micro-benchmark harness (used by `benches/*.rs` with
+//!   `harness = false`) reporting min/median/mean wall time.
+//! * [`cli`] — a tiny declarative command-line argument parser for the
+//!   `stripe` binary and the examples.
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+
+/// Round `a` up to the next multiple of `b` (`b > 0`).
+pub fn div_ceil(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    if a >= 0 {
+        (a + b - 1) / b
+    } else {
+        a / b
+    }
+}
+
+/// Greatest common divisor (non-negative result).
+pub fn gcd(a: i64, b: i64) -> i64 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Human-readable engineering formatting for counts ("12.4k", "3.1M").
+pub fn human_count(n: f64) -> String {
+    if n >= 1e9 {
+        format!("{:.2}G", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.2}M", n / 1e6)
+    } else if n >= 1e3 {
+        format!("{:.2}k", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 8), 1);
+        assert_eq!(div_ceil(0, 8), 0);
+    }
+
+    #[test]
+    fn gcd_basic() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(-12, 18), 6);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(7, 13), 1);
+    }
+
+    #[test]
+    fn human_count_ranges() {
+        assert_eq!(human_count(12.0), "12");
+        assert_eq!(human_count(12400.0), "12.40k");
+        assert_eq!(human_count(3.1e6), "3.10M");
+    }
+}
