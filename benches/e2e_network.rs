@@ -9,7 +9,10 @@
 use std::collections::BTreeMap;
 
 use stripe::coordinator::compile_network;
-use stripe::exec::{run_program, run_program_sink, ExecOptions};
+use stripe::exec::{
+    run_program, run_program_parallel, run_program_planned, run_program_sink, ExecOptions,
+    NullSink,
+};
 use stripe::frontend::ops;
 use stripe::hw::targets;
 use stripe::sim::cache::CacheConfig;
@@ -60,6 +63,67 @@ fn main() {
             st[1].stats.hit_rate() * 100.0,
             sink.hierarchy.dram_bytes
         );
+    }
+
+    section("parallel execution across compute units (cpu_cache)");
+    {
+        // Scale the CNN up so per-op work dominates the fork/merge
+        // overhead, then compare the serial plan against the parallel
+        // engine at the target's compute-unit count.
+        let big = {
+            let mut nb = stripe::graph::NetworkBuilder::new("cnn_big", stripe::ir::DType::F32);
+            let i = nb.input("I", &[48, 64, 8]);
+            let f1 = nb.weight("F1", &[3, 3, 16, 8]);
+            let f2 = nb.weight("F2", &[3, 3, 16, 16]);
+            let wd = nb.weight("WD", &[24 * 32 * 16, 10]);
+            let x = nb.conv2d_same(i, f1);
+            let x = nb.relu(x);
+            let x = nb.maxpool2(x);
+            let x = nb.conv2d_same(x, f2);
+            let x = nb.relu(x);
+            let x = nb.flatten(x);
+            let o = nb.dense(x, wd);
+            nb.finish(o)
+        };
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let units = cfg.compute_units.min(avail.max(1));
+        let big_inputs = stripe::passes::equiv::gen_inputs(&big, 5);
+        let popts = ExecOptions::with_workers(units);
+        let (_, schedule) = run_program_parallel(&big, &big_inputs, &popts).unwrap();
+        print!("{}", schedule.summary());
+        let bench = Bench::default();
+        let s_serial = bench.run("run cnn_big (serial plan)", || {
+            std::hint::black_box(
+                run_program_planned(&big, &big_inputs, &ExecOptions::default(), &mut NullSink)
+                    .unwrap(),
+            );
+        });
+        let s_par = bench.run(&format!("run cnn_big (parallel, {units} units)"), || {
+            std::hint::black_box(run_program_parallel(&big, &big_inputs, &popts).unwrap());
+        });
+        let speedup = s_serial.median.as_secs_f64() / s_par.median.as_secs_f64();
+        println!(
+            "parallel speedup (median, {units} units, {avail} hw threads): {speedup:.2}x  \
+             [serial {:?} -> parallel {:?}]",
+            s_serial.median, s_par.median
+        );
+        // Only a hard requirement where the hardware can actually run
+        // the workers concurrently; on a single-core box the overhead
+        // makes <= 1.0x expected, and aborting the bench would be noise.
+        if avail >= 2 && units >= 2 {
+            assert!(
+                speedup > 1.0,
+                "parallel execution must beat serial on a multi-unit target (got {speedup:.2}x)"
+            );
+        } else {
+            println!("(insufficient hardware parallelism: speedup assertion skipped)");
+        }
+        // Equivalence spot-check: bit-exact against the serial plan.
+        let serial_out =
+            run_program_planned(&big, &big_inputs, &ExecOptions::default(), &mut NullSink)
+                .unwrap();
+        let (par_out, _) = run_program_parallel(&big, &big_inputs, &popts).unwrap();
+        assert_eq!(serial_out, par_out, "parallel output must be bit-exact");
     }
 
     section("output stability across targets");

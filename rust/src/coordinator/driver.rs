@@ -1,5 +1,6 @@
 //! End-to-end compile drivers shared by the CLI, examples, and service.
 
+use crate::exec::ParallelReport;
 use crate::hw::MachineConfig;
 use crate::ir::Program;
 use crate::passes::{compile, PassReport};
@@ -10,10 +11,19 @@ pub struct CompiledNetwork {
     pub target: String,
     pub program: Program,
     pub reports: Vec<PassReport>,
+    /// The execution schedule across the target's compute units: for
+    /// each top-level op, the parallel-safe dimension the executor will
+    /// slice (or why it must run serially). Computed statically at
+    /// compile time from the same disjointness analysis the executor
+    /// uses (`exec::parallel::analyze_program`).
+    pub schedule: ParallelReport,
+    /// Worker-pool size the schedule was computed for
+    /// (`MachineConfig::compute_units`).
+    pub compute_units: usize,
 }
 
 impl CompiledNetwork {
-    /// One-line-per-pass summary.
+    /// One-line-per-pass summary, followed by the parallel schedule.
     pub fn summary(&self) -> String {
         let mut s = format!("target {}\n", self.target);
         for r in &self.reports {
@@ -26,6 +36,13 @@ impl CompiledNetwork {
                 s.push_str(&format!("    - {d}\n"));
             }
         }
+        s.push_str(&format!(
+            "parallel schedule ({} compute units, {}/{} ops parallel):\n{}",
+            self.compute_units,
+            self.schedule.parallel_ops(),
+            self.schedule.ops.len(),
+            self.schedule.summary()
+        ));
         s
     }
 }
@@ -45,10 +62,13 @@ pub fn compile_network(
         return Err(format!("input program invalid:\n{}", msgs.join("\n")));
     }
     let result = compile(program, cfg, verify)?;
+    let schedule = crate::exec::analyze_program(&result.program, cfg.compute_units);
     Ok(CompiledNetwork {
         target: cfg.name.clone(),
         program: result.program,
         reports: result.reports,
+        schedule,
+        compute_units: cfg.compute_units,
     })
 }
 
@@ -78,7 +98,22 @@ mod tests {
                 .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
             assert_eq!(c.reports.len(), cfg.passes.len());
             assert!(c.summary().contains(&cfg.name));
+            assert_eq!(c.compute_units, cfg.compute_units);
+            assert!(!c.schedule.ops.is_empty());
+            assert!(c.summary().contains("parallel schedule"));
         }
+    }
+
+    #[test]
+    fn single_unit_targets_never_schedule_parallel_ops() {
+        // paper_fig4 models one ALU: whatever the analysis finds, the
+        // recorded schedule must stay serial.
+        let p = ops::fig4_conv_program();
+        let s = compile_network(&p, &targets::paper_fig4(), false).unwrap();
+        assert_eq!(s.schedule.parallel_ops(), 0, "{}", s.schedule.summary());
+        // Every top-level op got a scheduling decision.
+        let c = compile_network(&p, &targets::cpu_cache(), false).unwrap();
+        assert_eq!(c.schedule.ops.len(), c.program.ops().count());
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! consult the cache, compile, and deliver results over per-request
 //! channels. This mirrors the deployment shape of a compiler service
 //! (one service instance per fleet, compile results cached by content).
+//!
+//! Identical concurrent requests are **single-flighted**: the first
+//! request for a cache key compiles; requests for the same key that
+//! arrive while it is in flight park on the in-flight entry and are
+//! delivered (and counted as cache hits) when the compile completes.
+//! N concurrent submissions of one program therefore cost exactly one
+//! compile and report 1 miss + N−1 hits, deterministically — the
+//! concurrency suite (`rust/tests/service_concurrency.rs`) pins this.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,6 +41,25 @@ enum Msg {
     Shutdown,
 }
 
+type CompileOutcome = Result<Arc<CompiledNetwork>, String>;
+
+/// Cache + single-flight bookkeeping, behind one mutex (held only for
+/// map operations, never across a compile).
+#[derive(Default)]
+struct State {
+    cache: BTreeMap<u64, Arc<CompiledNetwork>>,
+    /// Keys currently compiling → reply channels parked on them.
+    inflight: BTreeMap<u64, Vec<Sender<CompileOutcome>>>,
+}
+
+/// What a worker should do with a popped request.
+enum Action {
+    Hit(Arc<CompiledNetwork>),
+    /// Parked on an in-flight compile; the compiling worker replies.
+    Parked,
+    Compile,
+}
+
 /// Multi-threaded compile service.
 pub struct CompileService {
     tx: Sender<Msg>,
@@ -45,13 +72,12 @@ impl CompileService {
     pub fn start(n_workers: usize) -> CompileService {
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
-        let cache: Arc<Mutex<BTreeMap<u64, Arc<CompiledNetwork>>>> =
-            Arc::new(Mutex::new(BTreeMap::new()));
+        let state: Arc<Mutex<State>> = Arc::new(Mutex::new(State::default()));
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::new();
         for _ in 0..n_workers.max(1) {
             let rx = Arc::clone(&rx);
-            let cache = Arc::clone(&cache);
+            let state = Arc::clone(&state);
             let metrics = Arc::clone(&metrics);
             workers.push(std::thread::spawn(move || loop {
                 let msg = {
@@ -62,24 +88,47 @@ impl CompileService {
                     Ok(Msg::Work(req)) => {
                         let t0 = Instant::now();
                         let key = cache_key(&req.program, &req.target);
-                        let cached = cache.lock().unwrap().get(&key).cloned();
-                        let result = match cached {
-                            Some(c) => {
-                                metrics.record_cache_hit();
-                                Ok(c)
+                        let action = {
+                            let mut st = state.lock().unwrap();
+                            if let Some(c) = st.cache.get(&key) {
+                                Action::Hit(Arc::clone(c))
+                            } else if let Some(waiters) = st.inflight.get_mut(&key) {
+                                waiters.push(req.reply.clone());
+                                Action::Parked
+                            } else {
+                                st.inflight.insert(key, Vec::new());
+                                Action::Compile
                             }
-                            None => match compile_network(&req.program, &req.target, req.verify)
-                            {
-                                Ok(c) => {
-                                    let arc = Arc::new(c);
-                                    cache.lock().unwrap().insert(key, Arc::clone(&arc));
-                                    Ok(arc)
-                                }
-                                Err(e) => Err(e),
-                            },
                         };
-                        metrics.record_done(t0.elapsed(), result.is_ok());
-                        let _ = req.reply.send(result);
+                        match action {
+                            Action::Hit(c) => {
+                                metrics.record_cache_hit();
+                                metrics.record_done(t0.elapsed(), true);
+                                let _ = req.reply.send(Ok(c));
+                            }
+                            Action::Parked => {}
+                            Action::Compile => {
+                                let result: CompileOutcome =
+                                    compile_network(&req.program, &req.target, req.verify)
+                                        .map(Arc::new);
+                                let waiters = {
+                                    let mut st = state.lock().unwrap();
+                                    if let Ok(arc) = &result {
+                                        st.cache.insert(key, Arc::clone(arc));
+                                    }
+                                    st.inflight.remove(&key).unwrap_or_default()
+                                };
+                                metrics.record_done(t0.elapsed(), result.is_ok());
+                                let _ = req.reply.send(result.clone());
+                                for w in waiters {
+                                    if result.is_ok() {
+                                        metrics.record_cache_hit();
+                                    }
+                                    metrics.record_done(t0.elapsed(), result.is_ok());
+                                    let _ = w.send(result.clone());
+                                }
+                            }
+                        }
                     }
                     Ok(Msg::Shutdown) | Err(_) => break,
                 }
@@ -164,6 +213,23 @@ mod tests {
             rx.recv().unwrap().unwrap();
         }
         assert_eq!(svc.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 4);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn identical_requests_are_single_flighted() {
+        // With one worker, queue the same program four times before any
+        // compile finishes: exactly one miss, three hits.
+        let svc = CompileService::start(1);
+        let p = ops::fig4_conv_program();
+        let cfg = targets::paper_fig4();
+        let rxs: Vec<_> = (0..4).map(|_| svc.submit(p.clone(), cfg.clone(), false)).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 3);
+        assert_eq!(svc.metrics.completed.load(Relaxed), 4);
         svc.shutdown();
     }
 

@@ -23,7 +23,13 @@ pub enum SearchSpace {
 }
 
 impl SearchSpace {
+    /// Tile-size candidates for an index of the given range, ascending.
+    /// A degenerate range of 0 yields no candidates for every strategy
+    /// (a tile size of 0 is never a valid split).
     pub fn candidates(self, range: u64) -> Vec<u64> {
+        if range == 0 {
+            return Vec::new();
+        }
         match self {
             SearchSpace::Exhaustive => (1..=range).collect(),
             SearchSpace::PowersOfTwo => {
@@ -136,6 +142,53 @@ mod tests {
         assert_eq!(SearchSpace::Exhaustive.candidates(4), vec![1, 2, 3, 4]);
         assert_eq!(SearchSpace::PowersOfTwo.candidates(12), vec![1, 2, 4, 8, 12]);
         assert_eq!(SearchSpace::Divisors.candidates(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn candidates_for_degenerate_range_zero_are_empty() {
+        // No strategy may ever propose a 0-sized tile.
+        for space in [SearchSpace::Exhaustive, SearchSpace::PowersOfTwo, SearchSpace::Divisors] {
+            assert!(space.candidates(0).is_empty(), "{space:?}");
+        }
+    }
+
+    #[test]
+    fn candidates_for_range_one_are_the_identity_tile() {
+        for space in [SearchSpace::Exhaustive, SearchSpace::PowersOfTwo, SearchSpace::Divisors] {
+            assert_eq!(space.candidates(1), vec![1], "{space:?}");
+        }
+    }
+
+    #[test]
+    fn pow2_candidates_on_non_pow2_ranges_include_the_full_range() {
+        // The full range rides along so "no tiling" stays reachable.
+        assert_eq!(SearchSpace::PowersOfTwo.candidates(7), vec![1, 2, 4, 7]);
+        assert_eq!(SearchSpace::PowersOfTwo.candidates(9), vec![1, 2, 4, 8, 9]);
+        // Exact powers of two are not duplicated.
+        assert_eq!(SearchSpace::PowersOfTwo.candidates(8), vec![1, 2, 4, 8]);
+        // Candidates are sorted ascending, unique, and end at the full
+        // range.
+        for r in 1..64u64 {
+            let c = SearchSpace::PowersOfTwo.candidates(r);
+            assert!(c.windows(2).all(|w| w[0] < w[1]), "range {r}: {c:?}");
+            assert_eq!(*c.last().unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn divisor_candidates_are_complete_and_valid() {
+        for r in 1..=96u64 {
+            let c = SearchSpace::Divisors.candidates(r);
+            // Every candidate divides; every divisor is present.
+            assert!(c.iter().all(|d| r % d == 0), "range {r}: {c:?}");
+            for d in 1..=r {
+                assert_eq!(c.contains(&d), r % d == 0, "range {r} divisor {d}");
+            }
+            // 1 and r always present, sorted ascending.
+            assert_eq!(c.first(), Some(&1));
+            assert_eq!(c.last(), Some(&r));
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 
     #[test]

@@ -4,7 +4,11 @@ use crate::ir::AggOp;
 
 /// The set of live buffers during execution. Indices into `data` are
 /// stable "buffer ids" handed out at allocation.
-#[derive(Debug, Default)]
+///
+/// `Clone` is the parallel executor's fork point: each worker runs on a
+/// private clone (see [`Buffers::merge_disjoint`]), so workers never
+/// synchronise on element writes.
+#[derive(Debug, Default, Clone)]
 pub struct Buffers {
     names: Vec<String>,
     data: Vec<Vec<f32>>,
@@ -112,6 +116,52 @@ impl Buffers {
         }
     }
 
+    /// True if any element of the buffer has been written.
+    pub fn written_any(&self, id: usize) -> bool {
+        self.written[id].iter().any(|&w| w)
+    }
+
+    /// Merge per-worker partitions back after a parallel block run.
+    ///
+    /// Each partition in `parts` is a clone of `self` taken before the
+    /// block ran; for every buffer id in `ids` — which must have been
+    /// entirely unwritten at fork time — the elements a worker wrote are
+    /// copied back. The parallelizability analysis guarantees workers
+    /// write disjoint element sets; this merge *verifies* that at
+    /// runtime and errors on any overlap (differential tests rely on
+    /// the check to catch analysis bugs instead of silently losing
+    /// writes). Returns the number of elements merged.
+    pub fn merge_disjoint(&mut self, parts: &[Buffers], ids: &[usize]) -> Result<usize, String> {
+        let mut merged = 0usize;
+        for &id in ids {
+            for part in parts {
+                if part.data[id].len() != self.data[id].len() {
+                    return Err(format!(
+                        "partition shape drift on {}: {} vs {}",
+                        self.names[id],
+                        part.data[id].len(),
+                        self.data[id].len()
+                    ));
+                }
+                for (e, &w) in part.written[id].iter().enumerate() {
+                    if !w {
+                        continue;
+                    }
+                    if self.written[id][e] {
+                        return Err(format!(
+                            "parallel workers both wrote {}[{e}] — disjointness analysis violated",
+                            self.names[id]
+                        ));
+                    }
+                    self.data[id][e] = part.data[id][e];
+                    self.written[id][e] = true;
+                    merged += 1;
+                }
+            }
+        }
+        Ok(merged)
+    }
+
     /// Take a snapshot of a buffer's contents.
     pub fn snapshot(&self, id: usize) -> Vec<f32> {
         self.data[id].clone()
@@ -179,6 +229,34 @@ mod tests {
         b.store(id, 0, 5.0, AggOp::Add, false).unwrap();
         assert_eq!(b.read(id, 0).unwrap(), 6.0);
         assert_eq!(b.read(id, 1).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn merge_disjoint_combines_worker_partitions() {
+        let mut master = Buffers::new();
+        let id = master.alloc("o", 4);
+        let mut w0 = master.clone();
+        let mut w1 = master.clone();
+        w0.store(id, 0, 1.0, AggOp::Assign, false).unwrap();
+        w0.store(id, 1, 2.0, AggOp::Assign, false).unwrap();
+        w1.store(id, 2, 3.0, AggOp::Assign, false).unwrap();
+        w1.store(id, 3, 4.0, AggOp::Assign, false).unwrap();
+        let n = master.merge_disjoint(&[w0, w1], &[id]).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(master.snapshot(id), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(master.written_any(id));
+    }
+
+    #[test]
+    fn merge_disjoint_rejects_overlapping_writes() {
+        let mut master = Buffers::new();
+        let id = master.alloc("o", 2);
+        let mut w0 = master.clone();
+        let mut w1 = master.clone();
+        w0.store(id, 0, 1.0, AggOp::Assign, false).unwrap();
+        w1.store(id, 0, 9.0, AggOp::Assign, false).unwrap();
+        let e = master.merge_disjoint(&[w0, w1], &[id]).unwrap_err();
+        assert!(e.contains("disjointness"), "{e}");
     }
 
     #[test]

@@ -15,13 +15,26 @@ pub struct ExecOptions {
     /// inout-style updates some passes produce; default off so Def-2
     /// violations surface as errors).
     pub relaxed_assign: bool,
-    /// Upper bound on executed leaf iterations (runaway guard).
+    /// Upper bound on executed leaf iterations (runaway guard). On the
+    /// parallel path the budget applies per worker.
     pub max_iterations: u64,
+    /// Compute units to execute across (see `exec::parallel`). `0` or
+    /// `1` selects serial execution — always available as the fallback,
+    /// so any divergence can be bisected by re-running serially.
+    pub workers: usize,
+}
+
+impl ExecOptions {
+    /// Serial defaults with a worker-pool size (typically a target's
+    /// `MachineConfig::compute_units`).
+    pub fn with_workers(workers: usize) -> ExecOptions {
+        ExecOptions { workers, ..ExecOptions::default() }
+    }
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { relaxed_assign: false, max_iterations: 200_000_000 }
+        ExecOptions { relaxed_assign: false, max_iterations: 200_000_000, workers: 1 }
     }
 }
 
@@ -61,14 +74,29 @@ pub fn run_program(
     program: &Program,
     inputs: &BTreeMap<String, Vec<f32>>,
 ) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
+    run_program_with(program, inputs, &ExecOptions::default())
+}
+
+/// Run with explicit options, choosing the execution engine:
+/// `Special`-bearing programs take the naive interpreter (the only path
+/// that executes specials); `opts.workers > 1` takes the parallel
+/// engine (`exec::parallel`); everything else takes the serial
+/// plan-compiled path.
+pub fn run_program_with(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
     let mut has_special = false;
     program.main.walk(&mut |b| {
         has_special |= b.stmts.iter().any(|s| matches!(s, Statement::Special(_)));
     });
     if has_special {
-        run_program_sink(program, inputs, &ExecOptions::default(), &mut NullSink)
+        run_program_sink(program, inputs, opts, &mut NullSink)
+    } else if opts.workers > 1 {
+        super::parallel::run_program_parallel(program, inputs, opts).map(|(out, _)| out)
     } else {
-        super::plan::run_program_planned(program, inputs, &ExecOptions::default(), &mut NullSink)
+        super::plan::run_program_planned(program, inputs, opts, &mut NullSink)
     }
 }
 
@@ -533,6 +561,45 @@ mod tests {
         let p = conv_program();
         let e = run_program(&p, &BTreeMap::new()).unwrap_err();
         assert!(e.message.contains("missing input"));
+    }
+
+    #[test]
+    fn max_iterations_triggers_cleanly_on_naive_path() {
+        // The guard must surface as a clean error (not a hang or panic)
+        // and must name the budget, on every execution engine.
+        let p = conv_program();
+        let inputs = crate::passes::equiv::gen_inputs(&p, 1);
+        let opts = ExecOptions { max_iterations: 100, ..ExecOptions::default() };
+        let e = run_program_sink(&p, &inputs, &opts, &mut NullSink).unwrap_err();
+        assert!(e.message.contains("iteration budget"), "{e}");
+    }
+
+    #[test]
+    fn max_iterations_triggers_cleanly_on_planned_path() {
+        let p = conv_program();
+        let inputs = crate::passes::equiv::gen_inputs(&p, 1);
+        let opts = ExecOptions { max_iterations: 100, ..ExecOptions::default() };
+        let e = super::super::plan::run_program_planned(&p, &inputs, &opts, &mut NullSink)
+            .unwrap_err();
+        assert!(e.message.contains("iteration budget"), "{e}");
+    }
+
+    #[test]
+    fn max_iterations_triggers_cleanly_on_parallel_path() {
+        let p = conv_program();
+        let inputs = crate::passes::equiv::gen_inputs(&p, 1);
+        let opts =
+            ExecOptions { max_iterations: 100, workers: 4, ..ExecOptions::default() };
+        let e = run_program_with(&p, &inputs, &opts).unwrap_err();
+        assert!(e.message.contains("iteration budget"), "{e}");
+    }
+
+    #[test]
+    fn generous_budget_is_not_triggered() {
+        let p = conv_program();
+        let inputs = crate::passes::equiv::gen_inputs(&p, 1);
+        let opts = ExecOptions { max_iterations: 10_000_000, ..ExecOptions::default() };
+        assert!(run_program_sink(&p, &inputs, &opts, &mut NullSink).is_ok());
     }
 
     #[test]

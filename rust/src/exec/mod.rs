@@ -19,13 +19,44 @@
 //! It also doubles as the access-trace generator: an [`Sink`]
 //! observes every element-granularity load/store, feeding the cache
 //! simulator (`sim`) and the footprint renderings of Figures 2–4.
+//!
+//! # Parallel execution
+//!
+//! Three engines share these semantics:
+//!
+//! | engine | module | use |
+//! |--------|--------|-----|
+//! | naive interpreter | [`interp`] | ground truth; only path executing `Special` statements; access tracing |
+//! | serial plan | [`plan`] | slot-resolved hot path; default |
+//! | parallel plan | [`parallel`] | plan execution sliced across compute units |
+//!
+//! The parallel engine implements the paper's "multiple compute units"
+//! claim: a per-block disjointness analysis (write/write and read/write
+//! overlap across one chosen index dimension, via `poly::overlap`)
+//! selects a parallel-safe outer dimension, whose range is chunked
+//! across a worker pool sized by [`ExecOptions::workers`] (typically
+//! `MachineConfig::compute_units`). Workers run on private buffer
+//! partitions — no locks — and disjoint writes are merged (and
+//! re-verified) afterwards. Results are bit-exact with serial
+//! execution, and serial execution remains a runtime toggle
+//! (`workers: 1`) so any discrepancy can be bisected; the differential
+//! harness in `rust/tests/differential.rs` pins naive ≡ serial ≡
+//! parallel on randomized networks.
+//!
+//! [`run_program_with`] dispatches between the engines from
+//! [`ExecOptions`]; [`run_program`] is the serial convenience wrapper.
 
 pub mod buffer;
 pub mod interp;
+pub mod parallel;
 pub mod plan;
 pub mod trace;
 
 pub use buffer::Buffers;
-pub use interp::{run_program, run_program_sink, ExecError, ExecOptions};
+pub use interp::{run_program, run_program_sink, run_program_with, ExecError, ExecOptions};
+pub use parallel::{
+    analyze_program, best_parallel_dim, parallel_dims, run_program_parallel, OpParallelism,
+    ParallelReport,
+};
 pub use plan::run_program_planned;
 pub use trace::{AccessEvent, NullSink, RecordingSink, Sink};

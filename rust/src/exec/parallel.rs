@@ -1,0 +1,584 @@
+//! Parallel plan execution across compute units.
+//!
+//! The nested polyhedral model's core promise (§1, §2 of the paper) is
+//! that a block's iterations are "highly parallelizable … with limited
+//! dependencies": Definition 2 already forbids one iteration from
+//! reading what another writes. This module turns that property into
+//! wall-clock parallelism:
+//!
+//! 1. **Analysis** ([`parallel_dims`]): an outer ranged index `d` of a
+//!    block is *parallel-safe* when every write refinement touches
+//!    disjoint element sets from distinct values of `d` — decided by
+//!    [`crate::poly::overlap::cross_dim_overlap`] over the block's
+//!    iteration space extended with view-footprint dimensions (the same
+//!    construction the Def-2 validator uses). Reduction indexes fail
+//!    the test (two `c` values aggregate into one `O[x]`), output
+//!    indexes pass.
+//! 2. **Partitioned execution** ([`run_program_parallel`]): the chosen
+//!    dimension's range is split into contiguous chunks, one per worker
+//!    (worker count from [`crate::exec::ExecOptions::workers`],
+//!    typically a target's `MachineConfig::compute_units`). Each worker
+//!    runs the plan-compiled chunk on a **private clone** of the buffer
+//!    set — no locks, no atomics — and the master then merges the
+//!    written elements back ([`crate::exec::Buffers::merge_disjoint`]),
+//!    verifying disjointness at runtime.
+//!
+//! Results are **bit-exact** with serial execution: all writes to one
+//! element share a single value of the parallel dimension (that is what
+//! the analysis certifies), and within one chunk the lexicographic
+//! iteration order — hence the per-element aggregation order — is the
+//! serial order. The differential harness (`rust/tests/differential.rs`)
+//! asserts naive ≡ serial plan ≡ parallel plan on randomized networks.
+//!
+//! Ops that cannot be proven safe (or whose write target already holds
+//! data, where merging would be ambiguous) fall back to the serial
+//! planned path, so parallelism is always a pure optimization; the
+//! [`ParallelReport`] records the per-op decision for inspection.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::ir::validate::extend_with_footprint;
+use crate::ir::{Block, BufKind, Program, Statement};
+use crate::poly::{overlap, Affine, Polyhedron};
+
+use super::buffer::Buffers;
+use super::interp::{ExecError, ExecOptions};
+use super::plan;
+
+/// Per-op scheduling decision.
+#[derive(Debug, Clone)]
+pub struct OpParallelism {
+    /// Op block name.
+    pub op: String,
+    /// Parallel dimension chosen (`None` = serial).
+    pub dim: Option<String>,
+    /// Range of the chosen dimension (0 when serial).
+    pub range: u64,
+    /// Worker chunks actually used (1 when serial).
+    pub workers: usize,
+    /// Human-readable decision rationale.
+    pub reason: String,
+}
+
+/// The parallel schedule of a whole program run (or, from
+/// [`analyze_program`], of a compiled network).
+#[derive(Debug, Clone, Default)]
+pub struct ParallelReport {
+    pub ops: Vec<OpParallelism>,
+}
+
+impl ParallelReport {
+    /// Number of ops that executed (or would execute) in parallel.
+    pub fn parallel_ops(&self) -> usize {
+        self.ops.iter().filter(|o| o.dim.is_some()).count()
+    }
+
+    /// One line per op.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for o in &self.ops {
+            match &o.dim {
+                Some(d) => s.push_str(&format!(
+                    "  op {:<24} parallel over {d:<6} (range {}, {} workers)\n",
+                    o.op, o.range, o.workers
+                )),
+                None => s.push_str(&format!("  op {:<24} serial: {}\n", o.op, o.reason)),
+            }
+        }
+        s
+    }
+}
+
+/// O(1) algebraic certification that two refinements of the same
+/// parent buffer touch disjoint element sets from distinct values of
+/// `d`: some parent dimension `k` where both accesses are the *same*
+/// single-term polynomial `c·d` (+ constant) with `|c|` at least both
+/// view extents on `k`. Distinct `d` values then step the view origin
+/// past both footprints along `k`, so the touched boxes cannot meet.
+/// Covers the canonical flat form (scalar views, unit coefficient) and
+/// tiled outer blocks (`c` = tile size = view extent) without touching
+/// the iteration space; anything else falls back to the exact
+/// enumeration / Fourier–Motzkin query.
+fn algebraic_cross_disjoint(
+    w: &crate::ir::Refinement,
+    r: &crate::ir::Refinement,
+    d: &str,
+) -> bool {
+    let strides = w.ttype.strides();
+    for (k, (fa, ga)) in w.access.iter().zip(&r.access).enumerate() {
+        if strides[k] == 0 || fa != ga {
+            continue;
+        }
+        let mut t = fa.terms();
+        let (Some((v, c)), None) = (t.next(), t.next()) else { continue };
+        if v != d {
+            continue;
+        }
+        let wsize = w.ttype.dims[k].size;
+        let rsize = r.ttype.dims.get(k).map_or(u64::MAX, |dim| dim.size);
+        if c.unsigned_abs() >= wsize.max(rsize) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is dimension `d` of block `b` parallel-safe?
+///
+/// `d` is safe when, for every write refinement `w` of the block
+/// (block-local temps excluded — they are iteration-private):
+///
+/// * no two iterations with distinct `d` write the same element of
+///   `w`'s parent buffer (write/write disjointness — this is what keeps
+///   per-element aggregation inside one chunk), and
+/// * no iteration reads, through any refinement of the same parent
+///   buffer, an element that an iteration with a different `d` writes
+///   (read/write independence — this is what makes privatized buffer
+///   clones observationally equivalent to shared memory).
+///
+/// Both queries cover the *entire footprint* of each view, so the
+/// verdict holds for every nested block refining those views too.
+fn dim_is_safe(b: &Block, space: &Polyhedron, d: &str) -> bool {
+    for (wi, w) in b.refs.iter().enumerate() {
+        if !w.dir.is_write() {
+            continue;
+        }
+        let strides = w.ttype.strides();
+        if !algebraic_cross_disjoint(w, w, d) {
+            let (ws, wf) = extend_with_footprint(space, w, &format!("w{wi}"));
+            if overlap::cross_dim_overlap(&ws, &wf, &wf, &strides, d).may_conflict() {
+                return false;
+            }
+        }
+        for (ri, r) in b.refs.iter().enumerate() {
+            if ri == wi || r.from != w.from || !(r.dir.is_read() || r.dir.is_write()) {
+                continue;
+            }
+            if algebraic_cross_disjoint(w, r, d) {
+                continue;
+            }
+            // Combined space carrying both footprints.
+            let (mut cs, wf2) = extend_with_footprint(space, w, &format!("w{wi}"));
+            let (rs, rf) = extend_with_footprint(space, r, &format!("r{ri}"));
+            for fp in rs.dims.iter().skip(space.dims.len()) {
+                cs.dims.push(fp.clone());
+            }
+            if overlap::cross_dim_overlap(&cs, &wf2, &rf, &strides, d).may_conflict() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// All parallel-safe ranged dimensions of a block, with their ranges.
+/// (Exhaustive; use [`best_parallel_dim`] on hot paths — it probes
+/// candidates largest-range-first and stops at the first safe one.)
+pub fn parallel_dims(b: &Block) -> Vec<(String, u64)> {
+    let space = b.iteration_space();
+    b.idxs
+        .iter()
+        .filter(|i| i.affine.is_none() && i.range >= 2)
+        .filter(|i| dim_is_safe(b, &space, &i.name))
+        .map(|i| (i.name.clone(), i.range))
+        .collect()
+}
+
+/// The widest provably-safe parallel dimension of a block, if any.
+pub fn best_parallel_dim(b: &Block) -> Option<(String, u64)> {
+    let mut cands: Vec<(String, u64)> = b
+        .idxs
+        .iter()
+        .filter(|i| i.affine.is_none() && i.range >= 2)
+        .map(|i| (i.name.clone(), i.range))
+        .collect();
+    // Largest range first (stable: declaration order breaks ties).
+    cands.sort_by(|a, b| b.1.cmp(&a.1));
+    let space = b.iteration_space();
+    cands.into_iter().find(|(d, _)| dim_is_safe(b, &space, d))
+}
+
+/// Static schedule for a program: the decision [`run_program_parallel`]
+/// would make for each top-level op with `workers` compute units
+/// available (minus the runtime freshness gate, which depends on buffer
+/// state). Used by the coordinator to record a compiled network's
+/// parallel schedule.
+pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
+    let mut report = ParallelReport::default();
+    for st in &p.main.stmts {
+        let Statement::Block(b) = st else { continue };
+        let best = best_parallel_dim(b);
+        report.ops.push(match best {
+            Some((dim, range)) if workers >= 2 => OpParallelism {
+                op: b.name.clone(),
+                workers: workers.min(range as usize),
+                reason: format!("disjoint writes across {dim}"),
+                dim: Some(dim),
+                range,
+            },
+            Some((dim, range)) => OpParallelism {
+                op: b.name.clone(),
+                dim: None,
+                range,
+                workers: 1,
+                reason: format!("single compute unit (dim {dim} is safe)"),
+            },
+            None => OpParallelism {
+                op: b.name.clone(),
+                dim: None,
+                range: 0,
+                workers: 1,
+                reason: "no provably disjoint outer dimension".into(),
+            },
+        });
+    }
+    report
+}
+
+/// Split `[0, range)` into `n` contiguous chunks as `(lo, len)` pairs.
+fn split_range(range: u64, n: usize) -> Vec<(u64, u64)> {
+    let n = (n as u64).clamp(1, range.max(1));
+    let base = range / n;
+    let rem = range % n;
+    let mut out = Vec::with_capacity(n as usize);
+    let mut lo = 0u64;
+    for i in 0..n {
+        let len = base + u64::from(i < rem);
+        out.push((lo, len));
+        lo += len;
+    }
+    out
+}
+
+/// Restrict a block to `dim ∈ [lo, lo+len)` by substituting
+/// `dim ↦ dim + lo` everywhere the index is visible (constraints,
+/// refinement accesses, children's passed-index affines) and shrinking
+/// the range. The restricted block iterates its sub-box in the same
+/// lexicographic order as the original, which is what keeps parallel
+/// aggregation bit-exact.
+fn chunk_block(b: &Block, dim: &str, lo: i64, len: u64) -> Block {
+    let mut nb = b.clone();
+    let mut bind: BTreeMap<String, Affine> = BTreeMap::new();
+    bind.insert(dim.to_string(), Affine::from_terms(&[(dim, 1)], lo));
+    for idx in &mut nb.idxs {
+        if idx.name == dim {
+            idx.range = len;
+        }
+    }
+    for c in &mut nb.constraints {
+        *c = c.substitute(&bind);
+    }
+    for r in &mut nb.refs {
+        for a in &mut r.access {
+            *a = a.substitute(&bind);
+        }
+    }
+    for st in &mut nb.stmts {
+        if let Statement::Block(cb) = st {
+            for idx in &mut cb.idxs {
+                if let Some(a) = &mut idx.affine {
+                    *a = a.substitute(&bind);
+                }
+            }
+        }
+    }
+    nb
+}
+
+/// Why an op must run serially, or the parallel plan for it.
+enum Decision {
+    Serial(String),
+    Parallel { dim: String, range: u64, write_ids: Vec<usize> },
+}
+
+fn decide(
+    b: &Block,
+    scope: &plan::RootScope,
+    master: &Buffers,
+    workers: usize,
+) -> Decision {
+    if workers < 2 {
+        return Decision::Serial("single worker".into());
+    }
+    let mut write_ids: BTreeSet<usize> = BTreeSet::new();
+    for r in &b.refs {
+        if !r.dir.is_write() {
+            continue;
+        }
+        let Some(id) = scope.buffer_of(&r.from) else {
+            return Decision::Serial(format!("unresolved write target {:?}", r.from));
+        };
+        // Merging a partition is only unambiguous when the op's write
+        // targets start fresh (every written element is this op's own
+        // write). All builder/lowerer ops satisfy this; anything else
+        // runs serially.
+        if master.written_any(id) {
+            return Decision::Serial(format!("write target {:?} holds earlier data", r.from));
+        }
+        write_ids.insert(id);
+    }
+    if write_ids.is_empty() {
+        return Decision::Serial("no write refinements".into());
+    }
+    match best_parallel_dim(b) {
+        Some((dim, range)) => Decision::Parallel {
+            dim,
+            range,
+            write_ids: write_ids.into_iter().collect(),
+        },
+        None => Decision::Serial("no provably disjoint outer dimension".into()),
+    }
+}
+
+/// Execute one top-level op block, in parallel when provably safe.
+/// `executed` is the cumulative iteration count before this op; the
+/// count after it is returned alongside the scheduling decision (for a
+/// parallel op, the busiest worker's total carries forward).
+fn run_op(
+    master: &mut Buffers,
+    opts: &ExecOptions,
+    b: &Block,
+    scope: &plan::RootScope,
+    workers: usize,
+    executed: u64,
+) -> Result<(OpParallelism, u64), ExecError> {
+    let (dim, range, write_ids) = match decide(b, scope, master, workers) {
+        Decision::Serial(reason) => {
+            let executed = plan::exec_block_planned(master, opts, b, scope, executed)?;
+            return Ok((
+                OpParallelism {
+                    op: b.name.clone(),
+                    dim: None,
+                    range: 0,
+                    workers: 1,
+                    reason,
+                },
+                executed,
+            ));
+        }
+        Decision::Parallel { dim, range, write_ids } => (dim, range, write_ids),
+    };
+
+    let chunks = split_range(range, workers);
+    let blocks: Vec<Block> = chunks
+        .iter()
+        .map(|&(lo, len)| chunk_block(b, &dim, lo as i64, len))
+        .collect();
+    // Fork: one private buffer clone per worker (lock-free by
+    // construction — workers never share mutable state). This is
+    // O(total buffer state) per worker; copy-on-write sharing of the
+    // read-only buffers is the known next optimization.
+    let mut locals: Vec<Buffers> = Vec::with_capacity(blocks.len());
+    for _ in &blocks {
+        locals.push(master.clone());
+    }
+    let results: Vec<Result<(Buffers, u64), ExecError>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(blocks.len());
+        for (blk, mut local) in blocks.iter().zip(locals.drain(..)) {
+            handles.push(s.spawn(move || -> Result<(Buffers, u64), ExecError> {
+                let done = plan::exec_block_planned(&mut local, opts, blk, scope, executed)?;
+                Ok((local, done))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    Err(ExecError {
+                        block: b.name.clone(),
+                        message: "parallel worker panicked".into(),
+                    })
+                })
+            })
+            .collect()
+    });
+    let mut parts = Vec::with_capacity(results.len());
+    let mut executed_after = executed;
+    for r in results {
+        let (part, done) = r?;
+        executed_after = executed_after.max(done);
+        parts.push(part);
+    }
+    master
+        .merge_disjoint(&parts, &write_ids)
+        .map_err(|m| ExecError { block: b.name.clone(), message: m })?;
+    Ok((
+        OpParallelism {
+            op: b.name.clone(),
+            reason: format!("disjoint writes across {dim}"),
+            workers: chunks.len(),
+            dim: Some(dim),
+            range,
+        },
+        executed_after,
+    ))
+}
+
+/// Run a program with per-op parallel execution across
+/// `opts.workers` compute units. Semantics are identical to the serial
+/// planned path ([`super::plan::run_program_planned`]) — bit-exactly,
+/// see the module docs — with unsafe or stateful ops falling back to
+/// serial execution automatically. Returns the outputs plus the per-op
+/// schedule that was actually used.
+///
+/// The `opts.max_iterations` runaway guard is cumulative across ops,
+/// like the serial planned path. Within one parallel op each worker
+/// counts its own iterations on top of the program total so far (an
+/// aggregate cross-thread counter would need synchronisation on the
+/// hot path), and the busiest worker's total carries forward — so the
+/// program-wide bound is at most `workers × max_iterations`, and a
+/// program that trips the serial budget also trips the parallel one
+/// within a factor of `workers`.
+pub fn run_program_parallel(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let workers = opts.workers.max(1);
+    let mut bufs = plan::alloc_program_buffers(program, inputs)?;
+    let scope = plan::build_root_scope(program, &mut bufs)?;
+    let mut report = ParallelReport::default();
+    let mut executed = 0u64;
+    for st in &program.main.stmts {
+        let Statement::Block(b) = st else {
+            return Err(err("main-level statements must be blocks".into()));
+        };
+        let (op, done) = run_op(&mut bufs, opts, b, &scope, workers, executed)?;
+        executed = done;
+        report.ops.push(op);
+    }
+    let mut out = BTreeMap::new();
+    for bdef in program.buffers_of(BufKind::Output) {
+        let id = bufs.id_of(&bdef.name).unwrap();
+        out.insert(bdef.name.clone(), bufs.snapshot(id));
+    }
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::passes::equiv::gen_inputs;
+
+    fn parallel_opts(workers: usize) -> ExecOptions {
+        ExecOptions { workers, ..ExecOptions::default() }
+    }
+
+    fn assert_bit_exact(p: &Program, seed: u64, workers: usize) -> ParallelReport {
+        let inputs = gen_inputs(p, seed);
+        let serial = super::super::plan::run_program_planned(
+            p,
+            &inputs,
+            &ExecOptions::default(),
+            &mut crate::exec::NullSink,
+        )
+        .unwrap();
+        let (par, report) = run_program_parallel(p, &inputs, &parallel_opts(workers)).unwrap();
+        assert_eq!(serial, par, "parallel output must be bit-exact");
+        report
+    }
+
+    #[test]
+    fn conv_parallelizes_over_a_spatial_dim() {
+        let p = ops::fig4_conv_program();
+        let report = assert_bit_exact(&p, 11, 4);
+        assert_eq!(report.parallel_ops(), 1, "{}", report.summary());
+        let op = &report.ops[0];
+        // Largest safe range wins: y (16, declared before k). Reduction
+        // indexes i/j/c must never be chosen.
+        assert_eq!(op.dim.as_deref(), Some("y"));
+        assert_eq!(op.range, 16);
+        assert_eq!(op.workers, 4);
+    }
+
+    #[test]
+    fn reduction_dims_are_rejected() {
+        let b = crate::ir::builder::fig5_conv_block();
+        let safe: Vec<String> = parallel_dims(&b).into_iter().map(|(n, _)| n).collect();
+        assert!(safe.contains(&"x".to_string()));
+        assert!(safe.contains(&"y".to_string()));
+        assert!(safe.contains(&"k".to_string()));
+        assert!(!safe.contains(&"i".to_string()));
+        assert!(!safe.contains(&"j".to_string()));
+        assert!(!safe.contains(&"c".to_string()));
+    }
+
+    #[test]
+    fn cnn_runs_parallel_and_matches_serial() {
+        let p = ops::cnn_program();
+        let report = assert_bit_exact(&p, 12, 3);
+        assert!(report.parallel_ops() >= 4, "{}", report.summary());
+    }
+
+    #[test]
+    fn softmax_reductions_fall_back_to_serial() {
+        let mut nb = crate::graph::NetworkBuilder::new("sm", crate::ir::DType::F32);
+        let x = nb.input("X", &[32]);
+        let o = nb.softmax(x);
+        let p = nb.finish(o);
+        let report = assert_bit_exact(&p, 13, 4);
+        // max-reduce and sum-reduce write one element from every k.
+        let serial_ops: Vec<&str> = report
+            .ops
+            .iter()
+            .filter(|o| o.dim.is_none())
+            .map(|o| o.op.as_str())
+            .collect();
+        assert!(serial_ops.iter().any(|n| n.starts_with("smax_max")), "{serial_ops:?}");
+        assert!(serial_ops.iter().any(|n| n.starts_with("smax_sum")), "{serial_ops:?}");
+        // The elementwise stages do parallelize.
+        assert!(report.parallel_ops() >= 2, "{}", report.summary());
+    }
+
+    #[test]
+    fn more_workers_than_range_clamps() {
+        assert_eq!(split_range(3, 8), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(split_range(10, 3), vec![(0, 4), (4, 3), (7, 3)]);
+        assert_eq!(split_range(8, 1), vec![(0, 8)]);
+        let p = ops::matmul_program(3, 4, 5);
+        assert_bit_exact(&p, 14, 16);
+    }
+
+    #[test]
+    fn iteration_budget_is_cumulative_across_ops() {
+        // tiny_mlp(4,8,3) executes 32 + 8 + 24 = 64 odometer steps over
+        // three ops. A budget of 50 covers any single op but not the
+        // program, so the parallel engine must trip it exactly like the
+        // serial planned path would (no per-op counter reset).
+        let p = ops::tiny_mlp_program(4, 8, 3);
+        let inputs = gen_inputs(&p, 21);
+        let opts = ExecOptions { max_iterations: 50, workers: 1, ..ExecOptions::default() };
+        let e = run_program_parallel(&p, &inputs, &opts).unwrap_err();
+        assert!(e.message.contains("iteration budget"), "{e}");
+    }
+
+    #[test]
+    fn single_worker_runs_everything_serially() {
+        let p = ops::fig4_conv_program();
+        let inputs = gen_inputs(&p, 15);
+        let (_, report) = run_program_parallel(&p, &inputs, &parallel_opts(1)).unwrap();
+        assert_eq!(report.parallel_ops(), 0);
+    }
+
+    #[test]
+    fn compiled_networks_execute_in_parallel_too() {
+        // After the cpu_cache pipeline the op blocks are tiled/nested;
+        // the analysis must still be sound (parallel where provable,
+        // serial otherwise) and outputs must match the serial run.
+        let cfg = crate::hw::targets::cpu_cache();
+        let c = crate::coordinator::compile_network(&ops::cnn_program(), &cfg, false).unwrap();
+        assert_bit_exact(&c.program, 16, 4);
+    }
+
+    #[test]
+    fn chunk_block_partitions_iteration_space() {
+        let b = crate::ir::builder::fig5_conv_block();
+        let total: u64 = split_range(12, 3)
+            .into_iter()
+            .map(|(lo, len)| chunk_block(&b, "x", lo as i64, len).iterations())
+            .sum();
+        assert_eq!(total, b.iterations());
+    }
+}

@@ -207,30 +207,34 @@ impl Plan {
 /// Runtime view (same meaning as interp::View, duplicated to keep the
 /// two paths independent).
 #[derive(Debug, Clone)]
-struct View {
+pub(crate) struct View {
     buf: usize,
     offset: i64,
     agg: AggOp,
 }
 
-struct PlanExec<'a, S: Sink> {
-    bufs: &'a mut Buffers,
-    opts: &'a ExecOptions,
-    sink: &'a mut S,
-    executed: u64,
-    /// Scratch pool keyed by (plan identity, ref slot).
-    scratch: BTreeMap<(usize, usize), usize>,
+/// The resolved root scope of a program: one view per `main` refinement,
+/// in declaration order. Shared between the serial planned path and the
+/// parallel executor (`exec::parallel`).
+#[derive(Debug, Clone)]
+pub(crate) struct RootScope {
+    pub(crate) views: Vec<View>,
+    pub(crate) strides: Vec<Vec<i64>>,
+    pub(crate) names: Vec<String>,
 }
 
-/// Run a program through plan compilation. Drop-in equivalent of
-/// `interp::run_program_sink` for programs whose main-level statements
-/// are blocks.
-pub fn run_program_planned<S: Sink>(
+impl RootScope {
+    /// Buffer id behind a root-scope name (`main` refinement `into`).
+    pub(crate) fn buffer_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name).map(|i| self.views[i].buf)
+    }
+}
+
+/// Allocate a program's buffers, filling inputs/weights from `inputs`.
+pub(crate) fn alloc_program_buffers(
     program: &Program,
     inputs: &BTreeMap<String, Vec<f32>>,
-    opts: &ExecOptions,
-    sink: &mut S,
-) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
+) -> Result<Buffers, ExecError> {
     let err = |m: String| ExecError { block: "main".into(), message: m };
     let mut bufs = Buffers::new();
     for b in &program.buffers {
@@ -254,9 +258,17 @@ pub fn run_program_planned<S: Sink>(
             }
         }
     }
-    // Root scope.
-    let mut root_views: Vec<View> = Vec::new();
-    let mut root_names: Vec<String> = Vec::new();
+    Ok(bufs)
+}
+
+/// Resolve `main`'s refinements into a [`RootScope`] over `bufs`.
+pub(crate) fn build_root_scope(
+    program: &Program,
+    bufs: &mut Buffers,
+) -> Result<RootScope, ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let mut views: Vec<View> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
     for r in &program.main.refs {
         let (buf, base) = if r.dir == RefDir::Temp {
             match bufs.id_of(&r.into) {
@@ -275,11 +287,62 @@ pub fn run_program_planned<S: Sink>(
                 .sum();
             (id, base)
         };
-        root_views.push(View { buf, offset: base, agg: r.agg });
-        root_names.push(r.into.clone());
+        views.push(View { buf, offset: base, agg: r.agg });
+        names.push(r.into.clone());
     }
-    let root_strides: Vec<Vec<i64>> =
-        program.main.refs.iter().map(|r| r.ttype.strides()).collect();
+    let strides: Vec<Vec<i64>> = program.main.refs.iter().map(|r| r.ttype.strides()).collect();
+    Ok(RootScope { views, strides, names })
+}
+
+/// Compile and execute one top-level op block against the root scope.
+/// This is the unit of work the parallel executor distributes: a worker
+/// calls it on a range-restricted clone of the block over its private
+/// buffer partition. `executed_base` seeds the iteration counter so the
+/// `max_iterations` budget stays cumulative across ops (matching
+/// [`run_program_planned`], whose counter spans the whole program);
+/// returns the counter after this block.
+pub(crate) fn exec_block_planned(
+    bufs: &mut Buffers,
+    opts: &ExecOptions,
+    block: &Block,
+    scope: &RootScope,
+    executed_base: u64,
+) -> Result<u64, ExecError> {
+    let plan = Plan::build(block, &scope.names, &[])
+        .map_err(|m| ExecError { block: block.name.clone(), message: m })?;
+    let mut sink = super::trace::NullSink;
+    let mut exec = PlanExec {
+        bufs,
+        opts,
+        sink: &mut sink,
+        executed: executed_base,
+        scratch: BTreeMap::new(),
+    };
+    exec.run(&plan, &scope.views, &scope.strides, &[])?;
+    Ok(exec.executed)
+}
+
+struct PlanExec<'a, S: Sink> {
+    bufs: &'a mut Buffers,
+    opts: &'a ExecOptions,
+    sink: &'a mut S,
+    executed: u64,
+    /// Scratch pool keyed by (plan identity, ref slot).
+    scratch: BTreeMap<(usize, usize), usize>,
+}
+
+/// Run a program through plan compilation. Drop-in equivalent of
+/// `interp::run_program_sink` for programs whose main-level statements
+/// are blocks.
+pub fn run_program_planned<S: Sink>(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+    sink: &mut S,
+) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let mut bufs = alloc_program_buffers(program, inputs)?;
+    let scope = build_root_scope(program, &mut bufs)?;
 
     let mut exec = PlanExec {
         bufs: &mut bufs,
@@ -293,9 +356,9 @@ pub fn run_program_planned<S: Sink>(
             return Err(err("main-level statements must be blocks".into()));
         };
         exec.sink.on_op_boundary(&b.name);
-        let plan = Plan::build(b, &root_names, &[])
+        let plan = Plan::build(b, &scope.names, &[])
             .map_err(|m| ExecError { block: b.name.clone(), message: m })?;
-        exec.run(&plan, &root_views, &root_strides, &[])?;
+        exec.run(&plan, &scope.views, &scope.strides, &[])?;
     }
     let mut out = BTreeMap::new();
     for b in program.buffers_of(BufKind::Output) {

@@ -317,6 +317,47 @@ function cnn(I[12, 16, 8], $F[3, 3, 16, 8]) -> (R) {
     }
 
     #[test]
+    fn negative_coefficient_linearizing_access_lowers() {
+        // The flatten-style gather `F2[n] = assign(R[n - 16*a - 4*b, a, b])`
+        // names the source coordinate through a negative-coefficient
+        // affine; range inference must solve the in-bounds system, not
+        // just read coefficients off the box:
+        //   * `a`'s range comes from `n <= 63` pushed through
+        //     `n - 16a - 4b >= 0` (a <= 3), not from R's dim-1 extent;
+        //   * the dim-0 access can escape within the box, so halo
+        //     constraints must be emitted.
+        let src = r#"
+function flat(R[4, 4, 4]) -> (F2) {
+  F2[n : 64] = assign(R[n - 16*a - 4*b, a, b]);
+}
+"#;
+        let f = parse_function(src).unwrap();
+        let p = lower_function(&f).unwrap();
+        let b = p.main.child_blocks().next().unwrap();
+        let ranges: BTreeMap<&str, u64> =
+            b.idxs.iter().map(|i| (i.name.as_str(), i.range)).collect();
+        assert_eq!(ranges["n"], 64);
+        assert_eq!(ranges["a"], 4);
+        assert_eq!(ranges["b"], 4);
+        assert_eq!(b.constraints.len(), 2, "{:?}", b.constraints);
+        let v = crate::ir::validate::validate_program(&p);
+        assert!(crate::ir::validate::is_valid(&v), "{v:?}");
+
+        // Execute and check the gather pointwise: n = x + 16a + 4b picks
+        // R[x, a, b], i.e. flat source index 16x + 4a + b.
+        let rv: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("R".to_string(), rv);
+        let out = crate::exec::run_program(&p, &inputs).unwrap();
+        let f2 = &out["F2"];
+        assert_eq!(f2.len(), 64);
+        for n in 0..64usize {
+            let (a, b, x) = (n / 16, (n / 4) % 4, n % 4);
+            assert_eq!(f2[n], (16 * x + 4 * a + b) as f32, "n={n}");
+        }
+    }
+
+    #[test]
     fn strided_downsample_via_tile() {
         let src = r#"
 function ds(I[8, 8, 4]) -> (O) {

@@ -113,6 +113,10 @@ pub struct MachineConfig {
     /// Outermost-first memory hierarchy.
     pub memories: Vec<MemoryUnit>,
     pub compute: Vec<ComputeUnit>,
+    /// Independent compute units the executor may spread a block's
+    /// parallel-safe outer dimension across (`exec::parallel`). Usually
+    /// the general-purpose unit's `count`; 1 = serial-only machine.
+    pub compute_units: usize,
     pub roof: MachineRoof,
     pub passes: Vec<PassConfig>,
 }
@@ -135,10 +139,12 @@ impl MachineConfig {
     /// ("versions of the same architecture differ in parameters, not in
     /// code"). Paths: `memory.<name>.capacity`, `memory.<name>.line`,
     /// `memory.<name>.banks`, `compute.<name>.count`,
-    /// `compute.<name>.simd`, `roof.peak_flops`, `roof.mem_bw`.
+    /// `compute.<name>.simd`, `compute_units`, `roof.peak_flops`,
+    /// `roof.mem_bw`.
     pub fn set_param(&mut self, path: &str, value: f64) -> Result<(), String> {
         let parts: Vec<&str> = path.split('.').collect();
         match parts.as_slice() {
+            ["compute_units"] => self.compute_units = (value as usize).max(1),
             ["memory", name, field] => {
                 let m = self
                     .memories
@@ -218,5 +224,15 @@ mod tests {
         let cfg = builtin_targets().remove(0);
         assert!(cfg.memory("nope").is_none());
         assert!(cfg.memory(&cfg.memories[0].name.clone()).is_some());
+    }
+
+    #[test]
+    fn compute_units_versioned_via_set_param() {
+        let mut cfg = builtin_targets().remove(0);
+        cfg.set_param("compute_units", 6.0).unwrap();
+        assert_eq!(cfg.compute_units, 6);
+        // Clamped to at least one unit.
+        cfg.set_param("compute_units", 0.0).unwrap();
+        assert_eq!(cfg.compute_units, 1);
     }
 }

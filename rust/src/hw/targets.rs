@@ -47,6 +47,7 @@ pub fn paper_fig4() -> MachineConfig {
             simd_width: 1,
             stencils: vec![],
         }],
+        compute_units: 1,
         roof: MachineRoof { peak_flops: 100e9, mem_bw: 10e9 },
         passes: vec![
             PassConfig::Autotile {
@@ -95,6 +96,7 @@ pub fn cpu_cache() -> MachineConfig {
             simd_width: 8,
             stencils: vec![],
         }],
+        compute_units: 8,
         roof: MachineRoof { peak_flops: 500e9, mem_bw: 25e9 },
         passes: vec![
             PassConfig::Fuse { max_group: 4 },
@@ -151,6 +153,7 @@ pub fn dc_accel() -> MachineConfig {
                 tag: "mac_unit".into(),
             }],
         }],
+        compute_units: 4,
         roof: MachineRoof { peak_flops: 4e12, mem_bw: 300e9 },
         // No Fuse here: on an explicitly-managed accelerator the
         // partition/tile/stencil stack is the win, and fusing first
@@ -211,6 +214,7 @@ pub fn tpu_like() -> MachineConfig {
                 tag: "mxu".into(),
             }],
         }],
+        compute_units: 1,
         roof: MachineRoof { peak_flops: 180e12, mem_bw: 1.2e12 },
         // Tile the big contractions for VMEM first; fusion then picks up
         // the still-flat elementwise chains.
@@ -273,5 +277,20 @@ mod tests {
     fn stencil_targets_have_stencils() {
         assert!(!target_by_name("dc_accel").unwrap().compute[0].stencils.is_empty());
         assert!(!target_by_name("tpu_like").unwrap().compute[0].stencils.is_empty());
+    }
+
+    #[test]
+    fn compute_units_track_parallel_hardware() {
+        // Multi-core/PE machines expose their unit count to the
+        // parallel executor; the single-ALU and single-MXU machines
+        // stay serial.
+        assert_eq!(target_by_name("paper_fig4").unwrap().compute_units, 1);
+        assert_eq!(target_by_name("cpu_cache").unwrap().compute_units, 8);
+        assert_eq!(target_by_name("dc_accel").unwrap().compute_units, 4);
+        assert_eq!(target_by_name("tpu_like").unwrap().compute_units, 1);
+        // Counts stay consistent with the general compute-unit table.
+        for cfg in builtin_targets() {
+            assert!(cfg.compute_units as u64 <= cfg.compute.iter().map(|c| c.count).max().unwrap());
+        }
     }
 }

@@ -509,7 +509,10 @@ impl Validator {
 
 /// Extend an iteration space with footprint dims (one per view dimension
 /// of size > 1) and return the effective per-element access vector.
-fn extend_with_footprint(
+/// Shared with `exec::parallel`, whose disjointness analysis must use
+/// exactly this construction to inherit the validator's soundness
+/// argument.
+pub(crate) fn extend_with_footprint(
     space: &Polyhedron,
     r: &super::block::Refinement,
     tag: &str,

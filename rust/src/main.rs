@@ -53,6 +53,8 @@ fn print_help() {
          \x20         --net <name|f.tile>  canned: fig4_conv, conv_relu, cnn, mlp, matmul\n\
          \x20         --set <path=value>   override a config parameter (Fig.1 set_config_params)\n\
          \x20 run     --target <t>         compile + execute on seeded random inputs\n\
+         \x20         --parallel           execute across the target's compute units\n\
+         \x20         --workers <n>        explicit worker count (overrides --parallel)\n\
          \x20 validate <file.stripe>       parse + validate textual Stripe\n\
          \x20 fig1 [--kernels K ...]       engineering-effort comparison table\n\
          \x20 fig2|fig3|fig4|fig5          regenerate the paper's figures\n\
@@ -133,8 +135,29 @@ fn cmd_run(args: &Args) -> i32 {
         let c = compile_network(&p, &cfg, false)?;
         let seed = args.get_u64("seed", 42);
         let inputs = stripe::passes::equiv::gen_inputs(&c.program, seed);
+        // --workers N overrides; --parallel uses the target's
+        // compute-unit count; default stays serial (the always-available
+        // fallback for bisection).
+        let workers = match args.get_usize("workers", 0) {
+            0 if args.flag("parallel") => cfg.compute_units,
+            w => w.max(1),
+        };
         let t0 = std::time::Instant::now();
-        let out = stripe::exec::run_program(&c.program, &inputs).map_err(|e| e.to_string())?;
+        let out = if workers > 1 {
+            let opts = stripe::exec::ExecOptions::with_workers(workers);
+            let (out, schedule) =
+                stripe::exec::run_program_parallel(&c.program, &inputs, &opts)
+                    .map_err(|e| e.to_string())?;
+            println!(
+                "parallel schedule ({workers} workers, {}/{} ops parallel):\n{}",
+                schedule.parallel_ops(),
+                schedule.ops.len(),
+                schedule.summary()
+            );
+            out
+        } else {
+            stripe::exec::run_program(&c.program, &inputs).map_err(|e| e.to_string())?
+        };
         let dt = t0.elapsed();
         for (name, vals) in &out {
             let preview: Vec<String> = vals.iter().take(8).map(|v| format!("{v:.4}")).collect();

@@ -23,6 +23,16 @@
 //! `tile.rs` holds the shared nested-rewrite machinery (the §3.3
 //! index-splitting construction); `equiv.rs` holds the semantic
 //! equivalence checker every rewrite is verified against.
+//!
+//! Passes rewrite structure only; *execution* parallelism is decided
+//! downstream by `exec::parallel`, which re-derives parallel-safe
+//! dimensions from Def-2 disjointness on whatever nest the pipeline
+//! produced (flat or tiled) and records the per-op schedule in
+//! [`crate::coordinator::CompiledNetwork`]. That keeps every pass
+//! combination legal to parallelize-or-not independently — no pass
+//! needs to preserve a "parallel annotation", and serial execution
+//! stays available as the bisection fallback. See the table in
+//! `exec/mod.rs` for the three execution engines.
 
 pub mod autotile;
 pub mod boundary;

@@ -1,0 +1,158 @@
+//! Differential execution harness: naive interpreter ≡ serial plan ≡
+//! parallel plan, bit-exactly, on randomized networks.
+//!
+//! Programs are generated through `graph::NetworkBuilder` with the
+//! repo's seeded deterministic PRNG (no external deps): a random HWC
+//! input, then a random chain of conv/relu/tanh/maxpool/add layers,
+//! finished by flatten → dense (and occasionally a softmax head). Each
+//! program runs through all three engines; outputs must agree to the
+//! bit. The parallel engine additionally re-verifies write disjointness
+//! while merging worker partitions, so an unsound parallelizability
+//! verdict fails the run loudly rather than corrupting silently.
+
+use std::collections::BTreeMap;
+
+use stripe::exec::{
+    run_program_parallel, run_program_planned, run_program_sink, ExecOptions, NullSink,
+};
+use stripe::graph::{NetworkBuilder, TensorId};
+use stripe::ir::{DType, Program};
+use stripe::util::rng::Rng;
+
+/// Build one random small network. Keeps every dimension modest so the
+/// naive interpreter stays fast and the disjointness analysis stays on
+/// its exact enumeration path.
+fn random_program(case: u64, rng: &mut Rng) -> Program {
+    let mut nb = NetworkBuilder::new(&format!("diff{case}"), DType::F32);
+    // Even spatial dims so maxpool2 is always applicable.
+    let h = 2 * rng.range_i64(2, 4) as u64; // 4, 6, 8
+    let w = 2 * rng.range_i64(2, 4) as u64;
+    let c = rng.range_i64(1, 4) as u64; // 1..4
+    let mut t: TensorId = nb.input("X", &[h, w, c]);
+    let mut weights = 0usize;
+    let n_layers = rng.range_i64(1, 4) as usize;
+    for _ in 0..n_layers {
+        match rng.below(5) {
+            0 => {
+                // conv2d_same with a random kernel and output channels.
+                let k = *rng.choose(&[1u64, 3]);
+                let co = rng.range_i64(1, 4) as u64;
+                let ci = nb.sizes(t)[2];
+                weights += 1;
+                let f = nb.weight(&format!("Wc{weights}"), &[k, k, co, ci]);
+                t = nb.conv2d_same(t, f);
+            }
+            1 => t = nb.relu(t),
+            2 => t = nb.tanh(t),
+            3 => {
+                let s = nb.sizes(t);
+                if s[0] >= 4 && s[0] % 2 == 0 && s[1] >= 4 && s[1] % 2 == 0 {
+                    t = nb.maxpool2(t);
+                } else {
+                    t = nb.relu(t);
+                }
+            }
+            _ => t = nb.add(t, t),
+        }
+    }
+    let flat = nb.flatten(t);
+    let n: u64 = nb.sizes(flat)[0];
+    let classes = rng.range_i64(2, 6) as u64;
+    let wd = nb.weight("Wd", &[n, classes]);
+    let mut out = nb.dense(flat, wd);
+    if rng.below(3) == 0 {
+        out = nb.softmax(out);
+    }
+    nb.finish(out)
+}
+
+fn gen_inputs(p: &Program, seed: u64) -> BTreeMap<String, Vec<f32>> {
+    stripe::passes::equiv::gen_inputs(p, seed)
+}
+
+/// Run all three engines and assert bit-exact agreement. Returns how
+/// many ops the parallel engine actually parallelized.
+fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
+    let inputs = gen_inputs(p, seed);
+    let naive = run_program_sink(p, &inputs, &ExecOptions::default(), &mut NullSink)
+        .unwrap_or_else(|e| panic!("{}: naive failed: {e}", p.name));
+    let serial = run_program_planned(p, &inputs, &ExecOptions::default(), &mut NullSink)
+        .unwrap_or_else(|e| panic!("{}: serial plan failed: {e}", p.name));
+    let (parallel, report) =
+        run_program_parallel(p, &inputs, &ExecOptions::with_workers(workers))
+            .unwrap_or_else(|e| panic!("{}: parallel plan failed: {e}", p.name));
+    assert_eq!(naive, serial, "{}: naive vs serial plan diverged", p.name);
+    assert_eq!(
+        serial, parallel,
+        "{}: serial vs parallel diverged\nschedule:\n{}",
+        p.name,
+        report.summary()
+    );
+    report.parallel_ops()
+}
+
+#[test]
+fn fifty_random_networks_agree_across_all_engines() {
+    let mut rng = Rng::new(0xD1FF);
+    let mut parallel_ops = 0usize;
+    let mut cases = 0usize;
+    for case in 0..50u64 {
+        let p = random_program(case, &mut rng);
+        let workers = 1 + rng.below(4) as usize; // 1..=4
+        parallel_ops += differential_case(&p, 1000 + case, workers);
+        cases += 1;
+    }
+    assert_eq!(cases, 50);
+    // The sweep must actually exercise the parallel engine, not fall
+    // back to serial everywhere.
+    assert!(
+        parallel_ops >= 50,
+        "only {parallel_ops} parallel op executions across the sweep"
+    );
+}
+
+#[test]
+fn canned_networks_agree_across_all_engines() {
+    use stripe::frontend::ops;
+    for (name, p) in [
+        ("fig4_conv", ops::fig4_conv_program()),
+        ("conv_relu", ops::conv_relu_program()),
+        ("cnn", ops::cnn_program()),
+        ("mlp", ops::tiny_mlp_program(6, 16, 4)),
+        ("matmul", ops::matmul_program(7, 5, 9)),
+    ] {
+        let par = differential_case(&p, 42, 4);
+        assert!(par >= 1, "{name}: nothing parallelized");
+    }
+}
+
+#[test]
+fn compiled_networks_agree_across_all_engines() {
+    // The same invariant must survive the optimization pipeline: tiled
+    // and nested programs execute identically on every engine (the
+    // analysis may prove less and fall back to serial — that is fine,
+    // equality is the contract).
+    use stripe::frontend::ops;
+    for cfg in stripe::hw::targets::builtin_targets() {
+        let c = stripe::coordinator::compile_network(&ops::conv_relu_program(), &cfg, false)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        differential_case(&c.program, 7, cfg.compute_units.max(2));
+    }
+}
+
+#[test]
+fn merge_verification_would_catch_disjointness_violations() {
+    // Defense in depth: the runtime merge re-checks what the static
+    // analysis proved. Force the degenerate case — two workers handed
+    // overlapping writes — through the Buffers API directly.
+    use stripe::exec::Buffers;
+    use stripe::ir::AggOp;
+    let mut master = Buffers::new();
+    let id = master.alloc("o", 8);
+    let mut a = master.clone();
+    let mut b = master.clone();
+    a.store(id, 3, 1.0, AggOp::Assign, false).unwrap();
+    b.store(id, 3, 2.0, AggOp::Assign, false).unwrap();
+    let e = master.merge_disjoint(&[a, b], &[id]).unwrap_err();
+    assert!(e.contains("disjointness"), "{e}");
+}

@@ -9,35 +9,70 @@ use stripe::frontend::ops;
 use stripe::hw::targets;
 use stripe::passes::equiv::{assert_equiv, gen_inputs};
 
+/// The conv → relu → flatten → dense network both pipeline tests use,
+/// built through the graph builder (the canonical library path).
+fn graph_builder_net() -> stripe::ir::Program {
+    let mut nb = stripe::graph::NetworkBuilder::new("net", stripe::ir::DType::F32);
+    let i = nb.input("I", &[8, 8, 4]);
+    let fw = nb.weight("F", &[3, 3, 8, 4]);
+    let w = nb.weight("W", &[8 * 8 * 8, 6]);
+    let c = nb.conv2d_same(i, fw);
+    let r = nb.relu(c);
+    let fl = nb.flatten(r);
+    let o = nb.dense(fl, w);
+    nb.finish(o)
+}
+
 #[test]
-fn tile_text_through_full_pipeline() {
+fn tile_text_lowers_with_negative_coefficient_access() {
+    // The F2 line linearizes R through a negative-coefficient access:
+    // the frontend must infer `a`'s effective bound from `n`'s range
+    // pushed through `n - 64a - 8b >= 0`, emit halo constraints on
+    // R's first dimension, and produce a Def-2-valid assign (each n is
+    // written by exactly one (a, b)).
     let src = r#"
-function net(I[8, 8, 4], $F[3, 3, 8, 4], $W[256, 6]) -> (O) {
+function net(I[8, 8, 4], $F[3, 3, 8, 4], $W[512, 6]) -> (O) {
   C[x, y, k : 8, 8, 8] = +(I[x + i - 1, y + j - 1, c] * F[i, j, k, c]);
   R = relu(C);
-  F2[n : 256] = assign(R[n - 64*a - 8*b, a, b]);
+  F2[n : 512] = assign(R[n - 64*a - 8*b, a, b]);
   O[m : 6] = +(F2[k] * W[k, m]);
 }
 "#;
-    // NOTE: the F2 line exercises a non-trivial linearizing access.
-    let f = stripe::frontend::parse_function(src);
-    // The linearized access has negative-coefficient inference; if the
-    // frontend rejects it, fall back to the graph builder (both paths
-    // are valid library usage).
-    let program = match f.and_then(|f| stripe::frontend::lower_function(&f)) {
-        Ok(p) => p,
-        Err(_) => {
-            let mut nb = stripe::graph::NetworkBuilder::new("net", stripe::ir::DType::F32);
-            let i = nb.input("I", &[8, 8, 4]);
-            let fw = nb.weight("F", &[3, 3, 8, 4]);
-            let w = nb.weight("W", &[256, 6]);
-            let c = nb.conv2d_same(i, fw);
-            let r = nb.relu(c);
-            let fl = nb.flatten(r);
-            let o = nb.dense(fl, w);
-            nb.finish(o)
-        }
-    };
+    let f = stripe::frontend::parse_function(src).expect("parse");
+    let program = stripe::frontend::lower_function(&f).expect("lower");
+    let findings = stripe::ir::validate::validate_program(&program);
+    assert!(stripe::ir::validate::is_valid(&findings), "{findings:?}");
+    // The lowered flat program executes: every F2 element is written
+    // (assign would error on a double write; unwritten elements would
+    // surface as zeros feeding the dense layer identically for every
+    // seed — check directly instead).
+    let inputs = gen_inputs(&program, 7);
+    let out = run_program(&program, &inputs).unwrap();
+    assert_eq!(out["O"].len(), 6);
+    // The inferred gather block: a's bound must come from the access
+    // system (not R's dim-1 extent alone) and the escaping dim-0
+    // access must carry halo constraints. Elementwise gather semantics
+    // are pinned in frontend::lower's unit tests.
+    let gather = program
+        .main
+        .child_blocks()
+        .find(|b| b.name.starts_with("F2"))
+        .expect("F2 block");
+    let ranges: BTreeMap<&str, u64> =
+        gather.idxs.iter().map(|i| (i.name.as_str(), i.range)).collect();
+    assert_eq!(ranges["n"], 512);
+    assert_eq!(ranges["a"], 8);
+    assert_eq!(ranges["b"], 8);
+    assert!(!gather.constraints.is_empty(), "halo constraints expected");
+}
+
+#[test]
+fn tile_text_through_full_pipeline() {
+    // Full pipeline on the same network shape through the graph
+    // builder (the documented fallback path for sources the frontend
+    // cannot lower — and the canonical pre-pass form the passes are
+    // specified against).
+    let program = graph_builder_net();
     for cfg in targets::builtin_targets() {
         let compiled = compile_network(&program, &cfg, true)
             .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));

@@ -1,0 +1,122 @@
+//! Concurrency suite for `coordinator::CompileService`.
+//!
+//! The service single-flights identical requests: under a thundering
+//! herd of N identical submissions the compile runs once and the
+//! metrics record exactly 1 miss + N−1 hits, regardless of worker
+//! count or interleaving. Shutdown must drain the queue and join every
+//! worker without deadlock.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use stripe::coordinator::CompileService;
+use stripe::frontend::ops;
+use stripe::hw::targets;
+
+#[test]
+fn thundering_herd_yields_one_miss_and_n_minus_one_hits() {
+    const N: usize = 8;
+    let svc = Arc::new(CompileService::start(4));
+    let barrier = Arc::new(std::sync::Barrier::new(N));
+    let mut threads = Vec::new();
+    for _ in 0..N {
+        let svc = Arc::clone(&svc);
+        let barrier = Arc::clone(&barrier);
+        threads.push(std::thread::spawn(move || {
+            barrier.wait(); // maximize overlap
+            svc.compile_blocking(ops::fig4_conv_program(), targets::cpu_cache(), false)
+                .expect("compile")
+        }));
+    }
+    let results: Vec<_> = threads.into_iter().map(|t| t.join().expect("join")).collect();
+    // Everyone got the same cached artifact.
+    for r in &results[1..] {
+        assert!(Arc::ptr_eq(&results[0], r), "all callers share one compile result");
+    }
+    assert_eq!(svc.metrics.requests.load(Relaxed), N as u64);
+    assert_eq!(svc.metrics.completed.load(Relaxed), N as u64);
+    assert_eq!(svc.metrics.failed.load(Relaxed), 0);
+    assert_eq!(
+        svc.metrics.cache_hits.load(Relaxed),
+        (N - 1) as u64,
+        "single-flight must yield exactly one miss: {}",
+        svc.metrics.snapshot()
+    );
+    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
+    svc.shutdown();
+}
+
+#[test]
+fn distinct_programs_all_miss_under_concurrency() {
+    const N: u64 = 6;
+    let svc = Arc::new(CompileService::start(3));
+    let mut threads = Vec::new();
+    for i in 0..N {
+        let svc = Arc::clone(&svc);
+        threads.push(std::thread::spawn(move || {
+            // Distinct shapes → distinct cache keys.
+            svc.compile_blocking(
+                ops::matmul_program(2 + i, 3, 4),
+                targets::paper_fig4(),
+                false,
+            )
+            .expect("compile")
+        }));
+    }
+    for t in threads {
+        t.join().expect("join");
+    }
+    assert_eq!(svc.metrics.completed.load(Relaxed), N);
+    assert_eq!(svc.metrics.cache_hits.load(Relaxed), 0);
+    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_joins_workers_after_pending_work_without_deadlock() {
+    // Queue a burst, shut down immediately: shutdown drains the queue
+    // (shutdown messages sit behind pending work), every receiver gets
+    // its result, and the call returns (a deadlock would hang the whole
+    // test binary, which CI treats as failure).
+    let svc = CompileService::start(2);
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            let p = if i % 2 == 0 {
+                ops::fig4_conv_program()
+            } else {
+                ops::matmul_program(4, 4, 4)
+            };
+            svc.submit(p, targets::paper_fig4(), false)
+        })
+        .collect();
+    svc.shutdown();
+    for rx in rxs {
+        rx.recv().expect("result delivered before shutdown").expect("compile ok");
+    }
+}
+
+#[test]
+fn herd_on_invalid_program_propagates_error_to_every_caller() {
+    let mut bad = ops::fig4_conv_program();
+    if let stripe::ir::Statement::Block(b) = &mut bad.main.stmts[0] {
+        b.constraints.push(stripe::poly::Affine::var("bogus"));
+    }
+    let svc = Arc::new(CompileService::start(2));
+    let mut threads = Vec::new();
+    for _ in 0..4 {
+        let svc = Arc::clone(&svc);
+        let bad = bad.clone();
+        threads.push(std::thread::spawn(move || {
+            svc.compile_blocking(bad, targets::paper_fig4(), false)
+        }));
+    }
+    for t in threads {
+        let e = t.join().expect("join").expect_err("must fail");
+        assert!(e.contains("invalid"), "{e}");
+    }
+    // Failures are never counted as cache hits.
+    assert_eq!(svc.metrics.cache_hits.load(Relaxed), 0);
+    assert_eq!(svc.metrics.failed.load(Relaxed) + svc.metrics.completed.load(Relaxed), 4);
+    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
+    svc.shutdown();
+}

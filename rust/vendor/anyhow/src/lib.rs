@@ -1,0 +1,97 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the surface this repository uses: a string-backed
+//! [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and the
+//! [`Context`] extension trait. Any `std::error::Error` converts into
+//! [`Error`] via `?`, matching anyhow's blanket conversion.
+
+use std::fmt;
+
+/// A string-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parses(s: &str) -> Result<i64> {
+        let n: i64 = s.parse()?; // std::num::ParseIntError → Error
+        if n < 0 {
+            bail!("negative: {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn conversion_and_bail() {
+        assert_eq!(parses("41").unwrap(), 41);
+        assert!(parses("x").unwrap_err().to_string().contains("invalid digit"));
+        assert_eq!(parses("-2").unwrap_err().to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e: Result<()> = Err(anyhow!("inner"));
+        assert_eq!(e.context("outer").unwrap_err().to_string(), "outer: inner");
+    }
+}

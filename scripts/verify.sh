@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification (referenced from ROADMAP.md): release build,
+# full test suite, formatting. Run from the repository root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+# Formatting is advisory when rustfmt is not installed in the image.
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "(rustfmt unavailable; skipping format check)"
+fi
+
+echo "verify: OK"
