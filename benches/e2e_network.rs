@@ -107,6 +107,40 @@ fn main() {
              [serial {:?} -> parallel {:?}]",
             s_serial.median, s_par.median
         );
+        // Fork/merge traffic from the copy-on-write storage: the fork
+        // cost is O(write set), so the bytes workers copy must not
+        // scale with the total live buffer bytes (the old deep-clone
+        // fork copied `parallel_ops × workers × total` every run).
+        let total_live_bytes: u64 =
+            big.buffers.iter().map(|b| b.ttype.span_elems() * 4).sum();
+        let fork_bytes = schedule.fork_bytes();
+        let merge_bytes = schedule.merge_bytes();
+        let old_model_bytes: u64 = schedule
+            .ops
+            .iter()
+            .filter(|o| o.dim.is_some())
+            .map(|o| o.workers as u64 * total_live_bytes)
+            .sum();
+        println!(
+            "fork traffic {fork_bytes} B, merge traffic {merge_bytes} B \
+             (live set {total_live_bytes} B; old deep-clone model {old_model_bytes} B)"
+        );
+        if units >= 2 {
+            assert!(fork_bytes > 0, "parallel ops must materialize private pages");
+            // O(write set), not O(live set): bounded by the op write
+            // sets (≈ one pass over the activations, with page/mask
+            // slack), and far below what per-worker deep clones cost.
+            assert!(
+                fork_bytes < 2 * total_live_bytes,
+                "fork traffic {fork_bytes} B scales with the live set \
+                 ({total_live_bytes} B)"
+            );
+            assert!(
+                fork_bytes < old_model_bytes / 8,
+                "fork traffic {fork_bytes} B is not materially below the \
+                 deep-clone model ({old_model_bytes} B)"
+            );
+        }
         // Only a hard requirement where the hardware can actually run
         // the workers concurrently; on a single-core box the overhead
         // makes <= 1.0x expected, and aborting the bench would be noise.
@@ -124,6 +158,25 @@ fn main() {
                 .unwrap();
         let (par_out, _) = run_program_parallel(&big, &big_inputs, &popts).unwrap();
         assert_eq!(serial_out, par_out, "parallel output must be bit-exact");
+        // Machine-readable perf trajectory (scripts/bench.sh).
+        let json_path =
+            std::env::var("BENCH_E2E_JSON").unwrap_or_else(|_| "BENCH_e2e.json".to_string());
+        let json = format!(
+            "{{\n  \"bench\": \"e2e_network\",\n  \"units\": {units},\n  \
+             \"hw_threads\": {avail},\n  \"serial_median_s\": {:.6},\n  \
+             \"parallel_median_s\": {:.6},\n  \"speedup\": {speedup:.3},\n  \
+             \"parallel_ops\": {},\n  \"fork_bytes\": {fork_bytes},\n  \
+             \"merge_bytes\": {merge_bytes},\n  \
+             \"total_live_buffer_bytes\": {total_live_bytes},\n  \
+             \"old_deep_clone_model_bytes\": {old_model_bytes}\n}}\n",
+            s_serial.median.as_secs_f64(),
+            s_par.median.as_secs_f64(),
+            schedule.parallel_ops(),
+        );
+        match std::fs::write(&json_path, json) {
+            Ok(()) => println!("wrote {json_path}"),
+            Err(e) => println!("(could not write {json_path}: {e})"),
+        }
     }
 
     section("output stability across targets");

@@ -1,6 +1,9 @@
 //! End-to-end compile drivers shared by the CLI, examples, and service.
 
-use crate::exec::ParallelReport;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::exec::{BufferPool, ExecOptions, ParallelReport};
 use crate::hw::MachineConfig;
 use crate::ir::Program;
 use crate::passes::{compile, PassReport};
@@ -72,6 +75,22 @@ pub fn compile_network(
     })
 }
 
+/// Execute a compiled network across `workers` compute units, drawing
+/// buffer pages from `pool` when one is supplied (the service path
+/// shares one pool across requests so repeated executions recycle
+/// allocations). `workers <= 1` routes every op through the same
+/// engine serially, so the returned [`ParallelReport`] still records
+/// per-op decisions — including the fork/merge byte counters.
+pub fn run_network(
+    c: &CompiledNetwork,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    workers: usize,
+    pool: Option<Arc<BufferPool>>,
+) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
+    let opts = ExecOptions { workers: workers.max(1), pool, ..ExecOptions::default() };
+    crate::exec::run_program_parallel(&c.program, inputs, &opts).map_err(|e| e.to_string())
+}
+
 /// Deterministic content hash of a (program, target) pair — the compile
 /// cache key. FNV-1a over the printed IR and config name.
 pub fn cache_key(program: &Program, cfg: &MachineConfig) -> u64 {
@@ -114,6 +133,19 @@ mod tests {
         // Every top-level op got a scheduling decision.
         let c = compile_network(&p, &targets::cpu_cache(), false).unwrap();
         assert_eq!(c.schedule.ops.len(), c.program.ops().count());
+    }
+
+    #[test]
+    fn run_network_executes_and_reports_schedule() {
+        let p = ops::cnn_program();
+        let c = compile_network(&p, &targets::cpu_cache(), false).unwrap();
+        let inputs = crate::passes::equiv::gen_inputs(&c.program, 5);
+        let (out, report) = run_network(&c, &inputs, c.compute_units, None).unwrap();
+        assert!(!out.is_empty());
+        assert_eq!(report.ops.len(), c.schedule.ops.len());
+        // Serial re-run through the same entry point is bit-exact.
+        let (out_serial, _) = run_network(&c, &inputs, 1, None).unwrap();
+        assert_eq!(out, out_serial);
     }
 
     #[test]

@@ -21,10 +21,11 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::exec::{BufferPool, ParallelReport};
 use crate::hw::MachineConfig;
 use crate::ir::Program;
 
-use super::driver::{cache_key, compile_network, CompiledNetwork};
+use super::driver::{cache_key, compile_network, run_network, CompiledNetwork};
 use super::metrics::Metrics;
 
 /// A compile request.
@@ -65,6 +66,11 @@ pub struct CompileService {
     tx: Sender<Msg>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// Shared buffer-page pool for executing compiled networks
+    /// ([`CompileService::run_blocking`]): repeated execution requests
+    /// recycle their storage pages instead of re-allocating per
+    /// request.
+    pub pool: Arc<BufferPool>,
 }
 
 impl CompileService {
@@ -134,7 +140,20 @@ impl CompileService {
                 }
             }));
         }
-        CompileService { tx, workers, metrics }
+        CompileService { tx, workers, metrics, pool: Arc::new(BufferPool::default()) }
+    }
+
+    /// Execute a compiled network on the service's shared page pool,
+    /// across `workers` compute units. The pool makes the service's
+    /// execution path allocation-recycling: buffers drawn for one
+    /// request are returned and reused by the next.
+    pub fn run_blocking(
+        &self,
+        network: &CompiledNetwork,
+        inputs: &BTreeMap<String, Vec<f32>>,
+        workers: usize,
+    ) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
+        run_network(network, inputs, workers, Some(Arc::clone(&self.pool)))
     }
 
     /// Submit a request; returns the receiver for its result.
@@ -230,6 +249,25 @@ mod tests {
         use std::sync::atomic::Ordering::Relaxed;
         assert_eq!(svc.metrics.cache_hits.load(Relaxed), 3);
         assert_eq!(svc.metrics.completed.load(Relaxed), 4);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn execution_requests_recycle_the_shared_page_pool() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let svc = CompileService::start(1);
+        let p = ops::cnn_program();
+        let c = svc.compile_blocking(p, targets::cpu_cache(), false).unwrap();
+        let inputs = crate::passes::equiv::gen_inputs(&c.program, 9);
+        let (a, _) = svc.run_blocking(&c, &inputs, 2).unwrap();
+        let (b, report) = svc.run_blocking(&c, &inputs, 2).unwrap();
+        assert_eq!(a, b, "pooled service executions must be bit-exact");
+        assert!(
+            svc.pool.hits.load(Relaxed) > 0,
+            "second request must reuse pooled pages ({})",
+            svc.pool.summary()
+        );
+        assert_eq!(report.ops.len(), c.schedule.ops.len());
         svc.shutdown();
     }
 

@@ -1,18 +1,277 @@
-//! Flat `f32` buffer storage with Definition-2 write semantics.
+//! The execution storage subsystem: paged copy-on-write `f32` buffers
+//! with Definition-2 write semantics.
+//!
+//! # Storage model
+//!
+//! Each buffer is a sequence of fixed-size pages ([`PAGE_ELEMS`]
+//! elements each), every page an `Arc<[f32]>`, plus an `Arc`'d write
+//! mask (a bitset with a dirty-range bound). Cloning a [`Buffers`] —
+//! the parallel executor's fork point, see [`Buffers::fork`] — copies
+//! only the page/mask pointers, so a fork costs **O(number of pages)**
+//! pointer bumps and **zero** data bytes. The first write through a
+//! shared page (or mask) un-shares exactly that page (mask) by copying
+//! it — classic copy-on-write — so a worker's memory traffic is
+//! O(its write set), rounded up to page granularity, instead of
+//! O(total live buffer bytes) as with the old deep-clone fork.
+//!
+//! # Fork-cost guarantees
+//!
+//! * [`Buffers::fork`] copies no element data: it bumps one `Arc` per
+//!   page plus one per mask, and resets the child's [`StorageStats`].
+//! * A fork's first write to a page copies that one page
+//!   ([`PAGE_ELEMS`]·4 bytes) and that buffer's mask; further writes to
+//!   the same page are plain stores. Buffers the fork never writes are
+//!   never copied.
+//! * [`Buffers::merge_disjoint`] walks only the **dirty ranges** the
+//!   workers actually touched (skipping buffers a partition never
+//!   wrote entirely), adopts fully-written interior pages by pointer
+//!   (zero copy), and memcpys only partially-written boundary pages.
+//! * Every copy is accounted in [`StorageStats`], which the parallel
+//!   engine surfaces per-op through `ParallelReport`.
+//!
+//! # Write semantics
+//!
+//! Unchanged from the original flat storage: the first write to an
+//! element *assigns* regardless of the aggregation op; later writes
+//! combine with the refinement's aggregation; double `Assign` writes
+//! are an error unless relaxed (Definition 2, §3.2).
+//!
+//! # Page recycling
+//!
+//! A [`BufferPool`] recycles page allocations across `Buffers`
+//! lifetimes (the coordinator's service path keeps one pool per
+//! service so repeated execution requests stop paying malloc + page
+//! faults): [`Buffers::with_pool`] draws zeroed pages from the pool
+//! and [`Buffers::release`] returns every page that is no longer
+//! shared.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
 
 use crate::ir::AggOp;
 
-/// The set of live buffers during execution. Indices into `data` are
-/// stable "buffer ids" handed out at allocation.
+/// Elements per storage page (4 KiB of `f32`). A power of two so
+/// element→page arithmetic is a shift/mask on the hot path.
+pub const PAGE_ELEMS: usize = 1024;
+const PAGE_SHIFT: usize = 10;
+const PAGE_MASK: usize = PAGE_ELEMS - 1;
+/// Mask words (u64) covering one full page.
+const WORDS_PER_PAGE: usize = PAGE_ELEMS / 64;
+
+/// Copy-traffic accounting for one `Buffers` instance. Forks start at
+/// zero (see [`Buffers::fork`]); the parallel engine reads the deltas
+/// to report per-op fork/merge byte counts.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StorageStats {
+    /// Bytes memcpy'd to un-share CoW pages and masks (the real cost of
+    /// a fork: O(write set), paid lazily at first write).
+    pub cow_bytes: u64,
+    /// Elements merged back from worker partitions (element-wise plus
+    /// adopted whole pages).
+    pub merged_elems: u64,
+    /// Bytes memcpy'd element-wise during merges (excludes adopted
+    /// pages, which transfer by pointer).
+    pub merged_bytes: u64,
+    /// Whole pages transferred by pointer adoption during merges —
+    /// zero bytes copied.
+    pub adopted_pages: u64,
+}
+
+/// A recycling pool of storage pages. Cheap to share (`Arc`) between a
+/// service and its execution requests; thread-safe.
+#[derive(Debug)]
+pub struct BufferPool {
+    pages: Mutex<Vec<Arc<[f32]>>>,
+    max_pages: usize,
+    /// Pages served from the pool (recycled allocations).
+    pub hits: AtomicU64,
+    /// Pages that had to be freshly allocated.
+    pub misses: AtomicU64,
+    /// Pages returned to the pool by [`Buffers::release`].
+    pub returned: AtomicU64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::with_capacity(4096)
+    }
+}
+
+impl BufferPool {
+    /// A pool retaining at most `max_pages` free pages (beyond that,
+    /// returned pages are simply dropped).
+    pub fn with_capacity(max_pages: usize) -> BufferPool {
+        BufferPool {
+            pages: Mutex::new(Vec::new()),
+            max_pages,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            returned: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of free pages currently pooled.
+    pub fn free_pages(&self) -> usize {
+        self.pages.lock().unwrap().len()
+    }
+
+    /// One-line counter summary (for service metrics output).
+    pub fn summary(&self) -> String {
+        format!(
+            "pool_hits={} pool_misses={} pool_returned={} pool_free={}",
+            self.hits.load(Relaxed),
+            self.misses.load(Relaxed),
+            self.returned.load(Relaxed),
+            self.free_pages()
+        )
+    }
+
+    /// A zeroed, uniquely-owned page — recycled when possible.
+    fn take_zero_page(&self) -> Arc<[f32]> {
+        loop {
+            let page = self.pages.lock().unwrap().pop();
+            match page {
+                Some(mut page) => {
+                    // Pages are only pooled while unique, but re-check:
+                    // a shared page cannot be recycled safely.
+                    if let Some(slice) = Arc::get_mut(&mut page) {
+                        slice.fill(0.0);
+                        self.hits.fetch_add(1, Relaxed);
+                        return page;
+                    }
+                }
+                None => {
+                    self.misses.fetch_add(1, Relaxed);
+                    return Arc::from(vec![0.0f32; PAGE_ELEMS]);
+                }
+            }
+        }
+    }
+
+    /// Return a page if it is uniquely owned and regular-sized.
+    fn put_page(&self, page: Arc<[f32]>) {
+        if Arc::strong_count(&page) != 1 || page.len() != PAGE_ELEMS {
+            return;
+        }
+        let mut free = self.pages.lock().unwrap();
+        if free.len() < self.max_pages {
+            free.push(page);
+            self.returned.fetch_add(1, Relaxed);
+        }
+    }
+}
+
+/// Compact per-buffer write tracking: a bitset over elements plus an
+/// inclusive dirty bound covering every set bit, so "has anything been
+/// written" is O(1) and clearing / merging walk only touched words.
+#[derive(Debug, Clone)]
+struct WriteMask {
+    words: Vec<u64>,
+    /// Inclusive element bounds covering all set bits (a conservative
+    /// superset is legal; `None` means no bit is set).
+    dirty: Option<(usize, usize)>,
+}
+
+impl WriteMask {
+    fn with_len(len: usize, filled: bool) -> WriteMask {
+        let n_words = len.div_ceil(64);
+        if !filled || len == 0 {
+            return WriteMask { words: vec![0; n_words], dirty: None };
+        }
+        let mut words = vec![!0u64; n_words];
+        let tail_bits = len & 63;
+        if tail_bits != 0 {
+            words[n_words - 1] = (1u64 << tail_bits) - 1;
+        }
+        WriteMask { words, dirty: Some((0, len - 1)) }
+    }
+
+    #[inline]
+    fn get(&self, e: usize) -> bool {
+        (self.words[e >> 6] >> (e & 63)) & 1 == 1
+    }
+
+    #[inline]
+    fn set(&mut self, e: usize) {
+        self.words[e >> 6] |= 1u64 << (e & 63);
+        self.dirty = Some(match self.dirty {
+            None => (e, e),
+            Some((lo, hi)) => (lo.min(e), hi.max(e)),
+        });
+    }
+
+    /// Clear all set bits; only dirty words are touched.
+    fn clear(&mut self) {
+        if let Some((lo, hi)) = self.dirty.take() {
+            for w in &mut self.words[(lo >> 6)..=(hi >> 6)] {
+                *w = 0;
+            }
+        }
+    }
+
+    fn extend_dirty(&mut self, lo: usize, hi: usize) {
+        self.dirty = Some(match self.dirty {
+            None => (lo, hi),
+            Some((a, b)) => (a.min(lo), b.max(hi)),
+        });
+    }
+
+    fn byte_size(&self) -> u64 {
+        (self.words.len() * 8) as u64
+    }
+}
+
+/// One buffer: logical length plus CoW pages and write mask. All pages
+/// hold exactly [`PAGE_ELEMS`] elements; `len` bounds logical access
+/// (the tail of the last page is dead space, at most one page's worth).
+#[derive(Debug, Clone)]
+struct Buf {
+    len: usize,
+    pages: Vec<Arc<[f32]>>,
+    mask: Arc<WriteMask>,
+}
+
+/// Un-share one page for writing, accounting the copy.
+#[inline]
+fn page_mut<'a>(page: &'a mut Arc<[f32]>, cow_bytes: &mut u64) -> &'a mut [f32] {
+    if Arc::get_mut(page).is_none() {
+        *cow_bytes += (page.len() * 4) as u64;
+        let copy: Arc<[f32]> = Arc::from(&**page);
+        *page = copy;
+    }
+    Arc::get_mut(page).expect("freshly copied page is uniquely owned")
+}
+
+/// Un-share a write mask, accounting the copy.
+#[inline]
+fn mask_mut<'a>(mask: &'a mut Arc<WriteMask>, cow_bytes: &mut u64) -> &'a mut WriteMask {
+    if Arc::get_mut(mask).is_none() {
+        *cow_bytes += mask.byte_size();
+    }
+    Arc::make_mut(mask)
+}
+
+/// The set of live buffers during execution. Indices into the buffer
+/// table are stable "buffer ids" handed out at allocation; a name→id
+/// index makes [`Buffers::id_of`] O(log n) instead of the old linear
+/// scan (ties — duplicate names, e.g. plan-level scratch — resolve to
+/// the first allocation, matching the scan's semantics).
 ///
-/// `Clone` is the parallel executor's fork point: each worker runs on a
-/// private clone (see [`Buffers::merge_disjoint`]), so workers never
-/// synchronise on element writes.
+/// [`Buffers::fork`] is the parallel executor's fork point: each worker
+/// runs on a CoW fork (see the module docs for the cost guarantees), so
+/// workers never synchronise on element writes and never deep-copy
+/// buffers they only read.
 #[derive(Debug, Default, Clone)]
 pub struct Buffers {
-    names: Vec<String>,
-    data: Vec<Vec<f32>>,
-    written: Vec<Vec<bool>>,
+    /// Name table and index are `Arc`-shared so forks are pointer bumps
+    /// even for the metadata; a fork that allocates (worker scratch)
+    /// un-shares them once via `Arc::make_mut`.
+    names: Arc<Vec<String>>,
+    index: Arc<BTreeMap<String, usize>>,
+    bufs: Vec<Buf>,
+    stats: StorageStats,
+    pool: Option<Arc<BufferPool>>,
 }
 
 impl Buffers {
@@ -20,27 +279,71 @@ impl Buffers {
         Buffers::default()
     }
 
+    /// A `Buffers` drawing its pages from (and, on [`Buffers::release`],
+    /// returning them to) a shared recycling pool.
+    pub fn with_pool(pool: Option<Arc<BufferPool>>) -> Buffers {
+        Buffers { pool, ..Buffers::default() }
+    }
+
+    /// Copy-on-write fork: O(pages) pointer bumps, zero data bytes
+    /// copied. The fork's [`StorageStats`] start at zero so the copies
+    /// it later performs (CoW faults) are attributable to it alone.
+    pub fn fork(&self) -> Buffers {
+        let mut f = self.clone();
+        f.stats = StorageStats::default();
+        f
+    }
+
+    /// Copy-traffic counters accumulated by this instance.
+    pub fn stats(&self) -> StorageStats {
+        self.stats
+    }
+
+    fn take_page(&self) -> Arc<[f32]> {
+        match &self.pool {
+            Some(pool) => pool.take_zero_page(),
+            None => Arc::from(vec![0.0f32; PAGE_ELEMS]),
+        }
+    }
+
+    fn push_buf(&mut self, name: &str, len: usize, init: Option<&[f32]>) -> usize {
+        let n_pages = len.div_ceil(PAGE_ELEMS);
+        let mut pages = Vec::with_capacity(n_pages);
+        for p in 0..n_pages {
+            let mut page = self.take_page();
+            if let Some(vals) = init {
+                let lo = p * PAGE_ELEMS;
+                let n = (vals.len() - lo).min(PAGE_ELEMS);
+                Arc::get_mut(&mut page).expect("fresh page is uniquely owned")[..n]
+                    .copy_from_slice(&vals[lo..lo + n]);
+            }
+            pages.push(page);
+        }
+        let mask = Arc::new(WriteMask::with_len(len, init.is_some()));
+        let id = self.bufs.len();
+        self.bufs.push(Buf { len, pages, mask });
+        Arc::make_mut(&mut self.names).push(name.to_string());
+        Arc::make_mut(&mut self.index)
+            .entry(name.to_string())
+            .or_insert(id);
+        id
+    }
+
     /// Allocate a zero-filled buffer of `len` elements; returns its id.
     pub fn alloc(&mut self, name: &str, len: usize) -> usize {
-        self.names.push(name.to_string());
-        self.data.push(vec![0.0; len]);
-        self.written.push(vec![false; len]);
-        self.names.len() - 1
+        self.push_buf(name, len, None)
     }
 
     /// Allocate and fill with caller data (inputs/weights). Elements
     /// count as written (reads see caller values, aggregations combine
     /// with them).
     pub fn alloc_init(&mut self, name: &str, values: Vec<f32>) -> usize {
-        let n = values.len();
-        self.names.push(name.to_string());
-        self.data.push(values);
-        self.written.push(vec![true; n]);
-        self.names.len() - 1
+        self.push_buf(name, values.len(), Some(&values))
     }
 
+    /// Buffer id behind a name (first allocation wins on duplicates).
     pub fn id_of(&self, name: &str) -> Option<usize> {
-        self.names.iter().position(|n| n == name)
+        self.index.get(name).copied()
     }
 
     pub fn name_of(&self, id: usize) -> &str {
@@ -48,11 +351,11 @@ impl Buffers {
     }
 
     pub fn len_of(&self, id: usize) -> usize {
-        self.data[id].len()
+        self.bufs[id].len
     }
 
     pub fn count(&self) -> usize {
-        self.names.len()
+        self.bufs.len()
     }
 
     /// Read one element. Unwritten elements read as 0.0 (matching the
@@ -60,21 +363,23 @@ impl Buffers {
     /// semantically suspect).
     #[inline]
     pub fn read(&self, id: usize, elem: i64) -> Result<f32, String> {
-        let buf = &self.data[id];
-        if elem < 0 || elem as usize >= buf.len() {
+        let buf = &self.bufs[id];
+        if elem < 0 || elem as usize >= buf.len {
             return Err(format!(
                 "read out of bounds: {}[{elem}] (len {})",
                 self.names[id],
-                buf.len()
+                buf.len
             ));
         }
-        Ok(buf[elem as usize])
+        let e = elem as usize;
+        Ok(buf.pages[e >> PAGE_SHIFT][e & PAGE_MASK])
     }
 
     /// Write one element with Definition-2 aggregation semantics: the
     /// first write assigns, later writes combine with `agg`. For
     /// `AggOp::Assign`, a second write reports an error (illegal per
-    /// §3.2) unless `relaxed_assign` is set by the caller.
+    /// §3.2) unless `relaxed_assign` is set by the caller. Writes
+    /// through a shared page un-share it first (copy-on-write).
     #[inline]
     pub fn store(
         &mut self,
@@ -84,92 +389,189 @@ impl Buffers {
         agg: AggOp,
         relaxed_assign: bool,
     ) -> Result<(), String> {
-        let buf = &mut self.data[id];
-        if elem < 0 || elem as usize >= buf.len() {
+        let buf = &mut self.bufs[id];
+        if elem < 0 || elem as usize >= buf.len {
             return Err(format!(
                 "write out of bounds: {}[{elem}] (len {})",
                 self.names[id],
-                buf.len()
+                buf.len
             ));
         }
         let e = elem as usize;
-        if self.written[id][e] {
+        let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+        if buf.mask.get(e) {
             if agg == AggOp::Assign && !relaxed_assign {
                 return Err(format!(
                     "double write to assign-aggregated {}[{elem}]",
                     self.names[id]
                 ));
             }
-            buf[e] = agg.combine(buf[e], value);
+            let combined = agg.combine(buf.pages[p][off], value);
+            page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off] = combined;
         } else {
-            buf[e] = value;
-            self.written[id][e] = true;
+            page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off] = value;
+            mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).set(e);
         }
         Ok(())
     }
 
     /// Reset write tracking for a buffer (used when an op legitimately
-    /// rewrites a temp, e.g. reusing scratch between ops).
+    /// rewrites a temp, e.g. reusing scratch between iterations). Only
+    /// the dirty word range is cleared.
     pub fn reset_written(&mut self, id: usize) {
-        for w in &mut self.written[id] {
-            *w = false;
-        }
+        let buf = &mut self.bufs[id];
+        mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).clear();
     }
 
-    /// True if any element of the buffer has been written.
+    /// True if any element of the buffer has been written. O(1): the
+    /// mask tracks a dirty bound.
     pub fn written_any(&self, id: usize) -> bool {
-        self.written[id].iter().any(|&w| w)
+        self.bufs[id].mask.dirty.is_some()
+    }
+
+    /// The inclusive element bounds covering this buffer's written
+    /// elements (`None` when nothing is written). A conservative
+    /// superset of the exact write set.
+    pub fn dirty_range(&self, id: usize) -> Option<(usize, usize)> {
+        self.bufs[id].mask.dirty
     }
 
     /// Merge per-worker partitions back after a parallel block run.
     ///
-    /// Each partition in `parts` is a clone of `self` taken before the
+    /// Each partition in `parts` is a fork of `self` taken before the
     /// block ran; for every buffer id in `ids` — which must have been
-    /// entirely unwritten at fork time — the elements a worker wrote are
-    /// copied back. The parallelizability analysis guarantees workers
-    /// write disjoint element sets; this merge *verifies* that at
-    /// runtime and errors on any overlap (differential tests rely on
+    /// entirely unwritten at fork time — the elements a worker wrote
+    /// are carried back. The parallelizability analysis guarantees
+    /// workers write disjoint element sets; this merge *verifies* that
+    /// at runtime and errors on any overlap (differential tests rely on
     /// the check to catch analysis bugs instead of silently losing
     /// writes). Returns the number of elements merged.
+    ///
+    /// Cost: partitions with no writes to a buffer are skipped outright
+    /// (their dirty range is `None`); otherwise only the dirty word
+    /// range is scanned. Interior pages a single worker wrote completely
+    /// are adopted by pointer — zero bytes copied.
     pub fn merge_disjoint(&mut self, parts: &[Buffers], ids: &[usize]) -> Result<usize, String> {
         let mut merged = 0usize;
         for &id in ids {
             for part in parts {
-                if part.data[id].len() != self.data[id].len() {
+                let part_buf = &part.bufs[id];
+                if part_buf.len != self.bufs[id].len {
                     return Err(format!(
                         "partition shape drift on {}: {} vs {}",
                         self.names[id],
-                        part.data[id].len(),
-                        self.data[id].len()
+                        part_buf.len,
+                        self.bufs[id].len
                     ));
                 }
-                for (e, &w) in part.written[id].iter().enumerate() {
-                    if !w {
+                // Dirty-range skip: this partition never wrote the
+                // buffer, so there is nothing to scan at all.
+                let Some((dlo, dhi)) = part_buf.mask.dirty else { continue };
+                let buf = &mut self.bufs[id];
+                let len = buf.len;
+                let mask = mask_mut(&mut buf.mask, &mut self.stats.cow_bytes);
+                for p in (dlo >> PAGE_SHIFT)..=(dhi >> PAGE_SHIFT) {
+                    let wlo = p * WORDS_PER_PAGE;
+                    let whi = (wlo + WORDS_PER_PAGE).min(mask.words.len());
+                    // Zero-copy fast path: the worker wrote this whole
+                    // page and we have not touched it — adopt the
+                    // worker's page by pointer.
+                    let page_full = (p + 1) * PAGE_ELEMS <= len
+                        && part_buf.mask.words[wlo..whi].iter().all(|&w| w == !0u64)
+                        && mask.words[wlo..whi].iter().all(|&w| w == 0);
+                    if page_full {
+                        buf.pages[p] = Arc::clone(&part_buf.pages[p]);
+                        for w in &mut mask.words[wlo..whi] {
+                            *w = !0u64;
+                        }
+                        mask.extend_dirty(p * PAGE_ELEMS, (p + 1) * PAGE_ELEMS - 1);
+                        merged += PAGE_ELEMS;
+                        self.stats.merged_elems += PAGE_ELEMS as u64;
+                        self.stats.adopted_pages += 1;
                         continue;
                     }
-                    if self.written[id][e] {
-                        return Err(format!(
-                            "parallel workers both wrote {}[{e}] — disjointness analysis violated",
-                            self.names[id]
-                        ));
+                    for w in wlo..whi {
+                        let pbits = part_buf.mask.words[w];
+                        if pbits == 0 {
+                            continue;
+                        }
+                        let overlap = mask.words[w] & pbits;
+                        if overlap != 0 {
+                            let e = (w << 6) + overlap.trailing_zeros() as usize;
+                            return Err(format!(
+                                "parallel workers both wrote {}[{e}] — disjointness \
+                                 analysis violated",
+                                self.names[id]
+                            ));
+                        }
+                        let dst = page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes);
+                        let src = &part_buf.pages[p];
+                        let mut bits = pbits;
+                        let mut first = 0usize;
+                        let mut last = 0usize;
+                        let mut n = 0usize;
+                        while bits != 0 {
+                            let b = bits.trailing_zeros() as usize;
+                            let e = (w << 6) | b;
+                            let off = e & PAGE_MASK;
+                            dst[off] = src[off];
+                            if n == 0 {
+                                first = e;
+                            }
+                            last = e;
+                            n += 1;
+                            bits &= bits - 1;
+                        }
+                        mask.words[w] |= pbits;
+                        mask.extend_dirty(first, last);
+                        merged += n;
+                        self.stats.merged_elems += n as u64;
+                        self.stats.merged_bytes += (n * 4) as u64;
                     }
-                    self.data[id][e] = part.data[id][e];
-                    self.written[id][e] = true;
-                    merged += 1;
                 }
             }
         }
         Ok(merged)
     }
 
-    /// Take a snapshot of a buffer's contents.
+    /// Take a snapshot of a buffer's contents (contiguous copy).
     pub fn snapshot(&self, id: usize) -> Vec<f32> {
-        self.data[id].clone()
+        let buf = &self.bufs[id];
+        let mut out = Vec::with_capacity(buf.len);
+        for (p, page) in buf.pages.iter().enumerate() {
+            let take = (buf.len - p * PAGE_ELEMS).min(PAGE_ELEMS);
+            out.extend_from_slice(&page[..take]);
+        }
+        out
     }
 
-    /// Direct slice access (read-only).
-    pub fn slice(&self, id: usize) -> &[f32] {
-        &self.data[id]
+    /// Return every uniquely-owned page to this instance's pool (no-op
+    /// without one). Call when execution is done and outputs have been
+    /// snapshotted; the next request's allocations then recycle the
+    /// pages instead of hitting the allocator.
+    pub fn release(mut self) {
+        let Some(pool) = self.pool.take() else { return };
+        for buf in self.bufs.drain(..) {
+            for page in buf.pages {
+                pool.put_page(page);
+            }
+        }
+    }
+
+    /// How many of a buffer's pages are physically shared with the same
+    /// buffer of `other` (test introspection for CoW semantics).
+    pub fn pages_shared_with(&self, other: &Buffers, id: usize) -> usize {
+        self.bufs[id]
+            .pages
+            .iter()
+            .zip(&other.bufs[id].pages)
+            .filter(|(a, b)| Arc::ptr_eq(a, b))
+            .count()
+    }
+
+    /// Number of storage pages backing a buffer.
+    pub fn page_count(&self, id: usize) -> usize {
+        self.bufs[id].pages.len()
     }
 }
 
@@ -232,11 +634,56 @@ mod tests {
     }
 
     #[test]
+    fn id_of_resolves_first_allocation_on_duplicates() {
+        let mut b = Buffers::new();
+        let first = b.alloc("scratch", 4);
+        let second = b.alloc("scratch", 8);
+        assert_ne!(first, second);
+        assert_eq!(b.id_of("scratch"), Some(first));
+        assert_eq!(b.id_of("absent"), None);
+    }
+
+    #[test]
+    fn fork_shares_all_pages_and_reads_parent_data() {
+        let mut parent = Buffers::new();
+        let w = parent.alloc_init("w", vec![3.0; 3000]);
+        let o = parent.alloc("o", 3000);
+        let fork = parent.fork();
+        // An aliased fork reads the parent's data without copying.
+        assert_eq!(fork.read(w, 2999).unwrap(), 3.0);
+        assert_eq!(fork.pages_shared_with(&parent, w), parent.page_count(w));
+        assert_eq!(fork.pages_shared_with(&parent, o), parent.page_count(o));
+        assert_eq!(fork.stats(), StorageStats::default());
+    }
+
+    #[test]
+    fn first_write_unshares_exactly_one_page() {
+        let mut parent = Buffers::new();
+        let w = parent.alloc_init("w", vec![1.0; 3000]);
+        let o = parent.alloc("o", 3000); // 3 pages
+        let mut fork = parent.fork();
+        fork.store(o, 5, 9.0, AggOp::Assign, false).unwrap();
+        // Only the written page of the written buffer un-shared.
+        assert_eq!(fork.pages_shared_with(&parent, o), parent.page_count(o) - 1);
+        assert_eq!(fork.pages_shared_with(&parent, w), parent.page_count(w));
+        // The parent is unaffected.
+        assert_eq!(parent.read(o, 5).unwrap(), 0.0);
+        assert!(!parent.written_any(o));
+        assert_eq!(fork.read(o, 5).unwrap(), 9.0);
+        // The copy is accounted: one page plus the buffer's mask.
+        let expected = (PAGE_ELEMS * 4) as u64 + (3000usize.div_ceil(64) * 8) as u64;
+        assert_eq!(fork.stats().cow_bytes, expected);
+        // A second write to the same page costs nothing further.
+        fork.store(o, 6, 8.0, AggOp::Assign, false).unwrap();
+        assert_eq!(fork.stats().cow_bytes, expected);
+    }
+
+    #[test]
     fn merge_disjoint_combines_worker_partitions() {
         let mut master = Buffers::new();
         let id = master.alloc("o", 4);
-        let mut w0 = master.clone();
-        let mut w1 = master.clone();
+        let mut w0 = master.fork();
+        let mut w1 = master.fork();
         w0.store(id, 0, 1.0, AggOp::Assign, false).unwrap();
         w0.store(id, 1, 2.0, AggOp::Assign, false).unwrap();
         w1.store(id, 2, 3.0, AggOp::Assign, false).unwrap();
@@ -251,12 +698,93 @@ mod tests {
     fn merge_disjoint_rejects_overlapping_writes() {
         let mut master = Buffers::new();
         let id = master.alloc("o", 2);
-        let mut w0 = master.clone();
-        let mut w1 = master.clone();
+        let mut w0 = master.fork();
+        let mut w1 = master.fork();
         w0.store(id, 0, 1.0, AggOp::Assign, false).unwrap();
         w1.store(id, 0, 9.0, AggOp::Assign, false).unwrap();
         let e = master.merge_disjoint(&[w0, w1], &[id]).unwrap_err();
         assert!(e.contains("disjointness"), "{e}");
+    }
+
+    #[test]
+    fn merge_checks_shape_drift_even_without_writes() {
+        // A drifted partition must error even though it wrote nothing —
+        // the dirty-range skip must not hide structural corruption.
+        let mut master = Buffers::new();
+        let id = master.alloc("o", 4);
+        let mut drifted = Buffers::new();
+        let did = drifted.alloc("o", 8);
+        assert_eq!(id, did);
+        let e = master.merge_disjoint(&[drifted], &[id]).unwrap_err();
+        assert!(e.contains("shape drift"), "{e}");
+    }
+
+    #[test]
+    fn merge_multiple_buffers_and_skips_untouched_partitions() {
+        let mut master = Buffers::new();
+        let a = master.alloc("a", 6);
+        let b = master.alloc("b", 6);
+        let mut w0 = master.fork();
+        let mut w1 = master.fork();
+        // w0 writes only `a`, w1 writes only `b`: each partition is
+        // skipped entirely for the buffer it never touched.
+        w0.store(a, 1, 1.5, AggOp::Assign, false).unwrap();
+        w1.store(b, 4, 4.5, AggOp::Assign, false).unwrap();
+        assert_eq!(w0.dirty_range(b), None);
+        assert_eq!(w1.dirty_range(a), None);
+        let n = master.merge_disjoint(&[w0, w1], &[a, b]).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(master.read(a, 1).unwrap(), 1.5);
+        assert_eq!(master.read(b, 4).unwrap(), 4.5);
+        assert_eq!(master.stats().merged_elems, 2);
+    }
+
+    #[test]
+    fn merge_adopts_fully_written_pages_by_pointer() {
+        let len = 3 * PAGE_ELEMS;
+        let mut master = Buffers::new();
+        let id = master.alloc("o", len);
+        let mut w0 = master.fork();
+        let mut w1 = master.fork();
+        for e in 0..(len / 2) {
+            w0.store(id, e as i64, 1.0, AggOp::Assign, false).unwrap();
+        }
+        for e in (len / 2)..len {
+            w1.store(id, e as i64, 2.0, AggOp::Assign, false).unwrap();
+        }
+        let n = master.merge_disjoint(&[w0, w1], &[id]).unwrap();
+        assert_eq!(n, len);
+        // Page 0 (w0) and page 2 (w1) are fully written by one worker
+        // each and adopt by pointer; page 1 is split and merges
+        // element-wise.
+        let st = master.stats();
+        assert_eq!(st.adopted_pages, 2);
+        assert_eq!(st.merged_bytes, (PAGE_ELEMS * 4) as u64);
+        assert_eq!(st.merged_elems, len as u64);
+        let snap = master.snapshot(id);
+        assert!(snap[..len / 2].iter().all(|&v| v == 1.0));
+        assert!(snap[len / 2..].iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn post_merge_parent_sees_all_worker_writes() {
+        let mut master = Buffers::new();
+        let id = master.alloc("o", 2100);
+        let forks = [(0usize, 700usize), (700, 1400), (1400, 2100)];
+        let mut parts = Vec::new();
+        for &(lo, hi) in &forks {
+            let mut f = master.fork();
+            for e in lo..hi {
+                f.store(id, e as i64, e as f32, AggOp::Assign, false).unwrap();
+            }
+            parts.push(f);
+        }
+        let n = master.merge_disjoint(&parts, &[id]).unwrap();
+        assert_eq!(n, 2100);
+        let snap = master.snapshot(id);
+        for (e, v) in snap.iter().enumerate() {
+            assert_eq!(*v, e as f32, "element {e}");
+        }
     }
 
     #[test]
@@ -267,5 +795,60 @@ mod tests {
         b.reset_written(id);
         b.store(id, 0, 9.0, AggOp::Assign, false).unwrap();
         assert_eq!(b.read(id, 0).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn dirty_range_tracks_write_bounds() {
+        let mut b = Buffers::new();
+        let id = b.alloc("t", 5000);
+        assert_eq!(b.dirty_range(id), None);
+        b.store(id, 1200, 1.0, AggOp::Assign, false).unwrap();
+        assert_eq!(b.dirty_range(id), Some((1200, 1200)));
+        b.store(id, 40, 1.0, AggOp::Assign, false).unwrap();
+        b.store(id, 4999, 1.0, AggOp::Assign, false).unwrap();
+        assert_eq!(b.dirty_range(id), Some((40, 4999)));
+        b.reset_written(id);
+        assert_eq!(b.dirty_range(id), None);
+        assert!(!b.written_any(id));
+    }
+
+    #[test]
+    fn pool_recycles_pages_across_instances() {
+        let pool = Arc::new(BufferPool::with_capacity(64));
+        let mut a = Buffers::with_pool(Some(Arc::clone(&pool)));
+        let id = a.alloc("x", 2 * PAGE_ELEMS);
+        a.store(id, 0, 7.0, AggOp::Assign, false).unwrap();
+        a.release();
+        assert_eq!(pool.free_pages(), 2);
+        assert_eq!(pool.returned.load(Relaxed), 2);
+        // The next instance reuses the pages, zeroed.
+        let mut b = Buffers::with_pool(Some(Arc::clone(&pool)));
+        let id2 = b.alloc("y", 2 * PAGE_ELEMS);
+        assert_eq!(pool.hits.load(Relaxed), 2);
+        assert_eq!(b.read(id2, 0).unwrap(), 0.0);
+        b.release();
+    }
+
+    #[test]
+    fn pool_never_recycles_shared_pages() {
+        let pool = Arc::new(BufferPool::with_capacity(64));
+        let mut a = Buffers::with_pool(Some(Arc::clone(&pool)));
+        a.alloc("x", PAGE_ELEMS);
+        let fork = a.fork(); // shares the page
+        a.release();
+        assert_eq!(pool.free_pages(), 0, "shared pages must not be pooled");
+        drop(fork);
+    }
+
+    #[test]
+    fn zero_length_buffers_are_inert() {
+        let mut b = Buffers::new();
+        let id = b.alloc("z", 0);
+        assert_eq!(b.page_count(id), 0);
+        assert!(!b.written_any(id));
+        assert!(b.read(id, 0).is_err());
+        assert_eq!(b.snapshot(id), Vec::<f32>::new());
+        let id2 = b.alloc_init("z2", Vec::new());
+        assert!(!b.written_any(id2));
     }
 }

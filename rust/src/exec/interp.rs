@@ -1,11 +1,19 @@
 //! The interpreter proper: executes a [`Program`] over real buffers.
+//!
+//! Name-lookup audit: this naive engine deliberately resolves scope
+//! names through string maps *per iteration* — it is the readable
+//! ground truth, not a hot path. The only name lookups that matter for
+//! performance are `Buffers::id_of` (now a map, O(log n)) at
+//! allocation/output-collection time; everything per-iteration-hot
+//! lives in `plan.rs`, which slot-resolves names once per block.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::ir::{AggOp, Block, BufKind, Program, RefDir, Statement};
 use crate::poly::Affine;
 
-use super::buffer::Buffers;
+use super::buffer::{BufferPool, Buffers};
 use super::trace::{AccessEvent, NullSink, Sink};
 
 /// Execution options.
@@ -22,6 +30,11 @@ pub struct ExecOptions {
     /// `1` selects serial execution — always available as the fallback,
     /// so any divergence can be bisected by re-running serially.
     pub workers: usize,
+    /// Optional page pool: buffers draw their backing pages from it and
+    /// return them when the run finishes, so repeated requests (the
+    /// coordinator's service path) recycle allocations instead of
+    /// paying fresh heap per request. `None` = plain allocation.
+    pub pool: Option<Arc<BufferPool>>,
 }
 
 impl ExecOptions {
@@ -34,7 +47,12 @@ impl ExecOptions {
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { relaxed_assign: false, max_iterations: 200_000_000, workers: 1 }
+        ExecOptions {
+            relaxed_assign: false,
+            max_iterations: 200_000_000,
+            workers: 1,
+            pool: None,
+        }
     }
 }
 
@@ -107,7 +125,7 @@ pub fn run_program_sink(
     opts: &ExecOptions,
     sink: &mut dyn Sink,
 ) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
-    let mut bufs = Buffers::new();
+    let mut bufs = Buffers::with_pool(opts.pool.clone());
     // Allocate program buffers.
     for b in &program.buffers {
         let span = b.ttype.span_elems() as usize;
@@ -173,12 +191,13 @@ pub fn run_program_sink(
         exec.exec_stmt(st, &empty_env, &scope, &program.main.name)?;
     }
 
-    // Collect outputs.
+    // Collect outputs, then hand the pages back to the pool (if any).
     let mut out = BTreeMap::new();
     for b in program.buffers_of(BufKind::Output) {
         let id = bufs.id_of(&b.name).unwrap();
         out.insert(b.name.clone(), bufs.snapshot(id));
     }
+    bufs.release();
     Ok(out)
 }
 

@@ -7,7 +7,7 @@
 //!   lexicographic order — any order is legal by construction);
 //! * the first write to a buffer element *assigns* regardless of the
 //!   aggregation operation; subsequent writes combine with the
-//!   refinement's aggregation (`written` bitmasks track this);
+//!   refinement's aggregation (write masks track this);
 //! * statements within one iteration run serially.
 //!
 //! The interpreter is the ground truth that optimization passes are
@@ -20,7 +20,7 @@
 //! observes every element-granularity load/store, feeding the cache
 //! simulator (`sim`) and the footprint renderings of Figures 2–4.
 //!
-//! # Parallel execution
+//! # Execution engines
 //!
 //! Three engines share these semantics:
 //!
@@ -30,21 +30,49 @@
 //! | serial plan | [`plan`] | slot-resolved hot path; default |
 //! | parallel plan | [`parallel`] | plan execution sliced across compute units |
 //!
+//! [`run_program_with`] dispatches between the engines from
+//! [`ExecOptions`]; [`run_program`] is the serial convenience wrapper.
+//!
+//! # Memory model
+//!
+//! All engines execute over the storage subsystem in [`buffer`]:
+//! per-buffer **paged copy-on-write storage** (`Arc`-shared 4 KiB
+//! pages) with a compact write-mask bitset and **dirty-range
+//! tracking**. The properties the engines rely on:
+//!
+//! * **O(1) forks.** [`Buffers::fork`] copies page *pointers*, not
+//!   data. The parallel engine forks one buffer set per worker per op;
+//!   a worker pays only for the pages it actually writes (un-shared on
+//!   first write), so fork traffic is O(write set), never O(total live
+//!   buffer bytes). Per-op byte counts surface in [`ParallelReport`].
+//! * **Dirty-range merges.** [`Buffers::merge_disjoint`] skips buffers
+//!   a worker never wrote, scans only dirty word ranges otherwise, and
+//!   adopts fully-written interior pages by pointer. It still
+//!   *verifies* write disjointness element-by-element at runtime — the
+//!   differential harness (`rust/tests/differential.rs`, naive ≡
+//!   serial ≡ parallel on randomized networks) relies on that check to
+//!   catch analysis bugs loudly.
+//! * **Pre-resolved regions.** The plan compiler resolves buffer names
+//!   to ids once per program ([`plan`]'s root scope) and folds each
+//!   parallel chunk's write refinements into flat extents, so workers
+//!   receive read-shared inputs plus a known private output region
+//!   that their observed dirty range is checked against.
+//! * **Page recycling.** A [`BufferPool`] recycles page allocations
+//!   across requests (the coordinator service path shares one pool);
+//!   [`ExecOptions::pool`] opts a run in.
+//!
+//! # Parallel execution
+//!
 //! The parallel engine implements the paper's "multiple compute units"
 //! claim: a per-block disjointness analysis (write/write and read/write
 //! overlap across one chosen index dimension, via `poly::overlap`)
 //! selects a parallel-safe outer dimension, whose range is chunked
 //! across a worker pool sized by [`ExecOptions::workers`] (typically
-//! `MachineConfig::compute_units`). Workers run on private buffer
-//! partitions — no locks — and disjoint writes are merged (and
-//! re-verified) afterwards. Results are bit-exact with serial
-//! execution, and serial execution remains a runtime toggle
-//! (`workers: 1`) so any discrepancy can be bisected; the differential
-//! harness in `rust/tests/differential.rs` pins naive ≡ serial ≡
-//! parallel on randomized networks.
-//!
-//! [`run_program_with`] dispatches between the engines from
-//! [`ExecOptions`]; [`run_program`] is the serial convenience wrapper.
+//! `MachineConfig::compute_units`). Workers run on copy-on-write forks
+//! — no locks — and disjoint writes are merged (and re-verified)
+//! afterwards. Results are bit-exact with serial execution, and serial
+//! execution remains a runtime toggle (`workers: 1`) so any
+//! discrepancy can be bisected.
 
 pub mod buffer;
 pub mod interp;
@@ -52,7 +80,7 @@ pub mod parallel;
 pub mod plan;
 pub mod trace;
 
-pub use buffer::Buffers;
+pub use buffer::{BufferPool, Buffers, StorageStats, PAGE_ELEMS};
 pub use interp::{run_program, run_program_sink, run_program_with, ExecError, ExecOptions};
 pub use parallel::{
     analyze_program, best_parallel_dim, parallel_dims, run_program_parallel, OpParallelism,

@@ -18,10 +18,16 @@
 //!    dimension's range is split into contiguous chunks, one per worker
 //!    (worker count from [`crate::exec::ExecOptions::workers`],
 //!    typically a target's `MachineConfig::compute_units`). Each worker
-//!    runs the plan-compiled chunk on a **private clone** of the buffer
-//!    set — no locks, no atomics — and the master then merges the
-//!    written elements back ([`crate::exec::Buffers::merge_disjoint`]),
-//!    verifying disjointness at runtime.
+//!    runs the plan-compiled chunk on a **copy-on-write fork** of the
+//!    buffer set — no locks, no atomics, and no data copied up front:
+//!    a worker lazily un-shares only the pages it writes, so its
+//!    memory traffic is O(its write set) instead of O(total live
+//!    buffer bytes). The plan layer pre-resolves each chunk's flat
+//!    write extents (its private output region), the master merges the
+//!    dirty ranges back ([`crate::exec::Buffers::merge_disjoint`]) —
+//!    adopting fully-written pages by pointer — and re-verifies
+//!    disjointness at runtime. Fork and merge byte counts are reported
+//!    per op in [`ParallelReport`].
 //!
 //! Results are **bit-exact** with serial execution: all writes to one
 //! element share a single value of the parallel dimension (that is what
@@ -58,6 +64,15 @@ pub struct OpParallelism {
     pub workers: usize,
     /// Human-readable decision rationale.
     pub reason: String,
+    /// Bytes the workers memcpy'd to materialize private CoW pages and
+    /// masks while running this op (the true fork cost — O(write set),
+    /// not O(total live buffer bytes); 0 for serial ops and static
+    /// analysis).
+    pub fork_bytes: u64,
+    /// Bytes memcpy'd merging worker write sets back into the master
+    /// (element-wise copies plus master-side CoW; pages adopted by
+    /// pointer contribute nothing).
+    pub merge_bytes: u64,
 }
 
 /// The parallel schedule of a whole program run (or, from
@@ -73,14 +88,26 @@ impl ParallelReport {
         self.ops.iter().filter(|o| o.dim.is_some()).count()
     }
 
+    /// Total bytes copied by workers materializing private CoW pages
+    /// across all ops (the run's fork traffic).
+    pub fn fork_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.fork_bytes).sum()
+    }
+
+    /// Total bytes copied merging worker partitions back across all ops.
+    pub fn merge_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.merge_bytes).sum()
+    }
+
     /// One line per op.
     pub fn summary(&self) -> String {
         let mut s = String::new();
         for o in &self.ops {
             match &o.dim {
                 Some(d) => s.push_str(&format!(
-                    "  op {:<24} parallel over {d:<6} (range {}, {} workers)\n",
-                    o.op, o.range, o.workers
+                    "  op {:<24} parallel over {d:<6} (range {}, {} workers, \
+                     fork {} B, merge {} B)\n",
+                    o.op, o.range, o.workers, o.fork_bytes, o.merge_bytes
                 )),
                 None => s.push_str(&format!("  op {:<24} serial: {}\n", o.op, o.reason)),
             }
@@ -173,7 +200,7 @@ fn dim_is_safe(b: &Block, space: &Polyhedron, d: &str) -> bool {
 
 /// All parallel-safe ranged dimensions of a block, with their ranges.
 /// (Exhaustive; use [`best_parallel_dim`] on hot paths — it probes
-/// candidates largest-range-first and stops at the first safe one.)
+/// candidates best-first and stops at the first safe one.)
 pub fn parallel_dims(b: &Block) -> Vec<(String, u64)> {
     let space = b.iteration_space();
     b.idxs
@@ -184,18 +211,52 @@ pub fn parallel_dims(b: &Block) -> Vec<(String, u64)> {
         .collect()
 }
 
-/// The widest provably-safe parallel dimension of a block, if any.
-pub fn best_parallel_dim(b: &Block) -> Option<(String, u64)> {
-    let mut cands: Vec<(String, u64)> = b
+/// How contiguous the per-worker write regions are if `d` is chunked:
+/// for each write refinement, score by how *outer* (early, i.e.
+/// largest-stride in the canonical layout) the first access dimension
+/// driven by `d` is. Chunking the outermost write dimension gives each
+/// worker a contiguous private output region, which is what lets the
+/// copy-on-write storage un-share the fewest pages per worker and the
+/// merge adopt whole pages by pointer instead of copying elements.
+fn write_locality(b: &Block, d: &str) -> usize {
+    let mut score = 0usize;
+    for r in &b.refs {
+        if !r.dir.is_write() {
+            continue;
+        }
+        let rank = r.access.len();
+        for (k, a) in r.access.iter().enumerate() {
+            if a.terms().any(|(v, c)| v == d && c != 0) {
+                score += rank - k;
+                break;
+            }
+        }
+    }
+    score
+}
+
+/// The best provably-safe parallel dimension of a block for a
+/// `workers`-unit machine, if any. Candidates wide enough to feed every
+/// worker (`range >= workers`) are preferred outright — a narrow outer
+/// dim must not cap usable parallelism; among those, the most
+/// write-contiguous dim wins (see [`write_locality`]; chunking the
+/// outermost write dimension keeps worker write sets page-local), with
+/// range as the tie-break (stable: declaration order breaks remaining
+/// ties).
+pub fn best_parallel_dim(b: &Block, workers: usize) -> Option<(String, u64)> {
+    let wide = workers.max(2) as u64;
+    let mut cands: Vec<(bool, usize, u64, String)> = b
         .idxs
         .iter()
         .filter(|i| i.affine.is_none() && i.range >= 2)
-        .map(|i| (i.name.clone(), i.range))
+        .map(|i| (i.range >= wide, write_locality(b, &i.name), i.range, i.name.clone()))
         .collect();
-    // Largest range first (stable: declaration order breaks ties).
-    cands.sort_by(|a, b| b.1.cmp(&a.1));
+    cands.sort_by_key(|c| std::cmp::Reverse((c.0, c.1, c.2)));
     let space = b.iteration_space();
-    cands.into_iter().find(|(d, _)| dim_is_safe(b, &space, d))
+    cands
+        .into_iter()
+        .map(|(_, _, range, d)| (d, range))
+        .find(|(d, _)| dim_is_safe(b, &space, d))
 }
 
 /// Static schedule for a program: the decision [`run_program_parallel`]
@@ -207,7 +268,7 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
     let mut report = ParallelReport::default();
     for st in &p.main.stmts {
         let Statement::Block(b) = st else { continue };
-        let best = best_parallel_dim(b);
+        let best = best_parallel_dim(b, workers);
         report.ops.push(match best {
             Some((dim, range)) if workers >= 2 => OpParallelism {
                 op: b.name.clone(),
@@ -215,6 +276,8 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
                 reason: format!("disjoint writes across {dim}"),
                 dim: Some(dim),
                 range,
+                fork_bytes: 0,
+                merge_bytes: 0,
             },
             Some((dim, range)) => OpParallelism {
                 op: b.name.clone(),
@@ -222,6 +285,8 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
                 range,
                 workers: 1,
                 reason: format!("single compute unit (dim {dim} is safe)"),
+                fork_bytes: 0,
+                merge_bytes: 0,
             },
             None => OpParallelism {
                 op: b.name.clone(),
@@ -229,6 +294,8 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
                 range: 0,
                 workers: 1,
                 reason: "no provably disjoint outer dimension".into(),
+                fork_bytes: 0,
+                merge_bytes: 0,
             },
         });
     }
@@ -320,7 +387,7 @@ fn decide(
     if write_ids.is_empty() {
         return Decision::Serial("no write refinements".into());
     }
-    match best_parallel_dim(b) {
+    match best_parallel_dim(b, workers) {
         Some((dim, range)) => Decision::Parallel {
             dim,
             range,
@@ -352,6 +419,8 @@ fn run_op(
                     range: 0,
                     workers: 1,
                     reason,
+                    fork_bytes: 0,
+                    merge_bytes: 0,
                 },
                 executed,
             ));
@@ -364,13 +433,21 @@ fn run_op(
         .iter()
         .map(|&(lo, len)| chunk_block(b, &dim, lo as i64, len))
         .collect();
-    // Fork: one private buffer clone per worker (lock-free by
-    // construction — workers never share mutable state). This is
-    // O(total buffer state) per worker; copy-on-write sharing of the
-    // read-only buffers is the known next optimization.
+    // Pre-resolved private output regions: the plan layer folds each
+    // chunk's write refinements into flat extents before any worker
+    // runs, so a worker's writes can be checked against the region the
+    // analysis assigned to it (None = not statically resolvable; the
+    // bit-exact merge verification below still runs either way).
+    let extents: Vec<Option<Vec<(usize, i64, i64)>>> =
+        blocks.iter().map(|blk| plan::flat_write_extents(blk, scope)).collect();
+    // Fork: one copy-on-write fork per worker (lock-free by
+    // construction — workers never share mutable state). The fork
+    // itself copies no data; a worker pays O(its write set) lazily as
+    // it un-shares the pages it writes, and those bytes are accounted
+    // in its `StorageStats`.
     let mut locals: Vec<Buffers> = Vec::with_capacity(blocks.len());
     for _ in &blocks {
-        locals.push(master.clone());
+        locals.push(master.fork());
     }
     let results: Vec<Result<(Buffers, u64), ExecError>> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(blocks.len());
@@ -399,9 +476,58 @@ fn run_op(
         executed_after = executed_after.max(done);
         parts.push(part);
     }
-    master
-        .merge_disjoint(&parts, &write_ids)
-        .map_err(|m| ExecError { block: b.name.clone(), message: m })?;
+    // Fork traffic: what each worker actually materialized. While here,
+    // verify every worker stayed inside its pre-resolved write extent —
+    // O(1) per buffer per worker, and a direct check that the chunking
+    // really handed out private output regions.
+    let mut fork_bytes = 0u64;
+    let mut verdict: Result<(), ExecError> = Ok(());
+    'verify: for (i, part) in parts.iter().enumerate() {
+        fork_bytes += part.stats().cow_bytes;
+        let Some(ext) = &extents[i] else { continue };
+        for &id in &write_ids {
+            let Some((dlo, dhi)) = part.dirty_range(id) else { continue };
+            let mut lo = i64::MAX;
+            let mut hi = i64::MIN;
+            for &(bid, elo, ehi) in ext {
+                if bid == id {
+                    lo = lo.min(elo);
+                    hi = hi.max(ehi);
+                }
+            }
+            if lo > hi {
+                continue;
+            }
+            if (dlo as i64) < lo || (dhi as i64) > hi {
+                verdict = Err(ExecError {
+                    block: b.name.clone(),
+                    message: format!(
+                        "worker {i} wrote {}[{dlo}..={dhi}] outside its predicted \
+                         write extent [{lo}..={hi}] — chunking analysis violated",
+                        master.name_of(id)
+                    ),
+                });
+                break 'verify;
+            }
+        }
+    }
+    let before = master.stats();
+    if verdict.is_ok() {
+        verdict = master
+            .merge_disjoint(&parts, &write_ids)
+            .map(|_| ())
+            .map_err(|m| ExecError { block: b.name.clone(), message: m });
+    }
+    let after = master.stats();
+    let merge_bytes =
+        (after.merged_bytes - before.merged_bytes) + (after.cow_bytes - before.cow_bytes);
+    // Hand each worker's private pages back to the pool (no-op without
+    // one) so the next op's workers recycle them — on the error paths
+    // too, so a failed op does not strand the pool.
+    for part in parts {
+        part.release();
+    }
+    verdict?;
     Ok((
         OpParallelism {
             op: b.name.clone(),
@@ -409,6 +535,8 @@ fn run_op(
             workers: chunks.len(),
             dim: Some(dim),
             range,
+            fork_bytes,
+            merge_bytes,
         },
         executed_after,
     ))
@@ -436,15 +564,24 @@ pub fn run_program_parallel(
 ) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), ExecError> {
     let err = |m: String| ExecError { block: "main".into(), message: m };
     let workers = opts.workers.max(1);
-    let mut bufs = plan::alloc_program_buffers(program, inputs)?;
+    let mut bufs = plan::alloc_program_buffers(program, inputs, opts.pool.clone())?;
     let scope = plan::build_root_scope(program, &mut bufs)?;
     let mut report = ParallelReport::default();
     let mut executed = 0u64;
     for st in &program.main.stmts {
         let Statement::Block(b) = st else {
+            bufs.release();
             return Err(err("main-level statements must be blocks".into()));
         };
-        let (op, done) = run_op(&mut bufs, opts, b, &scope, workers, executed)?;
+        let (op, done) = match run_op(&mut bufs, opts, b, &scope, workers, executed) {
+            Ok(v) => v,
+            Err(e) => {
+                // Recycle what we can before surfacing the error so a
+                // failed request does not strand the service's pool.
+                bufs.release();
+                return Err(e);
+            }
+        };
         executed = done;
         report.ops.push(op);
     }
@@ -453,6 +590,7 @@ pub fn run_program_parallel(
         let id = bufs.id_of(&bdef.name).unwrap();
         out.insert(bdef.name.clone(), bufs.snapshot(id));
     }
+    bufs.release();
     Ok((out, report))
 }
 
@@ -486,11 +624,14 @@ mod tests {
         let report = assert_bit_exact(&p, 11, 4);
         assert_eq!(report.parallel_ops(), 1, "{}", report.summary());
         let op = &report.ops[0];
-        // Largest safe range wins: y (16, declared before k). Reduction
+        // The outermost write dimension wins (x drives O's first access
+        // dim, so chunks are contiguous in the output). Reduction
         // indexes i/j/c must never be chosen.
-        assert_eq!(op.dim.as_deref(), Some("y"));
-        assert_eq!(op.range, 16);
+        assert_eq!(op.dim.as_deref(), Some("x"));
+        assert_eq!(op.range, 12);
         assert_eq!(op.workers, 4);
+        // Contiguous chunking means real fork/merge traffic is reported.
+        assert!(op.fork_bytes > 0);
     }
 
     #[test]
@@ -510,6 +651,65 @@ mod tests {
         let p = ops::cnn_program();
         let report = assert_bit_exact(&p, 12, 3);
         assert!(report.parallel_ops() >= 4, "{}", report.summary());
+    }
+
+    #[test]
+    fn fork_traffic_is_o_write_set_not_o_live_bytes() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 31);
+        let (_, report) = run_program_parallel(&p, &inputs, &parallel_opts(4)).unwrap();
+        assert!(report.parallel_ops() >= 4, "{}", report.summary());
+        let total_bytes: u64 = p.buffers.iter().map(|b| b.ttype.span_elems() * 4).sum();
+        // What the old deep-clone fork would have copied: the whole
+        // live buffer set into every worker of every parallel op.
+        let old_model: u64 = report
+            .ops
+            .iter()
+            .filter(|o| o.dim.is_some())
+            .map(|o| o.workers as u64 * total_bytes)
+            .sum();
+        let fork = report.fork_bytes();
+        assert!(fork > 0, "parallel ops must materialize some private pages");
+        assert!(
+            fork < old_model / 4,
+            "fork traffic {fork} B is not O(write set): old model {old_model} B\n{}",
+            report.summary()
+        );
+        // Serial ops never report fork traffic.
+        for o in report.ops.iter().filter(|o| o.dim.is_none()) {
+            assert_eq!(o.fork_bytes, 0, "{}", o.op);
+            assert_eq!(o.merge_bytes, 0, "{}", o.op);
+        }
+    }
+
+    #[test]
+    fn pooled_execution_matches_and_recycles_pages() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 33);
+        let pool = std::sync::Arc::new(crate::exec::BufferPool::default());
+        let opts = ExecOptions {
+            workers: 3,
+            pool: Some(std::sync::Arc::clone(&pool)),
+            ..ExecOptions::default()
+        };
+        let (a, _) = run_program_parallel(&p, &inputs, &opts).unwrap();
+        let (b, _) = run_program_parallel(&p, &inputs, &opts).unwrap();
+        assert_eq!(a, b, "pooled reruns must be bit-exact");
+        assert!(
+            pool.hits.load(Relaxed) > 0,
+            "second request must recycle pooled pages ({})",
+            pool.summary()
+        );
+        // And the pooled run agrees with the plain serial plan.
+        let serial = super::super::plan::run_program_planned(
+            &p,
+            &inputs,
+            &ExecOptions::default(),
+            &mut crate::exec::NullSink,
+        )
+        .unwrap();
+        assert_eq!(serial, a);
     }
 
     #[test]

@@ -214,29 +214,41 @@ pub(crate) struct View {
 }
 
 /// The resolved root scope of a program: one view per `main` refinement,
-/// in declaration order. Shared between the serial planned path and the
-/// parallel executor (`exec::parallel`).
+/// in declaration order, plus a pre-resolved name→slot index so buffer
+/// lookups by name are O(log n) (the parallel engine queries one per
+/// write refinement per op; the old linear scan was the only name
+/// lookup left on that path). Shared between the serial planned path
+/// and the parallel executor (`exec::parallel`).
 #[derive(Debug, Clone)]
 pub(crate) struct RootScope {
     pub(crate) views: Vec<View>,
     pub(crate) strides: Vec<Vec<i64>>,
     pub(crate) names: Vec<String>,
+    index: BTreeMap<String, usize>,
 }
 
 impl RootScope {
-    /// Buffer id behind a root-scope name (`main` refinement `into`).
+    /// Slot of a root-scope name (`main` refinement `into`).
+    pub(crate) fn slot_of(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Buffer id behind a root-scope name.
     pub(crate) fn buffer_of(&self, name: &str) -> Option<usize> {
-        self.names.iter().position(|n| n == name).map(|i| self.views[i].buf)
+        self.slot_of(name).map(|i| self.views[i].buf)
     }
 }
 
 /// Allocate a program's buffers, filling inputs/weights from `inputs`.
+/// Pages come from `pool` when one is supplied (see
+/// [`super::buffer::BufferPool`]).
 pub(crate) fn alloc_program_buffers(
     program: &Program,
     inputs: &BTreeMap<String, Vec<f32>>,
+    pool: Option<std::sync::Arc<super::buffer::BufferPool>>,
 ) -> Result<Buffers, ExecError> {
     let err = |m: String| ExecError { block: "main".into(), message: m };
-    let mut bufs = Buffers::new();
+    let mut bufs = Buffers::with_pool(pool);
     for b in &program.buffers {
         let span = b.ttype.span_elems() as usize;
         match b.kind {
@@ -291,7 +303,81 @@ pub(crate) fn build_root_scope(
         names.push(r.into.clone());
     }
     let strides: Vec<Vec<i64>> = program.main.refs.iter().map(|r| r.ttype.strides()).collect();
-    Ok(RootScope { views, strides, names })
+    let mut index = BTreeMap::new();
+    for (slot, name) in names.iter().enumerate() {
+        // First declaration wins, matching the old linear scan.
+        index.entry(name.clone()).or_insert(slot);
+    }
+    Ok(RootScope { views, strides, names, index })
+}
+
+/// Conservative flat write extents of a top-level op block against the
+/// root scope: for each write refinement, the target buffer id plus the
+/// inclusive `[lo, hi]` flat element range its iteration box (including
+/// the full view footprint nested blocks can refine) may touch.
+///
+/// The parallel engine pre-computes this per worker chunk so each
+/// worker's private output region is known before it runs; after the
+/// run, a worker's observed dirty range must fall inside its predicted
+/// extent (an analysis-soundness check that costs O(1) per buffer).
+/// Returns `None` when an access uses an index the block does not
+/// declare or a refinement does not resolve — callers then skip the
+/// check rather than risk a false positive.
+pub(crate) fn flat_write_extents(
+    block: &Block,
+    scope: &RootScope,
+) -> Option<Vec<(usize, i64, i64)>> {
+    let mut out: Vec<(usize, i64, i64)> = Vec::new();
+    for r in &block.refs {
+        if !r.dir.is_write() {
+            continue;
+        }
+        let slot = scope.slot_of(&r.from)?;
+        let view = &scope.views[slot];
+        let pstr = &scope.strides[slot];
+        if pstr.len() != r.access.len() {
+            return None;
+        }
+        // Fold the per-dimension accesses through the parent strides
+        // into one flat affine: base + Σ coeff·idx.
+        let mut base = view.offset;
+        let mut coeffs: BTreeMap<&str, i64> = BTreeMap::new();
+        for (a, &s) in r.access.iter().zip(pstr) {
+            base += a.offset * s;
+            for (v, c) in a.terms() {
+                *coeffs.entry(v).or_insert(0) += c * s;
+            }
+        }
+        let mut lo = base;
+        let mut hi = base;
+        for (&v, &c) in &coeffs {
+            if c == 0 {
+                continue;
+            }
+            let idx = block.idx(v)?;
+            // Passed indexes have range 1 and contribute nothing; a
+            // top-level op block has none anyway.
+            let top = idx.range.saturating_sub(1) as i64;
+            let span = c * top;
+            if span > 0 {
+                hi += span;
+            } else {
+                lo += span;
+            }
+        }
+        // The refinement's view footprint: nested blocks may touch any
+        // element of the view, not just its origin.
+        for d in &r.ttype.dims {
+            let span = (d.size as i64 - 1).max(0) * d.stride;
+            if span > 0 {
+                hi += span;
+            } else {
+                lo += span;
+            }
+        }
+        out.push((view.buf, lo, hi));
+    }
+    Some(out)
 }
 
 /// Compile and execute one top-level op block against the root scope.
@@ -341,7 +427,7 @@ pub fn run_program_planned<S: Sink>(
     sink: &mut S,
 ) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
     let err = |m: String| ExecError { block: "main".into(), message: m };
-    let mut bufs = alloc_program_buffers(program, inputs)?;
+    let mut bufs = alloc_program_buffers(program, inputs, opts.pool.clone())?;
     let scope = build_root_scope(program, &mut bufs)?;
 
     let mut exec = PlanExec {
@@ -359,12 +445,17 @@ pub fn run_program_planned<S: Sink>(
         let plan = Plan::build(b, &scope.names, &[])
             .map_err(|m| ExecError { block: b.name.clone(), message: m })?;
         exec.run(&plan, &scope.views, &scope.strides, &[])?;
+        // The scratch map is keyed by plan identity; this op's plan is
+        // about to drop, and a later plan allocated at the same address
+        // must not inherit its entries.
+        exec.scratch.clear();
     }
     let mut out = BTreeMap::new();
     for b in program.buffers_of(BufKind::Output) {
         let id = bufs.id_of(&b.name).unwrap();
         out.insert(b.name.clone(), bufs.snapshot(id));
     }
+    bufs.release();
     Ok(out)
 }
 

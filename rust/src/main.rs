@@ -144,15 +144,19 @@ fn cmd_run(args: &Args) -> i32 {
         };
         let t0 = std::time::Instant::now();
         let out = if workers > 1 {
-            let opts = stripe::exec::ExecOptions::with_workers(workers);
             let (out, schedule) =
-                stripe::exec::run_program_parallel(&c.program, &inputs, &opts)
-                    .map_err(|e| e.to_string())?;
+                stripe::coordinator::run_network(&c, &inputs, workers, None)?;
             println!(
                 "parallel schedule ({workers} workers, {}/{} ops parallel):\n{}",
                 schedule.parallel_ops(),
                 schedule.ops.len(),
                 schedule.summary()
+            );
+            println!(
+                "fork traffic {} B (copy-on-write materialization), \
+                 merge traffic {} B",
+                schedule.fork_bytes(),
+                schedule.merge_bytes()
             );
             out
         } else {

@@ -9,11 +9,19 @@
 //! bit. The parallel engine additionally re-verifies write disjointness
 //! while merging worker partitions, so an unsound parallelizability
 //! verdict fails the run loudly rather than corrupting silently.
+//!
+//! The parallel runs share one [`BufferPool`] across the whole sweep:
+//! the copy-on-write storage's page recycling is exercised by 50
+//! heterogeneous networks back to back, so stale-page bugs (a recycled
+//! page leaking a previous request's data) would surface as bit
+//! mismatches against the unpooled naive/serial runs.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use stripe::exec::{
-    run_program_parallel, run_program_planned, run_program_sink, ExecOptions, NullSink,
+    run_program_parallel, run_program_planned, run_program_sink, BufferPool, ExecOptions,
+    NullSink,
 };
 use stripe::graph::{NetworkBuilder, TensorId};
 use stripe::ir::{DType, Program};
@@ -70,17 +78,23 @@ fn gen_inputs(p: &Program, seed: u64) -> BTreeMap<String, Vec<f32>> {
     stripe::passes::equiv::gen_inputs(p, seed)
 }
 
-/// Run all three engines and assert bit-exact agreement. Returns how
+/// Run all three engines and assert bit-exact agreement; the parallel
+/// engine draws its pages from `pool` when one is given. Returns how
 /// many ops the parallel engine actually parallelized.
-fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
+fn differential_case_pooled(
+    p: &Program,
+    seed: u64,
+    workers: usize,
+    pool: Option<Arc<BufferPool>>,
+) -> usize {
     let inputs = gen_inputs(p, seed);
     let naive = run_program_sink(p, &inputs, &ExecOptions::default(), &mut NullSink)
         .unwrap_or_else(|e| panic!("{}: naive failed: {e}", p.name));
     let serial = run_program_planned(p, &inputs, &ExecOptions::default(), &mut NullSink)
         .unwrap_or_else(|e| panic!("{}: serial plan failed: {e}", p.name));
-    let (parallel, report) =
-        run_program_parallel(p, &inputs, &ExecOptions::with_workers(workers))
-            .unwrap_or_else(|e| panic!("{}: parallel plan failed: {e}", p.name));
+    let popts = ExecOptions { workers, pool, ..ExecOptions::default() };
+    let (parallel, report) = run_program_parallel(p, &inputs, &popts)
+        .unwrap_or_else(|e| panic!("{}: parallel plan failed: {e}", p.name));
     assert_eq!(naive, serial, "{}: naive vs serial plan diverged", p.name);
     assert_eq!(
         serial, parallel,
@@ -91,15 +105,23 @@ fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
     report.parallel_ops()
 }
 
+fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
+    differential_case_pooled(p, seed, workers, None)
+}
+
 #[test]
 fn fifty_random_networks_agree_across_all_engines() {
     let mut rng = Rng::new(0xD1FF);
     let mut parallel_ops = 0usize;
     let mut cases = 0usize;
+    // One shared pool across the whole sweep: every parallel run
+    // recycles pages the previous nets released.
+    let pool = Arc::new(BufferPool::default());
     for case in 0..50u64 {
         let p = random_program(case, &mut rng);
         let workers = 1 + rng.below(4) as usize; // 1..=4
-        parallel_ops += differential_case(&p, 1000 + case, workers);
+        parallel_ops +=
+            differential_case_pooled(&p, 1000 + case, workers, Some(Arc::clone(&pool)));
         cases += 1;
     }
     assert_eq!(cases, 50);
@@ -108,6 +130,13 @@ fn fifty_random_networks_agree_across_all_engines() {
     assert!(
         parallel_ops >= 50,
         "only {parallel_ops} parallel op executions across the sweep"
+    );
+    // ... and the pool must have actually recycled pages across nets.
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(
+        pool.hits.load(Relaxed) > 0,
+        "page pool never recycled across the sweep ({})",
+        pool.summary()
     );
 }
 
@@ -138,6 +167,29 @@ fn compiled_networks_agree_across_all_engines() {
             .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
         differential_case(&c.program, 7, cfg.compute_units.max(2));
     }
+}
+
+#[test]
+fn cow_forks_share_until_first_write_and_merge_back() {
+    // The storage contract the parallel engine is built on, exercised
+    // through the public API: aliased forks read parent data for free,
+    // the first write un-shares exactly one page of exactly one buffer,
+    // and after the merge the parent sees the fork's writes.
+    use stripe::exec::{Buffers, PAGE_ELEMS};
+    use stripe::ir::AggOp;
+    let mut parent = Buffers::new();
+    let w = parent.alloc_init("w", vec![1.5; 2 * PAGE_ELEMS]);
+    let o = parent.alloc("o", 2 * PAGE_ELEMS);
+    let mut fork = parent.fork();
+    assert_eq!(fork.read(w, (2 * PAGE_ELEMS - 1) as i64).unwrap(), 1.5);
+    assert_eq!(fork.stats().cow_bytes, 0, "reads must not copy");
+    fork.store(o, 0, 2.0, AggOp::Assign, false).unwrap();
+    assert_eq!(fork.pages_shared_with(&parent, w), parent.page_count(w));
+    assert_eq!(fork.pages_shared_with(&parent, o), parent.page_count(o) - 1);
+    assert_eq!(parent.read(o, 0).unwrap(), 0.0, "parent unaffected before merge");
+    let n = parent.merge_disjoint(&[fork], &[o]).unwrap();
+    assert_eq!(n, 1);
+    assert_eq!(parent.read(o, 0).unwrap(), 2.0, "parent sees the fork's write");
 }
 
 #[test]

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Machine-readable perf trajectory: run the end-to-end network bench
+# and capture its JSON summary (speedup, bytes forked/merged by the
+# copy-on-write storage) in BENCH_e2e.json at the repository root.
+# Override the output path with BENCH_E2E_JSON.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export BENCH_E2E_JSON="${BENCH_E2E_JSON:-BENCH_e2e.json}"
+
+echo "== cargo bench --bench e2e_network =="
+cargo bench --bench e2e_network
+
+echo
+echo "== ${BENCH_E2E_JSON} =="
+cat "${BENCH_E2E_JSON}"

@@ -18,4 +18,12 @@ else
     echo "(rustfmt unavailable; skipping format check)"
 fi
 
+echo "== cargo clippy --all-targets -- -D warnings =="
+# Lints are advisory when clippy is not installed in the image.
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "(clippy unavailable; skipping lint check)"
+fi
+
 echo "verify: OK"
