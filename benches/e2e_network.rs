@@ -10,14 +10,24 @@ use std::collections::BTreeMap;
 
 use stripe::coordinator::compile_network;
 use stripe::exec::{
-    run_program, run_program_parallel, run_program_planned, run_program_sink, ExecOptions,
-    NullSink,
+    run_program, run_program_kernel, run_program_parallel, run_program_planned,
+    run_program_sink, Engine, ExecOptions, NullSink,
 };
 use stripe::frontend::ops;
 use stripe::hw::targets;
 use stripe::sim::cache::CacheConfig;
 use stripe::sim::{CacheSink, Hierarchy};
 use stripe::util::bench::{section, Bench};
+
+/// Full profile normally; `BENCH_QUICK=1` (the verify-script smoke
+/// gate) shrinks every measured section's budget.
+fn bench_profile() -> Bench {
+    if std::env::var("BENCH_QUICK").as_deref() == Ok("1") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
 
 fn main() {
     let p = ops::cnn_program();
@@ -35,7 +45,7 @@ fn main() {
     let cfg = targets::cpu_cache();
     let compiled = compile_network(&p, &cfg, false).unwrap();
     let inputs = stripe::passes::equiv::gen_inputs(&p, 5);
-    let bench = Bench::default();
+    let bench = bench_profile();
     let s_unopt = bench.run("run cnn (flat, unoptimized)", || {
         std::hint::black_box(run_program(&p, &inputs).unwrap());
     });
@@ -44,6 +54,40 @@ fn main() {
     });
     s_unopt.print_throughput(1.0, "req");
     s_opt.print_throughput(1.0, "req");
+
+    section("leaf-kernel lowering (planned vs kernel engine, canned cnn)");
+    let kernel_opts = ExecOptions { engine: Engine::Kernel, ..ExecOptions::default() };
+    let (kernel_out, kernel_report) = run_program_kernel(&p, &inputs, &kernel_opts).unwrap();
+    let planned_out =
+        run_program_planned(&p, &inputs, &ExecOptions::default(), &mut NullSink).unwrap();
+    assert_eq!(planned_out, kernel_out, "kernel engine must be bit-exact with planned");
+    print!("{}", kernel_report.summary());
+    let kernel_cov = kernel_report.coverage().expect("cnn executes leaf lanes");
+    println!("kernel coverage: {:.1}% of leaf iterations", kernel_cov * 100.0);
+    // The acceptance bar: on the canned cnn at least 80% of leaf
+    // iterations must execute through vector kernels.
+    assert!(
+        kernel_cov >= 0.8,
+        "kernel coverage {kernel_cov:.3} below the 80% bar\n{}",
+        kernel_report.summary()
+    );
+    let bench = bench_profile();
+    let s_planned = bench.run("run cnn (planned engine)", || {
+        std::hint::black_box(
+            run_program_planned(&p, &inputs, &ExecOptions::default(), &mut NullSink).unwrap(),
+        );
+    });
+    let s_kernel = bench.run("run cnn (kernel engine)", || {
+        std::hint::black_box(run_program_kernel(&p, &inputs, &kernel_opts).unwrap());
+    });
+    let kernel_speedup = s_planned.median.as_secs_f64() / s_kernel.median.as_secs_f64();
+    println!(
+        "planned-vs-kernel speedup (median): {kernel_speedup:.2}x  \
+         [planned {:?} -> kernel {:?}]",
+        s_planned.median, s_kernel.median
+    );
+    let planned_median_s = s_planned.median.as_secs_f64();
+    let kernel_median_s = s_kernel.median.as_secs_f64();
 
     section("simulated memory traffic (32KiB L1 + 1MiB L2)");
     for (label, prog) in [("flat", &p), ("optimized", &compiled.program)] {
@@ -91,7 +135,7 @@ fn main() {
         let popts = ExecOptions::with_workers(units);
         let (_, schedule) = run_program_parallel(&big, &big_inputs, &popts).unwrap();
         print!("{}", schedule.summary());
-        let bench = Bench::default();
+        let bench = bench_profile();
         let s_serial = bench.run("run cnn_big (serial plan)", || {
             std::hint::black_box(
                 run_program_planned(&big, &big_inputs, &ExecOptions::default(), &mut NullSink)
@@ -168,7 +212,11 @@ fn main() {
              \"parallel_ops\": {},\n  \"fork_bytes\": {fork_bytes},\n  \
              \"merge_bytes\": {merge_bytes},\n  \
              \"total_live_buffer_bytes\": {total_live_bytes},\n  \
-             \"old_deep_clone_model_bytes\": {old_model_bytes}\n}}\n",
+             \"old_deep_clone_model_bytes\": {old_model_bytes},\n  \
+             \"kernel_coverage\": {kernel_cov:.4},\n  \
+             \"planned_median_s\": {planned_median_s:.6},\n  \
+             \"kernel_median_s\": {kernel_median_s:.6},\n  \
+             \"planned_vs_kernel_speedup\": {kernel_speedup:.3}\n}}\n",
             s_serial.median.as_secs_f64(),
             s_par.median.as_secs_f64(),
             schedule.parallel_ops(),

@@ -16,9 +16,11 @@ pub struct CompiledNetwork {
     pub reports: Vec<PassReport>,
     /// The execution schedule across the target's compute units: for
     /// each top-level op, the parallel-safe dimension the executor will
-    /// slice (or why it must run serially). Computed statically at
-    /// compile time from the same disjointness analysis the executor
-    /// uses (`exec::parallel::analyze_program`).
+    /// slice (or why it must run serially), plus the lowering stage's
+    /// predicted per-op kernel coverage (% of leaf iterations that
+    /// execute via vector kernels). Computed statically at compile time
+    /// from the same disjointness analysis and leaf-kernel lowering the
+    /// executors use (`exec::parallel::analyze_program`).
     pub schedule: ParallelReport,
     /// Worker-pool size the schedule was computed for
     /// (`MachineConfig::compute_units`).
@@ -46,6 +48,12 @@ impl CompiledNetwork {
             self.schedule.ops.len(),
             self.schedule.summary()
         ));
+        if let Some(cov) = self.schedule.kernel_coverage() {
+            s.push_str(&format!(
+                "predicted kernel coverage: {:.1}% of leaf iterations\n",
+                cov * 100.0
+            ));
+        }
         s
     }
 }
@@ -75,6 +83,20 @@ pub fn compile_network(
     })
 }
 
+/// Execute a compiled network with explicit options — worker count,
+/// engine selection ([`ExecOptions::engine`]: planned odometer or
+/// leaf-kernel lowering per chunk), page pool. The returned
+/// [`ParallelReport`] records per-op decisions including fork/merge
+/// byte counters and, under the kernel engine, the measured per-op
+/// kernel coverage.
+pub fn run_network_with(
+    c: &CompiledNetwork,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
+    crate::exec::run_program_parallel(&c.program, inputs, opts).map_err(|e| e.to_string())
+}
+
 /// Execute a compiled network across `workers` compute units, drawing
 /// buffer pages from `pool` when one is supplied (the service path
 /// shares one pool across requests so repeated executions recycle
@@ -88,7 +110,7 @@ pub fn run_network(
     pool: Option<Arc<BufferPool>>,
 ) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
     let opts = ExecOptions { workers: workers.max(1), pool, ..ExecOptions::default() };
-    crate::exec::run_program_parallel(&c.program, inputs, &opts).map_err(|e| e.to_string())
+    run_network_with(c, inputs, &opts)
 }
 
 /// Deterministic content hash of a (program, target) pair — the compile
@@ -146,6 +168,26 @@ mod tests {
         // Serial re-run through the same entry point is bit-exact.
         let (out_serial, _) = run_network(&c, &inputs, 1, None).unwrap();
         assert_eq!(out, out_serial);
+    }
+
+    #[test]
+    fn kernel_engine_network_runs_and_records_coverage() {
+        use crate::exec::Engine;
+        let p = ops::cnn_program();
+        let c = compile_network(&p, &targets::cpu_cache(), false).unwrap();
+        // The compile-time schedule carries the predicted coverage.
+        assert!(c.schedule.kernel_coverage().is_some(), "{}", c.schedule.summary());
+        assert!(c.summary().contains("predicted kernel coverage"));
+        let inputs = crate::passes::equiv::gen_inputs(&c.program, 9);
+        let (planned, _) = run_network(&c, &inputs, 1, None).unwrap();
+        let opts = crate::exec::ExecOptions {
+            workers: c.compute_units,
+            engine: Engine::Kernel,
+            ..crate::exec::ExecOptions::default()
+        };
+        let (kernel, report) = run_network_with(&c, &inputs, &opts).unwrap();
+        assert_eq!(planned, kernel, "kernel-engine network must stay bit-exact");
+        assert!(report.kernel_coverage().is_some(), "{}", report.summary());
     }
 
     #[test]

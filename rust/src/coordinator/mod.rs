@@ -15,5 +15,5 @@ pub mod effort;
 pub mod metrics;
 pub mod service;
 
-pub use driver::{compile_network, run_network, CompiledNetwork};
+pub use driver::{compile_network, run_network, run_network_with, CompiledNetwork};
 pub use service::{CompileRequest, CompileService};

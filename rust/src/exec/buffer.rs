@@ -36,6 +36,19 @@
 //! combine with the refinement's aggregation; double `Assign` writes
 //! are an error unless relaxed (Definition 2, §3.2).
 //!
+//! # Bulk run operations
+//!
+//! The kernel engine (`exec::kernel`) operates on contiguous `f32`
+//! runs rather than single elements. [`Buffers::read_run_into`] /
+//! [`Buffers::read_strided_into`] gather a run with **one** bounds
+//! check; [`Buffers::write_run`] stores a run with Definition-2
+//! semantics, filling write-mask bitsets per-range (word-at-a-time
+//! `set_range`) instead of per-bit when the range is fresh, and
+//! combining in place when it is fully written; [`Buffers::fold_run`]
+//! collapses a reduction run into one element in serial lane order.
+//! All of them honor page boundaries and account copy-on-write traffic
+//! exactly like the per-element path.
+//!
 //! # Page recycling
 //!
 //! A [`BufferPool`] recycles page allocations across `Buffers`
@@ -219,6 +232,76 @@ impl WriteMask {
 
     fn byte_size(&self) -> u64 {
         (self.words.len() * 8) as u64
+    }
+
+    /// Mask with bits `a..=b` set within one word (`0 <= a <= b <= 63`).
+    #[inline]
+    fn word_bits(a: usize, b: usize) -> u64 {
+        let span = b - a + 1;
+        if span == 64 {
+            !0
+        } else {
+            ((1u64 << span) - 1) << a
+        }
+    }
+
+    /// True if any bit in `lo..=hi` is set. Word-granular: the dirty
+    /// bound rejects untouched ranges in O(1), everything else scans
+    /// whole words with edge masks instead of per-bit probes.
+    fn any_set_in(&self, lo: usize, hi: usize) -> bool {
+        let Some((dlo, dhi)) = self.dirty else { return false };
+        if hi < dlo || lo > dhi {
+            return false;
+        }
+        let (wlo, whi) = (lo >> 6, hi >> 6);
+        if wlo == whi {
+            return self.words[wlo] & Self::word_bits(lo & 63, hi & 63) != 0;
+        }
+        if self.words[wlo] & Self::word_bits(lo & 63, 63) != 0 {
+            return true;
+        }
+        if self.words[wlo + 1..whi].iter().any(|&w| w != 0) {
+            return true;
+        }
+        self.words[whi] & Self::word_bits(0, hi & 63) != 0
+    }
+
+    /// True if every bit in `lo..=hi` is set (word-granular scan).
+    fn all_set_in(&self, lo: usize, hi: usize) -> bool {
+        if self.dirty.is_none() {
+            return false;
+        }
+        let (wlo, whi) = (lo >> 6, hi >> 6);
+        if wlo == whi {
+            let m = Self::word_bits(lo & 63, hi & 63);
+            return self.words[wlo] & m == m;
+        }
+        let head = Self::word_bits(lo & 63, 63);
+        if self.words[wlo] & head != head {
+            return false;
+        }
+        if self.words[wlo + 1..whi].iter().any(|&w| w != !0u64) {
+            return false;
+        }
+        let tail = Self::word_bits(0, hi & 63);
+        self.words[whi] & tail == tail
+    }
+
+    /// Set every bit in `lo..=hi` — whole words at a time, one dirty
+    /// update for the range (the per-bit `set` costs a dirty min/max
+    /// per element).
+    fn set_range(&mut self, lo: usize, hi: usize) {
+        let (wlo, whi) = (lo >> 6, hi >> 6);
+        if wlo == whi {
+            self.words[wlo] |= Self::word_bits(lo & 63, hi & 63);
+        } else {
+            self.words[wlo] |= Self::word_bits(lo & 63, 63);
+            for w in &mut self.words[wlo + 1..whi] {
+                *w = !0;
+            }
+            self.words[whi] |= Self::word_bits(0, hi & 63);
+        }
+        self.extend_dirty(lo, hi);
     }
 }
 
@@ -413,6 +496,205 @@ impl Buffers {
             mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).set(e);
         }
         Ok(())
+    }
+
+    /// Read a contiguous run `[start, start + dst.len())` into `dst`,
+    /// honoring page boundaries. One bounds check covers the whole run
+    /// (the per-element `read` pays it per call); unwritten elements
+    /// read as 0.0, exactly like `read`.
+    pub fn read_run_into(&self, id: usize, start: i64, dst: &mut [f32]) -> Result<(), String> {
+        if dst.is_empty() {
+            return Ok(());
+        }
+        let buf = &self.bufs[id];
+        let end = start + dst.len() as i64 - 1;
+        if start < 0 || end >= buf.len as i64 {
+            return Err(format!(
+                "read out of bounds: {}[{start}..={end}] (len {})",
+                self.names[id], buf.len
+            ));
+        }
+        let mut e = start as usize;
+        let mut filled = 0usize;
+        while filled < dst.len() {
+            let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+            let n = (PAGE_ELEMS - off).min(dst.len() - filled);
+            dst[filled..filled + n].copy_from_slice(&buf.pages[p][off..off + n]);
+            filled += n;
+            e += n;
+        }
+        Ok(())
+    }
+
+    /// Gather `dst.len()` elements spaced `stride` apart starting at
+    /// `start` (negative strides walk backwards). One bounds check over
+    /// the touched extent covers every lane.
+    pub fn read_strided_into(
+        &self,
+        id: usize,
+        start: i64,
+        stride: i64,
+        dst: &mut [f32],
+    ) -> Result<(), String> {
+        if dst.is_empty() {
+            return Ok(());
+        }
+        let buf = &self.bufs[id];
+        let last = start + stride * (dst.len() as i64 - 1);
+        let (lo, hi) = (start.min(last), start.max(last));
+        if lo < 0 || hi >= buf.len as i64 {
+            return Err(format!(
+                "read out of bounds: {}[{lo}..={hi}] (len {})",
+                self.names[id], buf.len
+            ));
+        }
+        let mut e = start;
+        for d in dst.iter_mut() {
+            let u = e as usize;
+            *d = buf.pages[u >> PAGE_SHIFT][u & PAGE_MASK];
+            e += stride;
+        }
+        Ok(())
+    }
+
+    /// Write a contiguous run with Definition-2 aggregation semantics
+    /// per element — the bulk counterpart of [`Buffers::store`], used by
+    /// the kernel engine's run stores.
+    ///
+    /// Three paths, chosen per run from the write mask:
+    /// * **untouched range** — pages are filled by `copy_from_slice` and
+    ///   the mask is set word-at-a-time (`set_range`), instead of a
+    ///   per-bit set + dirty update per element;
+    /// * **fully-written range with a combining agg** — values combine
+    ///   in place, masks untouched;
+    /// * **mixed (or `Assign` over written data)** — falls back to the
+    ///   per-element `store`, preserving its exact error semantics
+    ///   (double-assign detection included).
+    ///
+    /// Copy-on-write accounting is identical to the per-element path:
+    /// shared pages un-share on first touch via `page_mut`.
+    pub fn write_run(
+        &mut self,
+        id: usize,
+        start: i64,
+        vals: &[f32],
+        agg: AggOp,
+        relaxed_assign: bool,
+    ) -> Result<(), String> {
+        if vals.is_empty() {
+            return Ok(());
+        }
+        let end = start + vals.len() as i64 - 1;
+        if start < 0 || end >= self.bufs[id].len as i64 {
+            return Err(format!(
+                "write out of bounds: {}[{start}..={end}] (len {})",
+                self.names[id],
+                self.bufs[id].len
+            ));
+        }
+        let (lo, hi) = (start as usize, end as usize);
+        if !self.bufs[id].mask.any_set_in(lo, hi) {
+            // Fresh range: bulk assign + one ranged mask update.
+            let buf = &mut self.bufs[id];
+            let mut e = lo;
+            let mut done = 0usize;
+            while done < vals.len() {
+                let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+                let n = (PAGE_ELEMS - off).min(vals.len() - done);
+                page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off..off + n]
+                    .copy_from_slice(&vals[done..done + n]);
+                done += n;
+                e += n;
+            }
+            mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).set_range(lo, hi);
+            return Ok(());
+        }
+        if agg != AggOp::Assign && self.bufs[id].mask.all_set_in(lo, hi) {
+            // Fully written: combine in place, masks unchanged.
+            let buf = &mut self.bufs[id];
+            let mut e = lo;
+            let mut done = 0usize;
+            while done < vals.len() {
+                let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+                let n = (PAGE_ELEMS - off).min(vals.len() - done);
+                let dst = page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes);
+                for i in 0..n {
+                    dst[off + i] = agg.combine(dst[off + i], vals[done + i]);
+                }
+                done += n;
+                e += n;
+            }
+            return Ok(());
+        }
+        // Mixed range (or Assign over written data): per-element
+        // Definition-2 path with its exact error reporting.
+        for (i, &v) in vals.iter().enumerate() {
+            self.store(id, start + i as i64, v, agg, relaxed_assign)?;
+        }
+        Ok(())
+    }
+
+    /// Aggregate a lane sequence into **one** element in lane order —
+    /// the reduction-store counterpart of [`Buffers::write_run`] (dot
+    /// products, `AggOp` reductions). Bit-exact with calling `store`
+    /// once per lane: the combine folds left in lane order, starting
+    /// from the current value when the element is already written and
+    /// from the first lane (which *assigns*) when it is not. One page
+    /// write and at most one mask update cover the whole run.
+    pub fn fold_run(
+        &mut self,
+        id: usize,
+        elem: i64,
+        vals: &[f32],
+        agg: AggOp,
+        relaxed_assign: bool,
+    ) -> Result<(), String> {
+        if vals.is_empty() {
+            return Ok(());
+        }
+        let buf = &self.bufs[id];
+        if elem < 0 || elem as usize >= buf.len {
+            return Err(format!(
+                "write out of bounds: {}[{elem}] (len {})",
+                self.names[id], buf.len
+            ));
+        }
+        let e = elem as usize;
+        let written = buf.mask.get(e);
+        if agg == AggOp::Assign && !relaxed_assign && (written || vals.len() > 1) {
+            // Serial execution errors on the double assign (after the
+            // legal writes land) — delegate to the scalar path so the
+            // behavior matches exactly.
+            for &v in vals {
+                self.store(id, elem, v, agg, relaxed_assign)?;
+            }
+            return Ok(());
+        }
+        let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+        let mut acc;
+        let rest: &[f32];
+        if written {
+            acc = buf.pages[p][off];
+            rest = vals;
+        } else {
+            acc = vals[0];
+            rest = &vals[1..];
+        }
+        for &v in rest {
+            acc = agg.combine(acc, v);
+        }
+        let buf = &mut self.bufs[id];
+        page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off] = acc;
+        if !written {
+            mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).set(e);
+        }
+        Ok(())
+    }
+
+    /// True if a specific element has been written (test introspection
+    /// for the bulk-write paths).
+    pub fn written(&self, id: usize, elem: usize) -> bool {
+        self.bufs[id].mask.get(elem)
     }
 
     /// Reset write tracking for a buffer (used when an op legitimately
@@ -838,6 +1120,155 @@ mod tests {
         a.release();
         assert_eq!(pool.free_pages(), 0, "shared pages must not be pooled");
         drop(fork);
+    }
+
+    #[test]
+    fn read_run_into_crosses_page_boundaries() {
+        let len = 2 * PAGE_ELEMS + 100;
+        let vals: Vec<f32> = (0..len).map(|i| i as f32).collect();
+        let mut b = Buffers::new();
+        let id = b.alloc_init("x", vals.clone());
+        let mut dst = vec![0f32; PAGE_ELEMS + 7];
+        b.read_run_into(id, (PAGE_ELEMS - 3) as i64, &mut dst).unwrap();
+        for (i, v) in dst.iter().enumerate() {
+            assert_eq!(*v, (PAGE_ELEMS - 3 + i) as f32);
+        }
+        // Bounds are checked once per run.
+        assert!(b.read_run_into(id, (len - 1) as i64, &mut dst).is_err());
+        assert!(b.read_run_into(id, -1, &mut dst).is_err());
+        // Empty runs are inert even at the edge.
+        b.read_run_into(id, len as i64, &mut []).unwrap();
+    }
+
+    #[test]
+    fn read_strided_into_gathers_both_directions() {
+        let vals: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut b = Buffers::new();
+        let id = b.alloc_init("x", vals);
+        let mut dst = vec![0f32; 4];
+        b.read_strided_into(id, 3, 7, &mut dst).unwrap();
+        assert_eq!(dst, vec![3.0, 10.0, 17.0, 24.0]);
+        b.read_strided_into(id, 30, -10, &mut dst).unwrap();
+        assert_eq!(dst, vec![30.0, 20.0, 10.0, 0.0]);
+        assert!(b.read_strided_into(id, 25, -10, &mut dst).is_err());
+        assert!(b.read_strided_into(id, 90, 7, &mut dst).is_err());
+    }
+
+    /// The satellite contract: `write_run` across a page boundary on
+    /// pooled copy-on-write storage must update pages, dirty ranges and
+    /// write masks identically to the per-element `store` path.
+    #[test]
+    fn write_run_across_page_boundary_matches_per_element_path() {
+        let len = 3 * PAGE_ELEMS;
+        let pool = Arc::new(BufferPool::with_capacity(64));
+        let setup = || {
+            let mut master = Buffers::with_pool(Some(Arc::clone(&pool)));
+            let id = master.alloc("o", len);
+            // Fork so every page starts shared — writes must CoW.
+            (master.fork(), master, id)
+        };
+        // A run spanning the page-0/page-1 boundary, leaving page 2
+        // untouched (so exactly one page must stay shared).
+        let start = (PAGE_ELEMS - 5) as i64;
+        let vals: Vec<f32> = (0..PAGE_ELEMS).map(|i| 1.0 + i as f32).collect();
+
+        let (mut bulk, _keep_a, id) = setup();
+        bulk.write_run(id, start, &vals, AggOp::Add, false).unwrap();
+        let (mut elem, _keep_b, id2) = setup();
+        for (i, &v) in vals.iter().enumerate() {
+            elem.store(id2, start + i as i64, v, AggOp::Add, false).unwrap();
+        }
+        assert_eq!(bulk.snapshot(id), elem.snapshot(id2));
+        assert_eq!(bulk.dirty_range(id), elem.dirty_range(id2));
+        for e in 0..len {
+            assert_eq!(bulk.written(id, e), elem.written(id2, e), "mask bit {e}");
+        }
+        // Same pages un-shared (CoW) on both paths: the run touched
+        // pages 0 and 1, page 2 stays shared with the parent.
+        assert_eq!(bulk.pages_shared_with(&_keep_a, id), 1);
+        assert_eq!(elem.pages_shared_with(&_keep_b, id2), 1);
+        // A second bulk write over the now fully-written prefix combines
+        // in place without touching the mask.
+        let before = bulk.dirty_range(id);
+        bulk.write_run(id, start, &vals, AggOp::Add, false).unwrap();
+        assert_eq!(bulk.dirty_range(id), before);
+        assert_eq!(bulk.read(id, start).unwrap(), 2.0 * vals[0]);
+    }
+
+    #[test]
+    fn write_run_mixed_range_takes_definition2_path() {
+        let mut b = Buffers::new();
+        let id = b.alloc("o", 8);
+        b.store(id, 2, 10.0, AggOp::Add, false).unwrap();
+        // Run over [0, 4): element 2 is written (combines), others assign.
+        b.write_run(id, 0, &[1.0, 2.0, 3.0, 4.0], AggOp::Add, false).unwrap();
+        assert_eq!(b.snapshot(id)[..4], [1.0, 2.0, 13.0, 4.0]);
+        // Assign over a written element errors exactly like `store`.
+        let e = b.write_run(id, 0, &[9.0], AggOp::Assign, false).unwrap_err();
+        assert!(e.contains("double write"), "{e}");
+        // ... unless relaxed.
+        b.write_run(id, 0, &[9.0], AggOp::Assign, true).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), 9.0);
+        // Out-of-bounds runs are rejected up front.
+        assert!(b.write_run(id, 6, &[0.0; 3], AggOp::Add, false).is_err());
+        assert!(b.write_run(id, -1, &[0.0; 2], AggOp::Add, false).is_err());
+    }
+
+    #[test]
+    fn fold_run_matches_serial_store_order() {
+        // Unwritten element: first lane assigns, rest combine (Max keeps
+        // the true maximum even when all lanes are below the 0 fill).
+        let mut a = Buffers::new();
+        let id = a.alloc("o", 2);
+        a.fold_run(id, 0, &[-5.0, -3.0, -7.0], AggOp::Max, false).unwrap();
+        assert_eq!(a.read(id, 0).unwrap(), -3.0);
+        assert!(a.written(id, 0));
+        // Written element: the current value seeds the fold.
+        a.fold_run(id, 0, &[10.0, -100.0], AggOp::Max, false).unwrap();
+        assert_eq!(a.read(id, 0).unwrap(), 10.0);
+        // Add fold is bit-exact with per-lane stores.
+        let lanes = [0.1f32, 0.7, -0.3, 1e-3, 2.5];
+        let mut bulk = Buffers::new();
+        let ib = bulk.alloc("s", 1);
+        bulk.fold_run(ib, 0, &lanes, AggOp::Add, false).unwrap();
+        let mut ser = Buffers::new();
+        let is = ser.alloc("s", 1);
+        for &v in &lanes {
+            ser.store(is, 0, v, AggOp::Add, false).unwrap();
+        }
+        assert_eq!(bulk.read(ib, 0).unwrap(), ser.read(is, 0).unwrap());
+        // Strict Assign with more than one lane reproduces the serial
+        // double-write error; relaxed keeps the last lane.
+        let e = a.fold_run(id, 1, &[1.0, 2.0], AggOp::Assign, false).unwrap_err();
+        assert!(e.contains("double write"), "{e}");
+        a.fold_run(id, 1, &[3.0, 4.0], AggOp::Assign, true).unwrap();
+        assert_eq!(a.read(id, 1).unwrap(), 4.0);
+        assert!(a.fold_run(id, 5, &[1.0], AggOp::Add, false).is_err());
+    }
+
+    #[test]
+    fn mask_range_queries_word_granular() {
+        let mut m = WriteMask::with_len(300, false);
+        assert!(!m.any_set_in(0, 299));
+        m.set_range(60, 200);
+        assert_eq!(m.dirty, Some((60, 200)));
+        assert!(m.any_set_in(0, 60));
+        assert!(!m.any_set_in(0, 59));
+        assert!(!m.any_set_in(201, 299));
+        assert!(m.all_set_in(60, 200));
+        assert!(!m.all_set_in(59, 200));
+        assert!(!m.all_set_in(60, 201));
+        // Per-bit and ranged sets agree word for word.
+        let mut bits = WriteMask::with_len(300, false);
+        for e in 60..=200 {
+            bits.set(e);
+        }
+        assert_eq!(bits.words, m.words);
+        assert_eq!(bits.dirty, m.dirty);
+        // Single-word ranges.
+        m.set_range(250, 250);
+        assert!(m.all_set_in(250, 250));
+        assert!(!m.any_set_in(251, 260));
     }
 
     #[test]

@@ -16,6 +16,42 @@ use crate::poly::Affine;
 use super::buffer::{BufferPool, Buffers};
 use super::trace::{AccessEvent, NullSink, Sink};
 
+/// Execution-engine selection (see the engine table in [`super`]).
+/// With `workers > 1`, the engine names the per-chunk executor the
+/// parallel dispatcher uses (`Naive` chunks run planned — the naive
+/// interpreter is not chunkable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// The naive interpreter: readable ground truth, the only engine
+    /// executing `Special` statements and driving trace sinks.
+    Naive,
+    /// Serial plan compilation (`exec::plan`): slot-resolved odometer.
+    #[default]
+    Planned,
+    /// Plan compilation + leaf-kernel lowering (`exec::kernel`): fused
+    /// run-level kernels with hoisted checks, guarded-odometer fallback.
+    Kernel,
+}
+
+impl Engine {
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Naive => "naive",
+            Engine::Planned => "planned",
+            Engine::Kernel => "kernel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Engine> {
+        Some(match s {
+            "naive" => Engine::Naive,
+            "planned" => Engine::Planned,
+            "kernel" => Engine::Kernel,
+            _ => return None,
+        })
+    }
+}
+
 /// Execution options.
 #[derive(Debug, Clone)]
 pub struct ExecOptions {
@@ -30,6 +66,9 @@ pub struct ExecOptions {
     /// `1` selects serial execution — always available as the fallback,
     /// so any divergence can be bisected by re-running serially.
     pub workers: usize,
+    /// Which engine executes op blocks — serially, or per worker chunk
+    /// when `workers > 1`. Defaults to the serial plan.
+    pub engine: Engine,
     /// Optional page pool: buffers draw their backing pages from it and
     /// return them when the run finishes, so repeated requests (the
     /// coordinator's service path) recycle allocations instead of
@@ -51,6 +90,7 @@ impl Default for ExecOptions {
             relaxed_assign: false,
             max_iterations: 200_000_000,
             workers: 1,
+            engine: Engine::default(),
             pool: None,
         }
     }
@@ -98,8 +138,9 @@ pub fn run_program(
 /// Run with explicit options, choosing the execution engine:
 /// `Special`-bearing programs take the naive interpreter (the only path
 /// that executes specials); `opts.workers > 1` takes the parallel
-/// engine (`exec::parallel`); everything else takes the serial
-/// plan-compiled path.
+/// dispatcher (`exec::parallel`, which runs each chunk on
+/// `opts.engine`); otherwise `opts.engine` selects between the naive
+/// interpreter, the serial plan, and the leaf-kernel engine.
 pub fn run_program_with(
     program: &Program,
     inputs: &BTreeMap<String, Vec<f32>>,
@@ -114,7 +155,15 @@ pub fn run_program_with(
     } else if opts.workers > 1 {
         super::parallel::run_program_parallel(program, inputs, opts).map(|(out, _)| out)
     } else {
-        super::plan::run_program_planned(program, inputs, opts, &mut NullSink)
+        match opts.engine {
+            Engine::Naive => run_program_sink(program, inputs, opts, &mut NullSink),
+            Engine::Planned => {
+                super::plan::run_program_planned(program, inputs, opts, &mut NullSink)
+            }
+            Engine::Kernel => {
+                super::kernel::run_program_kernel(program, inputs, opts).map(|(out, _)| out)
+            }
+        }
     }
 }
 
@@ -611,6 +660,33 @@ mod tests {
             ExecOptions { max_iterations: 100, workers: 4, ..ExecOptions::default() };
         let e = run_program_with(&p, &inputs, &opts).unwrap_err();
         assert!(e.message.contains("iteration budget"), "{e}");
+    }
+
+    #[test]
+    fn engine_dispatch_is_bit_exact_across_engines() {
+        let p = conv_program();
+        let inputs = crate::passes::equiv::gen_inputs(&p, 3);
+        let base = run_program(&p, &inputs).unwrap();
+        for engine in [Engine::Naive, Engine::Planned, Engine::Kernel] {
+            let opts = ExecOptions { engine, ..ExecOptions::default() };
+            let out = run_program_with(&p, &inputs, &opts).unwrap();
+            // Naive vs planned agree to the bit on this workload; the
+            // kernel engine is pinned bit-exact by the differential
+            // suite — here we only require engine dispatch to work.
+            for (k, v) in &base {
+                let w = &out[k];
+                for (a, b) in v.iter().zip(w) {
+                    assert!(
+                        (a - b).abs() <= 1e-5 * 1.0f32.max(a.abs()),
+                        "{:?} {k}: {a} vs {b}",
+                        engine
+                    );
+                }
+            }
+        }
+        assert_eq!(Engine::parse("kernel"), Some(Engine::Kernel));
+        assert_eq!(Engine::parse("bogus"), None);
+        assert_eq!(Engine::default().name(), "planned");
     }
 
     #[test]

@@ -1,0 +1,1197 @@
+//! Leaf-kernel lowering: the third compilation stage.
+//!
+//! The pipeline (§1.3) is `Block` → [`Plan`] (slot resolution, one
+//! flat dot product per view) → **lowered kernel form** (this module):
+//! the innermost polyhedral band of each leaf block is compiled into a
+//! fused run-level kernel over contiguous `f32` runs, with the per-
+//! element constraint / bounds / write-mask machinery hoisted out of
+//! the loop. The scalar odometer stays available as the guarded
+//! fallback, so lowering is always a pure optimization — semantics are
+//! bit-exact with the planned path (the differential harness pins
+//! naive ≡ planned ≡ kernel ≡ parallel).
+//!
+//! # Lowering criteria — when a band vectorizes
+//!
+//! A leaf plan (no nested blocks) lowers to a vector band when, at
+//! *compile* time:
+//!
+//! * it has at least one ranged index; the innermost one (odometer
+//!   order) becomes the run dimension, its range the run length;
+//! * the statement list is `Load* (Const|Intr)* Store` — any number of
+//!   loads and scalar ops followed by exactly one final store (the
+//!   canonical contraction / elementwise / reduction bodies);
+//! * the store's **folded stride** along the run dimension — the
+//!   coefficient of the inner index after folding the access through
+//!   the parent strides — is `1` (a contiguous output run) or `0` (a
+//!   reduction into one element). Loads may have any inner stride:
+//!   `1` reads a contiguous run, `0` broadcasts a scalar, anything
+//!   else gathers a strided run (e.g. a transposed read);
+//! * no refinement is a block-local temp (temps have per-iteration
+//!   reset semantics the run form cannot honor).
+//!
+//! and at *run* time, per band invocation:
+//!
+//! * the store target shares no buffer with any load (the scalar
+//!   interleaving of loads and stores would otherwise be observable);
+//! * a reduction store's aggregation is not strict `Assign` over more
+//!   than one lane (serial execution errors there — the guarded path
+//!   reproduces the error exactly).
+//!
+//! Anything else — transposed (non-unit innermost stride) *stores*,
+//! multi-store bodies, `Special`s, temps — takes the guarded odometer,
+//! whose per-element checks and error messages are unchanged.
+//!
+//! # Interval analysis — what gets hoisted
+//!
+//! Per run (one fixed point of the outer indexes), the inner index
+//! contributes `[min(0, c·(n-1)), max(0, c·(n-1))]` to every affine
+//! quantity with inner coefficient `c`. That interval decides, in O(1)
+//! per run instead of O(n) per element:
+//!
+//! * **constraints** — if every constraint is ≥ 0 over the whole run,
+//!   the per-lane checks vanish; if some constraint is < 0 over the
+//!   whole run, the run is skipped outright; a mixed run falls back to
+//!   guarded lanes;
+//! * **bounds** — if every accessed ref's run extent lies inside its
+//!   buffer, the per-element OOB checks vanish and the body executes
+//!   through the bulk run APIs ([`Buffers::read_run_into`],
+//!   [`Buffers::write_run`], [`Buffers::fold_run`] — which fill write
+//!   masks per-range, not per-bit); otherwise the run demotes to the
+//!   guarded lanes, preserving exact serial error behavior.
+//!
+//! # Fused kernel forms
+//!
+//! Classified statically for dispatch (everything else runs the
+//! generic lane program, still free of per-element checks):
+//!
+//! | form | body | examples |
+//! |------|------|----------|
+//! | fill | no loads | zero/constant init |
+//! | copy | load → store | maxpool (`max=`), flatten |
+//! | map  | load → unary chain → store | relu, tanh |
+//! | zip  | load × load → binop → store | add, mul; axpy when one side broadcasts; dot when the store reduces |
+//!
+//! Coverage accounting: every leaf iteration handled by the lowered
+//! band machinery (including runs skipped whole by the hoisted
+//! constraint check) counts as a *vector lane*; iterations that fell
+//! back to the guarded odometer count as *scalar lanes*. The
+//! coordinator records the per-op split in the compiled schedule, and
+//! `stripe run --engine kernel` reports it per run.
+//!
+//! The kernel engine does not drive a trace [`super::trace::Sink`]
+//! (runs would have to be decomposed back into per-element events);
+//! tracing routes through the naive or planned engines.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{AggOp, Block, BufKind, IntrOp, Program, Statement};
+
+use super::buffer::Buffers;
+use super::interp::{ExecError, ExecOptions};
+use super::plan::{PStmt, Plan, RootScope, View};
+
+/// Lane counters for one execution: how many leaf iterations ran
+/// through vector kernels vs the guarded scalar odometer.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Leaf iterations handled by lowered bands (fused runs, plus runs
+    /// skipped whole by the hoisted constraint check).
+    pub vector_lanes: u64,
+    /// Leaf iterations executed by the guarded scalar odometer.
+    pub scalar_lanes: u64,
+}
+
+impl KernelStats {
+    /// Total leaf iterations.
+    pub fn total(&self) -> u64 {
+        self.vector_lanes + self.scalar_lanes
+    }
+
+    /// Fraction of leaf iterations executed via vector kernels
+    /// (`None` when nothing ran).
+    pub fn coverage(&self) -> Option<f64> {
+        let t = self.total();
+        if t == 0 {
+            None
+        } else {
+            Some(self.vector_lanes as f64 / t as f64)
+        }
+    }
+
+    /// Accumulate another counter set (worker merge, report totals).
+    pub fn absorb(&mut self, other: KernelStats) {
+        self.vector_lanes += other.vector_lanes;
+        self.scalar_lanes += other.scalar_lanes;
+    }
+}
+
+/// Per-op lane counters of a kernel-engine run.
+#[derive(Debug, Clone)]
+pub struct OpKernelStats {
+    pub op: String,
+    pub stats: KernelStats,
+}
+
+/// The kernel engine's per-op coverage report.
+#[derive(Debug, Clone, Default)]
+pub struct KernelReport {
+    pub ops: Vec<OpKernelStats>,
+}
+
+impl KernelReport {
+    /// Lane counters summed over all ops.
+    pub fn totals(&self) -> KernelStats {
+        let mut t = KernelStats::default();
+        for o in &self.ops {
+            t.absorb(o.stats);
+        }
+        t
+    }
+
+    /// Whole-run kernel coverage (`None` when nothing ran).
+    pub fn coverage(&self) -> Option<f64> {
+        self.totals().coverage()
+    }
+
+    /// One line per op.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for o in &self.ops {
+            let cov = match o.stats.coverage() {
+                Some(c) => format!("{:5.1}%", c * 100.0),
+                None => "  n/a".to_string(),
+            };
+            s.push_str(&format!(
+                "  op {:<24} kernel coverage {cov} ({} vector / {} scalar lanes)\n",
+                o.op, o.stats.vector_lanes, o.stats.scalar_lanes
+            ));
+        }
+        s
+    }
+}
+
+/// One `Load` of a leaf body: the ref it reads and the register it fills.
+#[derive(Debug, Clone)]
+struct LeafLoad {
+    ref_slot: usize,
+    reg: usize,
+}
+
+/// Scalar register program between the loads and the store.
+#[derive(Debug, Clone)]
+enum LaneOp {
+    Intr { op: IntrOp, args: [usize; 3], n: usize, out: usize },
+    Const { out: usize, val: f32 },
+}
+
+/// How the final store consumes the run dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StoreKind {
+    /// Inner stride 1: a contiguous output run.
+    Run,
+    /// Inner stride 0: all lanes aggregate into one element.
+    Reduce,
+}
+
+/// Fused kernel form (see the module docs' table). `Generic` interprets
+/// the lane register program per lane and covers every conforming body.
+#[derive(Debug, Clone)]
+enum Form {
+    Fill,
+    Copy,
+    Map(Vec<IntrOp>),
+    Zip(IntrOp),
+    Generic,
+}
+
+/// A statically vectorizable leaf band.
+#[derive(Debug, Clone)]
+struct Leaf {
+    /// Idx slot of the innermost ranged index (the run dimension).
+    inner_slot: usize,
+    /// Run length.
+    n: u64,
+    /// Folded inner-stride per ref (`rows[r][inner_slot]`).
+    inner_coeff: Vec<i64>,
+    loads: Vec<LeafLoad>,
+    lane_ops: Vec<LaneOp>,
+    store_ref: usize,
+    store_reg: usize,
+    kind: StoreKind,
+    form: Form,
+    /// Ref slots the body touches (loads + store) — the per-run bounds
+    /// check covers exactly these.
+    used_refs: Vec<usize>,
+}
+
+/// The lowered mirror of a [`Plan`] tree. Everything here is static:
+/// folded flat coefficient rows (parent strides are compile-time
+/// constants all the way down), static base-offset parts, and the leaf
+/// band classification. Only view origins are resolved at run time.
+#[derive(Debug, Clone)]
+pub(crate) struct KernelPlan {
+    /// Folded flat coefficient row per ref, over this plan's idx slots.
+    rows: Vec<Vec<i64>>,
+    /// Static part of each ref's base offset (access constants folded
+    /// through the parent strides; the parent view origin is added per
+    /// plan run).
+    base_off: Vec<i64>,
+    /// `Some` when the node's innermost band lowers to a fused kernel.
+    leaf: Option<Leaf>,
+    children: Vec<KernelPlan>,
+}
+
+/// Lower a compiled plan against its parent view strides. Fails on the
+/// same structural errors the planned executor reports at run time
+/// (rank mismatches), so they surface once at compile time instead.
+pub(crate) fn lower(plan: &Plan, parent_strides: &[Vec<i64>]) -> Result<KernelPlan, String> {
+    let n_idxs = plan.n_idxs;
+    let mut rows = Vec::with_capacity(plan.refs.len());
+    let mut base_off = Vec::with_capacity(plan.refs.len());
+    for (slot, r) in plan.refs.iter().enumerate() {
+        match r.parent_slot {
+            Some(ps) => {
+                let pstr = parent_strides
+                    .get(ps)
+                    .ok_or_else(|| format!("{}: ref #{slot}: no parent strides", plan.name))?;
+                if pstr.len() != r.access.len() {
+                    return Err(format!(
+                        "{}: ref #{slot}: access rank {} vs parent rank {}",
+                        plan.name,
+                        r.access.len(),
+                        pstr.len()
+                    ));
+                }
+                let mut row = vec![0i64; n_idxs];
+                let mut base = 0i64;
+                for ((coeffs, off), s) in r.access.iter().zip(pstr) {
+                    base += off * s;
+                    for (k, c) in coeffs.iter().enumerate() {
+                        row[k] += c * s;
+                    }
+                }
+                rows.push(row);
+                base_off.push(base);
+            }
+            None => {
+                rows.push(vec![0i64; n_idxs]);
+                base_off.push(0);
+            }
+        }
+    }
+    let child_strides: Vec<Vec<i64>> = plan.refs.iter().map(|r| r.strides.clone()).collect();
+    let mut children = Vec::with_capacity(plan.children.len());
+    for c in &plan.children {
+        children.push(lower(c, &child_strides)?);
+    }
+    let leaf = classify_leaf(plan, &rows);
+    Ok(KernelPlan { rows, base_off, leaf, children })
+}
+
+/// Static band classification (see the module docs for the criteria).
+fn classify_leaf(plan: &Plan, rows: &[Vec<i64>]) -> Option<Leaf> {
+    if !plan.children.is_empty() {
+        return None;
+    }
+    let (inner_slot, n) = *plan.ranged.last()?;
+    if n == 0 {
+        return None;
+    }
+    if plan.refs.iter().any(|r| r.parent_slot.is_none()) {
+        return None;
+    }
+    let mut loads = Vec::new();
+    let mut lane_ops = Vec::new();
+    let mut store: Option<(usize, usize)> = None;
+    for st in &plan.stmts {
+        if store.is_some() {
+            return None; // anything after the store breaks the form
+        }
+        match st {
+            PStmt::Load { reg, ref_slot } => {
+                // The fused replay performs all loads before the lane
+                // ops; a Load *after* a scalar op (which could redefine
+                // the same register) would be silently reordered —
+                // reject the band instead.
+                if !lane_ops.is_empty() {
+                    return None;
+                }
+                loads.push(LeafLoad { ref_slot: *ref_slot, reg: *reg })
+            }
+            PStmt::Intr { op, args, n, out } => {
+                lane_ops.push(LaneOp::Intr { op: *op, args: *args, n: *n, out: *out })
+            }
+            PStmt::Const { out, val } => lane_ops.push(LaneOp::Const { out: *out, val: *val }),
+            PStmt::Store { reg, ref_slot } => store = Some((*reg, *ref_slot)),
+            PStmt::Child(_) | PStmt::Special(_) => return None,
+        }
+    }
+    let (store_reg, store_ref) = store?;
+    let kind = match rows[store_ref][inner_slot] {
+        0 => StoreKind::Reduce,
+        1 => StoreKind::Run,
+        _ => return None, // transposed store: guarded fallback
+    };
+    let inner_coeff: Vec<i64> = rows.iter().map(|r| r[inner_slot]).collect();
+    let mut used_refs: Vec<usize> =
+        loads.iter().map(|l| l.ref_slot).chain(std::iter::once(store_ref)).collect();
+    used_refs.sort_unstable();
+    used_refs.dedup();
+    let form = classify_form(&loads, &lane_ops, store_reg);
+    Some(Leaf {
+        inner_slot,
+        n,
+        inner_coeff,
+        loads,
+        lane_ops,
+        store_ref,
+        store_reg,
+        kind,
+        form,
+        used_refs,
+    })
+}
+
+fn classify_form(loads: &[LeafLoad], ops: &[LaneOp], store_reg: usize) -> Form {
+    if loads.is_empty() {
+        return Form::Fill;
+    }
+    if loads.len() == 1 && ops.is_empty() && loads[0].reg == store_reg {
+        return Form::Copy;
+    }
+    if loads.len() == 1 && !ops.is_empty() {
+        let mut cur = loads[0].reg;
+        let mut chain = Vec::new();
+        for op in ops {
+            match op {
+                LaneOp::Intr { op, args, n: 1, out } if args[0] == cur => {
+                    chain.push(*op);
+                    cur = *out;
+                }
+                _ => return Form::Generic,
+            }
+        }
+        if cur == store_reg {
+            return Form::Map(chain);
+        }
+        return Form::Generic;
+    }
+    if loads.len() == 2 && ops.len() == 1 {
+        if let LaneOp::Intr { op, args, n: 2, out } = &ops[0] {
+            if *out == store_reg && args[0] == loads[0].reg && args[1] == loads[1].reg {
+                return Form::Zip(*op);
+            }
+        }
+    }
+    Form::Generic
+}
+
+/// Run the scalar register program once (lane values already placed).
+fn eval_ops(ops: &[LaneOp], regs: &mut [f32]) {
+    for op in ops {
+        match op {
+            LaneOp::Intr { op, args, n, out } => {
+                let mut a = [0f32; 3];
+                for i in 0..*n {
+                    a[i] = regs[args[i]];
+                }
+                regs[*out] = op.eval(&a[..*n]);
+            }
+            LaneOp::Const { out, val } => regs[*out] = *val,
+        }
+    }
+}
+
+/// Predicted (vector, total) leaf-lane split for one top-level op block
+/// against the root scope, from the static lowering alone — constraint
+/// filtering and the runtime alias gate are ignored, so this is the
+/// compile-time estimate the coordinator records in a network's
+/// schedule; the runtime [`KernelReport`] gives measured lanes.
+pub(crate) fn predict_block_lanes(
+    block: &Block,
+    parent_ref_names: &[String],
+    parent_strides: &[Vec<i64>],
+) -> Option<(u64, u64)> {
+    let plan = Plan::build(block, parent_ref_names, &[]).ok()?;
+    let kp = lower(&plan, parent_strides).ok()?;
+    Some(walk_lanes(&plan, &kp, 1))
+}
+
+fn walk_lanes(plan: &Plan, kp: &KernelPlan, mult: u64) -> (u64, u64) {
+    let own: u64 = plan.ranged.iter().map(|(_, r)| *r).product();
+    if plan.children.is_empty() {
+        let total = mult.saturating_mul(own);
+        let vector = if kp.leaf.is_some() { total } else { 0 };
+        (vector, total)
+    } else {
+        let mut v = 0u64;
+        let mut t = 0u64;
+        for (c, kc) in plan.children.iter().zip(&kp.children) {
+            let (cv, ct) = walk_lanes(c, kc, mult.saturating_mul(own));
+            v += cv;
+            t += ct;
+        }
+        (v, t)
+    }
+}
+
+/// Compile, lower, and execute one top-level op block against the root
+/// scope — the kernel-engine counterpart of
+/// [`super::plan::exec_block_planned`], and the unit of work the
+/// parallel executor dispatches onto workers when the kernel engine is
+/// selected. Returns the cumulative iteration count and the lane split.
+pub(crate) fn exec_block_kernel(
+    bufs: &mut Buffers,
+    opts: &ExecOptions,
+    block: &Block,
+    scope: &RootScope,
+    executed_base: u64,
+) -> Result<(u64, KernelStats), ExecError> {
+    let plan = Plan::build(block, &scope.names, &[])
+        .map_err(|m| ExecError { block: block.name.clone(), message: m })?;
+    let kp = lower(&plan, &scope.strides)
+        .map_err(|m| ExecError { block: block.name.clone(), message: m })?;
+    let mut exec = KernelExec {
+        bufs,
+        opts,
+        executed: executed_base,
+        stats: KernelStats::default(),
+        scratch: BTreeMap::new(),
+        lanes: Vec::new(),
+        out_lane: Vec::new(),
+        srcs: Vec::new(),
+        regs: Vec::new(),
+    };
+    exec.run(&plan, &kp, &scope.views, &[])?;
+    Ok((exec.executed, exec.stats))
+}
+
+/// Run a whole program through the kernel engine. Drop-in equivalent of
+/// [`super::plan::run_program_planned`] (bit-exact; the differential
+/// harness asserts it), returning the per-op coverage report alongside
+/// the outputs.
+pub fn run_program_kernel(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+) -> Result<(BTreeMap<String, Vec<f32>>, KernelReport), ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let mut bufs = super::plan::alloc_program_buffers(program, inputs, opts.pool.clone())?;
+    let scope = super::plan::build_root_scope(program, &mut bufs)?;
+    let mut report = KernelReport::default();
+    let mut executed = 0u64;
+    for st in &program.main.stmts {
+        let Statement::Block(b) = st else {
+            bufs.release();
+            return Err(err("main-level statements must be blocks".into()));
+        };
+        match exec_block_kernel(&mut bufs, opts, b, &scope, executed) {
+            Ok((done, stats)) => {
+                executed = done;
+                report.ops.push(OpKernelStats { op: b.name.clone(), stats });
+            }
+            Err(e) => {
+                bufs.release();
+                return Err(e);
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    for bdef in program.buffers_of(BufKind::Output) {
+        let id = bufs.id_of(&bdef.name).unwrap();
+        out.insert(bdef.name.clone(), bufs.snapshot(id));
+    }
+    bufs.release();
+    Ok((out, report))
+}
+
+/// Per-plan-run state: index values, resolved views, and the
+/// incrementally maintained offsets / constraint values.
+struct BandState {
+    vals: Vec<i64>,
+    views: Vec<View>,
+    cur_offsets: Vec<i64>,
+    cur_cons: Vec<i64>,
+}
+
+/// The hoisted verdict for one run of a band.
+enum RunVerdict {
+    /// Every lane satisfies every constraint.
+    All,
+    /// No lane satisfies the constraints — skip the run outright.
+    Nothing,
+    /// Mixed — guarded per-lane execution.
+    Partial,
+}
+
+struct KernelExec<'a> {
+    bufs: &'a mut Buffers,
+    opts: &'a ExecOptions,
+    executed: u64,
+    stats: KernelStats,
+    /// Scratch pool keyed by (plan identity, ref slot) — same scheme as
+    /// the planned executor.
+    scratch: BTreeMap<(usize, usize), usize>,
+    /// Gather scratch, one buffer per load position (reused across runs).
+    lanes: Vec<Vec<f32>>,
+    /// Output-lane scratch (reused across runs).
+    out_lane: Vec<f32>,
+    /// Resolved lane sources (reused across runs).
+    srcs: Vec<Src>,
+    /// Register scratch for the Fill/Generic forms (reused across runs).
+    regs: Vec<f32>,
+}
+
+/// A resolved lane source: a gathered run or a broadcast scalar.
+enum Src {
+    Run(usize),
+    Scalar(f32),
+}
+
+impl<'a> KernelExec<'a> {
+    fn run(
+        &mut self,
+        plan: &Plan,
+        kp: &KernelPlan,
+        parent_views: &[View],
+        parent_vals: &[i64],
+    ) -> Result<(), ExecError> {
+        let mut vals = vec![0i64; plan.n_idxs];
+        for (slot, coeffs, off) in &plan.passed {
+            let mut v = *off;
+            for (c, pv) in coeffs.iter().zip(parent_vals) {
+                v += c * pv;
+            }
+            vals[*slot] = v;
+        }
+        // Resolve views: static rows/bases plus the parent view origins.
+        let n_refs = plan.refs.len();
+        let plan_key = plan as *const Plan as usize;
+        let mut views: Vec<View> = Vec::with_capacity(n_refs);
+        for (slot, r) in plan.refs.iter().enumerate() {
+            match r.parent_slot {
+                Some(ps) => {
+                    let pv = &parent_views[ps];
+                    views.push(View {
+                        buf: pv.buf,
+                        offset: pv.offset + kp.base_off[slot],
+                        agg: r.agg,
+                    });
+                }
+                None => {
+                    let key = (plan_key, slot);
+                    let id = match self.scratch.get(&key) {
+                        Some(&id) => {
+                            self.bufs.reset_written(id);
+                            id
+                        }
+                        None => {
+                            let id = self.bufs.alloc("scratch", r.span);
+                            self.scratch.insert(key, id);
+                            id
+                        }
+                    };
+                    views.push(View { buf: id, offset: 0, agg: r.agg });
+                }
+            }
+        }
+        let dot = |row: &[i64], vals: &[i64]| -> i64 {
+            row.iter().zip(vals).map(|(c, v)| c * v).sum()
+        };
+        let cur_offsets: Vec<i64> =
+            (0..n_refs).map(|s| views[s].offset + dot(&kp.rows[s], &vals)).collect();
+        let cur_cons: Vec<i64> =
+            plan.constraints.iter().map(|(row, off)| off + dot(row, &vals)).collect();
+        let mut st = BandState { vals, views, cur_offsets, cur_cons };
+        if let Some(leaf) = &kp.leaf {
+            if self.band_gate(leaf, &st.views) {
+                return self.run_band(plan, kp, leaf, &mut st);
+            }
+        }
+        self.run_scalar(plan, kp, st)
+    }
+
+    /// Runtime vectorization gate (see module docs): no load may share
+    /// the store's buffer, and strict-`Assign` reductions over more than
+    /// one lane must take the guarded path to reproduce the serial
+    /// double-write error.
+    fn band_gate(&self, leaf: &Leaf, views: &[View]) -> bool {
+        let out_buf = views[leaf.store_ref].buf;
+        if leaf.loads.iter().any(|l| views[l.ref_slot].buf == out_buf) {
+            return false;
+        }
+        if leaf.kind == StoreKind::Reduce
+            && views[leaf.store_ref].agg == AggOp::Assign
+            && !self.opts.relaxed_assign
+            && leaf.n > 1
+        {
+            return false;
+        }
+        true
+    }
+
+    /// Vectorized band: odometer over the outer ranged indexes, one
+    /// fused kernel (or guarded-lane / skipped) run per step.
+    fn run_band(
+        &mut self,
+        plan: &Plan,
+        kp: &KernelPlan,
+        leaf: &Leaf,
+        st: &mut BandState,
+    ) -> Result<(), ExecError> {
+        let err = |m: String| ExecError { block: plan.name.clone(), message: m };
+        let n_refs = plan.refs.len();
+        let outer = &plan.ranged[..plan.ranged.len() - 1];
+        let n_i = leaf.n as i64;
+        let ref_delta: Vec<Vec<i64>> = (0..n_refs)
+            .map(|s| outer.iter().map(|(slot, _)| kp.rows[s][*slot]).collect())
+            .collect();
+        let cons_delta: Vec<Vec<i64>> = plan
+            .constraints
+            .iter()
+            .map(|(row, _)| outer.iter().map(|(slot, _)| row[*slot]).collect())
+            .collect();
+        let cons_inner: Vec<i64> =
+            plan.constraints.iter().map(|(row, _)| row[leaf.inner_slot]).collect();
+        while self.lanes.len() < leaf.loads.len() {
+            self.lanes.push(Vec::new());
+        }
+        let mut counters = vec![0u64; outer.len()];
+        'outer: loop {
+            self.executed += leaf.n;
+            if self.executed > self.opts.max_iterations {
+                return Err(err("iteration budget exceeded".into()));
+            }
+            // Hoisted constraint check over the whole run.
+            let mut verdict = RunVerdict::All;
+            for (ci, &c) in st.cur_cons.iter().enumerate() {
+                let ic = cons_inner[ci];
+                let lo = c + if ic < 0 { ic * (n_i - 1) } else { 0 };
+                let hi = c + if ic > 0 { ic * (n_i - 1) } else { 0 };
+                if lo >= 0 {
+                    continue; // every lane satisfies this constraint
+                }
+                if hi < 0 {
+                    verdict = RunVerdict::Nothing;
+                    break;
+                }
+                verdict = RunVerdict::Partial;
+            }
+            match verdict {
+                RunVerdict::Nothing => {
+                    // Constraint-filtered outright: the hoisted check
+                    // dispatched all n lanes in O(1).
+                    self.stats.vector_lanes += leaf.n;
+                }
+                RunVerdict::All if self.run_in_bounds(leaf, st, n_i) => {
+                    self.exec_run(plan, leaf, st).map_err(&err)?;
+                    self.stats.vector_lanes += leaf.n;
+                }
+                _ => {
+                    // Mixed constraints or unproven bounds: guarded
+                    // lanes with exact serial semantics and errors.
+                    self.exec_run_scalar(plan, leaf, st, &cons_inner)?;
+                    self.stats.scalar_lanes += leaf.n;
+                }
+            }
+            // Advance the outer odometer with incremental maintenance.
+            let mut k = outer.len();
+            loop {
+                if k == 0 {
+                    break 'outer;
+                }
+                k -= 1;
+                counters[k] += 1;
+                if counters[k] < outer[k].1 {
+                    st.vals[outer[k].0] += 1;
+                    for s in 0..n_refs {
+                        st.cur_offsets[s] += ref_delta[s][k];
+                    }
+                    for (c, d) in st.cur_cons.iter_mut().zip(&cons_delta) {
+                        *c += d[k];
+                    }
+                    break;
+                }
+                let back = (outer[k].1 - 1) as i64;
+                counters[k] = 0;
+                st.vals[outer[k].0] -= back;
+                for s in 0..n_refs {
+                    st.cur_offsets[s] -= ref_delta[s][k] * back;
+                }
+                for (c, d) in st.cur_cons.iter_mut().zip(&cons_delta) {
+                    *c -= d[k] * back;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Hoisted bounds check: every used ref's run extent must lie
+    /// inside its buffer. O(used refs) per run.
+    fn run_in_bounds(&self, leaf: &Leaf, st: &BandState, n_i: i64) -> bool {
+        for &s in &leaf.used_refs {
+            let ic = leaf.inner_coeff[s];
+            let base = st.cur_offsets[s];
+            let lo = base + if ic < 0 { ic * (n_i - 1) } else { 0 };
+            let hi = base + if ic > 0 { ic * (n_i - 1) } else { 0 };
+            if lo < 0 || hi >= self.bufs.len_of(st.views[s].buf) as i64 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// One fused kernel run: gather, compute, bulk store. All scratch
+    /// (lane buffers, sources, registers) lives on the executor and is
+    /// reused across runs — this sits inside the band's outer odometer.
+    fn exec_run(&mut self, plan: &Plan, leaf: &Leaf, st: &BandState) -> Result<(), String> {
+        let n = leaf.n as usize;
+        // Gather inputs.
+        self.srcs.clear();
+        for (i, ld) in leaf.loads.iter().enumerate() {
+            let v = &st.views[ld.ref_slot];
+            let c = leaf.inner_coeff[ld.ref_slot];
+            let start = st.cur_offsets[ld.ref_slot];
+            if c == 0 {
+                let val = self.bufs.read(v.buf, start)?;
+                self.srcs.push(Src::Scalar(val));
+            } else {
+                let lane = &mut self.lanes[i];
+                lane.resize(n, 0.0);
+                if c == 1 {
+                    self.bufs.read_run_into(v.buf, start, lane)?;
+                } else {
+                    self.bufs.read_strided_into(v.buf, start, c, lane)?;
+                }
+                self.srcs.push(Src::Run(i));
+            }
+        }
+        // Compute the output lanes.
+        let out = &mut self.out_lane;
+        out.clear();
+        out.resize(n, 0.0);
+        let regs = &mut self.regs;
+        regs.clear();
+        regs.resize(plan.n_regs, 0.0);
+        let lanes = &self.lanes;
+        let srcs = &self.srcs;
+        let get = |s: &Src, l: usize| -> f32 {
+            match s {
+                Src::Run(i) => lanes[*i][l],
+                Src::Scalar(v) => *v,
+            }
+        };
+        match &leaf.form {
+            Form::Fill => {
+                // No loads: the body is lane-invariant — run it once.
+                eval_ops(&leaf.lane_ops, regs);
+                let v = regs[leaf.store_reg];
+                for o in out.iter_mut() {
+                    *o = v;
+                }
+            }
+            Form::Copy => match &srcs[0] {
+                Src::Run(i) => out.copy_from_slice(&lanes[*i]),
+                Src::Scalar(v) => {
+                    for o in out.iter_mut() {
+                        *o = *v;
+                    }
+                }
+            },
+            Form::Map(chain) => {
+                for (l, o) in out.iter_mut().enumerate() {
+                    let mut x = get(&srcs[0], l);
+                    for op in chain {
+                        x = op.eval(&[x]);
+                    }
+                    *o = x;
+                }
+            }
+            Form::Zip(op) => {
+                for (l, o) in out.iter_mut().enumerate() {
+                    *o = op.eval(&[get(&srcs[0], l), get(&srcs[1], l)]);
+                }
+            }
+            Form::Generic => {
+                for (l, o) in out.iter_mut().enumerate() {
+                    for (i, ld) in leaf.loads.iter().enumerate() {
+                        regs[ld.reg] = get(&srcs[i], l);
+                    }
+                    eval_ops(&leaf.lane_ops, regs);
+                    *o = regs[leaf.store_reg];
+                }
+            }
+        }
+        // Bulk store.
+        let sv = &st.views[leaf.store_ref];
+        let start = st.cur_offsets[leaf.store_ref];
+        match leaf.kind {
+            StoreKind::Run => {
+                self.bufs.write_run(sv.buf, start, out, sv.agg, self.opts.relaxed_assign)?
+            }
+            StoreKind::Reduce => {
+                self.bufs.fold_run(sv.buf, start, out, sv.agg, self.opts.relaxed_assign)?
+            }
+        }
+        Ok(())
+    }
+
+    /// Guarded lanes for one run: per-lane constraint evaluation and
+    /// per-element loads/stores, identical to the planned executor
+    /// (error messages included).
+    fn exec_run_scalar(
+        &mut self,
+        plan: &Plan,
+        leaf: &Leaf,
+        st: &BandState,
+        cons_inner: &[i64],
+    ) -> Result<(), ExecError> {
+        let err = |m: String| ExecError { block: plan.name.clone(), message: m };
+        // Reuse the executor's register scratch — this path runs once
+        // per demoted run inside the band's outer loop.
+        self.regs.clear();
+        self.regs.resize(plan.n_regs, 0.0);
+        for l in 0..leaf.n as i64 {
+            if !st.cur_cons.iter().zip(cons_inner).all(|(&c, &ic)| c + ic * l >= 0) {
+                continue;
+            }
+            for stmt in &plan.stmts {
+                match stmt {
+                    PStmt::Load { reg, ref_slot } => {
+                        let v = &st.views[*ref_slot];
+                        let off = st.cur_offsets[*ref_slot] + leaf.inner_coeff[*ref_slot] * l;
+                        self.regs[*reg] = self.bufs.read(v.buf, off).map_err(&err)?;
+                    }
+                    PStmt::Store { reg, ref_slot } => {
+                        let v = &st.views[*ref_slot];
+                        let off = st.cur_offsets[*ref_slot] + leaf.inner_coeff[*ref_slot] * l;
+                        self.bufs
+                            .store(v.buf, off, self.regs[*reg], v.agg, self.opts.relaxed_assign)
+                            .map_err(&err)?;
+                    }
+                    PStmt::Intr { op, args, n, out } => {
+                        let mut a = [0f32; 3];
+                        for i in 0..*n {
+                            a[i] = self.regs[args[i]];
+                        }
+                        self.regs[*out] = op.eval(&a[..*n]);
+                    }
+                    PStmt::Const { out, val } => self.regs[*out] = *val,
+                    PStmt::Child(_) | PStmt::Special(_) => {
+                        return Err(err("non-leaf statement in a lowered band".into()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whole-band guarded fallback: the full scalar odometer, mirroring
+    /// the planned executor (structural nodes recurse into children).
+    fn run_scalar(
+        &mut self,
+        plan: &Plan,
+        kp: &KernelPlan,
+        mut st: BandState,
+    ) -> Result<(), ExecError> {
+        let err = |m: String| ExecError { block: plan.name.clone(), message: m };
+        let n_refs = plan.refs.len();
+        let n_ranged = plan.ranged.len();
+        let is_leaf = plan.children.is_empty();
+        let ref_delta: Vec<Vec<i64>> = (0..n_refs)
+            .map(|s| plan.ranged.iter().map(|(slot, _)| kp.rows[s][*slot]).collect())
+            .collect();
+        let cons_delta: Vec<Vec<i64>> = plan
+            .constraints
+            .iter()
+            .map(|(row, _)| plan.ranged.iter().map(|(slot, _)| row[*slot]).collect())
+            .collect();
+        let mut regs = vec![0f32; plan.n_regs];
+        let mut counters = vec![0u64; n_ranged];
+        'outer: loop {
+            self.executed += 1;
+            if is_leaf {
+                self.stats.scalar_lanes += 1;
+            }
+            if self.executed > self.opts.max_iterations {
+                return Err(err("iteration budget exceeded".into()));
+            }
+            if st.cur_cons.iter().all(|&c| c >= 0) {
+                // Block-local scratch is per-iteration fresh (Def. 2).
+                for (slot, r) in plan.refs.iter().enumerate() {
+                    if r.parent_slot.is_none() {
+                        self.bufs.reset_written(st.views[slot].buf);
+                    }
+                }
+                for (slot, view) in st.views.iter_mut().enumerate() {
+                    view.offset = st.cur_offsets[slot];
+                }
+                for stmt in &plan.stmts {
+                    match stmt {
+                        PStmt::Load { reg, ref_slot } => {
+                            let v = &st.views[*ref_slot];
+                            regs[*reg] = self.bufs.read(v.buf, v.offset).map_err(&err)?;
+                        }
+                        PStmt::Store { reg, ref_slot } => {
+                            let v = &st.views[*ref_slot];
+                            self.bufs
+                                .store(v.buf, v.offset, regs[*reg], v.agg, self.opts.relaxed_assign)
+                                .map_err(&err)?;
+                        }
+                        PStmt::Intr { op, args, n, out } => {
+                            let mut a = [0f32; 3];
+                            for i in 0..*n {
+                                a[i] = regs[args[i]];
+                            }
+                            regs[*out] = op.eval(&a[..*n]);
+                        }
+                        PStmt::Const { out, val } => regs[*out] = *val,
+                        PStmt::Child(i) => {
+                            self.run(&plan.children[*i], &kp.children[*i], &st.views, &st.vals)?;
+                        }
+                        PStmt::Special(sp) => {
+                            return Err(err(format!(
+                                "special {:?} unsupported on the kernel path",
+                                sp.name
+                            )));
+                        }
+                    }
+                }
+            }
+            // Odometer with incremental offset/constraint maintenance.
+            let mut k = n_ranged;
+            loop {
+                if k == 0 {
+                    break 'outer;
+                }
+                k -= 1;
+                counters[k] += 1;
+                if counters[k] < plan.ranged[k].1 {
+                    st.vals[plan.ranged[k].0] += 1;
+                    for s in 0..n_refs {
+                        st.cur_offsets[s] += ref_delta[s][k];
+                    }
+                    for (c, d) in st.cur_cons.iter_mut().zip(&cons_delta) {
+                        *c += d[k];
+                    }
+                    break;
+                }
+                let back = (plan.ranged[k].1 - 1) as i64;
+                counters[k] = 0;
+                st.vals[plan.ranged[k].0] -= back;
+                for s in 0..n_refs {
+                    st.cur_offsets[s] -= ref_delta[s][k] * back;
+                }
+                for (c, d) in st.cur_cons.iter_mut().zip(&cons_delta) {
+                    *c -= d[k] * back;
+                }
+            }
+            if plan.ranged.is_empty() {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::ir::builder::{contraction, Operand};
+    use crate::ir::{Buffer, DType, Program, TensorType};
+    use crate::passes::equiv::gen_inputs;
+    use crate::poly::Affine;
+
+    fn kernel_opts() -> ExecOptions {
+        ExecOptions { engine: super::super::interp::Engine::Kernel, ..ExecOptions::default() }
+    }
+
+    /// Kernel output must be bit-exact with the serial planned engine.
+    fn assert_kernel_exact(p: &Program, seed: u64) -> KernelReport {
+        let inputs = gen_inputs(p, seed);
+        let planned = super::super::plan::run_program_planned(
+            p,
+            &inputs,
+            &ExecOptions::default(),
+            &mut crate::exec::NullSink,
+        )
+        .unwrap();
+        let (kernel, report) = run_program_kernel(p, &inputs, &kernel_opts()).unwrap();
+        assert_eq!(planned, kernel, "kernel output must be bit-exact\n{}", report.summary());
+        report
+    }
+
+    #[test]
+    fn kernel_matches_planned_on_canned_programs() {
+        let r = assert_kernel_exact(&ops::fig4_conv_program(), 1);
+        // Conv vectorizes fully: the output-channel run store is unit
+        // stride, the filter read is strided, the halo constraints do
+        // not involve the inner index.
+        assert_eq!(r.coverage(), Some(1.0), "{}", r.summary());
+        assert_kernel_exact(&ops::tiny_mlp_program(4, 8, 3), 2);
+        assert_kernel_exact(&ops::matmul_program(5, 6, 7), 3);
+        assert_kernel_exact(&ops::conv_relu_program(), 4);
+    }
+
+    #[test]
+    fn cnn_reaches_high_kernel_coverage() {
+        let r = assert_kernel_exact(&ops::cnn_program(), 5);
+        let cov = r.coverage().expect("cnn executes leaf lanes");
+        assert!(cov >= 0.8, "kernel coverage {cov:.3} below 80%\n{}", r.summary());
+    }
+
+    #[test]
+    fn softmax_reductions_vectorize() {
+        let mut nb = crate::graph::NetworkBuilder::new("sm", DType::F32);
+        let x = nb.input("X", &[32]);
+        let o = nb.softmax(x);
+        let p = nb.finish(o);
+        let r = assert_kernel_exact(&p, 6);
+        // max-reduce, shift+exp, sum-reduce, normalize: all four lower.
+        assert_eq!(r.coverage(), Some(1.0), "{}", r.summary());
+    }
+
+    #[test]
+    fn compiled_networks_match_planned() {
+        for cfg in crate::hw::targets::builtin_targets() {
+            let c = crate::coordinator::compile_network(&ops::cnn_program(), &cfg, false)
+                .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+            assert_kernel_exact(&c.program, 7);
+        }
+    }
+
+    /// A transposed store (non-unit innermost stride) must take the
+    /// guarded fallback and still match the planned engine.
+    #[test]
+    fn transposed_store_takes_guarded_fallback() {
+        let i_t = TensorType::contiguous(DType::F32, &[3, 5]);
+        let o_t = TensorType::contiguous(DType::F32, &[5, 3]);
+        let mut p = Program::new(
+            "transpose",
+            vec![
+                Buffer { name: "I".into(), kind: BufKind::Input, ttype: i_t.clone() },
+                Buffer { name: "O".into(), kind: BufKind::Output, ttype: o_t.clone() },
+            ],
+        );
+        // O[y, x] = I[x, y] with y innermost: the store's folded inner
+        // stride is O's row pitch (3), not 1.
+        let b = contraction(
+            "transpose",
+            &[("x", 3), ("y", 5)],
+            vec![],
+            Operand::new("O", vec![Affine::var("y"), Affine::var("x")], &o_t),
+            crate::ir::AggOp::Assign,
+            &[Operand::new("I", vec![Affine::var("x"), Affine::var("y")], &i_t)],
+            IntrOp::Mul,
+        );
+        p.main.stmts.push(Statement::Block(Box::new(b)));
+        let r = assert_kernel_exact(&p, 8);
+        assert_eq!(r.coverage(), Some(0.0), "transposed store must not vectorize");
+        assert_eq!(r.totals().scalar_lanes, 15);
+    }
+
+    /// A transposed *read* is fine: strided gathers keep the band
+    /// vectorized as long as the store is contiguous.
+    #[test]
+    fn transposed_read_vectorizes_with_strided_gather() {
+        let i_t = TensorType::contiguous(DType::F32, &[3, 5]);
+        let o_t = TensorType::contiguous(DType::F32, &[5, 3]);
+        let mut p = Program::new(
+            "transpose_read",
+            vec![
+                Buffer { name: "I".into(), kind: BufKind::Input, ttype: i_t.clone() },
+                Buffer { name: "O".into(), kind: BufKind::Output, ttype: o_t.clone() },
+            ],
+        );
+        // O[y, x] = I[x, y] with x innermost: the store walks O's minor
+        // dimension (stride 1), the load gathers I at stride 5.
+        let b = contraction(
+            "transpose_read",
+            &[("y", 5), ("x", 3)],
+            vec![],
+            Operand::new("O", vec![Affine::var("y"), Affine::var("x")], &o_t),
+            crate::ir::AggOp::Assign,
+            &[Operand::new("I", vec![Affine::var("x"), Affine::var("y")], &i_t)],
+            IntrOp::Mul,
+        );
+        p.main.stmts.push(Statement::Block(Box::new(b)));
+        let r = assert_kernel_exact(&p, 9);
+        assert_eq!(r.coverage(), Some(1.0), "{}", r.summary());
+    }
+
+    #[test]
+    fn self_aliasing_ops_take_the_guarded_path_and_match() {
+        // An op whose read and write refinements resolve to the same
+        // buffer must fail the runtime alias gate (the scalar
+        // interleaving of loads and stores is observable) yet still
+        // execute correctly. InOut dir with relaxed assign models an
+        // in-place doubling.
+        let t = TensorType::contiguous(DType::F32, &[8]);
+        let mut p = Program::new(
+            "inplace",
+            vec![Buffer { name: "O".into(), kind: BufKind::Output, ttype: t.clone() }],
+        );
+        let b = contraction(
+            "double",
+            &[("x", 8)],
+            vec![],
+            Operand::new("O", vec![Affine::var("x")], &t),
+            crate::ir::AggOp::Add,
+            &[Operand::new("O", vec![Affine::var("x")], &t)],
+            IntrOp::Mul,
+        );
+        p.main.stmts.push(Statement::Block(Box::new(b)));
+        let inputs = std::collections::BTreeMap::new();
+        let planned = super::super::plan::run_program_planned(
+            &p,
+            &inputs,
+            &ExecOptions::default(),
+            &mut crate::exec::NullSink,
+        )
+        .unwrap();
+        let (kernel, report) = run_program_kernel(&p, &inputs, &kernel_opts()).unwrap();
+        assert_eq!(planned, kernel);
+        assert_eq!(report.coverage(), Some(0.0), "{}", report.summary());
+    }
+
+    #[test]
+    fn iteration_budget_triggers_cleanly() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 10);
+        let opts = ExecOptions { max_iterations: 100, ..kernel_opts() };
+        let e = run_program_kernel(&p, &inputs, &opts).unwrap_err();
+        assert!(e.message.contains("iteration budget"), "{e}");
+    }
+
+    #[test]
+    fn predicted_lanes_match_measured_structure_on_flat_cnn() {
+        let p = ops::cnn_program();
+        let names: Vec<String> = p.main.refs.iter().map(|r| r.into.clone()).collect();
+        let strides: Vec<Vec<i64>> = p.main.refs.iter().map(|r| r.ttype.strides()).collect();
+        let inputs = gen_inputs(&p, 11);
+        let (_, report) = run_program_kernel(&p, &inputs, &kernel_opts()).unwrap();
+        for (st, op) in p.main.stmts.iter().zip(&report.ops) {
+            let Statement::Block(b) = st else { unreachable!() };
+            let (v, t) = predict_block_lanes(b, &names, &strides)
+                .unwrap_or_else(|| panic!("{}: prediction failed", b.name));
+            assert_eq!(t, op.stats.total(), "{}: total lanes", b.name);
+            // Flat cnn ops have no runtime demotions, so the static
+            // prediction is exact.
+            assert_eq!(v, op.stats.vector_lanes, "{}: vector lanes", b.name);
+        }
+    }
+
+    #[test]
+    fn pooled_kernel_runs_are_bit_exact() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 12);
+        let pool = std::sync::Arc::new(crate::exec::BufferPool::default());
+        let opts = ExecOptions { pool: Some(std::sync::Arc::clone(&pool)), ..kernel_opts() };
+        let (a, _) = run_program_kernel(&p, &inputs, &opts).unwrap();
+        let (b, _) = run_program_kernel(&p, &inputs, &opts).unwrap();
+        assert_eq!(a, b);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(pool.hits.load(Relaxed) > 0, "second run must recycle pages");
+    }
+}

@@ -22,16 +22,23 @@
 //!
 //! # Execution engines
 //!
-//! Three engines share these semantics:
+//! Four engines share these semantics:
 //!
 //! | engine | module | use |
 //! |--------|--------|-----|
 //! | naive interpreter | [`interp`] | ground truth; only path executing `Special` statements; access tracing |
-//! | serial plan | [`plan`] | slot-resolved hot path; default |
-//! | parallel plan | [`parallel`] | plan execution sliced across compute units |
+//! | serial plan | [`plan`] | slot-resolved odometer; default |
+//! | leaf kernel | [`kernel`] | plan + leaf-kernel lowering: fused run-level kernels (map/zip/axpy/reductions) over contiguous `f32` runs, constraint/OOB checks hoisted per band, guarded-odometer fallback |
+//! | parallel | [`parallel`] | chunk dispatch across compute units; each chunk runs the planned or kernel engine |
 //!
-//! [`run_program_with`] dispatches between the engines from
-//! [`ExecOptions`]; [`run_program`] is the serial convenience wrapper.
+//! [`run_program_with`] dispatches from [`ExecOptions`]: `Special`s
+//! force the naive interpreter, `workers > 1` selects the parallel
+//! dispatcher, and [`ExecOptions::engine`] ([`Engine`]) picks the
+//! serial engine — or the per-chunk executor under the dispatcher.
+//! [`run_program`] is the serial convenience wrapper. The kernel
+//! engine reports per-op coverage (% of leaf iterations executed via
+//! vector kernels) in a [`KernelReport`]; the compiled-network
+//! schedule records the static prediction of the same split.
 //!
 //! # Memory model
 //!
@@ -50,8 +57,14 @@
 //!   adopts fully-written interior pages by pointer. It still
 //!   *verifies* write disjointness element-by-element at runtime — the
 //!   differential harness (`rust/tests/differential.rs`, naive ≡
-//!   serial ≡ parallel on randomized networks) relies on that check to
-//!   catch analysis bugs loudly.
+//!   planned ≡ kernel ≡ parallel on randomized networks) relies on
+//!   that check to catch analysis bugs loudly.
+//! * **Bulk run operations.** The kernel engine reads and writes
+//!   contiguous runs ([`Buffers::read_run_into`],
+//!   [`Buffers::write_run`], [`Buffers::fold_run`]): one bounds check
+//!   per run, write masks filled per-range instead of per-bit, page
+//!   boundaries honored, CoW accounting identical to the per-element
+//!   path.
 //! * **Pre-resolved regions.** The plan compiler resolves buffer names
 //!   to ids once per program ([`plan`]'s root scope) and folds each
 //!   parallel chunk's write refinements into flat extents, so workers
@@ -76,12 +89,16 @@
 
 pub mod buffer;
 pub mod interp;
+pub mod kernel;
 pub mod parallel;
 pub mod plan;
 pub mod trace;
 
 pub use buffer::{BufferPool, Buffers, StorageStats, PAGE_ELEMS};
-pub use interp::{run_program, run_program_sink, run_program_with, ExecError, ExecOptions};
+pub use interp::{
+    run_program, run_program_sink, run_program_with, Engine, ExecError, ExecOptions,
+};
+pub use kernel::{run_program_kernel, KernelReport, KernelStats, OpKernelStats};
 pub use parallel::{
     analyze_program, best_parallel_dim, parallel_dims, run_program_parallel, OpParallelism,
     ParallelReport,

@@ -40,6 +40,13 @@
 //! data, where merging would be ambiguous) fall back to the serial
 //! planned path, so parallelism is always a pure optimization; the
 //! [`ParallelReport`] records the per-op decision for inspection.
+//!
+//! The dispatcher is engine-agnostic: with [`Engine::Kernel`] selected,
+//! each worker runs its chunk through the leaf-kernel lowering
+//! (`exec::kernel`) instead of the planned odometer — fork/merge
+//! accounting is unchanged, and the per-op lane split (vector vs
+//! guarded-fallback leaf iterations) is summed over workers into the
+//! report.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -48,7 +55,8 @@ use crate::ir::{Block, BufKind, Program, Statement};
 use crate::poly::{overlap, Affine, Polyhedron};
 
 use super::buffer::Buffers;
-use super::interp::{ExecError, ExecOptions};
+use super::interp::{Engine, ExecError, ExecOptions};
+use super::kernel::{self, KernelStats};
 use super::plan;
 
 /// Per-op scheduling decision.
@@ -73,6 +81,29 @@ pub struct OpParallelism {
     /// (element-wise copies plus master-side CoW; pages adopted by
     /// pointer contribute nothing).
     pub merge_bytes: u64,
+    /// Leaf iterations executed through vector kernels (`exec::kernel`).
+    /// From [`analyze_program`] this is the *static prediction* of the
+    /// lowering stage; from [`run_program_parallel`] under
+    /// [`Engine::Kernel`] it is the measured count summed over workers.
+    /// Zero under the planned engine.
+    pub kernel_lanes: u64,
+    /// Leaf iterations that took the guarded scalar fallback (same
+    /// provenance split as `kernel_lanes`).
+    pub scalar_lanes: u64,
+}
+
+impl OpParallelism {
+    /// This op's lane split as a [`KernelStats`].
+    pub fn kernel_stats(&self) -> KernelStats {
+        KernelStats { vector_lanes: self.kernel_lanes, scalar_lanes: self.scalar_lanes }
+    }
+
+    /// Fraction of this op's leaf iterations executed via vector
+    /// kernels (`None` when the op never went through the lowering
+    /// stage, e.g. under the planned engine).
+    pub fn kernel_coverage(&self) -> Option<f64> {
+        self.kernel_stats().coverage()
+    }
 }
 
 /// The parallel schedule of a whole program run (or, from
@@ -99,17 +130,31 @@ impl ParallelReport {
         self.ops.iter().map(|o| o.merge_bytes).sum()
     }
 
+    /// Aggregate kernel coverage across all ops (`None` when no op went
+    /// through the lowering stage — e.g. the planned engine).
+    pub fn kernel_coverage(&self) -> Option<f64> {
+        let mut t = KernelStats::default();
+        for o in &self.ops {
+            t.absorb(o.kernel_stats());
+        }
+        t.coverage()
+    }
+
     /// One line per op.
     pub fn summary(&self) -> String {
         let mut s = String::new();
         for o in &self.ops {
+            let cov = match o.kernel_coverage() {
+                Some(c) => format!(", kernel {:.0}%", c * 100.0),
+                None => String::new(),
+            };
             match &o.dim {
                 Some(d) => s.push_str(&format!(
                     "  op {:<24} parallel over {d:<6} (range {}, {} workers, \
-                     fork {} B, merge {} B)\n",
+                     fork {} B, merge {} B{cov})\n",
                     o.op, o.range, o.workers, o.fork_bytes, o.merge_bytes
                 )),
-                None => s.push_str(&format!("  op {:<24} serial: {}\n", o.op, o.reason)),
+                None => s.push_str(&format!("  op {:<24} serial: {}{cov}\n", o.op, o.reason)),
             }
         }
         s
@@ -262,12 +307,21 @@ pub fn best_parallel_dim(b: &Block, workers: usize) -> Option<(String, u64)> {
 /// Static schedule for a program: the decision [`run_program_parallel`]
 /// would make for each top-level op with `workers` compute units
 /// available (minus the runtime freshness gate, which depends on buffer
-/// state). Used by the coordinator to record a compiled network's
-/// parallel schedule.
+/// state), plus the lowering stage's **predicted kernel coverage** per
+/// op (which leaf lanes would run through vector kernels — see
+/// `exec::kernel::predict_block_lanes`). Used by the coordinator to
+/// record a compiled network's schedule.
 pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
+    let scope_names: Vec<String> = p.main.refs.iter().map(|r| r.into.clone()).collect();
+    let scope_strides: Vec<Vec<i64>> = p.main.refs.iter().map(|r| r.ttype.strides()).collect();
     let mut report = ParallelReport::default();
     for st in &p.main.stmts {
         let Statement::Block(b) = st else { continue };
+        let (kernel_lanes, scalar_lanes) =
+            match kernel::predict_block_lanes(b, &scope_names, &scope_strides) {
+                Some((v, t)) => (v, t - v),
+                None => (0, 0),
+            };
         let best = best_parallel_dim(b, workers);
         report.ops.push(match best {
             Some((dim, range)) if workers >= 2 => OpParallelism {
@@ -278,6 +332,8 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
                 range,
                 fork_bytes: 0,
                 merge_bytes: 0,
+                kernel_lanes,
+                scalar_lanes,
             },
             Some((dim, range)) => OpParallelism {
                 op: b.name.clone(),
@@ -287,6 +343,8 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
                 reason: format!("single compute unit (dim {dim} is safe)"),
                 fork_bytes: 0,
                 merge_bytes: 0,
+                kernel_lanes,
+                scalar_lanes,
             },
             None => OpParallelism {
                 op: b.name.clone(),
@@ -296,6 +354,8 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
                 reason: "no provably disjoint outer dimension".into(),
                 fork_bytes: 0,
                 merge_bytes: 0,
+                kernel_lanes,
+                scalar_lanes,
             },
         });
     }
@@ -397,6 +457,26 @@ fn decide(
     }
 }
 
+/// Execute one op block (or one worker chunk of it) on the engine the
+/// options select: the kernel engine lowers the chunk and reports its
+/// lane split; the planned engine (and `Naive`, which has no chunkable
+/// form) runs the slot-resolved odometer with empty lane counters.
+fn exec_chunk(
+    bufs: &mut Buffers,
+    opts: &ExecOptions,
+    blk: &Block,
+    scope: &plan::RootScope,
+    executed: u64,
+) -> Result<(u64, KernelStats), ExecError> {
+    match opts.engine {
+        Engine::Kernel => kernel::exec_block_kernel(bufs, opts, blk, scope, executed),
+        Engine::Planned | Engine::Naive => {
+            plan::exec_block_planned(bufs, opts, blk, scope, executed)
+                .map(|done| (done, KernelStats::default()))
+        }
+    }
+}
+
 /// Execute one top-level op block, in parallel when provably safe.
 /// `executed` is the cumulative iteration count before this op; the
 /// count after it is returned alongside the scheduling decision (for a
@@ -411,7 +491,7 @@ fn run_op(
 ) -> Result<(OpParallelism, u64), ExecError> {
     let (dim, range, write_ids) = match decide(b, scope, master, workers) {
         Decision::Serial(reason) => {
-            let executed = plan::exec_block_planned(master, opts, b, scope, executed)?;
+            let (executed, ks) = exec_chunk(master, opts, b, scope, executed)?;
             return Ok((
                 OpParallelism {
                     op: b.name.clone(),
@@ -421,6 +501,8 @@ fn run_op(
                     reason,
                     fork_bytes: 0,
                     merge_bytes: 0,
+                    kernel_lanes: ks.vector_lanes,
+                    scalar_lanes: ks.scalar_lanes,
                 },
                 executed,
             ));
@@ -449,12 +531,13 @@ fn run_op(
     for _ in &blocks {
         locals.push(master.fork());
     }
-    let results: Vec<Result<(Buffers, u64), ExecError>> = std::thread::scope(|s| {
+    type ChunkResult = Result<(Buffers, u64, KernelStats), ExecError>;
+    let results: Vec<ChunkResult> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(blocks.len());
         for (blk, mut local) in blocks.iter().zip(locals.drain(..)) {
-            handles.push(s.spawn(move || -> Result<(Buffers, u64), ExecError> {
-                let done = plan::exec_block_planned(&mut local, opts, blk, scope, executed)?;
-                Ok((local, done))
+            handles.push(s.spawn(move || -> ChunkResult {
+                let (done, ks) = exec_chunk(&mut local, opts, blk, scope, executed)?;
+                Ok((local, done, ks))
             }));
         }
         handles
@@ -471,9 +554,11 @@ fn run_op(
     });
     let mut parts = Vec::with_capacity(results.len());
     let mut executed_after = executed;
+    let mut lanes = KernelStats::default();
     for r in results {
-        let (part, done) = r?;
+        let (part, done, ks) = r?;
         executed_after = executed_after.max(done);
+        lanes.absorb(ks);
         parts.push(part);
     }
     // Fork traffic: what each worker actually materialized. While here,
@@ -537,6 +622,8 @@ fn run_op(
             range,
             fork_bytes,
             merge_bytes,
+            kernel_lanes: lanes.vector_lanes,
+            scalar_lanes: lanes.scalar_lanes,
         },
         executed_after,
     ))
@@ -651,6 +738,47 @@ mod tests {
         let p = ops::cnn_program();
         let report = assert_bit_exact(&p, 12, 3);
         assert!(report.parallel_ops() >= 4, "{}", report.summary());
+    }
+
+    #[test]
+    fn kernel_engine_chunks_are_bit_exact_and_report_coverage() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 41);
+        let serial = super::super::plan::run_program_planned(
+            &p,
+            &inputs,
+            &ExecOptions::default(),
+            &mut crate::exec::NullSink,
+        )
+        .unwrap();
+        let opts = ExecOptions { workers: 3, engine: Engine::Kernel, ..ExecOptions::default() };
+        let (par, report) = run_program_parallel(&p, &inputs, &opts).unwrap();
+        assert_eq!(serial, par, "parallel kernel chunks must stay bit-exact");
+        assert!(report.parallel_ops() >= 4, "{}", report.summary());
+        // Every op went through the lowering stage and the flat cnn
+        // vectorizes fully, chunked or not.
+        let cov = report.kernel_coverage().expect("kernel engine reports lanes");
+        assert!(cov >= 0.8, "coverage {cov:.3}\n{}", report.summary());
+        for o in &report.ops {
+            assert!(
+                o.kernel_coverage().is_some(),
+                "{}: no lane accounting\n{}",
+                o.op,
+                report.summary()
+            );
+        }
+        // The planned engine reports no lanes.
+        let (_, planned_report) =
+            run_program_parallel(&p, &inputs, &parallel_opts(3)).unwrap();
+        assert_eq!(planned_report.kernel_coverage(), None);
+    }
+
+    #[test]
+    fn static_schedule_predicts_kernel_coverage() {
+        let report = analyze_program(&ops::cnn_program(), 4);
+        let cov = report.kernel_coverage().expect("prediction covers flat ops");
+        assert!(cov >= 0.8, "predicted coverage {cov:.3}\n{}", report.summary());
+        assert!(report.summary().contains("kernel"));
     }
 
     #[test]

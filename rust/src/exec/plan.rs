@@ -17,6 +17,12 @@
 //! assign aggregation, serial statement order, OOB checks); the perf
 //! suite asserts equivalence and EXPERIMENTS.md §Perf records the
 //! before/after.
+//!
+//! A [`Plan`] is also the input to the third compilation stage: the
+//! leaf-kernel lowering in [`super::kernel`] consumes the compiled
+//! structure (dense access rows, folded stride vectors, constraint
+//! rows) — which is why the build-time structure here is split from
+//! run-time state and exposed `pub(crate)`.
 
 use std::collections::BTreeMap;
 
@@ -27,25 +33,30 @@ use super::buffer::Buffers;
 use super::interp::{ExecError, ExecOptions};
 use super::trace::{AccessEvent, Sink};
 
-/// A compiled refinement.
+/// A compiled refinement. Fields are `pub(crate)` because the plan is
+/// the *build-time* half of execution: the lowering stage
+/// (`exec::kernel`) consumes the compiled structure — access rows, view
+/// strides, aggregations — to fold flat stride vectors and decide which
+/// leaf bands vectorize, while run-time state (views, offsets,
+/// registers) stays inside each executor.
 #[derive(Debug, Clone)]
-struct PlanRef {
+pub(crate) struct PlanRef {
     /// Slot of the parent view in the parent's ref array (`None` for a
     /// block-local Temp allocation).
-    parent_slot: Option<usize>,
+    pub(crate) parent_slot: Option<usize>,
     /// Per-parent-dimension access: dense coeffs over local idx slots +
     /// constant.
-    access: Vec<(Vec<i64>, i64)>,
+    pub(crate) access: Vec<(Vec<i64>, i64)>,
     /// Child view strides.
-    strides: Vec<i64>,
-    agg: AggOp,
+    pub(crate) strides: Vec<i64>,
+    pub(crate) agg: AggOp,
     /// Allocation span for temps.
-    span: usize,
+    pub(crate) span: usize,
 }
 
 /// A compiled statement.
 #[derive(Debug, Clone)]
-enum PStmt {
+pub(crate) enum PStmt {
     Load { reg: usize, ref_slot: usize },
     Store { reg: usize, ref_slot: usize },
     Intr { op: IntrOp, args: [usize; 3], n: usize, out: usize },
@@ -54,30 +65,45 @@ enum PStmt {
     Special(crate::ir::Special),
 }
 
-/// A compiled block.
+/// A compiled block: the build-time structure shared by the serial
+/// planned executor, the parallel engine, and the leaf-kernel lowering
+/// stage (`exec::kernel`, which walks the same tree to classify bands).
 #[derive(Debug, Clone)]
 pub struct Plan {
-    name: String,
+    pub(crate) name: String,
     /// Ranged indexes: (slot, range).
-    ranged: Vec<(usize, u64)>,
+    pub(crate) ranged: Vec<(usize, u64)>,
     /// Passed indexes: (slot, coeffs over parent slots, offset).
-    passed: Vec<(usize, Vec<i64>, i64)>,
-    n_idxs: usize,
+    pub(crate) passed: Vec<(usize, Vec<i64>, i64)>,
+    pub(crate) n_idxs: usize,
     /// Constraints as dense rows over local slots.
-    constraints: Vec<(Vec<i64>, i64)>,
-    refs: Vec<PlanRef>,
-    stmts: Vec<PStmt>,
-    n_regs: usize,
-    children: Vec<Plan>,
+    pub(crate) constraints: Vec<(Vec<i64>, i64)>,
+    pub(crate) refs: Vec<PlanRef>,
+    pub(crate) stmts: Vec<PStmt>,
+    pub(crate) n_regs: usize,
+    pub(crate) children: Vec<Plan>,
 }
 
-fn dense(a: &Affine, names: &[String]) -> Result<(Vec<i64>, i64), String> {
-    let mut row = vec![0i64; names.len()];
+/// Name→slot index built once per use site (first declaration wins on
+/// duplicates, matching the linear scan this replaces). `dense` used to
+/// re-scan the name list per term — O(n) per lookup, the compile-time
+/// mirror of the `id_of` fix from the storage layer.
+fn slot_map(names: &[String]) -> BTreeMap<&str, usize> {
+    let mut m: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, n) in names.iter().enumerate() {
+        m.entry(n.as_str()).or_insert(i);
+    }
+    m
+}
+
+fn dense(
+    a: &Affine,
+    slots: &BTreeMap<&str, usize>,
+    n_slots: usize,
+) -> Result<(Vec<i64>, i64), String> {
+    let mut row = vec![0i64; n_slots];
     for (v, c) in a.terms() {
-        let slot = names
-            .iter()
-            .position(|n| n == v)
-            .ok_or_else(|| format!("unknown index {v:?}"))?;
+        let slot = *slots.get(v).ok_or_else(|| format!("unknown index {v:?}"))?;
         row[slot] = c;
     }
     Ok((row, a.offset))
@@ -93,13 +119,18 @@ impl Plan {
         parent_idx_names: &[String],
     ) -> Result<Plan, String> {
         let names: Vec<String> = block.idxs.iter().map(|i| i.name.clone()).collect();
+        // Slot maps built once per block; every affine→row conversion
+        // below is then O(terms · log n) instead of an O(n) scan per term.
+        let name_slots = slot_map(&names);
+        let parent_idx_slots = slot_map(parent_idx_names);
+        let parent_ref_slots = slot_map(parent_refs);
         let mut ranged = Vec::new();
         let mut passed = Vec::new();
         for (slot, idx) in block.idxs.iter().enumerate() {
             match &idx.affine {
                 None => ranged.push((slot, idx.range)),
                 Some(a) => {
-                    let (row, off) = dense(a, parent_idx_names)
+                    let (row, off) = dense(a, &parent_idx_slots, parent_idx_names.len())
                         .map_err(|e| format!("{}: passed {}: {e}", block.name, idx.name))?;
                     passed.push((slot, row, off));
                 }
@@ -107,8 +138,10 @@ impl Plan {
         }
         let mut constraints = Vec::new();
         for c in &block.constraints {
-            constraints
-                .push(dense(c, &names).map_err(|e| format!("{}: constraint: {e}", block.name))?);
+            constraints.push(
+                dense(c, &name_slots, names.len())
+                    .map_err(|e| format!("{}: constraint: {e}", block.name))?,
+            );
         }
         let mut refs = Vec::new();
         let mut ref_names: Vec<String> = Vec::new();
@@ -117,16 +150,17 @@ impl Plan {
                 None
             } else {
                 Some(
-                    parent_refs
-                        .iter()
-                        .position(|n| *n == r.from)
+                    parent_ref_slots
+                        .get(r.from.as_str())
+                        .copied()
                         .ok_or_else(|| format!("{}: no parent buffer {:?}", block.name, r.from))?,
                 )
             };
             let mut access = Vec::new();
             for a in &r.access {
                 access.push(
-                    dense(a, &names).map_err(|e| format!("{}: access: {e}", block.name))?,
+                    dense(a, &name_slots, names.len())
+                        .map_err(|e| format!("{}: access: {e}", block.name))?,
                 );
             }
             refs.push(PlanRef {
@@ -144,10 +178,11 @@ impl Plan {
             let next = regs.len();
             *regs.entry(name.to_string()).or_insert(next)
         };
+        let ref_slots = slot_map(&ref_names);
         let ref_slot = |name: &str| -> Result<usize, String> {
-            ref_names
-                .iter()
-                .position(|n| n == name)
+            ref_slots
+                .get(name)
+                .copied()
                 .ok_or_else(|| format!("{}: undeclared buffer {name:?}", block.name))
         };
         let mut stmts = Vec::new();
@@ -205,12 +240,13 @@ impl Plan {
 }
 
 /// Runtime view (same meaning as interp::View, duplicated to keep the
-/// two paths independent).
+/// two paths independent). Shared with the kernel executor, which
+/// resolves the same views from the lowered plan.
 #[derive(Debug, Clone)]
 pub(crate) struct View {
-    buf: usize,
-    offset: i64,
-    agg: AggOp,
+    pub(crate) buf: usize,
+    pub(crate) offset: i64,
+    pub(crate) agg: AggOp,
 }
 
 /// The resolved root scope of a program: one view per `main` refinement,

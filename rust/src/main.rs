@@ -16,8 +16,10 @@ use stripe::hw::targets;
 use stripe::ir::printer::print_program;
 use stripe::util::cli::Args;
 
-const VALUE_OPTS: &[&str] =
-    &["target", "net", "workers", "seed", "set", "tile", "kernels", "archs", "versions", "shapes"];
+const VALUE_OPTS: &[&str] = &[
+    "target", "net", "workers", "seed", "set", "tile", "kernels", "archs", "versions", "shapes",
+    "engine",
+];
 
 fn main() {
     let args = Args::from_env(VALUE_OPTS);
@@ -53,6 +55,7 @@ fn print_help() {
          \x20         --net <name|f.tile>  canned: fig4_conv, conv_relu, cnn, mlp, matmul\n\
          \x20         --set <path=value>   override a config parameter (Fig.1 set_config_params)\n\
          \x20 run     --target <t>         compile + execute on seeded random inputs\n\
+         \x20         --engine <e>         naive | planned | kernel (leaf-kernel lowering)\n\
          \x20         --parallel           execute across the target's compute units\n\
          \x20         --workers <n>        explicit worker count (overrides --parallel)\n\
          \x20 validate <file.stripe>       parse + validate textual Stripe\n\
@@ -135,6 +138,9 @@ fn cmd_run(args: &Args) -> i32 {
         let c = compile_network(&p, &cfg, false)?;
         let seed = args.get_u64("seed", 42);
         let inputs = stripe::passes::equiv::gen_inputs(&c.program, seed);
+        let engine_name = args.get_or("engine", "planned");
+        let engine = stripe::exec::Engine::parse(engine_name)
+            .ok_or_else(|| format!("unknown engine {engine_name:?} (naive|planned|kernel)"))?;
         // --workers N overrides; --parallel uses the target's
         // compute-unit count; default stays serial (the always-available
         // fallback for bisection).
@@ -144,10 +150,15 @@ fn cmd_run(args: &Args) -> i32 {
         };
         let t0 = std::time::Instant::now();
         let out = if workers > 1 {
-            let (out, schedule) =
-                stripe::coordinator::run_network(&c, &inputs, workers, None)?;
+            let opts = stripe::exec::ExecOptions {
+                workers,
+                engine,
+                ..stripe::exec::ExecOptions::default()
+            };
+            let (out, schedule) = stripe::coordinator::run_network_with(&c, &inputs, &opts)?;
             println!(
-                "parallel schedule ({workers} workers, {}/{} ops parallel):\n{}",
+                "parallel schedule ({workers} workers, engine {}, {}/{} ops parallel):\n{}",
+                engine.name(),
                 schedule.parallel_ops(),
                 schedule.ops.len(),
                 schedule.summary()
@@ -158,9 +169,27 @@ fn cmd_run(args: &Args) -> i32 {
                 schedule.fork_bytes(),
                 schedule.merge_bytes()
             );
+            if let Some(cov) = schedule.kernel_coverage() {
+                println!("kernel coverage: {:.1}% of leaf iterations", cov * 100.0);
+            }
+            out
+        } else if engine == stripe::exec::Engine::Kernel {
+            let (out, report) = stripe::exec::run_program_kernel(
+                &c.program,
+                &inputs,
+                &stripe::exec::ExecOptions { engine, ..stripe::exec::ExecOptions::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            println!("kernel coverage per op:\n{}", report.summary());
+            if let Some(cov) = report.coverage() {
+                println!("kernel coverage: {:.1}% of leaf iterations", cov * 100.0);
+            }
             out
         } else {
-            stripe::exec::run_program(&c.program, &inputs).map_err(|e| e.to_string())?
+            let opts =
+                stripe::exec::ExecOptions { engine, ..stripe::exec::ExecOptions::default() };
+            stripe::exec::run_program_with(&c.program, &inputs, &opts)
+                .map_err(|e| e.to_string())?
         };
         let dt = t0.elapsed();
         for (name, vals) in &out {

@@ -1,14 +1,17 @@
 //! Differential execution harness: naive interpreter ≡ serial plan ≡
-//! parallel plan, bit-exactly, on randomized networks.
+//! leaf-kernel engine ≡ parallel plan (planned *and* kernel chunk
+//! executors), bit-exactly, on randomized networks.
 //!
 //! Programs are generated through `graph::NetworkBuilder` with the
 //! repo's seeded deterministic PRNG (no external deps): a random HWC
 //! input, then a random chain of conv/relu/tanh/maxpool/add layers,
 //! finished by flatten → dense (and occasionally a softmax head). Each
-//! program runs through all three engines; outputs must agree to the
+//! program runs through all four engines; outputs must agree to the
 //! bit. The parallel engine additionally re-verifies write disjointness
 //! while merging worker partitions, so an unsound parallelizability
-//! verdict fails the run loudly rather than corrupting silently.
+//! verdict fails the run loudly rather than corrupting silently; the
+//! kernel engine's guarded fallback keeps unvectorizable bands on the
+//! scalar odometer, so a lowering bug surfaces as a bit mismatch here.
 //!
 //! The parallel runs share one [`BufferPool`] across the whole sweep:
 //! the copy-on-write storage's page recycling is exercised by 50
@@ -20,8 +23,8 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use stripe::exec::{
-    run_program_parallel, run_program_planned, run_program_sink, BufferPool, ExecOptions,
-    NullSink,
+    run_program_kernel, run_program_parallel, run_program_planned, run_program_sink,
+    BufferPool, Engine, ExecOptions, NullSink,
 };
 use stripe::graph::{NetworkBuilder, TensorId};
 use stripe::ir::{DType, Program};
@@ -78,9 +81,11 @@ fn gen_inputs(p: &Program, seed: u64) -> BTreeMap<String, Vec<f32>> {
     stripe::passes::equiv::gen_inputs(p, seed)
 }
 
-/// Run all three engines and assert bit-exact agreement; the parallel
-/// engine draws its pages from `pool` when one is given. Returns how
-/// many ops the parallel engine actually parallelized.
+/// Run all four engines — naive, serial plan, leaf-kernel, and the
+/// parallel dispatcher with both chunk executors — and assert
+/// bit-exact agreement; the parallel and kernel runs draw their pages
+/// from `pool` when one is given. Returns how many ops the (planned)
+/// parallel engine actually parallelized.
 fn differential_case_pooled(
     p: &Program,
     seed: u64,
@@ -92,15 +97,37 @@ fn differential_case_pooled(
         .unwrap_or_else(|e| panic!("{}: naive failed: {e}", p.name));
     let serial = run_program_planned(p, &inputs, &ExecOptions::default(), &mut NullSink)
         .unwrap_or_else(|e| panic!("{}: serial plan failed: {e}", p.name));
-    let popts = ExecOptions { workers, pool, ..ExecOptions::default() };
+    let kopts = ExecOptions {
+        engine: Engine::Kernel,
+        pool: pool.clone(),
+        ..ExecOptions::default()
+    };
+    let (kernel, kreport) = run_program_kernel(p, &inputs, &kopts)
+        .unwrap_or_else(|e| panic!("{}: kernel engine failed: {e}", p.name));
+    let popts = ExecOptions { workers, pool: pool.clone(), ..ExecOptions::default() };
     let (parallel, report) = run_program_parallel(p, &inputs, &popts)
         .unwrap_or_else(|e| panic!("{}: parallel plan failed: {e}", p.name));
+    let kpopts = ExecOptions { workers, engine: Engine::Kernel, pool, ..ExecOptions::default() };
+    let (kparallel, kpreport) = run_program_parallel(p, &inputs, &kpopts)
+        .unwrap_or_else(|e| panic!("{}: parallel kernel failed: {e}", p.name));
     assert_eq!(naive, serial, "{}: naive vs serial plan diverged", p.name);
+    assert_eq!(
+        serial, kernel,
+        "{}: serial vs kernel diverged\ncoverage:\n{}",
+        p.name,
+        kreport.summary()
+    );
     assert_eq!(
         serial, parallel,
         "{}: serial vs parallel diverged\nschedule:\n{}",
         p.name,
         report.summary()
+    );
+    assert_eq!(
+        serial, kparallel,
+        "{}: serial vs parallel-kernel diverged\nschedule:\n{}",
+        p.name,
+        kpreport.summary()
     );
     report.parallel_ops()
 }
@@ -167,6 +194,67 @@ fn compiled_networks_agree_across_all_engines() {
             .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
         differential_case(&c.program, 7, cfg.compute_units.max(2));
     }
+}
+
+/// Directed fallback case: a transposed store — the access whose folded
+/// innermost stride is the row pitch, not 1 — must take the guarded
+/// odometer (zero kernel coverage) and still match the other engines
+/// bit-exactly. A transposed *read* with a contiguous store stays
+/// vectorized via strided gathers.
+#[test]
+fn transposed_access_takes_guarded_fallback_and_matches() {
+    use stripe::ir::builder::{contraction, Operand};
+    use stripe::ir::{AggOp, Buffer, BufKind, IntrOp, Statement, TensorType};
+    use stripe::poly::Affine;
+
+    let i_t = TensorType::contiguous(DType::F32, &[4, 6]);
+    let o_t = TensorType::contiguous(DType::F32, &[6, 4]);
+    let buffers = vec![
+        Buffer { name: "I".into(), kind: BufKind::Input, ttype: i_t.clone() },
+        Buffer { name: "O".into(), kind: BufKind::Output, ttype: o_t.clone() },
+    ];
+
+    // (a) transposed store: O[y, x] = I[x, y], y innermost.
+    let mut store_t = Program::new("transposed_store", buffers.clone());
+    store_t.main.stmts.push(Statement::Block(Box::new(contraction(
+        "t_store",
+        &[("x", 4), ("y", 6)],
+        vec![],
+        Operand::new("O", vec![Affine::var("y"), Affine::var("x")], &o_t),
+        AggOp::Assign,
+        &[Operand::new("I", vec![Affine::var("x"), Affine::var("y")], &i_t)],
+        IntrOp::Mul,
+    ))));
+    let inputs = gen_inputs(&store_t, 77);
+    let naive = run_program_sink(&store_t, &inputs, &ExecOptions::default(), &mut NullSink)
+        .unwrap();
+    let kopts = ExecOptions { engine: Engine::Kernel, ..ExecOptions::default() };
+    let (kernel, report) = run_program_kernel(&store_t, &inputs, &kopts).unwrap();
+    assert_eq!(naive, kernel, "guarded fallback must stay bit-exact");
+    let stats = report.totals();
+    assert_eq!(stats.vector_lanes, 0, "transposed store must not vectorize");
+    assert_eq!(stats.scalar_lanes, 24);
+    differential_case(&store_t, 78, 3);
+
+    // (b) transposed read: O[y, x] = I[x, y], x innermost — the store
+    // is contiguous, the load gathers at stride 6, the band vectorizes.
+    let mut read_t = Program::new("transposed_read", buffers);
+    read_t.main.stmts.push(Statement::Block(Box::new(contraction(
+        "t_read",
+        &[("y", 6), ("x", 4)],
+        vec![],
+        Operand::new("O", vec![Affine::var("y"), Affine::var("x")], &o_t),
+        AggOp::Assign,
+        &[Operand::new("I", vec![Affine::var("x"), Affine::var("y")], &i_t)],
+        IntrOp::Mul,
+    ))));
+    let inputs = gen_inputs(&read_t, 79);
+    let (kernel, report) = run_program_kernel(&read_t, &inputs, &kopts).unwrap();
+    let naive =
+        run_program_sink(&read_t, &inputs, &ExecOptions::default(), &mut NullSink).unwrap();
+    assert_eq!(naive, kernel);
+    assert_eq!(report.coverage(), Some(1.0), "{}", report.summary());
+    differential_case(&read_t, 80, 3);
 }
 
 #[test]

@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # Machine-readable perf trajectory: run the end-to-end network bench
-# and capture its JSON summary (speedup, bytes forked/merged by the
-# copy-on-write storage) in BENCH_e2e.json at the repository root.
-# Override the output path with BENCH_E2E_JSON.
+# and capture its JSON summary (parallel speedup, CoW fork/merge bytes,
+# kernel coverage and the planned-vs-kernel speedup) in BENCH_e2e.json
+# at the repository root. Override the output path with BENCH_E2E_JSON;
+# BENCH_QUICK=1 shrinks the measurement budget (the verify smoke).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-export BENCH_E2E_JSON="${BENCH_E2E_JSON:-BENCH_e2e.json}"
+# Resolve to an absolute path so the bench always emits at the repo
+# root no matter what working directory cargo hands the bench binary.
+export BENCH_E2E_JSON="${BENCH_E2E_JSON:-$(pwd)/BENCH_e2e.json}"
 
 echo "== cargo bench --bench e2e_network =="
 cargo bench --bench e2e_network

@@ -26,4 +26,13 @@ else
     echo "(clippy unavailable; skipping lint check)"
 fi
 
+echo "== bench smoke (gated) =="
+# Opt-in end-to-end bench smoke: runs the e2e bench on a reduced
+# measurement budget and leaves BENCH_e2e.json at the repo root.
+if [ "${VERIFY_BENCH_SMOKE:-0}" = "1" ]; then
+    BENCH_QUICK=1 scripts/bench.sh
+else
+    echo "(set VERIFY_BENCH_SMOKE=1 to run the e2e bench smoke)"
+fi
+
 echo "verify: OK"
