@@ -89,6 +89,79 @@ fn main() {
     let planned_median_s = s_planned.median.as_secs_f64();
     let kernel_median_s = s_kernel.median.as_secs_f64();
 
+    section("cost-guided pipeline autotuning (tuned vs default, cpu_cache)");
+    let tuned = stripe::coordinator::compile_network_tuned(
+        &p,
+        &cfg,
+        &stripe::coordinator::TuneOptions::default(),
+    )
+    .unwrap();
+    let tuning = tuned.tuning.as_ref().expect("tuned compile records its decision");
+    print!("{}", tuning.summary());
+    // The acceptance bar, deterministic by construction: the default
+    // pipeline competes inside the tuner's candidate set, so the
+    // winner is never predicted worse than the default.
+    let default_predicted_cost =
+        tuning.default_cost.expect("cpu_cache default pipeline compiles the cnn");
+    assert!(
+        tuning.chosen_cost <= default_predicted_cost,
+        "tuned pipeline predicted worse than default: {} vs {} {}",
+        tuning.chosen_cost,
+        default_predicted_cost,
+        tuning.metric
+    );
+    // Tuned output stays numerically faithful to the default pipeline.
+    let out_default = run_program(&compiled.program, &inputs).unwrap();
+    let out_tuned = run_program(&tuned.program, &inputs).unwrap();
+    for (name, dv) in &out_default {
+        let tv = &out_tuned[name];
+        // NaN-propagating fold: f32::max would silently discard a NaN
+        // error (a miscompiled pipeline's favorite output).
+        let max_err = dv
+            .iter()
+            .zip(tv)
+            .map(|(a, b)| (a - b).abs() / 1.0f32.max(a.abs()))
+            .fold(0f32, |m, e| if m.is_nan() || e.is_nan() { f32::NAN } else { m.max(e) });
+        assert!(
+            max_err.is_finite() && max_err < 1e-3,
+            "{name}: tuned output drifted ({max_err:.3e})"
+        );
+    }
+    let bench = bench_profile();
+    let s_default_pipe = bench.run("run cnn (default cpu_cache pipeline)", || {
+        std::hint::black_box(
+            run_program_planned(&compiled.program, &inputs, &ExecOptions::default(), &mut NullSink)
+                .unwrap(),
+        );
+    });
+    let s_tuned_pipe = bench.run("run cnn (tuned cpu_cache pipeline)", || {
+        std::hint::black_box(
+            run_program_planned(&tuned.program, &inputs, &ExecOptions::default(), &mut NullSink)
+                .unwrap(),
+        );
+    });
+    let tuned_speedup = s_default_pipe.median.as_secs_f64() / s_tuned_pipe.median.as_secs_f64();
+    println!(
+        "tuned-vs-default speedup (median): {tuned_speedup:.2}x  \
+         [default {:?} -> tuned {:?}]; predicted {} {} -> {} ({} candidate(s), {} simulated)",
+        s_default_pipe.median,
+        s_tuned_pipe.median,
+        tuning.metric,
+        default_predicted_cost,
+        tuning.chosen_cost,
+        tuning.evaluated,
+        tuning.simulated
+    );
+    // Interpreter wall-clock is a noisy proxy for the simulated-memory
+    // metric the tuner optimizes; only guard against pathological
+    // regressions here — the deterministic bar is the predicted cost.
+    assert!(
+        tuned_speedup > 0.5,
+        "tuned pipeline pathologically slower than default ({tuned_speedup:.2}x)"
+    );
+    let tune_candidates = tuning.evaluated;
+    let tuned_predicted_cost = tuning.chosen_cost;
+
     section("simulated memory traffic (32KiB L1 + 1MiB L2)");
     for (label, prog) in [("flat", &p), ("optimized", &compiled.program)] {
         let h = Hierarchy::new(vec![
@@ -216,7 +289,11 @@ fn main() {
              \"kernel_coverage\": {kernel_cov:.4},\n  \
              \"planned_median_s\": {planned_median_s:.6},\n  \
              \"kernel_median_s\": {kernel_median_s:.6},\n  \
-             \"planned_vs_kernel_speedup\": {kernel_speedup:.3}\n}}\n",
+             \"planned_vs_kernel_speedup\": {kernel_speedup:.3},\n  \
+             \"tune_candidates\": {tune_candidates},\n  \
+             \"tuned_predicted_cost\": {tuned_predicted_cost},\n  \
+             \"default_predicted_cost\": {default_predicted_cost},\n  \
+             \"tuned_vs_default_speedup\": {tuned_speedup:.3}\n}}\n",
             s_serial.median.as_secs_f64(),
             s_par.median.as_secs_f64(),
             schedule.parallel_ops(),

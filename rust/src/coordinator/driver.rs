@@ -25,10 +25,28 @@ pub struct CompiledNetwork {
     /// Worker-pool size the schedule was computed for
     /// (`MachineConfig::compute_units`).
     pub compute_units: usize,
+    /// The pipeline-tuning decision, when this network was compiled by
+    /// the autotuner (`coordinator::tune`) rather than the target's
+    /// fixed default pass list.
+    pub tuning: Option<super::tune::TuningReport>,
 }
 
 impl CompiledNetwork {
-    /// One-line-per-pass summary, followed by the parallel schedule.
+    /// Aggregate tile-search telemetry across every pass that ran a
+    /// cost-model search (`None` when none did — e.g. a pipeline
+    /// without autotile, or one whose blocks were all pre-tiled).
+    pub fn search_stats(&self) -> Option<crate::cost::search::SearchStats> {
+        let mut total: Option<crate::cost::search::SearchStats> = None;
+        for r in &self.reports {
+            if let Some(s) = &r.search {
+                total.get_or_insert_with(Default::default).absorb(s);
+            }
+        }
+        total
+    }
+
+    /// One-line-per-pass summary, followed by search telemetry, the
+    /// tuning decision (when tuned), and the parallel schedule.
     pub fn summary(&self) -> String {
         let mut s = format!("target {}\n", self.target);
         for r in &self.reports {
@@ -40,6 +58,13 @@ impl CompiledNetwork {
             for d in &r.details {
                 s.push_str(&format!("    - {d}\n"));
             }
+        }
+        if let Some(st) = self.search_stats() {
+            s.push_str(&st.summary_line());
+            s.push('\n');
+        }
+        if let Some(t) = &self.tuning {
+            s.push_str(&t.summary());
         }
         s.push_str(&format!(
             "parallel schedule ({} compute units, {}/{} ops parallel):\n{}",
@@ -58,6 +83,17 @@ impl CompiledNetwork {
     }
 }
 
+/// Static validation every compile entry point (default-pipeline and
+/// tuned alike) applies before running any pass.
+pub(crate) fn validate_input(program: &Program) -> Result<(), String> {
+    let findings = crate::ir::validate::validate_program(program);
+    if !crate::ir::validate::is_valid(&findings) {
+        let msgs: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        return Err(format!("input program invalid:\n{}", msgs.join("\n")));
+    }
+    Ok(())
+}
+
 /// Compile a program for a target (optionally verifying each pass by
 /// execution — slower, on by default in tests and the CLI's default
 /// path).
@@ -66,12 +102,7 @@ pub fn compile_network(
     cfg: &MachineConfig,
     verify: bool,
 ) -> Result<CompiledNetwork, String> {
-    // Static validation up front.
-    let findings = crate::ir::validate::validate_program(program);
-    if !crate::ir::validate::is_valid(&findings) {
-        let msgs: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
-        return Err(format!("input program invalid:\n{}", msgs.join("\n")));
-    }
+    validate_input(program)?;
     let result = compile(program, cfg, verify)?;
     let schedule = crate::exec::analyze_program(&result.program, cfg.compute_units);
     Ok(CompiledNetwork {
@@ -80,6 +111,7 @@ pub fn compile_network(
         reports: result.reports,
         schedule,
         compute_units: cfg.compute_units,
+        tuning: None,
     })
 }
 
@@ -114,11 +146,17 @@ pub fn run_network(
 }
 
 /// Deterministic content hash of a (program, target) pair — the compile
-/// cache key. FNV-1a over the printed IR and config name.
+/// cache key. FNV-1a over the printed IR and the target's full
+/// configuration (memories, compute units, pass list), so editing any
+/// target parameter (`--set`) changes the key: a cached artifact —
+/// tuned ones especially, whose winning pipeline depends on the
+/// target's cache geometry — is never served for a different
+/// configuration that happens to share a name.
 pub fn cache_key(program: &Program, cfg: &MachineConfig) -> u64 {
     let text = crate::ir::printer::print_program(program);
+    let cfg_text = format!("{cfg:?}");
     let mut h: u64 = 0xcbf29ce484222325;
-    for b in text.bytes().chain(cfg.name.bytes()) {
+    for b in text.bytes().chain(cfg_text.bytes()) {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
@@ -191,6 +229,17 @@ mod tests {
     }
 
     #[test]
+    fn search_telemetry_surfaces_in_the_summary() {
+        let p = ops::cnn_program();
+        let c = compile_network(&p, &targets::cpu_cache(), false).unwrap();
+        let st = c.search_stats().expect("cpu_cache pipeline runs autotile");
+        assert!(st.evaluated > 0 && st.feasible > 0);
+        assert!(c.summary().contains("autotile search:"), "{}", c.summary());
+        // Untuned compiles carry no tuning decision.
+        assert!(c.tuning.is_none());
+    }
+
+    #[test]
     fn cache_key_is_content_addressed() {
         let p = ops::fig4_conv_program();
         let q = ops::conv_relu_program();
@@ -199,6 +248,13 @@ mod tests {
         assert_eq!(cache_key(&p, &cfg), cache_key(&p, &cfg));
         assert_ne!(cache_key(&p, &cfg), cache_key(&q, &cfg));
         assert_ne!(cache_key(&p, &cfg), cache_key(&p, &cfg2));
+        // A `--set`-style parameter edit (same target name) must change
+        // the key: artifacts are addressed by configuration content,
+        // not name.
+        let mut resized = cfg.clone();
+        resized.memories[0].capacity_bytes /= 2;
+        assert_eq!(resized.name, cfg.name);
+        assert_ne!(cache_key(&p, &cfg), cache_key(&p, &resized));
     }
 
     #[test]

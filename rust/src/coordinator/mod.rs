@@ -4,8 +4,10 @@
 //! system that owns it in production: a multi-threaded compile service
 //! with a request queue, a content-addressed artifact cache, and
 //! metrics ([`service`]); the engineering-effort model behind Fig. 1
-//! ([`effort`]); and the end-to-end drivers used by the CLI and the
-//! examples ([`driver`]).
+//! ([`effort`]); the end-to-end drivers used by the CLI and the
+//! examples ([`driver`]); and the cost-guided pass-pipeline autotuner
+//! that turns the cost models and the memory simulator into the
+//! compile hot path ([`tune`]).
 //!
 //! Rust owns the event loop, the worker threads, and the metrics;
 //! Python exists only behind `make artifacts`.
@@ -14,6 +16,8 @@ pub mod driver;
 pub mod effort;
 pub mod metrics;
 pub mod service;
+pub mod tune;
 
 pub use driver::{compile_network, run_network, run_network_with, CompiledNetwork};
 pub use service::{CompileRequest, CompileService};
+pub use tune::{compile_network_tuned, TuneOptions, TuningReport};

@@ -27,12 +27,30 @@ use crate::ir::Program;
 
 use super::driver::{cache_key, compile_network, run_network, CompiledNetwork};
 use super::metrics::Metrics;
+use super::tune::{compile_network_tuned, TuneOptions};
+
+/// Salt folded into the cache key of tuned requests: a tuned artifact
+/// (searched pipeline + tuning report) and an untuned one for the same
+/// (program, target) are distinct cache entries.
+const TUNED_KEY_SALT: u64 = 0x71D4_E000_0000_0001;
+
+/// Salt folded into the cache key of verified requests: a verified
+/// compile proves per-pass equivalence the unverified artifact never
+/// checked, so one must not be served for the other. Matters most for
+/// tuned requests, whose winning pipeline no fixed target ever ran.
+const VERIFIED_KEY_SALT: u64 = 0x5EC5_0000_0000_0002;
 
 /// A compile request.
 pub struct CompileRequest {
     pub program: Program,
     pub target: MachineConfig,
     pub verify: bool,
+    /// Compile through the pipeline autotuner (`coordinator::tune`)
+    /// instead of the target's fixed default pass list. The tuned
+    /// artifact — winning pipeline, tuning report and all — is cached
+    /// per (program fingerprint, target, verify) and reused across
+    /// requests.
+    pub tune: bool,
     /// Channel for the result.
     pub reply: Sender<Result<Arc<CompiledNetwork>, String>>,
 }
@@ -93,7 +111,9 @@ impl CompileService {
                 match msg {
                     Ok(Msg::Work(req)) => {
                         let t0 = Instant::now();
-                        let key = cache_key(&req.program, &req.target);
+                        let key = cache_key(&req.program, &req.target)
+                            ^ if req.tune { TUNED_KEY_SALT } else { 0 }
+                            ^ if req.verify { VERIFIED_KEY_SALT } else { 0 };
                         let action = {
                             let mut st = state.lock().unwrap();
                             if let Some(c) = st.cache.get(&key) {
@@ -114,9 +134,17 @@ impl CompileService {
                             }
                             Action::Parked => {}
                             Action::Compile => {
-                                let result: CompileOutcome =
+                                let result: CompileOutcome = if req.tune {
+                                    let opts = TuneOptions {
+                                        verify: req.verify,
+                                        ..TuneOptions::default()
+                                    };
+                                    compile_network_tuned(&req.program, &req.target, &opts)
+                                        .map(Arc::new)
+                                } else {
                                     compile_network(&req.program, &req.target, req.verify)
-                                        .map(Arc::new);
+                                        .map(Arc::new)
+                                };
                                 let waiters = {
                                     let mut st = state.lock().unwrap();
                                     if let Ok(arc) = &result {
@@ -163,11 +191,33 @@ impl CompileService {
         target: MachineConfig,
         verify: bool,
     ) -> Receiver<Result<Arc<CompiledNetwork>, String>> {
+        self.submit_with(program, target, verify, false)
+    }
+
+    /// Submit a request through the pipeline autotuner. Tuned artifacts
+    /// are cached (and single-flighted) under their own key, so N
+    /// requests for one network pay the tuning search once.
+    pub fn submit_tuned(
+        &self,
+        program: Program,
+        target: MachineConfig,
+        verify: bool,
+    ) -> Receiver<Result<Arc<CompiledNetwork>, String>> {
+        self.submit_with(program, target, verify, true)
+    }
+
+    fn submit_with(
+        &self,
+        program: Program,
+        target: MachineConfig,
+        verify: bool,
+        tune: bool,
+    ) -> Receiver<Result<Arc<CompiledNetwork>, String>> {
         let (reply, rx) = channel();
         self.metrics.record_request();
         let _ = self
             .tx
-            .send(Msg::Work(CompileRequest { program, target, verify, reply }));
+            .send(Msg::Work(CompileRequest { program, target, verify, tune, reply }));
         rx
     }
 
@@ -179,6 +229,18 @@ impl CompileService {
         verify: bool,
     ) -> Result<Arc<CompiledNetwork>, String> {
         self.submit(program, target, verify)
+            .recv()
+            .map_err(|_| "service shut down".to_string())?
+    }
+
+    /// Blocking tuned compile (see [`CompileService::submit_tuned`]).
+    pub fn compile_blocking_tuned(
+        &self,
+        program: Program,
+        target: MachineConfig,
+        verify: bool,
+    ) -> Result<Arc<CompiledNetwork>, String> {
+        self.submit_tuned(program, target, verify)
             .recv()
             .map_err(|_| "service shut down".to_string())?
     }
@@ -268,6 +330,46 @@ mod tests {
             svc.pool.summary()
         );
         assert_eq!(report.ops.len(), c.schedule.ops.len());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tuned_compiles_cache_separately_from_untuned() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let svc = CompileService::start(1);
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        let a = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
+        assert!(a.tuning.is_some(), "tuned artifact must carry its tuning report");
+        let b = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second tuned compile served from cache");
+        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 1);
+        // An untuned request for the same (program, target) is a
+        // different artifact: it must miss and carry no tuning report.
+        let c = svc.compile_blocking(p, cfg, false).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert!(c.tuning.is_none());
+        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn verified_compiles_cache_separately_from_unverified() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let svc = CompileService::start(1);
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        // An unverified tuned artifact must never satisfy a verify=true
+        // request: the tuned winner is a pipeline no fixed target ever
+        // ran, and only the verified compile equivalence-checks it.
+        let a = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
+        let b = svc.compile_blocking_tuned(p.clone(), cfg.clone(), true).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "verify=true must not hit the unverified entry");
+        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 0);
+        // Each variant still caches against itself.
+        let b2 = svc.compile_blocking_tuned(p.clone(), cfg.clone(), true).unwrap();
+        assert!(Arc::ptr_eq(&b, &b2));
+        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 1);
         svc.shutdown();
     }
 

@@ -1,0 +1,580 @@
+//! Cost-guided pass-pipeline autotuning.
+//!
+//! §1.3/§3.3: Stripe optimizes a program with "a list of generic passes
+//! with appropriate parameters" chosen per hardware target via a cost
+//! function. The fixed per-target pass lists in [`crate::hw::targets`]
+//! are good *defaults*; this module closes the loop the paper
+//! describes by searching over pipeline variants for a concrete
+//! (program, target) pair:
+//!
+//! 1. **Enumerate** candidate pipelines ([`enumerate_candidates`]):
+//!    the target's default list varied along three axes — autotile
+//!    search space ([`SearchSpace::PowersOfTwo`] /
+//!    [`SearchSpace::Divisors`]), fusion on/off, localization on/off —
+//!    deduplicated by full parameterized signature, default first.
+//! 2. **Compile + statically score** every candidate with the
+//!    cache-line model generalized to whole programs
+//!    ([`crate::cost::pipeline::predicted_program_cost`]).
+//! 3. **Simulate the leaders**: the top-k candidates by static score
+//!    (the default pipeline always rides along) execute through the
+//!    [`crate::sim`] memory hierarchy built from the target's declared
+//!    memory units; the score is bandwidth-weighted miss traffic.
+//! 4. **Pick the winner** (ties prefer the default), optionally
+//!    re-verifying its pipeline pass-by-pass, and record the whole
+//!    decision in a [`TuningReport`] carried by the
+//!    [`CompiledNetwork`].
+//!
+//! Because the default pipeline is always in the simulated set and the
+//! winner minimizes the deciding metric, a tuned compile is never
+//! predicted worse than the default — `chosen_cost <= default_cost`
+//! holds by construction (asserted in `benches/e2e_network.rs`).
+//!
+//! The compile service caches tuned artifacts under a separate cache
+//! key per (program fingerprint, target), so a fleet pays the tuning
+//! search once per network.
+
+use std::collections::BTreeSet;
+
+use crate::cost::pipeline::{predicted_program_cost, ProgramCost};
+use crate::cost::search::SearchSpace;
+use crate::exec::ExecOptions;
+use crate::hw::{MachineConfig, PassConfig};
+use crate::ir::Program;
+use crate::passes::CompileResult;
+use crate::sim::{CacheConfig, CacheSink, Hierarchy};
+
+use super::driver::CompiledNetwork;
+
+/// Tuning-search options.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Candidates re-scored by the memory simulator (the default
+    /// pipeline is always simulated in addition).
+    pub top_k: usize,
+    /// Cap on enumerated candidate pipelines.
+    pub max_candidates: usize,
+    /// Seed for the simulator's deterministic inputs.
+    pub sim_seed: u64,
+    /// Equivalence-verify the winning pipeline pass-by-pass (the same
+    /// check `compile_network` applies).
+    pub verify: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions { top_k: 3, max_candidates: 16, sim_seed: 0xC057, verify: false }
+    }
+}
+
+/// One candidate pipeline's evaluation.
+#[derive(Debug, Clone)]
+pub struct CandidateOutcome {
+    /// Axis label, e.g. `space=divisors,fuse=off,localize=on`.
+    pub label: String,
+    /// Full parameterized pipeline signature.
+    pub signature: String,
+    /// Static cache-line prediction (compile succeeded).
+    pub static_cost: Option<ProgramCost>,
+    /// Simulated traffic score, for the candidates that reached the
+    /// simulation stage.
+    pub sim_traffic: Option<u64>,
+    /// Compile error, when the pipeline failed.
+    pub error: Option<String>,
+}
+
+/// The recorded tuning decision.
+#[derive(Debug, Clone)]
+pub struct TuningReport {
+    pub target: String,
+    /// Candidates compiled and statically scored.
+    pub evaluated: usize,
+    /// Candidates re-scored by the memory simulator.
+    pub simulated: usize,
+    /// Deciding metric: `"sim-traffic-bytes"` when the target's memory
+    /// hierarchy could be simulated *and* the default pipeline got a
+    /// simulation score (so winner and fallback always share one
+    /// scale); `"static-lines"` otherwise.
+    pub metric: &'static str,
+    /// Label of the winning candidate.
+    pub chosen: String,
+    /// Winner's score under the deciding metric.
+    pub chosen_cost: u64,
+    /// The default pipeline's score under the same metric (the
+    /// fallback the tuner is measured against). `None` in the edge
+    /// case where the default pipeline itself failed to compile.
+    pub default_cost: Option<u64>,
+    pub candidates: Vec<CandidateOutcome>,
+}
+
+impl TuningReport {
+    /// Predicted improvement over the default pipeline, as a fraction
+    /// (0.0 = no gain). Always >= 0 by construction; 0.0 when the
+    /// default pipeline has no score to compare against.
+    pub fn predicted_gain(&self) -> f64 {
+        match self.default_cost {
+            Some(d) if d > 0 => 1.0 - self.chosen_cost as f64 / d as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Multi-line human-readable summary.
+    pub fn summary(&self) -> String {
+        let default = match self.default_cost {
+            Some(d) => d.to_string(),
+            None => "n/a (default pipeline failed)".into(),
+        };
+        let mut s = format!(
+            "tuning ({}): {} candidate pipeline(s), {} simulated; chosen {} \
+             [{} {} vs default {default}, {:.1}% predicted gain]\n",
+            self.target,
+            self.evaluated,
+            self.simulated,
+            self.chosen,
+            self.metric,
+            self.chosen_cost,
+            self.predicted_gain() * 100.0
+        );
+        for c in &self.candidates {
+            let mark = if c.label == self.chosen { " <== chosen" } else { "" };
+            match (&c.static_cost, &c.error) {
+                (_, Some(e)) => {
+                    s.push_str(&format!("  candidate {:<40} failed: {e}\n", c.label));
+                }
+                (Some(st), None) => {
+                    let sim = match c.sim_traffic {
+                        Some(t) => format!(", sim {t} B"),
+                        None => String::new(),
+                    };
+                    s.push_str(&format!(
+                        "  candidate {:<40} static {} lines{sim}{mark}\n",
+                        c.label, st.lines
+                    ));
+                }
+                (None, None) => {}
+            }
+        }
+        // The winner's full parameterized pipeline — the precise
+        // identity behind the axis label above.
+        if let Some(c) = self.candidates.iter().find(|c| c.label == self.chosen) {
+            s.push_str(&format!("  chosen pipeline: {}\n", c.signature));
+        }
+        s
+    }
+}
+
+fn pipeline_signature(passes: &[PassConfig]) -> String {
+    passes.iter().map(|p| p.describe()).collect::<Vec<_>>().join("|")
+}
+
+/// Enumerate candidate pipelines for a target: the default list varied
+/// along the autotile-space, fusion, and localization axes, deduped by
+/// signature. The default pipeline is always first.
+pub fn enumerate_candidates(cfg: &MachineConfig, cap: usize) -> Vec<(String, Vec<PassConfig>)> {
+    let spaces: [(&str, Option<SearchSpace>); 3] = [
+        ("space=default", None),
+        ("space=pow2", Some(SearchSpace::PowersOfTwo)),
+        ("space=divisors", Some(SearchSpace::Divisors)),
+    ];
+    // Tri-state toggles: keep as configured / force on / force off.
+    let toggles: [(&str, i8); 3] = [("default", 0), ("on", 1), ("off", -1)];
+
+    let mut out: Vec<(String, Vec<PassConfig>)> = Vec::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let cap = cap.max(1);
+
+    let mut push = |label: String,
+                    passes: Vec<PassConfig>,
+                    out: &mut Vec<(String, Vec<PassConfig>)>,
+                    seen: &mut BTreeSet<String>| {
+        if out.len() >= cap {
+            return;
+        }
+        let sig = pipeline_signature(&passes);
+        if seen.insert(sig) {
+            out.push((label, passes));
+        }
+    };
+
+    push("default".into(), cfg.passes.clone(), &mut out, &mut seen);
+    for (sl, space) in &spaces {
+        for (fl, fuse) in &toggles {
+            for (ll, localize) in &toggles {
+                let mut passes = cfg.passes.clone();
+                if let Some(sp) = space {
+                    for p in &mut passes {
+                        if let PassConfig::Autotile { space, .. } = p {
+                            *space = *sp;
+                        }
+                    }
+                }
+                match *fuse {
+                    1 => {
+                        if !passes.iter().any(|p| matches!(p, PassConfig::Fuse { .. })) {
+                            passes.insert(0, PassConfig::Fuse { max_group: 4 });
+                        }
+                    }
+                    -1 => passes.retain(|p| !matches!(p, PassConfig::Fuse { .. })),
+                    _ => {}
+                }
+                match *localize {
+                    1 => {
+                        if !passes.iter().any(|p| matches!(p, PassConfig::Localize)) {
+                            let pos = passes
+                                .iter()
+                                .rposition(|p| matches!(p, PassConfig::Schedule { .. }))
+                                .unwrap_or(passes.len());
+                            passes.insert(pos, PassConfig::Localize);
+                        }
+                    }
+                    -1 => passes.retain(|p| !matches!(p, PassConfig::Localize)),
+                    _ => {}
+                }
+                let label = format!("{sl},fuse={fl},localize={ll}");
+                push(label, passes, &mut out, &mut seen);
+            }
+        }
+    }
+    out
+}
+
+/// Build a cache hierarchy mirroring the target's declared memory
+/// units (all but the outermost, which plays DRAM), innermost first.
+/// `None` when no unit has simulable power-of-two geometry.
+pub fn target_hierarchy(cfg: &MachineConfig) -> Option<Hierarchy> {
+    let mut levels: Vec<(String, CacheConfig)> = Vec::new();
+    for m in cfg.memories.iter().skip(1).rev() {
+        if m.line_bytes == 0 || !m.line_bytes.is_power_of_two() {
+            continue;
+        }
+        let ways = [8u64, 4, 2, 1].into_iter().find(|w| {
+            let denom = m.line_bytes * w;
+            denom <= m.capacity_bytes
+                && m.capacity_bytes % denom == 0
+                && (m.capacity_bytes / denom).is_power_of_two()
+        });
+        if let Some(w) = ways {
+            let cache = CacheConfig::with_capacity(m.capacity_bytes, m.line_bytes, w);
+            levels.push((m.name.clone(), cache));
+        }
+    }
+    if levels.is_empty() {
+        None
+    } else {
+        Some(Hierarchy::new(levels))
+    }
+}
+
+/// Execute `program` on deterministic inputs through the target's
+/// simulated memory hierarchy and return a bandwidth-weighted miss
+/// traffic score (DRAM fills cost 8× an inner-level fill). `None` when
+/// the hierarchy cannot be modeled or execution fails.
+pub fn sim_score(program: &Program, cfg: &MachineConfig, seed: u64) -> Option<u64> {
+    let hierarchy = target_hierarchy(cfg)?;
+    let align = cfg.innermost_memory().line_bytes.max(1);
+    let mut sink = CacheSink::new(hierarchy, align);
+    for b in &program.buffers {
+        // Execution is f32 regardless of declared dtype (see `exec`).
+        sink.register_buffer(b.ttype.span_elems(), 4);
+    }
+    let inputs = crate::passes::equiv::gen_inputs(program, seed);
+    crate::exec::run_program_sink(program, &inputs, &ExecOptions::default(), &mut sink).ok()?;
+    // Inter-cache fills cost 1 per byte; the last level fills from
+    // DRAM, so its fill_bytes (== dram_bytes) carry the 8× weight
+    // instead of joining the inner sum.
+    let mut score = sink.hierarchy.dram_bytes.saturating_mul(8);
+    let stats = sink.hierarchy.stats();
+    for level in stats.iter().take(stats.len().saturating_sub(1)) {
+        score = score.saturating_add(level.fill_bytes);
+    }
+    Some(score)
+}
+
+struct Scored {
+    label: String,
+    passes: Vec<PassConfig>,
+    result: Option<CompileResult>,
+    outcome: CandidateOutcome,
+}
+
+/// Compile `program` for `cfg` with a tuned pass pipeline. Same
+/// contract as [`super::compile_network`], plus the tuning decision in
+/// [`CompiledNetwork::tuning`].
+pub fn compile_network_tuned(
+    program: &Program,
+    cfg: &MachineConfig,
+    opts: &TuneOptions,
+) -> Result<CompiledNetwork, String> {
+    super::driver::validate_input(program)?;
+
+    let line_bytes = cfg.innermost_memory().line_bytes.max(1);
+    let mut scored: Vec<Scored> = Vec::new();
+    for (label, passes) in enumerate_candidates(cfg, opts.max_candidates) {
+        let mut vcfg = cfg.clone();
+        vcfg.passes = passes.clone();
+        let signature = pipeline_signature(&passes);
+        match crate::passes::compile(program, &vcfg, false) {
+            Ok(result) => {
+                let static_cost = predicted_program_cost(&result.program, line_bytes);
+                scored.push(Scored {
+                    label: label.clone(),
+                    passes,
+                    result: Some(result),
+                    outcome: CandidateOutcome {
+                        label,
+                        signature,
+                        static_cost: Some(static_cost),
+                        sim_traffic: None,
+                        error: None,
+                    },
+                });
+            }
+            Err(e) => scored.push(Scored {
+                label: label.clone(),
+                passes,
+                result: None,
+                outcome: CandidateOutcome {
+                    label,
+                    signature,
+                    static_cost: None,
+                    sim_traffic: None,
+                    error: Some(e),
+                },
+            }),
+        }
+    }
+    let evaluated = scored.iter().filter(|s| s.result.is_some()).count();
+    if evaluated == 0 {
+        let first = scored
+            .iter()
+            .find_map(|s| s.outcome.error.clone())
+            .unwrap_or_else(|| "no candidates".into());
+        return Err(format!("autotune: every candidate pipeline failed: {first}"));
+    }
+
+    // Simulation stage: top-k by static lines, default always included.
+    let use_sim = target_hierarchy(cfg).is_some();
+    let mut simulated = 0usize;
+    if use_sim {
+        let mut order: Vec<usize> =
+            (0..scored.len()).filter(|&i| scored[i].result.is_some()).collect();
+        order.sort_by_key(|&i| {
+            scored[i].outcome.static_cost.map(|c| c.lines).unwrap_or(u64::MAX)
+        });
+        let mut to_sim: Vec<usize> = order.into_iter().take(opts.top_k.max(1)).collect();
+        if scored[0].result.is_some() && !to_sim.contains(&0) {
+            to_sim.push(0); // the default pipeline always rides along
+        }
+        // The static scores are final for everyone outside the sim
+        // set: free those compiled programs before the (long) sim
+        // stage so it doesn't hold max_candidates full programs alive.
+        // The winner-extraction below recompiles if its result was
+        // freed (a static-metric winner outside the sim set).
+        for i in 0..scored.len() {
+            if !to_sim.contains(&i) {
+                scored[i].result = None;
+            }
+        }
+        for i in &to_sim {
+            let traffic = {
+                let prog = &scored[*i].result.as_ref().unwrap().program;
+                sim_score(prog, cfg, opts.sim_seed)
+            };
+            scored[*i].outcome.sim_traffic = traffic;
+            if traffic.is_some() {
+                simulated += 1;
+            }
+        }
+    }
+
+    // Decide. Under simulation, only simulated candidates compete;
+    // otherwise every compiled candidate competes on static lines.
+    // Simulation only decides when the *default* pipeline was
+    // successfully simulated — otherwise the comparison falls back to
+    // the static metric for every candidate, so the winner-vs-default
+    // costs always share one scale and a sim failure can never strand
+    // a program that compiles fine. Iteration order starts at the
+    // default, and the comparison is strict, so ties always keep the
+    // default pipeline.
+    let decide_by_sim = use_sim
+        && simulated > 0
+        && scored
+            .first()
+            .is_some_and(|s| s.result.is_none() || s.outcome.sim_traffic.is_some());
+    let metric: &'static str =
+        if decide_by_sim { "sim-traffic-bytes" } else { "static-lines" };
+    let score_of = |s: &Scored| -> Option<u64> {
+        if decide_by_sim {
+            s.outcome.sim_traffic
+        } else {
+            s.outcome.static_cost.map(|c| c.lines)
+        }
+    };
+    let mut winner: Option<(usize, u64)> = None;
+    for (i, s) in scored.iter().enumerate() {
+        let Some(cost) = score_of(s) else { continue };
+        if winner.map_or(true, |(_, best)| cost < best) {
+            winner = Some((i, cost));
+        }
+    }
+    let (mut win_idx, mut chosen_cost) =
+        winner.ok_or_else(|| "autotune: no candidate survived scoring".to_string())?;
+    let default_cost = score_of(&scored[0]);
+
+    let result = if opts.verify {
+        let mut vcfg = cfg.clone();
+        vcfg.passes = scored[win_idx].passes.clone();
+        match crate::passes::compile(program, &vcfg, true) {
+            Ok(r) => r,
+            Err(e) => {
+                // The winner miscompiled under per-pass verification —
+                // a pipeline no fixed target ever ran. Record the
+                // failure and fall back to the default pipeline rather
+                // than failing a program that compiles fine untuned.
+                if win_idx == 0 || scored[0].result.is_none() {
+                    return Err(e);
+                }
+                scored[win_idx].outcome.error = Some(format!("verification failed: {e}"));
+                win_idx = 0;
+                // The default compiled (checked above), so it has a
+                // score under whichever metric is deciding.
+                chosen_cost = default_cost.expect("default pipeline scored");
+                let mut dcfg = cfg.clone();
+                dcfg.passes = scored[0].passes.clone();
+                crate::passes::compile(program, &dcfg, true)?
+            }
+        }
+    } else {
+        match scored[win_idx].result.take() {
+            Some(r) => r,
+            // Freed after the sim stage (a static-metric winner outside
+            // the sim set): recompile — scoring proved it compiles.
+            None => {
+                let mut vcfg = cfg.clone();
+                vcfg.passes = scored[win_idx].passes.clone();
+                crate::passes::compile(program, &vcfg, false)?
+            }
+        }
+    };
+    let chosen_label = scored[win_idx].label.clone();
+
+    let report = TuningReport {
+        target: cfg.name.clone(),
+        evaluated,
+        simulated,
+        metric,
+        chosen: chosen_label,
+        chosen_cost,
+        default_cost,
+        candidates: scored.into_iter().map(|s| s.outcome).collect(),
+    };
+
+    let schedule = crate::exec::analyze_program(&result.program, cfg.compute_units);
+    Ok(CompiledNetwork {
+        target: cfg.name.clone(),
+        program: result.program,
+        reports: result.reports,
+        schedule,
+        compute_units: cfg.compute_units,
+        tuning: Some(report),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn candidates_start_with_the_default_and_are_unique() {
+        for cfg in targets::builtin_targets() {
+            let cands = enumerate_candidates(&cfg, 16);
+            assert!(cands.len() >= 2, "{}: {} candidates", cfg.name, cands.len());
+            assert_eq!(cands[0].0, "default");
+            assert_eq!(cands[0].1.len(), cfg.passes.len());
+            let sigs: BTreeSet<String> =
+                cands.iter().map(|(_, p)| pipeline_signature(p)).collect();
+            assert_eq!(sigs.len(), cands.len(), "{}: duplicate pipelines", cfg.name);
+        }
+    }
+
+    #[test]
+    fn candidate_cap_is_honored() {
+        let cands = enumerate_candidates(&targets::cpu_cache(), 3);
+        assert_eq!(cands.len(), 3);
+        assert_eq!(cands[0].0, "default");
+    }
+
+    #[test]
+    fn builtin_targets_have_simulable_hierarchies() {
+        for cfg in targets::builtin_targets() {
+            let h = target_hierarchy(&cfg);
+            assert!(h.is_some(), "{}: no simulable hierarchy", cfg.name);
+        }
+    }
+
+    #[test]
+    fn sim_score_is_deterministic_and_positive() {
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        let a = sim_score(&p, &cfg, 7).expect("simulable");
+        let b = sim_score(&p, &cfg, 7).expect("simulable");
+        assert_eq!(a, b);
+        assert!(a > 0);
+    }
+
+    #[test]
+    fn tuned_compile_never_predicts_worse_than_default() {
+        let p = ops::conv_relu_program();
+        for cfg in [targets::cpu_cache(), targets::paper_fig4()] {
+            let c = compile_network_tuned(&p, &cfg, &TuneOptions::default())
+                .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+            let t = c.tuning.as_ref().expect("tuned compile records its decision");
+            let default = t.default_cost.expect("default pipeline compiles on builtins");
+            assert!(
+                t.chosen_cost <= default,
+                "{}: chosen {} vs default {default}",
+                cfg.name,
+                t.chosen_cost
+            );
+            assert!(t.evaluated >= 2, "{}: only {} evaluated", cfg.name, t.evaluated);
+            assert!(t.simulated >= 1, "{}: nothing simulated", cfg.name);
+            assert!(c.summary().contains("tuning"), "{}", c.summary());
+            assert_eq!(c.compute_units, cfg.compute_units);
+            assert!(!c.schedule.ops.is_empty());
+        }
+    }
+
+    #[test]
+    fn tuned_program_stays_equivalent_to_the_source() {
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        let opts = TuneOptions { verify: true, ..TuneOptions::default() };
+        let c = compile_network_tuned(&p, &cfg, &opts).unwrap();
+        crate::passes::equiv::assert_equiv(&p, &c.program, 0xBEEF, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn invalid_programs_are_rejected_before_tuning() {
+        let mut p = ops::fig4_conv_program();
+        if let crate::ir::Statement::Block(b) = &mut p.main.stmts[0] {
+            b.constraints.push(crate::poly::Affine::var("bogus"));
+        }
+        let e = compile_network_tuned(&p, &targets::paper_fig4(), &TuneOptions::default())
+            .unwrap_err();
+        assert!(e.contains("invalid"), "{e}");
+    }
+
+    #[test]
+    fn tuning_report_summary_lists_candidates() {
+        let p = ops::conv_relu_program();
+        let c = compile_network_tuned(&p, &targets::cpu_cache(), &TuneOptions::default())
+            .unwrap();
+        let t = c.tuning.unwrap();
+        let s = t.summary();
+        assert!(s.contains("chosen"), "{s}");
+        assert!(s.contains("candidate"), "{s}");
+        assert!(s.contains(&t.chosen), "{s}");
+        assert!(t.predicted_gain() >= 0.0);
+    }
+}

@@ -12,11 +12,16 @@
 //! * [`search`] — tile-size search over a candidate space (exhaustive /
 //!   powers-of-two / divisors), with the search-space heuristics the
 //!   paper mentions.
+//! * [`pipeline`] — the Fig.-4 model generalized from one flat block to
+//!   a whole compiled program tree; ranks candidate pass pipelines for
+//!   the coordinator's autotuner (`coordinator::tune`).
 
 pub mod cacheline;
+pub mod pipeline;
 pub mod roofline;
 pub mod search;
 
 pub use cacheline::{tiling_cost, CostParams, TileCost};
+pub use pipeline::{predicted_program_cost, ProgramCost};
 pub use roofline::{MachineRoof, RooflineEstimate};
 pub use search::{best_tiling, SearchSpace, SearchStats};

@@ -1,0 +1,272 @@
+//! Whole-program cache-line cost prediction for compiled pipelines.
+//!
+//! The Fig.-4 model ([`super::cacheline`]) scores *one tiling of one
+//! flat block*. The pipeline autotuner needs to rank whole compiled
+//! programs — arbitrary nests produced by any pass combination — so
+//! this module generalizes the same model to a program tree:
+//!
+//! * every block that contains compute statements contributes, per
+//!   non-scratch refinement, the cache lines of its rectilinear
+//!   footprint over the block's own iteration space (the same
+//!   `access_extent` × `footprint_lines` arithmetic as the flat model);
+//! * that per-invocation figure is multiplied by the number of
+//!   *distinct regions* the refinement visits: the product, along the
+//!   refinement chain up to `main`, of the ranges of every enclosing
+//!   block's moving indexes that appear in the chain's access
+//!   polynomials. A refinement whose chain never moves (Fig. 4's
+//!   untiled weights) is counted once — the "fetched once, stays
+//!   resident" rule of the paper's model;
+//! * block-local scratch (`RefDir::Temp`, what `localize` produces) and
+//!   every view refined out of it count zero — localized traffic is the
+//!   point of that pass, and the model must reward it.
+//!
+//! On a flat-then-tiled single block this reproduces `tiling_cost`'s
+//! `total_lines` exactly (`tiles × tiled lines + untiled lines`); the
+//! unit tests pin that equivalence. The model has *no capacity term* —
+//! it ranks pipelines that all tile against the same memory unit, and
+//! the tuner's simulation stage re-scores the leaders with real cache
+//! geometry, which is where capacity pressure shows up.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Block, Program, RefDir, Statement};
+
+use super::cacheline::{access_extent, footprint_lines};
+
+/// Aggregate prediction for one compiled program.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProgramCost {
+    /// Predicted cache lines touched over the whole execution.
+    pub lines: u64,
+    /// Leaf compute iterations (constraint-respecting lattice points,
+    /// summed over compute blocks × their invocation counts).
+    pub leaf_iterations: u64,
+}
+
+impl ProgramCost {
+    /// Lines per compute iteration — the Fig.-4 figure of merit lifted
+    /// to a whole program (lower is better).
+    pub fn lines_per_iteration(&self) -> f64 {
+        if self.leaf_iterations == 0 {
+            return f64::INFINITY;
+        }
+        self.lines as f64 / self.leaf_iterations as f64
+    }
+}
+
+/// Does this block directly execute scalar work (as opposed to only
+/// nesting child blocks)?
+fn has_compute(b: &Block) -> bool {
+    b.stmts.iter().any(|s| {
+        matches!(
+            s,
+            Statement::Load { .. }
+                | Statement::Store { .. }
+                | Statement::Intrinsic { .. }
+                | Statement::Constant { .. }
+                | Statement::Special(_)
+        )
+    })
+}
+
+/// Number of distinct view origins `access` takes as the block's moving
+/// ranged indexes sweep: the product of the ranges of every moving
+/// index with a nonzero coefficient in any access dimension.
+/// (Constraints are ignored — an over-approximation consistent with the
+/// Fig.-4 model's "overflow accesses still cost".)
+fn motion(access: &[crate::poly::Affine], b: &Block) -> u64 {
+    let mut m: u64 = 1;
+    for idx in &b.idxs {
+        if idx.affine.is_some() || idx.range <= 1 {
+            continue;
+        }
+        if access.iter().any(|a| a.coeff(&idx.name) != 0) {
+            m = m.saturating_mul(idx.range);
+        }
+    }
+    m
+}
+
+/// Line-granularity correction for a moving refinement of a structural
+/// block. `m` distinct view origins each re-fetch their footprint —
+/// the Fig.-4 rule — *except* when the sweep is a perfect disjoint
+/// cover of its union box (tiles without halo, fusion's per-point
+/// slices): one pass over the union then, so the effective region
+/// count is `union lines / per-region lines`. Without this, a fused
+/// sweep of N contiguous scalars would cost N whole lines instead of
+/// N/line.
+fn effective_regions(r: &crate::ir::Refinement, b: &Block, m: u64, line_bytes: u64) -> u64 {
+    if m <= 1 {
+        return m;
+    }
+    let full: BTreeMap<String, u64> = b.idxs.iter().map(|i| (i.name.clone(), i.range)).collect();
+    let sizes: Vec<u64> = r.ttype.dims.iter().map(|d| d.size.max(1)).collect();
+    let union: Vec<u64> = r
+        .access
+        .iter()
+        .zip(&sizes)
+        .map(|(a, s)| access_extent(a, &full).saturating_add(s - 1))
+        .collect();
+    let vol_sizes = sizes.iter().copied().fold(1u64, |a, e| a.saturating_mul(e));
+    let vol_regions = m.saturating_mul(vol_sizes);
+    let vol_union: u64 = union.iter().copied().fold(1u64, |a, e| a.saturating_mul(e));
+    if vol_regions != vol_union {
+        return m; // halo overlap or sparse sweep: re-fetch per region
+    }
+    let line_elems = (line_bytes / r.ttype.dtype.size_bytes()).max(1);
+    let per = footprint_lines(&sizes, &r.ttype.strides(), line_elems).max(1);
+    let un = footprint_lines(&union, &r.ttype.strides(), line_elems);
+    un.div_ceil(per).max(1)
+}
+
+/// Recursive walk. `execs` is how many times `b`'s body runs (product
+/// of the ancestors' iteration counts); `regions` maps refinement
+/// names *in `b`'s parent scope* to the number of distinct line-level
+/// regions that name visits (0 = scratch-backed, free).
+fn walk(
+    b: &Block,
+    execs: u64,
+    regions: &BTreeMap<String, u64>,
+    line_bytes: u64,
+    total: &mut ProgramCost,
+) {
+    if has_compute(b) {
+        let full: BTreeMap<String, u64> =
+            b.idxs.iter().map(|i| (i.name.clone(), i.range)).collect();
+        for r in &b.refs {
+            if r.dir == RefDir::Temp {
+                continue;
+            }
+            let m = *regions.get(&r.from).unwrap_or(&1);
+            if m == 0 {
+                continue; // backed by block-local scratch somewhere up the chain
+            }
+            let extents: Vec<u64> = r.access.iter().map(|a| access_extent(a, &full)).collect();
+            let line_elems = (line_bytes / r.ttype.dtype.size_bytes()).max(1);
+            let lines = footprint_lines(&extents, &r.ttype.strides(), line_elems);
+            total.lines = total.lines.saturating_add(lines.saturating_mul(m));
+        }
+        total.leaf_iterations =
+            total.leaf_iterations.saturating_add(b.iterations().saturating_mul(execs));
+    }
+    // Region counts for the child scopes: chain multiplier × this
+    // block's own (line-corrected) motion of each refinement.
+    let mut child_regions: BTreeMap<String, u64> = BTreeMap::new();
+    for r in &b.refs {
+        let m = if r.dir == RefDir::Temp {
+            0
+        } else {
+            let parent = regions.get(&r.from).copied().unwrap_or(1);
+            let own = motion(&r.access, b);
+            parent.saturating_mul(effective_regions(r, b, own, line_bytes))
+        };
+        child_regions.insert(r.into.clone(), m);
+    }
+    let child_execs = execs.saturating_mul(b.iterations().max(1));
+    for c in b.child_blocks() {
+        walk(c, child_execs, &child_regions, line_bytes, total);
+    }
+}
+
+/// Predict the cache-line traffic of a compiled program against a
+/// memory unit with the given line size (bytes). Element sizes come
+/// from each refinement's dtype.
+pub fn predicted_program_cost(p: &Program, line_bytes: u64) -> ProgramCost {
+    let mut total = ProgramCost::default();
+    // `main`'s refinements all map whole program buffers (temps
+    // included — between-op intermediates are real memory): one region
+    // each.
+    let top: BTreeMap<String, u64> = p.main.refs.iter().map(|r| (r.into.clone(), 1)).collect();
+    for op in p.ops() {
+        walk(op, 1, &top, line_bytes.max(1), &mut total);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::cost::cacheline::{tiling_cost, CostParams};
+    use crate::frontend::ops;
+    use crate::ir::Statement;
+    use crate::passes::tile::{apply_tiling, TileOptions};
+
+    /// On a flat single-block program the prediction equals the Fig.-4
+    /// model's total lines for the untiled "tiling".
+    #[test]
+    fn flat_program_matches_cacheline_model() {
+        let p = ops::fig4_conv_program();
+        let Statement::Block(b) = &p.main.stmts[0] else { panic!() };
+        let flat = tiling_cost(b, &BTreeMap::new(), &CostParams::default());
+        let c = predicted_program_cost(&p, 8);
+        assert_eq!(c.lines, flat.total_lines, "flat lines must match tiling_cost");
+        assert_eq!(c.leaf_iterations, b.iterations());
+    }
+
+    /// After tiling, the prediction equals `tiles × tiled lines +
+    /// untiled lines` — the exact Fig.-4(b) arithmetic (1008 lines for
+    /// the 3×4 tile).
+    #[test]
+    fn tiled_program_matches_fig4b_total() {
+        let mut p = ops::fig4_conv_program();
+        let Statement::Block(b) = &mut p.main.stmts[0] else { panic!() };
+        let tile: BTreeMap<String, u64> =
+            [("x".to_string(), 3u64), ("y".to_string(), 4)].into();
+        let flat = (**b).clone();
+        let cost = tiling_cost(&flat, &tile, &CostParams::default());
+        **b = apply_tiling(&flat, &tile, &TileOptions::default());
+        let c = predicted_program_cost(&p, 8);
+        assert_eq!(c.lines, cost.total_lines, "nested prediction must match Fig. 4");
+        assert_eq!(c.lines, 1008);
+    }
+
+    /// The untiled-weights residency rule: weights whose chain never
+    /// moves are counted once, so a better tiling strictly lowers the
+    /// predicted lines.
+    #[test]
+    fn better_tilings_predict_fewer_lines() {
+        let mk = |tx: u64, ty: u64| {
+            let mut p = ops::fig4_conv_program();
+            let Statement::Block(b) = &mut p.main.stmts[0] else { panic!() };
+            let tile: BTreeMap<String, u64> =
+                [("x".to_string(), tx), ("y".to_string(), ty)].into();
+            **b = apply_tiling(b, &tile, &TileOptions::default());
+            predicted_program_cost(&p, 8).lines
+        };
+        // 3×4 is the Fig.-4 sweet spot; 1×1 thrashes halos.
+        assert!(mk(3, 4) < mk(1, 1), "{} vs {}", mk(3, 4), mk(1, 1));
+    }
+
+    /// Multi-op programs accumulate per-op traffic and iteration counts.
+    #[test]
+    fn cnn_program_accumulates_all_ops() {
+        let p = ops::cnn_program();
+        let c = predicted_program_cost(&p, 64);
+        assert!(c.lines > 0);
+        assert!(c.leaf_iterations > 0);
+        assert!(c.lines_per_iteration().is_finite());
+        // Per-op sum: dropping an op strictly reduces the prediction.
+        let mut q = p.clone();
+        q.main.stmts.pop();
+        let cq = predicted_program_cost(&q, 64);
+        assert!(cq.lines < c.lines);
+    }
+
+    /// Localized scratch is free: a compiled pipeline with `localize`
+    /// never predicts more lines than the same pipeline without it.
+    #[test]
+    fn localization_never_increases_predicted_lines() {
+        use crate::hw::{targets, PassConfig};
+        let p = ops::cnn_program();
+        let base = targets::cpu_cache();
+        let with = crate::passes::compile(&p, &base, false).unwrap();
+        let mut nl = base.clone();
+        nl.passes.retain(|pc| !matches!(pc, PassConfig::Localize));
+        let without = crate::passes::compile(&p, &nl, false).unwrap();
+        let lw = predicted_program_cost(&with.program, 64).lines;
+        let lo = predicted_program_cost(&without.program, 64).lines;
+        assert!(lw <= lo, "localize must not raise the prediction ({lw} vs {lo})");
+    }
+}

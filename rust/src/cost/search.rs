@@ -23,6 +23,15 @@ pub enum SearchSpace {
 }
 
 impl SearchSpace {
+    /// Short name used in pipeline descriptions and tuning labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchSpace::Exhaustive => "exhaustive",
+            SearchSpace::PowersOfTwo => "pow2",
+            SearchSpace::Divisors => "divisors",
+        }
+    }
+
     /// Tile-size candidates for an index of the given range, ascending.
     /// A degenerate range of 0 yields no candidates for every strategy
     /// (a tile size of 0 is never a valid split).
@@ -47,11 +56,31 @@ impl SearchSpace {
     }
 }
 
-/// Search telemetry.
-#[derive(Debug, Clone, Default)]
+/// Search telemetry. Aggregated across blocks by the autotile pass
+/// (one [`PassReport`](crate::passes::PassReport) carries the sum over
+/// every block it searched) and surfaced by the compiled-network
+/// summary and `stripe run`.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct SearchStats {
     pub evaluated: usize,
     pub feasible: usize,
+}
+
+impl SearchStats {
+    /// Fold another search's counters into this one.
+    pub fn absorb(&mut self, other: &SearchStats) {
+        self.evaluated += other.evaluated;
+        self.feasible += other.feasible;
+    }
+
+    /// The one-line rendering shared by `stripe run`, `stripe tune`,
+    /// and the compiled-network summary.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "autotile search: {} tiling(s) evaluated, {} feasible",
+            self.evaluated, self.feasible
+        )
+    }
 }
 
 /// Find the lowest-cost feasible tiling over `tileable` indexes.

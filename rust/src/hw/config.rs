@@ -91,6 +91,27 @@ pub enum PassConfig {
 }
 
 impl PassConfig {
+    /// Full parameterized description — the unit of identity the
+    /// pipeline autotuner dedups candidate pipelines by, and the label
+    /// shown in tuning reports.
+    pub fn describe(&self) -> String {
+        match self {
+            PassConfig::Autotile { memory, space, budget, output_dims_only } => format!(
+                "autotile(mem={memory},space={},budget={budget}{})",
+                space.name(),
+                if *output_dims_only { ",out-only" } else { "" }
+            ),
+            PassConfig::Fuse { max_group } => format!("fuse(max={max_group})"),
+            PassConfig::Stencilize { unit } => format!("stencilize({unit})"),
+            PassConfig::Transpose => "transpose".into(),
+            PassConfig::Partition { unit, memory } => format!("partition({unit},{memory})"),
+            PassConfig::BoundarySplit => "boundary_split".into(),
+            PassConfig::Scalarize => "scalarize".into(),
+            PassConfig::Localize => "localize".into(),
+            PassConfig::Schedule { memory } => format!("schedule({memory})"),
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             PassConfig::Autotile { .. } => "autotile",

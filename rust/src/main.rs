@@ -3,14 +3,15 @@
 //! ```text
 //! stripe targets                         list built-in hardware targets
 //! stripe compile  --target T [--tile f]  compile a canned or .tile network, print IR + report
-//! stripe run      --target T             compile + execute on random inputs, print outputs
+//! stripe run      --target T [--tune]    compile + execute on random inputs, print outputs
+//! stripe tune     --target T             autotune, print the decision, check service caching
 //! stripe validate <file.stripe>          parse + validate a textual Stripe program
 //! stripe fig1..fig5                      regenerate the paper's figures
 //! stripe serve    --workers N            demo the compile service on a request burst
 //! ```
 
 use stripe::coordinator::effort::{render_table, Scenario};
-use stripe::coordinator::{compile_network, CompileService};
+use stripe::coordinator::{compile_network, compile_network_tuned, CompileService, TuneOptions};
 use stripe::frontend::ops;
 use stripe::hw::targets;
 use stripe::ir::printer::print_program;
@@ -28,6 +29,7 @@ fn main() {
         "targets" => cmd_targets(),
         "compile" => cmd_compile(&args),
         "run" => cmd_run(&args),
+        "tune" => cmd_tune(&args),
         "validate" => cmd_validate(&args),
         "fig1" => cmd_fig1(&args),
         "fig2" => figs::fig2(),
@@ -54,10 +56,14 @@ fn print_help() {
          \x20 compile --target <t>         compile a network, print pass report (+ --print for IR)\n\
          \x20         --net <name|f.tile>  canned: fig4_conv, conv_relu, cnn, mlp, matmul\n\
          \x20         --set <path=value>   override a config parameter (Fig.1 set_config_params)\n\
+         \x20         --tune               search pass-pipeline variants via the cost models\n\
          \x20 run     --target <t>         compile + execute on seeded random inputs\n\
          \x20         --engine <e>         naive | planned | kernel (leaf-kernel lowering)\n\
          \x20         --parallel           execute across the target's compute units\n\
          \x20         --workers <n>        explicit worker count (overrides --parallel)\n\
+         \x20         --tune               compile through the pipeline autotuner\n\
+         \x20 tune    --target <t>         autotune a network, print the tuning decision, and\n\
+         \x20         --net <name|f.tile>  verify the tuned artifact is cached by the service\n\
          \x20 validate <file.stripe>       parse + validate textual Stripe\n\
          \x20 fig1 [--kernels K ...]       engineering-effort comparison table\n\
          \x20 fig2|fig3|fig4|fig5          regenerate the paper's figures\n\
@@ -121,7 +127,12 @@ fn cmd_compile(args: &Args) -> i32 {
         let p = load_net(args)?;
         let cfg = load_target(args)?;
         let verify = !args.flag("no-verify");
-        let c = compile_network(&p, &cfg, verify)?;
+        let c = if args.flag("tune") {
+            let opts = TuneOptions { verify, ..TuneOptions::default() };
+            compile_network_tuned(&p, &cfg, &opts)?
+        } else {
+            compile_network(&p, &cfg, verify)?
+        };
         println!("{}", c.summary());
         if args.flag("print") {
             println!("{}", print_program(&c.program));
@@ -135,7 +146,19 @@ fn cmd_run(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let p = load_net(args)?;
         let cfg = load_target(args)?;
-        let c = compile_network(&p, &cfg, false)?;
+        let c = if args.flag("tune") {
+            compile_network_tuned(&p, &cfg, &TuneOptions::default())?
+        } else {
+            compile_network(&p, &cfg, false)?
+        };
+        // Schedule summary: the tile-search telemetry behind the
+        // compiled pipeline, and the tuning decision when --tune.
+        if let Some(st) = c.search_stats() {
+            println!("{}", st.summary_line());
+        }
+        if let Some(t) = &c.tuning {
+            print!("{}", t.summary());
+        }
         let seed = args.get_u64("seed", 42);
         let inputs = stripe::passes::equiv::gen_inputs(&c.program, seed);
         let engine_name = args.get_or("engine", "planned");
@@ -197,6 +220,47 @@ fn cmd_run(args: &Args) -> i32 {
             println!("{name}[{}] = [{} ...]", vals.len(), preview.join(", "));
         }
         println!("executed in {dt:?}");
+        Ok(())
+    };
+    report(run())
+}
+
+/// Autotune a network through the compile service, print the tuning
+/// decision, and prove the tuned artifact is cached: repeat compiles
+/// must cost exactly 1 miss + N hits (mirroring the single-flight
+/// contract). Exits nonzero if caching fails — `scripts/verify.sh`
+/// uses this as the `VERIFY_TUNE_SMOKE` gate.
+fn cmd_tune(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let p = load_net(args)?;
+        let cfg = load_target(args)?;
+        let svc = CompileService::start(args.get_usize("workers", 2));
+        let first = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false)?;
+        let tuning = first.tuning.as_ref().ok_or("tuned compile lost its report")?;
+        print!("{}", tuning.summary());
+        if let Some(st) = first.search_stats() {
+            println!("{}", st.summary_line());
+        }
+        const REPEATS: u64 = 2;
+        for _ in 0..REPEATS {
+            let again = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false)?;
+            if !std::sync::Arc::ptr_eq(&first, &again) {
+                svc.shutdown();
+                return Err("repeat tuned compile was not served from cache".into());
+            }
+        }
+        let hits = svc
+            .metrics
+            .cache_hits
+            .load(std::sync::atomic::Ordering::Relaxed);
+        println!("metrics: {}", svc.metrics.snapshot());
+        svc.shutdown();
+        if hits != REPEATS {
+            return Err(format!(
+                "tuned config not cached: expected 1 miss + {REPEATS} hits, saw {hits} hit(s)"
+            ));
+        }
+        println!("tuned config cached: 1 miss + {REPEATS} hits");
         Ok(())
     };
     report(run())

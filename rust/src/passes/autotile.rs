@@ -107,6 +107,7 @@ fn tile_leaves(
         }
 
         let (best, stats) = best_tiling(b, &tileable, &params, space, &multiple_of, budget);
+        report.absorb_search(&stats);
         let Some(best) = best else {
             report
                 .details
@@ -159,6 +160,17 @@ mod tests {
         let b = p.main.child_blocks().next().unwrap();
         assert!(b.has_tag(TILED_TAG));
         assert!(b.refs.iter().all(|r| r.location.as_ref().is_some_and(|l| l.unit == "CACHE")));
+    }
+
+    #[test]
+    fn search_telemetry_aggregates_into_the_report() {
+        let mut p = ops::cnn_program();
+        let cfg = targets::cpu_cache();
+        let r = run(&mut p, &cfg, "L1", SearchSpace::PowersOfTwo, 4_096, true).unwrap();
+        let s = r.search.expect("autotile must record search telemetry");
+        assert!(s.evaluated > 0, "{s:?}");
+        assert!(s.feasible > 0, "{s:?}");
+        assert!(s.feasible <= s.evaluated);
     }
 
     #[test]

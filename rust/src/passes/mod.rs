@@ -24,6 +24,34 @@
 //! index-splitting construction); `equiv.rs` holds the semantic
 //! equivalence checker every rewrite is verified against.
 //!
+//! # How a pipeline is chosen
+//!
+//! A pipeline is *data*, not code: an ordered `Vec<PassConfig>`.
+//! Three sources produce one, in increasing specificity:
+//!
+//! 1. **Target default** — every [`crate::hw::targets`] entry ships a
+//!    hand-written default list (`MachineConfig::passes`), used by
+//!    [`compile`] and `compile_network`.
+//! 2. **Tuned** — `coordinator::tune::compile_network_tuned` searches
+//!    variants of the default list (autotile search space, fusion,
+//!    localization), scores them with the cache-line cost model
+//!    (`cost::pipeline`) plus the `sim` memory hierarchy, compiles
+//!    with the winner, and records the decision in
+//!    `CompiledNetwork::tuning`. The compile service caches tuned
+//!    artifacts per (program fingerprint, target), so the search runs
+//!    once per network; `stripe run --tune` / `stripe tune` expose it
+//!    on the CLI, and the cached entry is *overridden* simply by
+//!    submitting an untuned request (separate cache key) or editing
+//!    the target's parameters (`--set`, which changes the fingerprint
+//!    inputs the cost models read).
+//! 3. **Arbitrary** — any list the configuration language can express
+//!    is legal in any order: passes that need structure they don't
+//!    find (fusion after tiling, partitioning a nested block) no-op
+//!    rather than error, which is what makes both the tuner's variants
+//!    and the random-pipeline fuzzer in `rust/tests/differential.rs`
+//!    safe by construction. The only hard requirement is that named
+//!    memory/compute units exist in the `MachineConfig`.
+//!
 //! Passes rewrite structure only; *execution* parallelism is decided
 //! downstream by `exec::parallel`, which re-derives parallel-safe
 //! dimensions from Def-2 disjointness on whatever nest the pipeline
@@ -32,7 +60,7 @@
 //! combination legal to parallelize-or-not independently — no pass
 //! needs to preserve a "parallel annotation", and serial execution
 //! stays available as the bisection fallback. See the table in
-//! `exec/mod.rs` for the three execution engines.
+//! `exec/mod.rs` for the four execution engines.
 
 pub mod autotile;
 pub mod boundary;
@@ -55,16 +83,25 @@ pub struct PassReport {
     pub pass: String,
     pub changed: bool,
     pub details: Vec<String>,
+    /// Cost-model search telemetry, when the pass ran one (autotile
+    /// sums its per-block tile searches here). Surfaced by the
+    /// compiled-network summary and `stripe run`.
+    pub search: Option<crate::cost::search::SearchStats>,
 }
 
 impl PassReport {
     pub fn new(pass: &str) -> PassReport {
-        PassReport { pass: pass.to_string(), changed: false, details: Vec::new() }
+        PassReport { pass: pass.to_string(), changed: false, details: Vec::new(), search: None }
     }
 
     pub fn note(&mut self, msg: String) {
         self.changed = true;
         self.details.push(msg);
+    }
+
+    /// Fold one search's telemetry into this report.
+    pub fn absorb_search(&mut self, stats: &crate::cost::search::SearchStats) {
+        self.search.get_or_insert_with(Default::default).absorb(stats);
     }
 }
 

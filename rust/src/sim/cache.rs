@@ -149,6 +149,63 @@ mod tests {
         assert_eq!(cfg.sets, 64);
     }
 
+    /// LRU is a stack algorithm per set: with sets and line fixed,
+    /// growing the associativity (capacity) can never add misses. The
+    /// autotuner uses the model as a scoring oracle, so this
+    /// monotonicity is a correctness property, not a nicety.
+    #[test]
+    fn hit_rate_monotone_in_associativity() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x51B);
+        let trace: Vec<u64> = (0..4000).map(|_| rng.below(4096)).collect();
+        let mut last_misses = u64::MAX;
+        for ways in [1u64, 2, 4, 8] {
+            let mut c = Cache::new(CacheConfig { line_bytes: 16, sets: 4, ways });
+            for &a in &trace {
+                c.access(a);
+            }
+            assert_eq!(c.stats.accesses, trace.len() as u64);
+            assert!(
+                c.stats.misses <= last_misses,
+                "{ways} ways: {} misses > {} at lower capacity",
+                c.stats.misses,
+                last_misses
+            );
+            last_misses = c.stats.misses;
+        }
+    }
+
+    /// Same property through the capacity constructor: growing
+    /// capacity (sets fixed — set remapping is where LRU's stack
+    /// property does *not* apply) never lowers the hit rate, and a
+    /// cache bigger than the working set has only cold misses.
+    #[test]
+    fn capacity_growth_never_hurts_and_saturates_at_cold_misses() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xCAFE);
+        let trace: Vec<u64> = (0..3000).map(|_| rng.below(2048)).collect();
+        let mut distinct_lines: Vec<u64> = trace.iter().map(|a| a / 16).collect();
+        distinct_lines.sort();
+        distinct_lines.dedup();
+        let mut last_rate = -1.0f64;
+        for ways in [1u64, 2, 4, 8, 16, 32] {
+            let cap = 16 * 8 * ways; // line 16 × 8 sets × ways
+            let c2 = CacheConfig::with_capacity(cap, 16, ways);
+            assert_eq!(c2.sets, 8, "sets must stay fixed across the sweep");
+            let mut c = Cache::new(c2);
+            for &a in &trace {
+                c.access(a);
+            }
+            assert!(c.stats.hit_rate() >= last_rate, "capacity {cap} lowered the hit rate");
+            last_rate = c.stats.hit_rate();
+            if ways >= 16 {
+                // Every set can hold its whole share of the 128-line
+                // working set: only cold misses remain.
+                assert_eq!(c.stats.misses, distinct_lines.len() as u64);
+            }
+        }
+    }
+
     #[test]
     fn flush_clears_contents_not_stats() {
         let mut c = tiny();

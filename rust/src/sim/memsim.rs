@@ -117,6 +117,60 @@ mod tests {
         assert_eq!(h.dram_accesses, 2);
     }
 
+    /// Accounting invariants the tuning oracle depends on: the first
+    /// level sees exactly one access per trace event, every deeper
+    /// level sees exactly the misses of the level above, DRAM sees the
+    /// last level's misses, and bytes are misses × line.
+    #[test]
+    fn trace_length_equals_access_count_at_every_level() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x77ACE);
+        let mut h = two_level();
+        let n = 2500u64;
+        for _ in 0..n {
+            h.access(rng.below(1 << 12));
+        }
+        let s = h.stats();
+        assert_eq!(s[0].stats.accesses, n, "L1 must see every trace event");
+        assert_eq!(s[1].stats.accesses, s[0].stats.misses, "L2 sees exactly L1's misses");
+        assert_eq!(h.dram_accesses, s[1].stats.misses, "DRAM sees exactly L2's misses");
+        for level in &s {
+            assert_eq!(level.fill_bytes, level.stats.misses * 16);
+            assert!(level.stats.misses <= level.stats.accesses);
+        }
+        assert_eq!(h.dram_bytes, h.dram_accesses * 16);
+    }
+
+    /// Growing the *last* level's associativity (capacity at fixed
+    /// sets) can only shed DRAM traffic: the stream reaching that
+    /// level is unchanged, so the single-cache LRU stack property
+    /// applies directly. (Note the analogous claim about growing an
+    /// *inner* level is false — filtering changes downstream locality.)
+    #[test]
+    fn bigger_last_level_never_increases_dram_traffic() {
+        use crate::util::rng::Rng;
+        let trace: Vec<u64> = {
+            let mut rng = Rng::new(0xD0E);
+            (0..3000).map(|_| rng.below(1 << 11)).collect()
+        };
+        let mut last_dram = u64::MAX;
+        for ways in [1u64, 2, 4, 8] {
+            let mut h = Hierarchy::new(vec![
+                ("L1".into(), CacheConfig { line_bytes: 16, sets: 2, ways: 1 }),
+                ("L2".into(), CacheConfig { line_bytes: 16, sets: 16, ways }),
+            ]);
+            for &a in &trace {
+                h.access(a);
+            }
+            assert!(
+                h.dram_bytes <= last_dram,
+                "{ways}-way L2 raised DRAM traffic: {} > {last_dram}",
+                h.dram_bytes
+            );
+            last_dram = h.dram_bytes;
+        }
+    }
+
     #[test]
     fn reset_stats_keeps_contents() {
         let mut h = two_level();

@@ -99,6 +99,38 @@ mod tests {
         assert_eq!(s.bases.len(), 4);
     }
 
+    /// The sink feeds every interpreter access event into the
+    /// hierarchy, one cache access per event: on a real program the
+    /// simulated access count equals the recorded trace length. The
+    /// tuner's simulation scores are meaningless without this.
+    #[test]
+    fn simulated_access_count_equals_interpreter_trace_length() {
+        use crate::exec::{run_program_sink, ExecOptions, RecordingSink};
+        use crate::frontend::ops;
+
+        let p = ops::fig4_conv_program();
+        let inputs = crate::passes::equiv::gen_inputs(&p, 3);
+        let mut rec = RecordingSink::default();
+        run_program_sink(&p, &inputs, &ExecOptions::default(), &mut rec).unwrap();
+
+        let h = Hierarchy::single("L1", CacheConfig { line_bytes: 64, sets: 16, ways: 2 });
+        let mut sim = CacheSink::new(h, 64);
+        for b in &p.buffers {
+            sim.register_buffer(b.ttype.span_elems(), 4);
+        }
+        let out = run_program_sink(&p, &inputs, &ExecOptions::default(), &mut sim).unwrap();
+        assert!(!out.is_empty());
+        let st = sim.hierarchy.stats();
+        assert!(!rec.events.is_empty());
+        assert_eq!(
+            st[0].stats.accesses,
+            rec.events.len() as u64,
+            "trace length must equal simulated access count"
+        );
+        // Op boundaries line up with the program's top-level ops.
+        assert_eq!(sim.op_marks.len(), p.ops().count());
+    }
+
     #[test]
     fn op_marks_record_dram_progress() {
         let h = Hierarchy::single("L1", CacheConfig { line_bytes: 64, sets: 2, ways: 1 });

@@ -18,15 +18,29 @@
 //! heterogeneous networks back to back, so stale-page bugs (a recycled
 //! page leaking a previous request's data) would surface as bit
 //! mismatches against the unpooled naive/serial runs.
+//!
+//! On top of the default-pipeline sweep, a **property-based pipeline
+//! fuzzer** applies *random legal pass pipelines* — random pass order
+//! and random parameters drawn against a random built-in target — to
+//! the same generator's networks, equivalence-verifying every pass
+//! application (`compile(.., verify=true)`) and then asserting the
+//! four-engine bit-exactness invariant on the transformed program.
+//! This is the §3.1.2 contract stated as a property: *any* pipeline
+//! the configuration language can express must preserve semantics on
+//! every engine, not just the pipelines the built-in targets happen to
+//! use (the autotuner in `coordinator::tune` depends on exactly this —
+//! it compiles pipelines no fixed target ever ran).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use stripe::cost::SearchSpace;
 use stripe::exec::{
     run_program_kernel, run_program_parallel, run_program_planned, run_program_sink,
     BufferPool, Engine, ExecOptions, NullSink,
 };
 use stripe::graph::{NetworkBuilder, TensorId};
+use stripe::hw::{builtin_targets, MachineConfig, PassConfig};
 use stripe::ir::{DType, Program};
 use stripe::util::rng::Rng;
 
@@ -136,6 +150,79 @@ fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
     differential_case_pooled(p, seed, workers, None)
 }
 
+/// Build a random *legal* pass pipeline against `cfg`: 1–5 passes in
+/// random order, each with random parameters, referencing only the
+/// target's real memory units and compute units (the one legality
+/// requirement — pass *order* is unconstrained by design, see
+/// `passes/mod.rs`).
+fn random_pipeline(cfg: &MachineConfig, rng: &mut Rng) -> Vec<PassConfig> {
+    let mems: Vec<String> = cfg.memories.iter().map(|m| m.name.clone()).collect();
+    let units: Vec<String> = cfg.compute.iter().map(|c| c.name.clone()).collect();
+    let n = 1 + rng.below(5) as usize;
+    let mut passes = Vec::with_capacity(n);
+    for _ in 0..n {
+        passes.push(match rng.below(9) {
+            0 => PassConfig::Fuse { max_group: 2 + rng.below(3) as usize },
+            1 => PassConfig::Autotile {
+                memory: rng.choose(&mems).clone(),
+                space: *rng.choose(&[
+                    SearchSpace::Exhaustive,
+                    SearchSpace::PowersOfTwo,
+                    SearchSpace::Divisors,
+                ]),
+                budget: 64 + rng.below(193) as usize,
+                output_dims_only: rng.below(2) == 0,
+            },
+            2 => PassConfig::BoundarySplit,
+            3 => PassConfig::Scalarize,
+            4 => PassConfig::Localize,
+            5 => PassConfig::Transpose,
+            6 => PassConfig::Partition {
+                unit: rng.choose(&units).clone(),
+                memory: rng.choose(&mems).clone(),
+            },
+            7 => PassConfig::Stencilize { unit: rng.choose(&units).clone() },
+            _ => PassConfig::Schedule { memory: rng.choose(&mems).clone() },
+        });
+    }
+    passes
+}
+
+/// The pipeline fuzzer: every random pipeline, applied to a random
+/// network, must (a) pass per-pass equivalence verification and (b)
+/// keep all four engines bit-exact on the transformed program.
+#[test]
+fn fuzzed_random_pipelines_stay_bit_exact_across_all_engines() {
+    let mut rng = Rng::new(0xF0225);
+    let pool = Arc::new(BufferPool::default());
+    let targets = builtin_targets();
+    let mut changed = 0usize;
+    for case in 0..50u64 {
+        let p = random_program(100 + case, &mut rng);
+        let base = &targets[rng.below(targets.len() as u64) as usize];
+        let mut cfg = base.clone();
+        cfg.passes = random_pipeline(base, &mut rng);
+        let described: Vec<String> = cfg.passes.iter().map(|pc| pc.describe()).collect();
+        // verify=true: each changed pass is execution-checked for
+        // semantic equivalence before the engines ever see the result.
+        let compiled = stripe::passes::compile(&p, &cfg, true).unwrap_or_else(|e| {
+            panic!("case {case} ({}): pipeline [{}] broke: {e}", cfg.name, described.join(", "))
+        });
+        if compiled.reports.iter().any(|r| r.changed) {
+            changed += 1;
+        }
+        let workers = 1 + rng.below(4) as usize;
+        differential_case_pooled(
+            &compiled.program,
+            5000 + case,
+            workers,
+            Some(Arc::clone(&pool)),
+        );
+    }
+    // The fuzz must actually transform programs, not no-op through.
+    assert!(changed >= 10, "only {changed}/50 fuzzed pipelines changed their program");
+}
+
 #[test]
 fn fifty_random_networks_agree_across_all_engines() {
     let mut rng = Rng::new(0xD1FF);
@@ -179,6 +266,20 @@ fn canned_networks_agree_across_all_engines() {
     ] {
         let par = differential_case(&p, 42, 4);
         assert!(par >= 1, "{name}: nothing parallelized");
+    }
+}
+
+#[test]
+fn tuned_networks_agree_across_all_engines() {
+    // The autotuner picks pipelines no fixed target ever compiled; its
+    // winners must satisfy the same four-engine invariant.
+    use stripe::coordinator::{compile_network_tuned, TuneOptions};
+    use stripe::frontend::ops;
+    for cfg in builtin_targets() {
+        let c = compile_network_tuned(&ops::conv_relu_program(), &cfg, &TuneOptions::default())
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        assert!(c.tuning.is_some());
+        differential_case(&c.program, 11, cfg.compute_units.max(2));
     }
 }
 

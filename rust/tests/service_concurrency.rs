@@ -47,6 +47,41 @@ fn thundering_herd_yields_one_miss_and_n_minus_one_hits() {
 }
 
 #[test]
+fn tuned_herd_single_flights_the_tuning_search() {
+    // The tuning search (candidate compiles + memory simulation) is
+    // far more expensive than a plain compile, so single-flighting it
+    // matters more: a herd of identical tuned requests must pay for
+    // exactly one search and share one tuned artifact.
+    const N: usize = 4;
+    let svc = Arc::new(CompileService::start(2));
+    let barrier = Arc::new(std::sync::Barrier::new(N));
+    let mut threads = Vec::new();
+    for _ in 0..N {
+        let svc = Arc::clone(&svc);
+        let barrier = Arc::clone(&barrier);
+        threads.push(std::thread::spawn(move || {
+            barrier.wait();
+            svc.compile_blocking_tuned(ops::conv_relu_program(), targets::cpu_cache(), false)
+                .expect("tuned compile")
+        }));
+    }
+    let results: Vec<_> = threads.into_iter().map(|t| t.join().expect("join")).collect();
+    for r in &results {
+        assert!(Arc::ptr_eq(&results[0], r), "all callers share one tuned artifact");
+        let t = r.tuning.as_ref().expect("tuned artifact carries its report");
+        assert!(t.chosen_cost <= t.default_cost.expect("default scored"), "{}", t.summary());
+    }
+    assert_eq!(
+        svc.metrics.cache_hits.load(Relaxed),
+        (N - 1) as u64,
+        "tuning must run once: {}",
+        svc.metrics.snapshot()
+    );
+    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
+    svc.shutdown();
+}
+
+#[test]
 fn distinct_programs_all_miss_under_concurrency() {
     const N: u64 = 6;
     let svc = Arc::new(CompileService::start(3));

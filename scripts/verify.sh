@@ -26,6 +26,16 @@ else
     echo "(clippy unavailable; skipping lint check)"
 fi
 
+echo "== tune smoke (gated) =="
+# Opt-in autotuning smoke: tunes the canned cnn through the compile
+# service and asserts the tuned config is cached on repeat compiles
+# (1 miss + N hits — `stripe tune` exits nonzero otherwise).
+if [ "${VERIFY_TUNE_SMOKE:-0}" = "1" ]; then
+    cargo run --release --quiet -- tune --net cnn --target cpu_cache
+else
+    echo "(set VERIFY_TUNE_SMOKE=1 to run the autotuning cache smoke)"
+fi
+
 echo "== bench smoke (gated) =="
 # Opt-in end-to-end bench smoke: runs the e2e bench on a reduced
 # measurement budget and leaves BENCH_e2e.json at the repo root.
