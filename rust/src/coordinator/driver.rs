@@ -45,6 +45,29 @@ impl CompiledNetwork {
         total
     }
 
+    /// Approximate resident size of this artifact in bytes, used by the
+    /// compile cache's LRU byte budget. The dominant term is the
+    /// compiled program text (a faithful proxy for IR size — the IR is
+    /// string-keyed maps over the same names the printer emits); pass
+    /// reports and the schedule are charged per entry, plus a fixed
+    /// overhead for the struct itself. Deterministic for a given
+    /// artifact, which the eviction tests rely on.
+    pub fn approx_bytes(&self) -> u64 {
+        let mut bytes = 256u64; // struct + allocator overhead
+        bytes += crate::ir::printer::print_program(&self.program).len() as u64;
+        for r in &self.reports {
+            bytes += r.pass.len() as u64 + 16;
+            for d in &r.details {
+                bytes += d.len() as u64;
+            }
+        }
+        bytes += 64 * self.schedule.ops.len() as u64;
+        if let Some(t) = &self.tuning {
+            bytes += t.summary().len() as u64;
+        }
+        bytes
+    }
+
     /// One-line-per-pass summary, followed by search telemetry, the
     /// tuning decision (when tuned), and the parallel schedule.
     pub fn summary(&self) -> String {

@@ -1,56 +1,482 @@
-//! Lightweight metrics for the compile service.
+//! Metrics registry for the serving tier.
+//!
+//! Replaces the original four ad-hoc atomics with a real registry:
+//! per-tenant and global request counters, latency histograms split
+//! into queue-wait vs compile time, and a Prometheus-style text
+//! export ([`Metrics::render_scrape`]) with a matching parser and a
+//! reconciliation check used by `stripe serve` and the verify smoke.
+//!
+//! ## Accounting model
+//!
+//! Every submitted request is recorded once ([`Metrics::record_request`])
+//! and reaches **exactly one** terminal class:
+//!
+//! | terminal  | meaning                                               |
+//! |-----------|-------------------------------------------------------|
+//! | hit       | served from the artifact cache (incl. parked waiters  |
+//! |           | on a compile that succeeded)                          |
+//! | miss      | bound to a compile: the compiling request itself, and |
+//! |           | parked waiters whose compile failed                   |
+//! | reject    | shed at admission (tenant cap, full queue, or a       |
+//! |           | submit against a closed queue)                        |
+//! | timeout   | deadline passed while queued or parked                |
+//!
+//! so, once the system is quiescent,
+//! `requests = hits + misses + rejects + timeouts` holds globally and
+//! per tenant — [`reconcile_scrape`] asserts exactly that. Compile
+//! *executions* are counted separately (`compiles_ok`/`compiles_failed`,
+//! one per actual compile, never inflated by cache hits), which is what
+//! makes the hit ratio and compile throughput independently readable.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::Duration;
 
-/// Monotonic counters + latency accumulator (lock-free).
+/// Tenant identity attached to every request (and every per-tenant
+/// metrics series).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(String);
+
+impl TenantId {
+    pub fn new(s: impl Into<String>) -> TenantId {
+        TenantId(s.into())
+    }
+
+    /// Tenant used by the service-level convenience entry points
+    /// (`CompileService::submit` and friends) that predate tenancy.
+    pub fn anon() -> TenantId {
+        TenantId("anon".to_string())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<&str> for TenantId {
+    fn from(s: &str) -> TenantId {
+        TenantId(s.to_string())
+    }
+}
+
+impl From<String> for TenantId {
+    fn from(s: String) -> TenantId {
+        TenantId(s)
+    }
+}
+
+/// Counter families exposed by the registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    Requests,
+    Hits,
+    Misses,
+    Rejects,
+    Timeouts,
+    /// Cache entries LRU-evicted under the byte budget (global only).
+    Evictions,
+    /// Compile executions that produced an artifact (one per compile,
+    /// never inflated by cache hits).
+    CompilesOk,
+    /// Compile executions that failed (error or panic).
+    CompilesFailed,
+}
+
+/// Histogram bucket upper bounds, in microseconds (+Inf is implicit).
+const BUCKET_BOUNDS_US: [u64; 7] =
+    [100, 1_000, 5_000, 25_000, 100_000, 1_000_000, 10_000_000];
+
+#[derive(Clone, Debug, Default)]
+struct Histogram {
+    /// Per-bucket (non-cumulative) counts; the last slot is +Inf.
+    buckets: [u64; BUCKET_BOUNDS_US.len() + 1],
+    sum_us: u64,
+    count: u64,
+}
+
+impl Histogram {
+    fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = BUCKET_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(BUCKET_BOUNDS_US.len());
+        self.buckets[idx] += 1;
+        self.sum_us += us;
+        self.count += 1;
+    }
+
+    fn sum(&self) -> Duration {
+        Duration::from_micros(self.sum_us)
+    }
+
+    /// Prometheus text exposition: cumulative `_bucket{le=...}` lines
+    /// plus `_sum` and `_count`.
+    fn render(&self, name: &str, out: &mut String) {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, &bound) in BUCKET_BOUNDS_US.iter().enumerate() {
+            cum += self.buckets[i];
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                bound as f64 / 1e6
+            ));
+        }
+        cum += self.buckets[BUCKET_BOUNDS_US.len()];
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!("{name}_sum {}\n", self.sum_us as f64 / 1e6));
+        out.push_str(&format!("{name}_count {}\n", self.count));
+    }
+}
+
+/// Terminal-class counters, kept globally and per tenant.
+#[derive(Clone, Debug, Default)]
+struct Counters {
+    requests: u64,
+    hits: u64,
+    misses: u64,
+    rejects: u64,
+    timeouts: u64,
+}
+
+impl Counters {
+    fn get(&self, c: Counter) -> u64 {
+        match c {
+            Counter::Requests => self.requests,
+            Counter::Hits => self.hits,
+            Counter::Misses => self.misses,
+            Counter::Rejects => self.rejects,
+            Counter::Timeouts => self.timeouts,
+            // Evictions and compile executions are global-only.
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    global: Counters,
+    tenants: BTreeMap<TenantId, Counters>,
+    evictions: u64,
+    evicted_bytes: u64,
+    compiles_ok: u64,
+    compiles_failed: u64,
+    /// Gauges maintained by the cache owner.
+    cache_entries: u64,
+    cache_bytes: u64,
+    /// Submit → worker-pop wait, per popped request.
+    queue_wait: Histogram,
+    /// Actual compile duration, one sample per compile execution.
+    compile: Histogram,
+    /// True per-request latency: submit → terminal reply, stamped from
+    /// the *request's* submission time (not the worker's clock).
+    request: Histogram,
+}
+
+/// The registry. All mutation goes through one mutex; record calls are
+/// O(1) map updates, far off the compile hot path.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    pub requests: AtomicU64,
-    pub completed: AtomicU64,
-    pub failed: AtomicU64,
-    pub cache_hits: AtomicU64,
-    /// Total compile latency in microseconds.
-    total_us: AtomicU64,
+    inner: Mutex<Inner>,
 }
 
 impl Metrics {
-    pub fn record_request(&self) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
+    fn with<R>(&self, f: impl FnOnce(&mut Inner) -> R) -> R {
+        f(&mut self.inner.lock().unwrap())
     }
 
-    pub fn record_done(&self, latency: Duration, ok: bool) {
-        if ok {
-            self.completed.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.failed.fetch_add(1, Ordering::Relaxed);
-        }
-        self.total_us
-            .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+    pub fn record_request(&self, tenant: &TenantId) {
+        self.with(|i| {
+            i.global.requests += 1;
+            i.tenants.entry(tenant.clone()).or_default().requests += 1;
+        });
     }
 
-    pub fn record_cache_hit(&self) {
-        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    /// Terminal: served from cache. `latency` is the request's own
+    /// submit → reply time.
+    pub fn record_hit(&self, tenant: &TenantId, latency: Duration) {
+        self.with(|i| {
+            i.global.hits += 1;
+            i.tenants.entry(tenant.clone()).or_default().hits += 1;
+            i.request.record(latency);
+        });
     }
 
+    /// Terminal: bound to a compile (the compiling request, or a parked
+    /// waiter whose compile failed).
+    pub fn record_miss(&self, tenant: &TenantId, latency: Duration) {
+        self.with(|i| {
+            i.global.misses += 1;
+            i.tenants.entry(tenant.clone()).or_default().misses += 1;
+            i.request.record(latency);
+        });
+    }
+
+    /// Terminal: shed at admission (tenant cap, full queue, closed
+    /// queue). No latency sample — the request never entered the queue.
+    pub fn record_reject(&self, tenant: &TenantId) {
+        self.with(|i| {
+            i.global.rejects += 1;
+            i.tenants.entry(tenant.clone()).or_default().rejects += 1;
+        });
+    }
+
+    /// Terminal: deadline passed while queued or parked.
+    pub fn record_timeout(&self, tenant: &TenantId, waited: Duration) {
+        self.with(|i| {
+            i.global.timeouts += 1;
+            i.tenants.entry(tenant.clone()).or_default().timeouts += 1;
+            i.request.record(waited);
+        });
+    }
+
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.with(|i| i.queue_wait.record(wait));
+    }
+
+    /// One sample per compile *execution* (cache hits never land here).
+    pub fn record_compile(&self, duration: Duration, ok: bool) {
+        self.with(|i| {
+            if ok {
+                i.compiles_ok += 1;
+            } else {
+                i.compiles_failed += 1;
+            }
+            i.compile.record(duration);
+        });
+    }
+
+    pub fn record_eviction(&self, bytes: u64) {
+        self.with(|i| {
+            i.evictions += 1;
+            i.evicted_bytes += bytes;
+        });
+    }
+
+    /// Cache-owner gauges (entry count and resident bytes).
+    pub fn set_cache_gauges(&self, entries: u64, bytes: u64) {
+        self.with(|i| {
+            i.cache_entries = entries;
+            i.cache_bytes = bytes;
+        });
+    }
+
+    pub fn total(&self, c: Counter) -> u64 {
+        self.with(|i| match c {
+            Counter::Evictions => i.evictions,
+            Counter::CompilesOk => i.compiles_ok,
+            Counter::CompilesFailed => i.compiles_failed,
+            _ => i.global.get(c),
+        })
+    }
+
+    pub fn tenant_total(&self, tenant: &TenantId, c: Counter) -> u64 {
+        self.with(|i| i.tenants.get(tenant).map(|t| t.get(c)).unwrap_or(0))
+    }
+
+    /// Mean end-to-end request latency (terminal requests only).
     pub fn mean_latency(&self) -> Duration {
-        let done = self.completed.load(Ordering::Relaxed) + self.failed.load(Ordering::Relaxed);
-        if done == 0 {
-            return Duration::ZERO;
-        }
-        Duration::from_micros(self.total_us.load(Ordering::Relaxed) / done)
+        self.with(|i| {
+            if i.request.count == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_micros(i.request.sum_us / i.request.count)
+            }
+        })
     }
 
-    pub fn snapshot(&self) -> String {
-        format!(
-            "requests={} completed={} failed={} cache_hits={} mean_latency={:?}",
-            self.requests.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.failed.load(Ordering::Relaxed),
-            self.cache_hits.load(Ordering::Relaxed),
-            self.mean_latency()
-        )
+    /// Total end-to-end request latency across all terminal requests.
+    pub fn request_latency_sum(&self) -> Duration {
+        self.with(|i| i.request.sum())
     }
+
+    /// Total submit → pop queue wait across all popped requests.
+    pub fn queue_wait_sum(&self) -> Duration {
+        self.with(|i| i.queue_wait.sum())
+    }
+
+    /// Total compile time across all compile executions.
+    pub fn compile_time_sum(&self) -> Duration {
+        self.with(|i| i.compile.sum())
+    }
+
+    /// One-line human summary (CLI output, assert messages).
+    pub fn snapshot(&self) -> String {
+        self.with(|i| {
+            format!(
+                "requests={} hits={} misses={} rejects={} timeouts={} \
+                 evictions={} compiles_ok={} compiles_failed={} \
+                 cache_bytes={} mean_latency={:?}",
+                i.global.requests,
+                i.global.hits,
+                i.global.misses,
+                i.global.rejects,
+                i.global.timeouts,
+                i.evictions,
+                i.compiles_ok,
+                i.compiles_failed,
+                i.cache_bytes,
+                if i.request.count == 0 {
+                    Duration::ZERO
+                } else {
+                    Duration::from_micros(i.request.sum_us / i.request.count)
+                },
+            )
+        })
+    }
+
+    /// Prometheus-style text exposition: global and per-tenant counter
+    /// series, cache gauges, and the three latency histograms. Parse it
+    /// back with [`parse_scrape`]; check invariants with
+    /// [`reconcile_scrape`].
+    pub fn render_scrape(&self) -> String {
+        self.with(|i| {
+            let mut out = String::new();
+            let counters: [(&str, fn(&Counters) -> u64); 5] = [
+                ("stripe_requests_total", |c| c.requests),
+                ("stripe_cache_hits_total", |c| c.hits),
+                ("stripe_cache_misses_total", |c| c.misses),
+                ("stripe_rejects_total", |c| c.rejects),
+                ("stripe_timeouts_total", |c| c.timeouts),
+            ];
+            for (name, get) in counters {
+                out.push_str(&format!("# TYPE {name} counter\n"));
+                out.push_str(&format!("{name} {}\n", get(&i.global)));
+                for (tenant, c) in &i.tenants {
+                    out.push_str(&format!(
+                        "{name}{{tenant=\"{}\"}} {}\n",
+                        sanitize_label(tenant.as_str()),
+                        get(c)
+                    ));
+                }
+            }
+            for (name, v) in [
+                ("stripe_evictions_total", i.evictions),
+                ("stripe_evicted_bytes_total", i.evicted_bytes),
+                ("stripe_compiles_ok_total", i.compiles_ok),
+                ("stripe_compiles_failed_total", i.compiles_failed),
+            ] {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+            }
+            for (name, v) in [
+                ("stripe_cache_entries", i.cache_entries),
+                ("stripe_cache_bytes", i.cache_bytes),
+            ] {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+            }
+            i.queue_wait.render("stripe_queue_wait_seconds", &mut out);
+            i.compile.render("stripe_compile_seconds", &mut out);
+            i.request.render("stripe_request_seconds", &mut out);
+            out
+        })
+    }
+}
+
+/// Label values must not contain the characters the line format uses.
+fn sanitize_label(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Parse a scrape rendered by [`Metrics::render_scrape`] back into a
+/// `series → value` map (series = metric name including its label set).
+pub fn parse_scrape(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("unparseable scrape line: {line:?}"))?;
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("bad value in scrape line: {line:?}"))?;
+        if out.insert(name.to_string(), v).is_some() {
+            return Err(format!("duplicate scrape series: {name}"));
+        }
+    }
+    Ok(out)
+}
+
+/// Check a scrape's internal invariants, valid once the system is
+/// quiescent (every submitted request has reached a terminal state):
+///
+/// * `requests = hits + misses + rejects + timeouts`, globally and for
+///   every tenant that appears in the scrape;
+/// * every histogram's `+Inf` bucket equals its `_count`.
+///
+/// Returns a one-line summary on success.
+pub fn reconcile_scrape(text: &str) -> Result<String, String> {
+    let series = parse_scrape(text)?;
+    let get = |k: &str| series.get(k).copied().unwrap_or(0.0);
+    let check = |label: &str, req: f64, h: f64, m: f64, r: f64, t: f64| {
+        if req != h + m + r + t {
+            Err(format!(
+                "{label}: requests {req} != hits {h} + misses {m} \
+                 + rejects {r} + timeouts {t}"
+            ))
+        } else {
+            Ok(())
+        }
+    };
+    let (req, hits, misses, rejects, timeouts) = (
+        get("stripe_requests_total"),
+        get("stripe_cache_hits_total"),
+        get("stripe_cache_misses_total"),
+        get("stripe_rejects_total"),
+        get("stripe_timeouts_total"),
+    );
+    check("global", req, hits, misses, rejects, timeouts)?;
+    let mut tenants = Vec::new();
+    for key in series.keys() {
+        if let Some(rest) = key.strip_prefix("stripe_requests_total{tenant=\"") {
+            if let Some(t) = rest.strip_suffix("\"}") {
+                tenants.push(t.to_string());
+            }
+        }
+    }
+    for t in &tenants {
+        let s = |family: &str| get(&format!("{family}{{tenant=\"{t}\"}}"));
+        check(
+            &format!("tenant {t}"),
+            s("stripe_requests_total"),
+            s("stripe_cache_hits_total"),
+            s("stripe_cache_misses_total"),
+            s("stripe_rejects_total"),
+            s("stripe_timeouts_total"),
+        )?;
+    }
+    for h in [
+        "stripe_queue_wait_seconds",
+        "stripe_compile_seconds",
+        "stripe_request_seconds",
+    ] {
+        let inf = get(&format!("{h}_bucket{{le=\"+Inf\"}}"));
+        let count = get(&format!("{h}_count"));
+        if inf != count {
+            return Err(format!("{h}: +Inf bucket {inf} != count {count}"));
+        }
+    }
+    Ok(format!(
+        "scrape reconciles: {req} requests = {hits} hits + {misses} misses \
+         + {rejects} rejects + {timeouts} timeouts across {} tenant(s)",
+        tenants.len()
+    ))
 }
 
 #[cfg(test)]
@@ -58,22 +484,126 @@ mod tests {
     use super::*;
 
     #[test]
-    fn counters_accumulate() {
+    fn terminal_classes_accumulate_globally_and_per_tenant() {
         let m = Metrics::default();
-        m.record_request();
-        m.record_request();
-        m.record_done(Duration::from_millis(10), true);
-        m.record_done(Duration::from_millis(30), false);
-        m.record_cache_hit();
-        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
-        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
-        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
-        assert_eq!(m.mean_latency(), Duration::from_millis(20));
-        assert!(m.snapshot().contains("cache_hits=1"));
+        let a = TenantId::from("a");
+        let b = TenantId::from("b");
+        m.record_request(&a);
+        m.record_request(&a);
+        m.record_request(&b);
+        m.record_hit(&a, Duration::from_millis(1));
+        m.record_miss(&a, Duration::from_millis(9));
+        m.record_reject(&b);
+        assert_eq!(m.total(Counter::Requests), 3);
+        assert_eq!(m.total(Counter::Hits), 1);
+        assert_eq!(m.total(Counter::Misses), 1);
+        assert_eq!(m.total(Counter::Rejects), 1);
+        assert_eq!(m.tenant_total(&a, Counter::Requests), 2);
+        assert_eq!(m.tenant_total(&a, Counter::Hits), 1);
+        assert_eq!(m.tenant_total(&b, Counter::Rejects), 1);
+        assert_eq!(m.tenant_total(&b, Counter::Hits), 0);
+        assert_eq!(m.mean_latency(), Duration::from_millis(5));
+        assert!(m.snapshot().contains("hits=1"));
+    }
+
+    #[test]
+    fn compiles_are_counted_per_execution_not_per_request() {
+        let m = Metrics::default();
+        let t = TenantId::anon();
+        // One compile serves three requests (1 miss + 2 hits): exactly
+        // one compile sample.
+        m.record_compile(Duration::from_millis(4), true);
+        m.record_miss(&t, Duration::from_millis(4));
+        m.record_hit(&t, Duration::from_millis(4));
+        m.record_hit(&t, Duration::from_millis(4));
+        assert_eq!(m.total(Counter::CompilesOk), 1);
+        assert_eq!(m.compile_time_sum(), Duration::from_millis(4));
+        assert_eq!(m.request_latency_sum(), Duration::from_millis(12));
+        m.record_compile(Duration::from_millis(1), false);
+        assert_eq!(m.total(Counter::CompilesFailed), 1);
     }
 
     #[test]
     fn empty_latency_is_zero() {
         assert_eq!(Metrics::default().mean_latency(), Duration::ZERO);
+    }
+
+    #[test]
+    fn scrape_renders_parses_and_reconciles() {
+        let m = Metrics::default();
+        let a = TenantId::from("alpha");
+        let b = TenantId::from("beta");
+        for _ in 0..4 {
+            m.record_request(&a);
+        }
+        for _ in 0..2 {
+            m.record_request(&b);
+        }
+        m.record_miss(&a, Duration::from_millis(3));
+        m.record_hit(&a, Duration::from_millis(1));
+        m.record_hit(&a, Duration::from_micros(40));
+        m.record_reject(&a);
+        m.record_miss(&b, Duration::from_millis(2));
+        m.record_timeout(&b, Duration::from_millis(30));
+        m.record_queue_wait(Duration::from_micros(500));
+        m.record_compile(Duration::from_millis(3), true);
+        m.record_compile(Duration::from_millis(2), true);
+        m.record_eviction(1024);
+        m.set_cache_gauges(1, 2048);
+        let scrape = m.render_scrape();
+        let series = parse_scrape(&scrape).expect("parses");
+        assert_eq!(series["stripe_requests_total"], 6.0);
+        assert_eq!(series["stripe_requests_total{tenant=\"alpha\"}"], 4.0);
+        assert_eq!(series["stripe_cache_hits_total{tenant=\"alpha\"}"], 2.0);
+        assert_eq!(series["stripe_timeouts_total{tenant=\"beta\"}"], 1.0);
+        assert_eq!(series["stripe_evictions_total"], 1.0);
+        assert_eq!(series["stripe_cache_bytes"], 2048.0);
+        assert_eq!(series["stripe_compile_seconds_count"], 2.0);
+        // 5 terminal latency samples: rejects carry no latency.
+        assert_eq!(series["stripe_request_seconds_count"], 5.0);
+        let line = reconcile_scrape(&scrape).expect("reconciles");
+        assert!(line.contains("6 requests"), "{line}");
+        assert!(line.contains("2 tenant(s)"), "{line}");
+    }
+
+    #[test]
+    fn reconcile_rejects_cooked_totals() {
+        let m = Metrics::default();
+        let t = TenantId::from("t");
+        m.record_request(&t);
+        // Request recorded but never terminal: the equation must fail.
+        let e = reconcile_scrape(&m.render_scrape()).unwrap_err();
+        assert!(e.contains("requests"), "{e}");
+        // Hand-corrupted histogram: +Inf bucket != count.
+        let bad = "stripe_queue_wait_seconds_bucket{le=\"+Inf\"} 3\n\
+                   stripe_queue_wait_seconds_count 2\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("+Inf"), "{e}");
+        assert!(parse_scrape("not a scrape line").is_err());
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_bounded() {
+        let mut h = Histogram::default();
+        h.record(Duration::from_micros(50)); // <= 100us bucket
+        h.record(Duration::from_micros(700)); // <= 1ms bucket
+        h.record(Duration::from_secs(60)); // +Inf
+        let mut out = String::new();
+        h.render("x_seconds", &mut out);
+        let series = parse_scrape(&out).unwrap();
+        assert_eq!(series["x_seconds_bucket{le=\"0.0001\"}"], 1.0);
+        assert_eq!(series["x_seconds_bucket{le=\"0.001\"}"], 2.0);
+        assert_eq!(series["x_seconds_bucket{le=\"10\"}"], 2.0);
+        assert_eq!(series["x_seconds_bucket{le=\"+Inf\"}"], 3.0);
+        assert_eq!(series["x_seconds_count"], 3.0);
+    }
+
+    #[test]
+    fn labels_are_sanitized() {
+        let m = Metrics::default();
+        m.record_request(&TenantId::from("a b\"c"));
+        let scrape = m.render_scrape();
+        assert!(scrape.contains("{tenant=\"a_b_c\"}"), "{scrape}");
+        parse_scrape(&scrape).expect("sanitized labels keep the line format parseable");
     }
 }

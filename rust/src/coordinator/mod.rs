@@ -1,13 +1,35 @@
-//! L3 coordinator: the compile service around the Stripe compiler.
+//! L3 coordinator: the multi-tenant compile service around the Stripe
+//! compiler.
 //!
-//! The paper's contribution *is* the compiler, so the coordinator is the
-//! system that owns it in production: a multi-threaded compile service
-//! with a request queue, a content-addressed artifact cache, and
-//! metrics ([`service`]); the engineering-effort model behind Fig. 1
-//! ([`effort`]); the end-to-end drivers used by the CLI and the
-//! examples ([`driver`]); and the cost-guided pass-pipeline autotuner
-//! that turns the cost models and the memory simulator into the
-//! compile hot path ([`tune`]).
+//! The paper's contribution *is* the compiler, so the coordinator is
+//! the system that owns it in production — the fleet-wide "compile as a
+//! service" deployment the paper positions Stripe inside. It is built
+//! as two layers plus shared plumbing:
+//!
+//! * [`service`] — the compile core: worker threads over a **bounded**
+//!   request queue, a content-addressed artifact cache with
+//!   single-flight semantics (N identical concurrent requests pay for
+//!   one compile), **LRU eviction** under a byte budget
+//!   ([`CompiledNetwork::approx_bytes`] sizes artifacts), deadline
+//!   enforcement for queued and parked requests, and panic fencing so
+//!   a crashing pass can never poison the single-flight state.
+//! * [`server`] — the tenancy front end: every request names a
+//!   [`TenantId`]; admission control enforces per-tenant in-flight
+//!   caps and sheds load from the full queue with explicit
+//!   `Rejected{reason}` replies; RAII admit tickets guarantee slot
+//!   release on every terminal path.
+//! * [`metrics`] — the registry both layers write: per-tenant and
+//!   global counters (requests, hits, misses, rejects, timeouts),
+//!   eviction/compile counters, and latency histograms split into
+//!   queue-wait, compile, and whole-request time. Exported as
+//!   Prometheus-style text (`stripe serve --metrics`,
+//!   [`Metrics::render_scrape`]); [`metrics::reconcile_scrape`] checks
+//!   the books — requests = hits + misses + rejects + timeouts,
+//!   globally and per tenant.
+//!
+//! The engineering-effort model behind Fig. 1 lives in [`effort`]; the
+//! end-to-end drivers used by the CLI and the examples in [`driver`];
+//! the cost-guided pass-pipeline autotuner in [`tune`].
 //!
 //! Rust owns the event loop, the worker threads, and the metrics;
 //! Python exists only behind `make artifacts`.
@@ -15,9 +37,14 @@
 pub mod driver;
 pub mod effort;
 pub mod metrics;
+pub mod server;
 pub mod service;
 pub mod tune;
 
 pub use driver::{compile_network, run_network, run_network_with, CompiledNetwork};
-pub use service::{CompileRequest, CompileService};
+pub use metrics::{Counter, Metrics, TenantId};
+pub use server::{AdmitTicket, RequestOptions, ServeConfig, Server};
+pub use service::{
+    CacheStats, CompileOutcome, CompileRequest, CompileService, ServeError,
+};
 pub use tune::{compile_network_tuned, TuneOptions, TuningReport};

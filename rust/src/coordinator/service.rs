@@ -1,32 +1,57 @@
-//! The compile service: a thread-pool worker queue with a
-//! content-addressed compile cache.
+//! The compile service: a thread-pool worker queue behind a
+//! content-addressed, byte-budgeted compile cache.
 //!
 //! `tokio` is unavailable offline, so the event loop is std-threads +
-//! channels: requests go into an MPSC queue; worker threads pull,
-//! consult the cache, compile, and deliver results over per-request
-//! channels. This mirrors the deployment shape of a compiler service
-//! (one service instance per fleet, compile results cached by content).
+//! channels: requests go into a **bounded** MPSC queue; worker threads
+//! pull, consult the cache, compile, and deliver results over
+//! per-request channels. The multi-tenant admission front end lives one
+//! layer up ([`super::server`]); this module owns the queue, the
+//! single-flight machinery, the LRU artifact cache, and deadline
+//! enforcement.
 //!
 //! Identical concurrent requests are **single-flighted**: the first
 //! request for a cache key compiles; requests for the same key that
 //! arrive while it is in flight park on the in-flight entry and are
-//! delivered (and counted as cache hits) when the compile completes.
-//! N concurrent submissions of one program therefore cost exactly one
-//! compile and report 1 miss + N−1 hits, deterministically — the
-//! concurrency suite (`rust/tests/service_concurrency.rs`) pins this.
+//! delivered when the compile completes — counted as cache hits when it
+//! succeeded, as misses sharing the error when it failed. N concurrent
+//! submissions of one program therefore cost exactly one compile and
+//! report 1 miss + N−1 hits, deterministically — the concurrency suite
+//! (`rust/tests/service_concurrency.rs`) pins this.
+//!
+//! Failure semantics, pinned by the same suite:
+//!
+//! * a compile **error or panic** clears the in-flight entry
+//!   (`catch_unwind` around the compile) and fails every parked waiter
+//!   with the same error — a panicking pass can never leave the key
+//!   poisoned with waiters parked forever;
+//! * failures are **never cached** — a subsequent request retries;
+//! * a request whose **deadline** passes while queued (checked at pop)
+//!   or parked (swept by a janitor thread) gets a
+//!   [`ServeError::Timeout`] and is dropped from the waiter list;
+//! * a submit against a shut-down service returns
+//!   [`ServeError::Closed`] at submit time instead of silently
+//!   dropping the request.
+//!
+//! When a cache byte budget is set, compiled artifacts are sized via
+//! [`CompiledNetwork::approx_bytes`] and the least-recently-used
+//! entries are evicted until resident bytes fit the budget (evictions
+//! are counted in the metrics registry; the gauges
+//! `stripe_cache_{entries,bytes}` track residency).
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::exec::{BufferPool, ParallelReport};
 use crate::hw::MachineConfig;
 use crate::ir::Program;
 
 use super::driver::{cache_key, compile_network, run_network, CompiledNetwork};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, TenantId};
+use super::server::AdmitTicket;
 use super::tune::{compile_network_tuned, TuneOptions};
 
 /// Salt folded into the cache key of tuned requests: a tuned artifact
@@ -40,7 +65,55 @@ const TUNED_KEY_SALT: u64 = 0x71D4_E000_0000_0001;
 /// tuned requests, whose winning pipeline no fixed target ever ran.
 const VERIFIED_KEY_SALT: u64 = 0x5EC5_0000_0000_0002;
 
-/// A compile request.
+/// Queue depth used by [`CompileService::start`] (the serving tier
+/// configures its own via [`CompileService::start_with`]).
+const DEFAULT_QUEUE_DEPTH: usize = 1024;
+
+/// How often the janitor sweeps parked waiters for expired deadlines.
+const JANITOR_TICK: Duration = Duration::from_millis(2);
+
+/// Terminal request errors, distinguishable by variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed at admission: per-tenant in-flight cap or full global
+    /// queue. The request was never queued.
+    Rejected { reason: String },
+    /// The request's deadline passed while it was queued or parked.
+    Timeout { waited_ms: u64 },
+    /// Submitted to a service whose queue is closed (shut down).
+    Closed,
+    /// The compile itself failed (pass error, invalid input, or a
+    /// caught panic).
+    Compile(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected { reason } => write!(f, "rejected: {reason}"),
+            ServeError::Timeout { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms}ms")
+            }
+            ServeError::Closed => write!(f, "compile queue closed (service shut down)"),
+            ServeError::Compile(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for String {
+    fn from(e: ServeError) -> String {
+        e.to_string()
+    }
+}
+
+/// What a request resolves to.
+pub type CompileOutcome = Result<Arc<CompiledNetwork>, ServeError>;
+
+/// A compile request, stamped with its tenant and submission time so
+/// latency is attributed to the request itself, not to whichever worker
+/// happens to reply.
 pub struct CompileRequest {
     pub program: Program,
     pub target: MachineConfig,
@@ -51,8 +124,18 @@ pub struct CompileRequest {
     /// per (program fingerprint, target, verify) and reused across
     /// requests.
     pub tune: bool,
+    pub tenant: TenantId,
+    /// When the request was submitted (queue-wait and per-request
+    /// latency are measured from here).
+    pub submitted: Instant,
+    /// Absolute deadline; queued/parked requests past it are failed
+    /// with [`ServeError::Timeout`] and dropped.
+    pub deadline: Option<Instant>,
+    /// Admission slot held while the request is in flight; released
+    /// (via Drop) on any terminal path, including panics and timeouts.
+    pub ticket: Option<AdmitTicket>,
     /// Channel for the result.
-    pub reply: Sender<Result<Arc<CompiledNetwork>, String>>,
+    pub reply: Sender<CompileOutcome>,
 }
 
 enum Msg {
@@ -60,29 +143,88 @@ enum Msg {
     Shutdown,
 }
 
-type CompileOutcome = Result<Arc<CompiledNetwork>, String>;
+/// A request parked on an in-flight compile of the same key.
+struct Waiter {
+    reply: Sender<CompileOutcome>,
+    tenant: TenantId,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    /// Held only so Drop releases the admission slot at terminal time.
+    _ticket: Option<AdmitTicket>,
+}
+
+struct CacheEntry {
+    net: Arc<CompiledNetwork>,
+    bytes: u64,
+    /// Logical LRU stamp (bumped on insert and on every hit).
+    stamp: u64,
+}
 
 /// Cache + single-flight bookkeeping, behind one mutex (held only for
 /// map operations, never across a compile).
-#[derive(Default)]
 struct State {
-    cache: BTreeMap<u64, Arc<CompiledNetwork>>,
-    /// Keys currently compiling → reply channels parked on them.
-    inflight: BTreeMap<u64, Vec<Sender<CompileOutcome>>>,
+    cache: BTreeMap<u64, CacheEntry>,
+    /// Total resident bytes across `cache`.
+    cache_bytes: u64,
+    /// Byte budget (0 = unlimited).
+    budget: u64,
+    clock: u64,
+    /// Keys currently compiling → requests parked on them.
+    inflight: BTreeMap<u64, Vec<Waiter>>,
+}
+
+/// Test-only fault injection (`inject_compile_*`): lets the regression
+/// suite produce deterministic panics and slow compiles.
+#[derive(Default)]
+struct Faults {
+    /// Number of upcoming compiles that will panic.
+    panics: AtomicU64,
+    /// Sleep applied at the start of every compile.
+    delay_us: AtomicU64,
+}
+
+impl Faults {
+    fn apply(&self) {
+        let us = self.delay_us.load(Ordering::Relaxed);
+        if us > 0 {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        if self
+            .panics
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+        {
+            panic!("injected compile fault");
+        }
+    }
 }
 
 /// What a worker should do with a popped request.
 enum Action {
     Hit(Arc<CompiledNetwork>),
-    /// Parked on an in-flight compile; the compiling worker replies.
+    /// Parked on an in-flight compile; the compiling worker (or the
+    /// janitor, at the deadline) replies.
     Parked,
     Compile,
 }
 
+/// Current cache residency (see [`CompileService::cache_stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: u64,
+    /// Byte budget (0 = unlimited).
+    pub budget: u64,
+}
+
 /// Multi-threaded compile service.
 pub struct CompileService {
-    tx: Sender<Msg>,
-    workers: Vec<JoinHandle<()>>,
+    tx: SyncSender<Msg>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    janitor: Mutex<Option<JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+    state: Arc<Mutex<State>>,
+    faults: Arc<Faults>,
     pub metrics: Arc<Metrics>,
     /// Shared buffer-page pool for executing compiled networks
     /// ([`CompileService::run_blocking`]): repeated execution requests
@@ -92,83 +234,58 @@ pub struct CompileService {
 }
 
 impl CompileService {
-    /// Spawn `n_workers` worker threads.
+    /// Spawn `n_workers` worker threads with a deep queue and no cache
+    /// byte budget.
     pub fn start(n_workers: usize) -> CompileService {
-        let (tx, rx) = channel::<Msg>();
+        CompileService::start_with(n_workers, DEFAULT_QUEUE_DEPTH, 0)
+    }
+
+    /// Spawn `n_workers` worker threads over a bounded queue of
+    /// `queue_depth` pending requests, with the artifact cache held
+    /// under `cache_budget_bytes` by LRU eviction (0 = unlimited).
+    pub fn start_with(
+        n_workers: usize,
+        queue_depth: usize,
+        cache_budget_bytes: u64,
+    ) -> CompileService {
+        let (tx, rx) = sync_channel::<Msg>(queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
-        let state: Arc<Mutex<State>> = Arc::new(Mutex::new(State::default()));
+        let state = Arc::new(Mutex::new(State {
+            cache: BTreeMap::new(),
+            cache_bytes: 0,
+            budget: cache_budget_bytes,
+            clock: 0,
+            inflight: BTreeMap::new(),
+        }));
         let metrics = Arc::new(Metrics::default());
+        let faults = Arc::new(Faults::default());
+        let stop = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::new();
         for _ in 0..n_workers.max(1) {
             let rx = Arc::clone(&rx);
             let state = Arc::clone(&state);
             let metrics = Arc::clone(&metrics);
-            workers.push(std::thread::spawn(move || loop {
-                let msg = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                match msg {
-                    Ok(Msg::Work(req)) => {
-                        let t0 = Instant::now();
-                        let key = cache_key(&req.program, &req.target)
-                            ^ if req.tune { TUNED_KEY_SALT } else { 0 }
-                            ^ if req.verify { VERIFIED_KEY_SALT } else { 0 };
-                        let action = {
-                            let mut st = state.lock().unwrap();
-                            if let Some(c) = st.cache.get(&key) {
-                                Action::Hit(Arc::clone(c))
-                            } else if let Some(waiters) = st.inflight.get_mut(&key) {
-                                waiters.push(req.reply.clone());
-                                Action::Parked
-                            } else {
-                                st.inflight.insert(key, Vec::new());
-                                Action::Compile
-                            }
-                        };
-                        match action {
-                            Action::Hit(c) => {
-                                metrics.record_cache_hit();
-                                metrics.record_done(t0.elapsed(), true);
-                                let _ = req.reply.send(Ok(c));
-                            }
-                            Action::Parked => {}
-                            Action::Compile => {
-                                let result: CompileOutcome = if req.tune {
-                                    let opts = TuneOptions {
-                                        verify: req.verify,
-                                        ..TuneOptions::default()
-                                    };
-                                    compile_network_tuned(&req.program, &req.target, &opts)
-                                        .map(Arc::new)
-                                } else {
-                                    compile_network(&req.program, &req.target, req.verify)
-                                        .map(Arc::new)
-                                };
-                                let waiters = {
-                                    let mut st = state.lock().unwrap();
-                                    if let Ok(arc) = &result {
-                                        st.cache.insert(key, Arc::clone(arc));
-                                    }
-                                    st.inflight.remove(&key).unwrap_or_default()
-                                };
-                                metrics.record_done(t0.elapsed(), result.is_ok());
-                                let _ = req.reply.send(result.clone());
-                                for w in waiters {
-                                    if result.is_ok() {
-                                        metrics.record_cache_hit();
-                                    }
-                                    metrics.record_done(t0.elapsed(), result.is_ok());
-                                    let _ = w.send(result.clone());
-                                }
-                            }
-                        }
-                    }
-                    Ok(Msg::Shutdown) | Err(_) => break,
-                }
+            let faults = Arc::clone(&faults);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&rx, &state, &metrics, &faults)
             }));
         }
-        CompileService { tx, workers, metrics, pool: Arc::new(BufferPool::default()) }
+        let janitor = {
+            let stop = Arc::clone(&stop);
+            let state = Arc::clone(&state);
+            let metrics = Arc::clone(&metrics);
+            std::thread::spawn(move || janitor_loop(&stop, &state, &metrics))
+        };
+        CompileService {
+            tx,
+            workers: Mutex::new(workers),
+            janitor: Mutex::new(Some(janitor)),
+            stop,
+            state,
+            faults,
+            metrics,
+            pool: Arc::new(BufferPool::default()),
+        }
     }
 
     /// Execute a compiled network on the service's shared page pool,
@@ -184,13 +301,31 @@ impl CompileService {
         run_network(network, inputs, workers, Some(Arc::clone(&self.pool)))
     }
 
-    /// Submit a request; returns the receiver for its result.
+    /// Enqueue a fully-formed request (the serving tier builds its own,
+    /// carrying tenant, deadline and admission ticket). Sheds with
+    /// [`ServeError::Rejected`] when the bounded queue is full and
+    /// fails with [`ServeError::Closed`] when the service has shut
+    /// down. Does not touch the metrics registry — callers own request
+    /// accounting.
+    pub fn enqueue(&self, req: CompileRequest) -> Result<(), ServeError> {
+        match self.tx.try_send(Msg::Work(req)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(ServeError::Rejected {
+                reason: "global queue full".to_string(),
+            }),
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Submit a request; returns the receiver for its result, or an
+    /// immediate [`ServeError::Rejected`]/[`ServeError::Closed`] when
+    /// the queue is full or shut down.
     pub fn submit(
         &self,
         program: Program,
         target: MachineConfig,
         verify: bool,
-    ) -> Receiver<Result<Arc<CompiledNetwork>, String>> {
+    ) -> Result<Receiver<CompileOutcome>, ServeError> {
         self.submit_with(program, target, verify, false)
     }
 
@@ -202,7 +337,7 @@ impl CompileService {
         program: Program,
         target: MachineConfig,
         verify: bool,
-    ) -> Receiver<Result<Arc<CompiledNetwork>, String>> {
+    ) -> Result<Receiver<CompileOutcome>, ServeError> {
         self.submit_with(program, target, verify, true)
     }
 
@@ -212,13 +347,28 @@ impl CompileService {
         target: MachineConfig,
         verify: bool,
         tune: bool,
-    ) -> Receiver<Result<Arc<CompiledNetwork>, String>> {
+    ) -> Result<Receiver<CompileOutcome>, ServeError> {
+        let tenant = TenantId::anon();
+        self.metrics.record_request(&tenant);
         let (reply, rx) = channel();
-        self.metrics.record_request();
-        let _ = self
-            .tx
-            .send(Msg::Work(CompileRequest { program, target, verify, tune, reply }));
-        rx
+        let req = CompileRequest {
+            program,
+            target,
+            verify,
+            tune,
+            tenant: tenant.clone(),
+            submitted: Instant::now(),
+            deadline: None,
+            ticket: None,
+            reply,
+        };
+        match self.enqueue(req) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.metrics.record_reject(&tenant);
+                Err(e)
+            }
+        }
     }
 
     /// Blocking convenience.
@@ -227,10 +377,10 @@ impl CompileService {
         program: Program,
         target: MachineConfig,
         verify: bool,
-    ) -> Result<Arc<CompiledNetwork>, String> {
-        self.submit(program, target, verify)
+    ) -> Result<Arc<CompiledNetwork>, ServeError> {
+        self.submit(program, target, verify)?
             .recv()
-            .map_err(|_| "service shut down".to_string())?
+            .map_err(|_| ServeError::Closed)?
     }
 
     /// Blocking tuned compile (see [`CompileService::submit_tuned`]).
@@ -239,26 +389,249 @@ impl CompileService {
         program: Program,
         target: MachineConfig,
         verify: bool,
-    ) -> Result<Arc<CompiledNetwork>, String> {
-        self.submit_tuned(program, target, verify)
+    ) -> Result<Arc<CompiledNetwork>, ServeError> {
+        self.submit_tuned(program, target, verify)?
             .recv()
-            .map_err(|_| "service shut down".to_string())?
+            .map_err(|_| ServeError::Closed)?
+    }
+
+    /// Current artifact-cache residency.
+    pub fn cache_stats(&self) -> CacheStats {
+        let st = self.state.lock().unwrap();
+        CacheStats { entries: st.cache.len(), bytes: st.cache_bytes, budget: st.budget }
+    }
+
+    /// Test-only fault injection: the next `n` compiles panic mid-pass
+    /// (used by the single-flight poisoning regression tests).
+    #[doc(hidden)]
+    pub fn inject_compile_panics(&self, n: u64) {
+        self.faults.panics.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Test-only fault injection: every compile first sleeps `d` (used
+    /// to make parking, deadlines, and queue-full shedding
+    /// deterministic in tests).
+    #[doc(hidden)]
+    pub fn inject_compile_delay(&self, d: Duration) {
+        self.faults.delay_us.store(d.as_micros() as u64, Ordering::Relaxed);
     }
 
     /// Stop all workers (drains the queue first: shutdown messages sit
-    /// behind pending work in the channel).
-    pub fn shutdown(mut self) {
-        for _ in &self.workers {
+    /// behind pending work in the channel), then the deadline janitor.
+    /// Idempotent; after it returns, `submit` fails with
+    /// [`ServeError::Closed`].
+    pub fn shutdown(&self) {
+        let handles: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for _ in &handles {
             let _ = self.tx.send(Msg::Shutdown);
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for h in handles {
+            let _ = h.join();
         }
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.janitor.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for CompileService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Msg>>,
+    state: &Mutex<State>,
+    metrics: &Metrics,
+    faults: &Faults,
+) {
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Work(req)) => handle_request(req, state, metrics, faults),
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+fn request_key(req: &CompileRequest) -> u64 {
+    cache_key(&req.program, &req.target)
+        ^ if req.tune { TUNED_KEY_SALT } else { 0 }
+        ^ if req.verify { VERIFIED_KEY_SALT } else { 0 }
+}
+
+fn timeout_error(submitted: Instant, now: Instant) -> (Duration, ServeError) {
+    let waited = now.duration_since(submitted);
+    (waited, ServeError::Timeout { waited_ms: waited.as_millis() as u64 })
+}
+
+fn handle_request(mut req: CompileRequest, state: &Mutex<State>, metrics: &Metrics, faults: &Faults) {
+    let now = Instant::now();
+    // A queued request whose deadline passed is dropped at pop.
+    if req.deadline.map_or(false, |d| now >= d) {
+        let (waited, err) = timeout_error(req.submitted, now);
+        metrics.record_timeout(&req.tenant, waited);
+        let _ = req.reply.send(Err(err));
+        return;
+    }
+    metrics.record_queue_wait(now.duration_since(req.submitted));
+    let key = request_key(&req);
+    let action = {
+        let mut guard = state.lock().unwrap();
+        let st = &mut *guard;
+        if let Some(entry) = st.cache.get_mut(&key) {
+            st.clock += 1;
+            entry.stamp = st.clock;
+            Action::Hit(Arc::clone(&entry.net))
+        } else if let Some(waiters) = st.inflight.get_mut(&key) {
+            waiters.push(Waiter {
+                reply: req.reply.clone(),
+                tenant: req.tenant.clone(),
+                submitted: req.submitted,
+                deadline: req.deadline,
+                _ticket: req.ticket.take(),
+            });
+            Action::Parked
+        } else {
+            st.inflight.insert(key, Vec::new());
+            Action::Compile
+        }
+    };
+    match action {
+        Action::Hit(net) => {
+            metrics.record_hit(&req.tenant, req.submitted.elapsed());
+            let _ = req.reply.send(Ok(net));
+        }
+        Action::Parked => {}
+        Action::Compile => {
+            let t_compile = Instant::now();
+            // The compile is fenced with catch_unwind so a panicking
+            // pass cannot poison the single-flight entry: whatever
+            // happens, the in-flight key is cleared below and every
+            // parked waiter gets a terminal reply.
+            let compiled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                faults.apply();
+                if req.tune {
+                    let opts = TuneOptions { verify: req.verify, ..TuneOptions::default() };
+                    compile_network_tuned(&req.program, &req.target, &opts).map(Arc::new)
+                } else {
+                    compile_network(&req.program, &req.target, req.verify).map(Arc::new)
+                }
+            }));
+            let outcome: CompileOutcome = match compiled {
+                Ok(Ok(net)) => Ok(net),
+                Ok(Err(e)) => Err(ServeError::Compile(e)),
+                Err(payload) => Err(ServeError::Compile(format!(
+                    "compile panicked: {}",
+                    panic_message(&payload)
+                ))),
+            };
+            let compile_time = t_compile.elapsed();
+            let waiters = {
+                let mut guard = state.lock().unwrap();
+                let st = &mut *guard;
+                if let Ok(net) = &outcome {
+                    // Only successes are cached; a failure leaves no
+                    // entry, so a subsequent request retries.
+                    st.clock += 1;
+                    let bytes = net.approx_bytes();
+                    st.cache.insert(
+                        key,
+                        CacheEntry { net: Arc::clone(net), bytes, stamp: st.clock },
+                    );
+                    st.cache_bytes += bytes;
+                    // LRU eviction under the byte budget. The entry just
+                    // inserted is the most recent, so it is evicted only
+                    // if it alone exceeds the whole budget.
+                    while st.budget > 0 && st.cache_bytes > st.budget && !st.cache.is_empty()
+                    {
+                        let oldest = st
+                            .cache
+                            .iter()
+                            .min_by_key(|(_, e)| e.stamp)
+                            .map(|(k, _)| *k)
+                            .unwrap();
+                        let evicted = st.cache.remove(&oldest).unwrap();
+                        st.cache_bytes -= evicted.bytes;
+                        metrics.record_eviction(evicted.bytes);
+                    }
+                }
+                metrics.set_cache_gauges(st.cache.len() as u64, st.cache_bytes);
+                st.inflight.remove(&key).unwrap_or_default()
+            };
+            metrics.record_compile(compile_time, outcome.is_ok());
+            metrics.record_miss(&req.tenant, req.submitted.elapsed());
+            let _ = req.reply.send(outcome.clone());
+            // Release this request's admission slot before fanning out.
+            drop(req);
+            let now = Instant::now();
+            for w in waiters {
+                if w.deadline.map_or(false, |d| now >= d) {
+                    let (waited, err) = timeout_error(w.submitted, now);
+                    metrics.record_timeout(&w.tenant, waited);
+                    let _ = w.reply.send(Err(err));
+                } else if outcome.is_ok() {
+                    metrics.record_hit(&w.tenant, w.submitted.elapsed());
+                    let _ = w.reply.send(outcome.clone());
+                } else {
+                    // The waiter shares the compile error; it counts as
+                    // a miss (it was bound to this compile), never as a
+                    // hit.
+                    metrics.record_miss(&w.tenant, w.submitted.elapsed());
+                    let _ = w.reply.send(outcome.clone());
+                }
+            }
+        }
+    }
+}
+
+/// Sweeps parked waiters whose deadline has passed: they are failed
+/// with [`ServeError::Timeout`] and removed from the single-flight
+/// waiter list well before the in-flight compile completes.
+fn janitor_loop(stop: &AtomicBool, state: &Mutex<State>, metrics: &Metrics) {
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(JANITOR_TICK);
+        let now = Instant::now();
+        let mut expired = Vec::new();
+        {
+            let mut st = state.lock().unwrap();
+            for waiters in st.inflight.values_mut() {
+                let mut i = 0;
+                while i < waiters.len() {
+                    if waiters[i].deadline.map_or(false, |d| now >= d) {
+                        expired.push(waiters.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        for w in expired {
+            let (waited, err) = timeout_error(w.submitted, now);
+            metrics.record_timeout(&w.tenant, waited);
+            let _ = w.reply.send(Err(err));
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::metrics::Counter;
     use super::*;
     use crate::frontend::ops;
     use crate::hw::targets;
@@ -271,7 +644,8 @@ mod tests {
         let a = svc.compile_blocking(p.clone(), cfg.clone(), false).unwrap();
         let b = svc.compile_blocking(p.clone(), cfg.clone(), false).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "second compile served from cache");
-        assert_eq!(svc.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.total(Counter::Hits), 1);
+        assert_eq!(svc.metrics.total(Counter::CompilesOk), 1);
         svc.shutdown();
     }
 
@@ -287,13 +661,18 @@ mod tests {
                 } else {
                     ops::matmul_program(4, 4, 4)
                 };
-                svc.submit(p, cfg.clone(), false)
+                svc.submit(p, cfg.clone(), false).expect("queued")
             })
             .collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();
         }
-        assert_eq!(svc.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 4);
+        assert_eq!(
+            svc.metrics.total(Counter::Hits) + svc.metrics.total(Counter::Misses),
+            4,
+            "{}",
+            svc.metrics.snapshot()
+        );
         svc.shutdown();
     }
 
@@ -304,13 +683,15 @@ mod tests {
         let svc = CompileService::start(1);
         let p = ops::fig4_conv_program();
         let cfg = targets::paper_fig4();
-        let rxs: Vec<_> = (0..4).map(|_| svc.submit(p.clone(), cfg.clone(), false)).collect();
+        let rxs: Vec<_> = (0..4)
+            .map(|_| svc.submit(p.clone(), cfg.clone(), false).expect("queued"))
+            .collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();
         }
-        use std::sync::atomic::Ordering::Relaxed;
-        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 3);
-        assert_eq!(svc.metrics.completed.load(Relaxed), 4);
+        assert_eq!(svc.metrics.total(Counter::Hits), 3);
+        assert_eq!(svc.metrics.total(Counter::Misses), 1);
+        assert_eq!(svc.metrics.total(Counter::CompilesOk), 1);
         svc.shutdown();
     }
 
@@ -335,7 +716,6 @@ mod tests {
 
     #[test]
     fn tuned_compiles_cache_separately_from_untuned() {
-        use std::sync::atomic::Ordering::Relaxed;
         let svc = CompileService::start(1);
         let p = ops::conv_relu_program();
         let cfg = targets::cpu_cache();
@@ -343,19 +723,18 @@ mod tests {
         assert!(a.tuning.is_some(), "tuned artifact must carry its tuning report");
         let b = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "second tuned compile served from cache");
-        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 1);
+        assert_eq!(svc.metrics.total(Counter::Hits), 1);
         // An untuned request for the same (program, target) is a
         // different artifact: it must miss and carry no tuning report.
         let c = svc.compile_blocking(p, cfg, false).unwrap();
         assert!(!Arc::ptr_eq(&a, &c));
         assert!(c.tuning.is_none());
-        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 1);
+        assert_eq!(svc.metrics.total(Counter::Hits), 1);
         svc.shutdown();
     }
 
     #[test]
     fn verified_compiles_cache_separately_from_unverified() {
-        use std::sync::atomic::Ordering::Relaxed;
         let svc = CompileService::start(1);
         let p = ops::conv_relu_program();
         let cfg = targets::cpu_cache();
@@ -365,11 +744,11 @@ mod tests {
         let a = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
         let b = svc.compile_blocking_tuned(p.clone(), cfg.clone(), true).unwrap();
         assert!(!Arc::ptr_eq(&a, &b), "verify=true must not hit the unverified entry");
-        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 0);
+        assert_eq!(svc.metrics.total(Counter::Hits), 0);
         // Each variant still caches against itself.
         let b2 = svc.compile_blocking_tuned(p.clone(), cfg.clone(), true).unwrap();
         assert!(Arc::ptr_eq(&b, &b2));
-        assert_eq!(svc.metrics.cache_hits.load(Relaxed), 1);
+        assert_eq!(svc.metrics.total(Counter::Hits), 1);
         svc.shutdown();
     }
 
@@ -380,10 +759,54 @@ mod tests {
         if let crate::ir::Statement::Block(b) = &mut p.main.stmts[0] {
             b.constraints.push(crate::poly::Affine::var("bogus"));
         }
-        let e = svc
-            .compile_blocking(p, targets::paper_fig4(), false)
-            .unwrap_err();
-        assert!(e.contains("invalid"));
+        let e = svc.compile_blocking(p, targets::paper_fig4(), false).unwrap_err();
+        assert!(matches!(e, ServeError::Compile(_)), "{e:?}");
+        assert!(e.to_string().contains("invalid"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget_and_recency() {
+        let cfg = targets::paper_fig4();
+        let p1 = ops::matmul_program(4, 4, 4);
+        let p2 = ops::matmul_program(5, 4, 4);
+        let p3 = ops::matmul_program(6, 4, 4);
+        // Budget sized off a real artifact: room for two similar
+        // networks, not three.
+        let one = compile_network(&p1, &cfg, false).unwrap().approx_bytes();
+        let budget = one * 5 / 2;
+        let svc = CompileService::start_with(1, 64, budget);
+        svc.compile_blocking(p1.clone(), cfg.clone(), false).unwrap(); // cache {1}
+        svc.compile_blocking(p2.clone(), cfg.clone(), false).unwrap(); // cache {1,2}
+        svc.compile_blocking(p1.clone(), cfg.clone(), false).unwrap(); // hit: 1 most recent
+        svc.compile_blocking(p3, cfg.clone(), false).unwrap(); // evicts 2 (LRU)
+        let stats = svc.cache_stats();
+        assert!(stats.bytes <= budget, "{} > {budget}", stats.bytes);
+        assert_eq!(stats.entries, 2);
+        assert_eq!(svc.metrics.total(Counter::Evictions), 1, "{}", svc.metrics.snapshot());
+        // The recently-touched entry survived the eviction...
+        let hits_before = svc.metrics.total(Counter::Hits);
+        svc.compile_blocking(p1, cfg.clone(), false).unwrap();
+        assert_eq!(svc.metrics.total(Counter::Hits), hits_before + 1);
+        // ...and the LRU victim is gone: re-requesting it recompiles.
+        svc.compile_blocking(p2, cfg, false).unwrap();
+        assert_eq!(svc.metrics.total(Counter::CompilesOk), 4);
+        assert_eq!(svc.metrics.total(Counter::Evictions), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unlimited_budget_never_evicts() {
+        let svc = CompileService::start(1);
+        let cfg = targets::paper_fig4();
+        for i in 0..4 {
+            svc.compile_blocking(ops::matmul_program(3 + i, 4, 4), cfg.clone(), false)
+                .unwrap();
+        }
+        let stats = svc.cache_stats();
+        assert_eq!(stats.entries, 4);
+        assert_eq!(stats.budget, 0);
+        assert_eq!(svc.metrics.total(Counter::Evictions), 0);
         svc.shutdown();
     }
 }

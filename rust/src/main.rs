@@ -7,11 +7,14 @@
 //! stripe tune     --target T             autotune, print the decision, check service caching
 //! stripe validate <file.stripe>          parse + validate a textual Stripe program
 //! stripe fig1..fig5                      regenerate the paper's figures
-//! stripe serve    --workers N            demo the compile service on a request burst
+//! stripe serve    --workers N            demo the multi-tenant serving tier, reconcile metrics
 //! ```
 
 use stripe::coordinator::effort::{render_table, Scenario};
-use stripe::coordinator::{compile_network, compile_network_tuned, CompileService, TuneOptions};
+use stripe::coordinator::{
+    compile_network, compile_network_tuned, CompileService, Counter, RequestOptions, ServeConfig,
+    Server, TuneOptions,
+};
 use stripe::frontend::ops;
 use stripe::hw::targets;
 use stripe::ir::printer::print_program;
@@ -19,7 +22,7 @@ use stripe::util::cli::Args;
 
 const VALUE_OPTS: &[&str] = &[
     "target", "net", "workers", "seed", "set", "tile", "kernels", "archs", "versions", "shapes",
-    "engine",
+    "engine", "queue-depth", "tenant-cap", "cache-bytes", "deadline-ms",
 ];
 
 fn main() {
@@ -67,7 +70,12 @@ fn print_help() {
          \x20 validate <file.stripe>       parse + validate textual Stripe\n\
          \x20 fig1 [--kernels K ...]       engineering-effort comparison table\n\
          \x20 fig2|fig3|fig4|fig5          regenerate the paper's figures\n\
-         \x20 serve   --workers <n>        compile-service demo (queue + cache + metrics)\n"
+         \x20 serve   --workers <n>        multi-tenant serving-tier demo (admission + cache)\n\
+         \x20         --queue-depth <n>    bounded global queue (default 64)\n\
+         \x20         --tenant-cap <n>     per-tenant in-flight cap (default 4, 0 = unlimited)\n\
+         \x20         --cache-bytes <n>    artifact-cache LRU byte budget (0 = unlimited)\n\
+         \x20         --deadline-ms <n>    request deadline (0 = none)\n\
+         \x20         --metrics            print the Prometheus-style scrape\n"
     );
 }
 
@@ -249,10 +257,7 @@ fn cmd_tune(args: &Args) -> i32 {
                 return Err("repeat tuned compile was not served from cache".into());
             }
         }
-        let hits = svc
-            .metrics
-            .cache_hits
-            .load(std::sync::atomic::Ordering::Relaxed);
+        let hits = svc.metrics.total(Counter::Hits);
         println!("metrics: {}", svc.metrics.snapshot());
         svc.shutdown();
         if hits != REPEATS {
@@ -301,33 +306,88 @@ fn cmd_fig1(args: &Args) -> i32 {
     0
 }
 
+/// Multi-tenant serving-tier demo: two tenants submit a burst with
+/// repeats through the admission layer, then the scrape is printed
+/// (`--metrics`) and reconciled — requests = hits + misses + rejects +
+/// timeouts, globally and per tenant. Exits nonzero if the books don't
+/// balance; `scripts/verify.sh` uses this as the `VERIFY_SERVE_SMOKE`
+/// gate.
 fn cmd_serve(args: &Args) -> i32 {
-    let workers = args.get_usize("workers", 2);
-    let svc = CompileService::start(workers);
-    println!("compile service with {workers} worker(s); submitting a request burst");
-    let nets = ["fig4_conv", "conv_relu", "matmul", "fig4_conv", "cnn", "conv_relu"];
-    let rxs: Vec<_> = nets
-        .iter()
-        .map(|n| {
-            let p = match *n {
-                "fig4_conv" => ops::fig4_conv_program(),
-                "conv_relu" => ops::conv_relu_program(),
-                "cnn" => ops::cnn_program(),
-                _ => ops::matmul_program(16, 16, 16),
-            };
-            (n, svc.submit(p, targets::cpu_cache(), false))
-        })
-        .collect();
-    for (n, rx) in rxs {
-        match rx.recv() {
-            Ok(Ok(c)) => println!("  {n:<10} ok: {} passes", c.reports.len()),
-            Ok(Err(e)) => println!("  {n:<10} failed: {e}"),
-            Err(_) => println!("  {n:<10} dropped"),
+    let config = ServeConfig {
+        workers: args.get_usize("workers", 2),
+        queue_depth: args.get_usize("queue-depth", 64),
+        tenant_cap: args.get_usize("tenant-cap", 4),
+        cache_bytes: args.get_u64("cache-bytes", 0),
+        deadline: match args.get_u64("deadline-ms", 0) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
+    };
+    println!(
+        "serving tier: {} worker(s), queue depth {}, tenant cap {}, cache budget {}, deadline {:?}",
+        config.workers,
+        config.queue_depth,
+        config.tenant_cap,
+        if config.cache_bytes == 0 { "unlimited".to_string() } else { format!("{} B", config.cache_bytes) },
+        config.deadline,
+    );
+    let server = Server::start(config);
+    let opts = RequestOptions::default();
+    // Two tenants, repeats included: alpha's repeat of fig4_conv and
+    // beta's of conv_relu exercise the cache/single-flight path.
+    let traffic: &[(&str, &str)] = &[
+        ("alpha", "fig4_conv"),
+        ("beta", "conv_relu"),
+        ("alpha", "matmul"),
+        ("alpha", "fig4_conv"),
+        ("beta", "cnn"),
+        ("beta", "conv_relu"),
+        ("alpha", "mlp"),
+    ];
+    let mut rxs = Vec::new();
+    for (tenant, net) in traffic {
+        let p = match *net {
+            "fig4_conv" => ops::fig4_conv_program(),
+            "conv_relu" => ops::conv_relu_program(),
+            "cnn" => ops::cnn_program(),
+            "mlp" => ops::tiny_mlp_program(16, 32, 10),
+            _ => ops::matmul_program(16, 16, 16),
+        };
+        match server.submit(*tenant, p, targets::cpu_cache(), &opts) {
+            Ok(rx) => rxs.push((*tenant, *net, rx)),
+            Err(e) => println!("  {tenant:<6} {net:<10} shed: {e}"),
         }
     }
-    println!("metrics: {}", svc.metrics.snapshot());
-    svc.shutdown();
-    0
+    for (tenant, net, rx) in rxs {
+        match rx.recv() {
+            Ok(Ok(c)) => println!("  {tenant:<6} {net:<10} ok: {} passes", c.reports.len()),
+            Ok(Err(e)) => println!("  {tenant:<6} {net:<10} failed: {e}"),
+            Err(_) => println!("  {tenant:<6} {net:<10} dropped"),
+        }
+    }
+    let stats = server.cache_stats();
+    println!(
+        "cache: {} artifact(s), {} B resident (budget {})",
+        stats.entries,
+        stats.bytes,
+        if stats.budget == 0 { "unlimited".to_string() } else { format!("{} B", stats.budget) },
+    );
+    println!("metrics: {}", server.metrics().snapshot());
+    let scrape = server.render_scrape();
+    if args.flag("metrics") {
+        print!("{scrape}");
+    }
+    server.shutdown();
+    match stripe::coordinator::metrics::reconcile_scrape(&scrape) {
+        Ok(line) => {
+            println!("{line}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: scrape does not reconcile: {e}");
+            1
+        }
+    }
 }
 
 fn report(r: Result<(), String>) -> i32 {

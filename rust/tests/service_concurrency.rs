@@ -1,15 +1,29 @@
-//! Concurrency suite for `coordinator::CompileService`.
+//! Concurrency suite for the coordinator's serving tier.
 //!
 //! The service single-flights identical requests: under a thundering
 //! herd of N identical submissions the compile runs once and the
 //! metrics record exactly 1 miss + N−1 hits, regardless of worker
-//! count or interleaving. Shutdown must drain the queue and join every
-//! worker without deadlock.
+//! count or interleaving. The serving tier on top adds tenancy:
+//! per-tenant in-flight caps, a bounded queue that sheds load with
+//! explicit rejects, deadlines for queued and parked requests, and an
+//! LRU byte budget on the artifact cache — all accounted in a registry
+//! whose scrape must reconcile exactly (requests = hits + misses +
+//! rejects + timeouts, globally and per tenant).
+//!
+//! Timing-sensitive tests pin their interleavings with the service's
+//! fault injection (`inject_compile_delay` / `inject_compile_panics`):
+//! a compile made artificially slow guarantees that later submissions
+//! park, queue, or shed deterministically, with generous margins
+//! (tens of milliseconds) over scheduler jitter.
 
-use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use stripe::coordinator::CompileService;
+use stripe::coordinator::metrics::reconcile_scrape;
+use stripe::coordinator::{
+    compile_network, CompileService, Counter, RequestOptions, ServeConfig, ServeError, Server,
+    TenantId,
+};
 use stripe::frontend::ops;
 use stripe::hw::targets;
 
@@ -33,16 +47,16 @@ fn thundering_herd_yields_one_miss_and_n_minus_one_hits() {
     for r in &results[1..] {
         assert!(Arc::ptr_eq(&results[0], r), "all callers share one compile result");
     }
-    assert_eq!(svc.metrics.requests.load(Relaxed), N as u64);
-    assert_eq!(svc.metrics.completed.load(Relaxed), N as u64);
-    assert_eq!(svc.metrics.failed.load(Relaxed), 0);
+    assert_eq!(svc.metrics.total(Counter::Requests), N as u64);
     assert_eq!(
-        svc.metrics.cache_hits.load(Relaxed),
+        svc.metrics.total(Counter::Hits),
         (N - 1) as u64,
         "single-flight must yield exactly one miss: {}",
         svc.metrics.snapshot()
     );
-    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
+    assert_eq!(svc.metrics.total(Counter::Misses), 1);
+    assert_eq!(svc.metrics.total(Counter::CompilesOk), 1);
+    assert_eq!(svc.metrics.total(Counter::CompilesFailed), 0);
     svc.shutdown();
 }
 
@@ -72,12 +86,11 @@ fn tuned_herd_single_flights_the_tuning_search() {
         assert!(t.chosen_cost <= t.default_cost.expect("default scored"), "{}", t.summary());
     }
     assert_eq!(
-        svc.metrics.cache_hits.load(Relaxed),
+        svc.metrics.total(Counter::Hits),
         (N - 1) as u64,
         "tuning must run once: {}",
         svc.metrics.snapshot()
     );
-    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
     svc.shutdown();
 }
 
@@ -101,9 +114,8 @@ fn distinct_programs_all_miss_under_concurrency() {
     for t in threads {
         t.join().expect("join");
     }
-    assert_eq!(svc.metrics.completed.load(Relaxed), N);
-    assert_eq!(svc.metrics.cache_hits.load(Relaxed), 0);
-    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
+    assert_eq!(svc.metrics.total(Counter::Misses), N);
+    assert_eq!(svc.metrics.total(Counter::Hits), 0);
     svc.shutdown();
 }
 
@@ -121,13 +133,32 @@ fn shutdown_joins_workers_after_pending_work_without_deadlock() {
             } else {
                 ops::matmul_program(4, 4, 4)
             };
-            svc.submit(p, targets::paper_fig4(), false)
+            svc.submit(p, targets::paper_fig4(), false).expect("queued")
         })
         .collect();
     svc.shutdown();
     for rx in rxs {
         rx.recv().expect("result delivered before shutdown").expect("compile ok");
     }
+}
+
+#[test]
+fn submit_after_shutdown_returns_queue_closed_error() {
+    let svc = CompileService::start(1);
+    svc.compile_blocking(ops::matmul_program(4, 4, 4), targets::paper_fig4(), false)
+        .expect("compile before shutdown");
+    svc.shutdown();
+    // The bug this pins: submit used to silently drop the request and
+    // the caller learned only via a bare recv error. Now the submit
+    // itself fails, distinguishably.
+    let err = svc
+        .submit(ops::matmul_program(5, 4, 4), targets::paper_fig4(), false)
+        .expect_err("submit after shutdown must fail at submit time");
+    assert_eq!(err, ServeError::Closed);
+    let err = svc
+        .compile_blocking(ops::matmul_program(6, 4, 4), targets::paper_fig4(), false)
+        .expect_err("blocking path too");
+    assert_eq!(err, ServeError::Closed);
 }
 
 #[test]
@@ -147,11 +178,251 @@ fn herd_on_invalid_program_propagates_error_to_every_caller() {
     }
     for t in threads {
         let e = t.join().expect("join").expect_err("must fail");
-        assert!(e.contains("invalid"), "{e}");
+        assert!(e.to_string().contains("invalid"), "{e}");
     }
     // Failures are never counted as cache hits.
-    assert_eq!(svc.metrics.cache_hits.load(Relaxed), 0);
-    assert_eq!(svc.metrics.failed.load(Relaxed) + svc.metrics.completed.load(Relaxed), 4);
-    let svc = Arc::try_unwrap(svc).unwrap_or_else(|_| panic!("service still shared"));
+    assert_eq!(svc.metrics.total(Counter::Hits), 0);
+    assert_eq!(svc.metrics.total(Counter::Misses), 4);
     svc.shutdown();
+}
+
+#[test]
+fn failing_compile_fails_every_parked_waiter_and_is_not_cached() {
+    // Error-path single-flight: one failing compile with parked
+    // waiters must deliver the *same* error to every caller, must not
+    // cache the failure, and a later request must retry.
+    let mut bad = ops::fig4_conv_program();
+    if let stripe::ir::Statement::Block(b) = &mut bad.main.stmts[0] {
+        b.constraints.push(stripe::poly::Affine::var("bogus"));
+    }
+    let svc = CompileService::start(4);
+    // Slow the compile down so the follow-up submissions reliably park
+    // on the in-flight entry instead of racing the failure.
+    svc.inject_compile_delay(Duration::from_millis(50));
+    let first = svc.submit(bad.clone(), targets::paper_fig4(), false).expect("queued");
+    std::thread::sleep(Duration::from_millis(15));
+    let parked: Vec<_> = (0..3)
+        .map(|_| svc.submit(bad.clone(), targets::paper_fig4(), false).expect("queued"))
+        .collect();
+    let mut errors = vec![first.recv().expect("reply").expect_err("must fail")];
+    for rx in parked {
+        errors.push(rx.recv().expect("reply").expect_err("must fail"));
+    }
+    for e in &errors {
+        assert_eq!(e, &errors[0], "every waiter shares the compile error");
+        assert!(matches!(e, ServeError::Compile(_)), "{e:?}");
+    }
+    assert_eq!(svc.metrics.total(Counter::CompilesFailed), 1, "one compile, four errors");
+    assert_eq!(svc.metrics.total(Counter::Misses), 4);
+    assert_eq!(svc.metrics.total(Counter::Hits), 0);
+    // The failure was not cached: a later request retries the compile.
+    let e = svc
+        .compile_blocking(bad, targets::paper_fig4(), false)
+        .expect_err("still invalid");
+    assert!(matches!(e, ServeError::Compile(_)));
+    assert_eq!(svc.metrics.total(Counter::CompilesFailed), 2, "retried, not served from cache");
+    svc.shutdown();
+}
+
+#[test]
+fn worker_panic_fails_parked_waiters_and_does_not_poison_the_key() {
+    // Regression for single-flight poisoning: the in-flight entry used
+    // to be removed only on the normal compile path, so a panicking
+    // pass left every future request for that key parked forever (and
+    // the panicking worker's thread dead). Now the compile is fenced:
+    // the panic becomes a compile error for the compiling request AND
+    // its parked waiters, and the key is usable again afterwards.
+    let svc = CompileService::start(2);
+    svc.inject_compile_delay(Duration::from_millis(60));
+    svc.inject_compile_panics(1);
+    let p = ops::fig4_conv_program();
+    let first = svc.submit(p.clone(), targets::cpu_cache(), false).expect("queued");
+    // Let the first request start compiling, then park a second on it.
+    std::thread::sleep(Duration::from_millis(20));
+    let parked = svc.submit(p.clone(), targets::cpu_cache(), false).expect("queued");
+    let e1 = first.recv().expect("reply delivered").expect_err("panicked");
+    let e2 = parked.recv().expect("waiter must not be parked forever").expect_err("panicked");
+    assert!(e1.to_string().contains("panicked"), "{e1}");
+    assert_eq!(e1, e2, "waiter shares the panic error");
+    assert_eq!(svc.metrics.total(Counter::CompilesFailed), 1);
+    // The key is not poisoned: the next request compiles cleanly.
+    let again = svc
+        .compile_blocking(p, targets::cpu_cache(), false)
+        .expect("key must be usable after the panic");
+    assert!(!again.reports.is_empty());
+    assert_eq!(svc.metrics.total(Counter::CompilesOk), 1);
+    assert_eq!(svc.metrics.total(Counter::Misses), 3);
+    svc.shutdown();
+}
+
+#[test]
+fn request_latency_includes_queue_wait_not_the_workers_clock() {
+    // Regression for latency misattribution: per-request latency used
+    // to be the *compiling worker's* clock, so a cached-hit request
+    // that sat in the queue behind a slow compile was recorded as
+    // near-zero. Latency must be measured from submission.
+    let svc = CompileService::start(1);
+    let cached = ops::fig4_conv_program();
+    let slow = ops::matmul_program(4, 4, 4);
+    // Prime the cache while compiles are still fast.
+    svc.compile_blocking(cached.clone(), targets::cpu_cache(), false).expect("prime");
+    svc.inject_compile_delay(Duration::from_millis(100));
+    // The single worker picks up the slow miss; the cached-hit request
+    // queues behind it for ~100ms.
+    let rx_slow = svc.submit(slow, targets::cpu_cache(), false).expect("queued");
+    std::thread::sleep(Duration::from_millis(10));
+    let rx_hit = svc.submit(cached, targets::cpu_cache(), false).expect("queued");
+    rx_slow.recv().expect("reply").expect("compiles");
+    rx_hit.recv().expect("reply").expect("served from cache");
+    assert_eq!(svc.metrics.total(Counter::Hits), 1);
+    assert_eq!(svc.metrics.total(Counter::Misses), 2);
+    assert_eq!(svc.metrics.total(Counter::CompilesOk), 2, "hits never count as compiles");
+    // Slow miss ≥ 100ms compile; the hit waited ≥ 85ms in the queue.
+    // Under the old accounting the hit recorded ~0, summing to ~100ms.
+    let total = svc.metrics.request_latency_sum();
+    assert!(
+        total >= Duration::from_millis(150),
+        "request latency must include queue wait: sum {total:?}"
+    );
+    assert!(
+        svc.metrics.queue_wait_sum() >= Duration::from_millis(70),
+        "queue-wait histogram must see the hit's wait: {:?}",
+        svc.metrics.queue_wait_sum()
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn deadlines_time_out_parked_and_queued_requests() {
+    // Deadlines bound both kinds of waiting: a request parked on an
+    // in-flight compile is expired by the janitor mid-compile, and a
+    // request still in the queue is expired when a worker finally pops
+    // it. The compile that is already *running* delivers regardless —
+    // deadlines cancel waiting, not work.
+    let server = Server::start(ServeConfig {
+        workers: 2,
+        deadline: Some(Duration::from_millis(40)),
+        ..ServeConfig::default()
+    });
+    server.service().inject_compile_delay(Duration::from_millis(250));
+    let opts = RequestOptions::default();
+    let cfg = targets::cpu_cache();
+    let p1 = ops::matmul_program(4, 4, 4);
+    let rx_a = server.submit("t", p1.clone(), cfg.clone(), &opts).expect("admitted");
+    std::thread::sleep(Duration::from_millis(10));
+    // Same program: parks on rx_a's in-flight compile.
+    let rx_parked = server.submit("t", p1, cfg.clone(), &opts).expect("admitted");
+    // Distinct program: occupies the second worker.
+    let rx_b = server
+        .submit("t", ops::matmul_program(5, 4, 4), cfg.clone(), &opts)
+        .expect("admitted");
+    // Distinct program: stays queued until a worker frees at ~250ms,
+    // far past its 40ms deadline.
+    let rx_queued = server
+        .submit("t", ops::matmul_program(6, 4, 4), cfg, &opts)
+        .expect("admitted");
+    // The parked waiter must be expired by the janitor at ~40ms, long
+    // before the 250ms compile completes.
+    let t0 = Instant::now();
+    let err = rx_parked.recv().expect("reply").expect_err("deadline passed");
+    assert!(matches!(err, ServeError::Timeout { .. }), "{err:?}");
+    assert!(
+        t0.elapsed() < Duration::from_millis(150),
+        "parked waiter must be dropped mid-compile, not at compile end ({:?})",
+        t0.elapsed()
+    );
+    let err = rx_queued.recv().expect("reply").expect_err("expired in queue");
+    assert!(matches!(err, ServeError::Timeout { .. }), "{err:?}");
+    // The requests that reached a worker before their deadline deliver.
+    rx_a.recv().expect("reply").expect("compile delivers");
+    rx_b.recv().expect("reply").expect("compile delivers");
+    let m = server.metrics();
+    assert_eq!(m.total(Counter::Timeouts), 2, "{}", m.snapshot());
+    assert_eq!(m.total(Counter::Misses), 2);
+    assert_eq!(m.total(Counter::Hits), 0);
+    reconcile_scrape(&server.render_scrape()).expect("books balance with timeouts");
+    server.shutdown();
+}
+
+#[test]
+fn tenants_past_cap_and_byte_budget_get_rejects_evictions_and_a_reconciling_scrape() {
+    // The acceptance-criteria test: two tenants, one driven past its
+    // in-flight cap (explicit rejects while the other proceeds), the
+    // artifact cache driven past its byte budget (LRU holds bytes ≤
+    // budget), and the final scrape reconciling exactly.
+    let cfg = targets::paper_fig4();
+    // Size the budget off a real artifact: room for ~2.5 of them.
+    let one = compile_network(&ops::matmul_program(4, 4, 4), &cfg, false)
+        .expect("probe compile")
+        .approx_bytes();
+    let budget = one * 5 / 2;
+    let server = Server::start(ServeConfig {
+        workers: 2,
+        queue_depth: 64,
+        tenant_cap: 2,
+        cache_bytes: budget,
+        deadline: None,
+    });
+    // Slow compiles keep alpha's first two requests in flight while the
+    // rest of its burst arrives and trips the cap.
+    server.service().inject_compile_delay(Duration::from_millis(120));
+    let opts = RequestOptions::default();
+    let alpha = TenantId::new("alpha");
+    let beta = TenantId::new("beta");
+    let mut admitted = Vec::new();
+    let mut rejects = Vec::new();
+    for i in 0..6u64 {
+        match server.submit(alpha.clone(), ops::matmul_program(4 + i, 4, 4), cfg.clone(), &opts)
+        {
+            Ok(rx) => admitted.push(rx),
+            Err(e) => rejects.push(e),
+        }
+    }
+    assert_eq!(admitted.len(), 2, "alpha's cap is 2 in flight");
+    assert_eq!(rejects.len(), 4);
+    for e in &rejects {
+        assert!(
+            matches!(e, ServeError::Rejected { reason } if reason.contains("alpha") && reason.contains("cap")),
+            "{e:?}"
+        );
+    }
+    // Beta is unaffected by alpha's cap.
+    for i in 0..2u64 {
+        admitted.push(
+            server
+                .submit(beta.clone(), ops::matmul_program(10 + i, 4, 4), cfg.clone(), &opts)
+                .expect("beta proceeds while alpha is capped"),
+        );
+    }
+    for rx in admitted {
+        rx.recv().expect("reply").expect("compiles");
+    }
+    // Admission slots drain as replies land (tickets drop on the
+    // worker side); wait for the counters to settle.
+    for _ in 0..200 {
+        if server.in_flight(&alpha) == 0 && server.in_flight(&beta) == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(server.in_flight(&alpha), 0);
+    assert_eq!(server.in_flight(&beta), 0);
+    // Four distinct artifacts against a 2.5-artifact budget: LRU must
+    // have evicted, and resident bytes must fit the budget.
+    let stats = server.cache_stats();
+    assert!(stats.bytes <= budget, "cache {} B exceeds budget {budget} B", stats.bytes);
+    let m = server.metrics();
+    assert!(m.total(Counter::Evictions) >= 1, "{}", m.snapshot());
+    // Global and per-tenant books.
+    assert_eq!(m.total(Counter::Requests), 8);
+    assert_eq!(m.total(Counter::Rejects), 4);
+    assert_eq!(m.total(Counter::Misses), 4);
+    assert_eq!(m.tenant_total(&alpha, Counter::Requests), 6);
+    assert_eq!(m.tenant_total(&alpha, Counter::Rejects), 4);
+    assert_eq!(m.tenant_total(&beta, Counter::Requests), 2);
+    assert_eq!(m.tenant_total(&beta, Counter::Rejects), 0);
+    // And the exported scrape agrees with itself, exactly.
+    let line = reconcile_scrape(&server.render_scrape()).expect("scrape reconciles");
+    assert!(line.contains("8 requests"), "{line}");
+    server.shutdown();
 }

@@ -36,6 +36,20 @@ else
     echo "(set VERIFY_TUNE_SMOKE=1 to run the autotuning cache smoke)"
 fi
 
+echo "== serve smoke (gated) =="
+# Opt-in serving-tier smoke: runs the multi-tenant `stripe serve` demo
+# with every admission knob set and prints the Prometheus-style scrape.
+# The command itself parses the scrape and exits nonzero unless the
+# totals reconcile (requests = hits + misses + rejects + timeouts,
+# globally and per tenant).
+if [ "${VERIFY_SERVE_SMOKE:-0}" = "1" ]; then
+    cargo run --release --quiet -- serve \
+        --workers 2 --queue-depth 16 --tenant-cap 2 \
+        --cache-bytes 65536 --deadline-ms 10000 --metrics
+else
+    echo "(set VERIFY_SERVE_SMOKE=1 to run the serving-tier scrape smoke)"
+fi
+
 echo "== bench smoke (gated) =="
 # Opt-in end-to-end bench smoke: runs the e2e bench on a reduced
 # measurement budget and leaves BENCH_e2e.json at the repo root.
