@@ -89,6 +89,61 @@ fn main() {
     let planned_median_s = s_planned.median.as_secs_f64();
     let kernel_median_s = s_kernel.median.as_secs_f64();
 
+    section("SIMD lane kernels vs scalar lane baseline (kernel engine)");
+    // Same engine, same band machinery — only the lane bodies differ:
+    // chunked SIMD-shaped kernels vs the per-element lane interpreter.
+    let scalar_lane_opts =
+        ExecOptions { engine: Engine::Kernel, simd: false, ..ExecOptions::default() };
+    let (scalar_lane_out, _) = run_program_kernel(&p, &inputs, &scalar_lane_opts).unwrap();
+    assert_eq!(
+        kernel_out, scalar_lane_out,
+        "SIMD and scalar lane paths must be bit-exact"
+    );
+    let bench = bench_profile();
+    let s_simd = bench.run("run cnn (kernel engine, simd lanes)", || {
+        std::hint::black_box(run_program_kernel(&p, &inputs, &kernel_opts).unwrap());
+    });
+    let s_scalar_lane = bench.run("run cnn (kernel engine, scalar lanes)", || {
+        std::hint::black_box(run_program_kernel(&p, &inputs, &scalar_lane_opts).unwrap());
+    });
+    let simd_speedup = s_scalar_lane.median.as_secs_f64() / s_simd.median.as_secs_f64();
+    println!(
+        "simd-vs-scalar-lane speedup (median): {simd_speedup:.2}x  \
+         [scalar lanes {:?} -> simd lanes {:?}]",
+        s_scalar_lane.median, s_simd.median
+    );
+    // The acceptance bar: the vectorized lane path must beat the
+    // retained per-element baseline on the canned cnn.
+    assert!(
+        simd_speedup > 1.0,
+        "SIMD lane kernels slower than the scalar lane baseline ({simd_speedup:.2}x)"
+    );
+    let simd_median_s = s_simd.median.as_secs_f64();
+    let scalar_lane_median_s = s_scalar_lane.median.as_secs_f64();
+
+    // Per-dtype kernel-engine throughput: the same kernel table serves
+    // every storage dtype (conversion happens at the buffer boundary),
+    // measured in executed leaf iterations per second.
+    let mut dtype_elems_json = Vec::new();
+    for dt in stripe::ir::DType::STORAGE {
+        let pd = p.with_dtype(dt);
+        let inputs_d = stripe::passes::equiv::gen_inputs(&pd, 5);
+        let (_, rep_d) = run_program_kernel(&pd, &inputs_d, &kernel_opts).unwrap();
+        let t = rep_d.totals();
+        let lanes = t.vector_lanes + t.scalar_lanes;
+        let s_dt = bench.run(&format!("run cnn (kernel engine, {})", dt.name()), || {
+            std::hint::black_box(run_program_kernel(&pd, &inputs_d, &kernel_opts).unwrap());
+        });
+        let elems_per_s = lanes as f64 / s_dt.median.as_secs_f64();
+        println!(
+            "{:<4} {lanes} leaf iterations in {:?} -> {elems_per_s:.3e} elems/s",
+            dt.name(),
+            s_dt.median
+        );
+        dtype_elems_json.push(format!("\"{}\": {elems_per_s:.0}", dt.name()));
+    }
+    let kernel_elems_per_s = format!("{{ {} }}", dtype_elems_json.join(", "));
+
     section("cost-guided pipeline autotuning (tuned vs default, cpu_cache)");
     let tuned = stripe::coordinator::compile_network_tuned(
         &p,
@@ -170,7 +225,7 @@ fn main() {
         ]);
         let mut sink = CacheSink::new(h, 64);
         for b in &prog.buffers {
-            sink.register_buffer(b.ttype.span_elems(), 4);
+            sink.register_buffer(b.ttype.span_elems(), b.ttype.dtype.size_bytes());
         }
         run_program_sink(prog, &inputs, &ExecOptions::default(), &mut sink).unwrap();
         let st = sink.hierarchy.stats();
@@ -228,8 +283,11 @@ fn main() {
         // cost is O(write set), so the bytes workers copy must not
         // scale with the total live buffer bytes (the old deep-clone
         // fork copied `parallel_ops × workers × total` every run).
-        let total_live_bytes: u64 =
-            big.buffers.iter().map(|b| b.ttype.span_elems() * 4).sum();
+        let total_live_bytes: u64 = big
+            .buffers
+            .iter()
+            .map(|b| b.ttype.span_elems() * b.ttype.dtype.size_bytes())
+            .sum();
         let fork_bytes = schedule.fork_bytes();
         let merge_bytes = schedule.merge_bytes();
         let old_model_bytes: u64 = schedule
@@ -290,6 +348,10 @@ fn main() {
              \"planned_median_s\": {planned_median_s:.6},\n  \
              \"kernel_median_s\": {kernel_median_s:.6},\n  \
              \"planned_vs_kernel_speedup\": {kernel_speedup:.3},\n  \
+             \"simd_median_s\": {simd_median_s:.6},\n  \
+             \"scalar_lane_median_s\": {scalar_lane_median_s:.6},\n  \
+             \"kernel_vs_simd_speedup\": {simd_speedup:.3},\n  \
+             \"kernel_elems_per_s\": {kernel_elems_per_s},\n  \
              \"tune_candidates\": {tune_candidates},\n  \
              \"tuned_predicted_cost\": {tuned_predicted_cost},\n  \
              \"default_predicted_cost\": {default_predicted_cost},\n  \

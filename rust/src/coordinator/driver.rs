@@ -72,6 +72,11 @@ impl CompiledNetwork {
     /// tuning decision (when tuned), and the parallel schedule.
     pub fn summary(&self) -> String {
         let mut s = format!("target {}\n", self.target);
+        let mut dts: Vec<&str> =
+            self.program.buffers.iter().map(|b| b.ttype.dtype.name()).collect();
+        dts.sort_unstable();
+        dts.dedup();
+        s.push_str(&format!("buffer dtypes: {}\n", dts.join(", ")));
         for r in &self.reports {
             s.push_str(&format!(
                 "  pass {:<16} {}\n",
@@ -169,17 +174,22 @@ pub fn run_network(
 }
 
 /// Deterministic content hash of a (program, target) pair — the compile
-/// cache key. FNV-1a over the printed IR and the target's full
-/// configuration (memories, compute units, pass list), so editing any
-/// target parameter (`--set`) changes the key: a cached artifact —
-/// tuned ones especially, whose winning pipeline depends on the
-/// target's cache geometry — is never served for a different
-/// configuration that happens to share a name.
+/// cache key. FNV-1a over the printed IR, the buffer storage dtypes,
+/// and the target's full configuration (memories, compute units, pass
+/// list), so editing any target parameter (`--set`) changes the key: a
+/// cached artifact — tuned ones especially, whose winning pipeline
+/// depends on the target's cache geometry — is never served for a
+/// different configuration that happens to share a name. The dtypes
+/// are hashed explicitly (not just via the printed refinement types)
+/// so an f32 artifact can never be served for a `--dtype`-retyped
+/// network even if a printer change drops type annotations.
 pub fn cache_key(program: &Program, cfg: &MachineConfig) -> u64 {
     let text = crate::ir::printer::print_program(program);
     let cfg_text = format!("{cfg:?}");
+    let dtype_text: String =
+        program.buffers.iter().map(|b| b.ttype.dtype.name()).collect::<Vec<_>>().join(",");
     let mut h: u64 = 0xcbf29ce484222325;
-    for b in text.bytes().chain(cfg_text.bytes()) {
+    for b in text.bytes().chain(dtype_text.bytes()).chain(cfg_text.bytes()) {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
@@ -278,6 +288,23 @@ mod tests {
         resized.memories[0].capacity_bytes /= 2;
         assert_eq!(resized.name, cfg.name);
         assert_ne!(cache_key(&p, &cfg), cache_key(&p, &resized));
+    }
+
+    #[test]
+    fn cache_key_and_summary_track_buffer_dtypes() {
+        use crate::ir::DType;
+        let p = ops::fig4_conv_program();
+        let cfg = targets::cpu_cache();
+        let c = compile_network(&p, &cfg, false).unwrap();
+        assert!(c.summary().contains("buffer dtypes: f32"), "{}", c.summary());
+        // Retyping the same topology must key a distinct artifact per
+        // storage dtype (and f32 retyping is the identity).
+        let mut keys: Vec<u64> =
+            DType::STORAGE.iter().map(|&d| cache_key(&p.with_dtype(d), &cfg)).collect();
+        keys.push(cache_key(&p, &cfg));
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), DType::STORAGE.len(), "one artifact key per storage dtype");
     }
 
     #[test]

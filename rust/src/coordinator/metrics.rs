@@ -27,6 +27,20 @@
 //! *executions* are counted separately (`compiles_ok`/`compiles_failed`,
 //! one per actual compile, never inflated by cache hits), which is what
 //! makes the hit ratio and compile throughput independently readable.
+//!
+//! ## Execution series
+//!
+//! The run path ([`Metrics::record_execution`], wired from the
+//! service's `run_blocking`) feeds a second family: cumulative
+//! kernel-lane counters (`stripe_kernel_vector_lanes_total` /
+//! `stripe_kernel_scalar_lanes_total`) with the derived aggregate
+//! coverage gauge `stripe_kernel_coverage`, and copy-on-write traffic
+//! totals (`stripe_fork_bytes_total` / `stripe_merge_bytes_total`)
+//! alongside per-request gauges (`stripe_request_fork_bytes` /
+//! `stripe_request_merge_bytes`) holding the most recent execution's
+//! cost. [`reconcile_scrape`] cross-checks the derived gauge against
+//! the raw lane counters and the last-request gauges against their
+//! totals.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -170,6 +184,17 @@ struct Inner {
     /// Gauges maintained by the cache owner.
     cache_entries: u64,
     cache_bytes: u64,
+    /// Execution counters: cumulative leaf-iteration split between the
+    /// vector-kernel path and the guarded scalar fallback, across every
+    /// executed request (zero under the planned engine).
+    kernel_vector_lanes: u64,
+    kernel_scalar_lanes: u64,
+    /// Cumulative copy-on-write traffic across executed requests.
+    fork_bytes: u64,
+    merge_bytes: u64,
+    /// Most recent execution's CoW traffic (per-request gauges).
+    last_fork_bytes: u64,
+    last_merge_bytes: u64,
     /// Submit → worker-pop wait, per popped request.
     queue_wait: Histogram,
     /// Actual compile duration, one sample per compile execution.
@@ -257,6 +282,40 @@ impl Metrics {
             i.evictions += 1;
             i.evicted_bytes += bytes;
         });
+    }
+
+    /// One call per executed request: the run's kernel-lane split
+    /// (vector vs guarded scalar fallback) and its fork/merge
+    /// copy-on-write traffic. Lanes and bytes accumulate into totals;
+    /// the byte arguments also overwrite the per-request gauges.
+    pub fn record_execution(
+        &self,
+        vector_lanes: u64,
+        scalar_lanes: u64,
+        fork_bytes: u64,
+        merge_bytes: u64,
+    ) {
+        self.with(|i| {
+            i.kernel_vector_lanes += vector_lanes;
+            i.kernel_scalar_lanes += scalar_lanes;
+            i.fork_bytes += fork_bytes;
+            i.merge_bytes += merge_bytes;
+            i.last_fork_bytes = fork_bytes;
+            i.last_merge_bytes = merge_bytes;
+        });
+    }
+
+    /// Aggregate kernel coverage across every recorded execution
+    /// (`None` until some execution reported lanes).
+    pub fn kernel_coverage(&self) -> Option<f64> {
+        self.with(|i| {
+            let lanes = i.kernel_vector_lanes + i.kernel_scalar_lanes;
+            if lanes == 0 {
+                None
+            } else {
+                Some(i.kernel_vector_lanes as f64 / lanes as f64)
+            }
+        })
     }
 
     /// Cache-owner gauges (entry count and resident bytes).
@@ -361,12 +420,29 @@ impl Metrics {
                 ("stripe_evicted_bytes_total", i.evicted_bytes),
                 ("stripe_compiles_ok_total", i.compiles_ok),
                 ("stripe_compiles_failed_total", i.compiles_failed),
+                ("stripe_kernel_vector_lanes_total", i.kernel_vector_lanes),
+                ("stripe_kernel_scalar_lanes_total", i.kernel_scalar_lanes),
+                ("stripe_fork_bytes_total", i.fork_bytes),
+                ("stripe_merge_bytes_total", i.merge_bytes),
             ] {
                 out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
             }
+            // Derived aggregate coverage: vector / (vector + scalar)
+            // over all recorded executions; 0 before any lanes land.
+            let lanes = i.kernel_vector_lanes + i.kernel_scalar_lanes;
+            let coverage = if lanes == 0 {
+                0.0
+            } else {
+                i.kernel_vector_lanes as f64 / lanes as f64
+            };
+            out.push_str(&format!(
+                "# TYPE stripe_kernel_coverage gauge\nstripe_kernel_coverage {coverage}\n"
+            ));
             for (name, v) in [
                 ("stripe_cache_entries", i.cache_entries),
                 ("stripe_cache_bytes", i.cache_bytes),
+                ("stripe_request_fork_bytes", i.last_fork_bytes),
+                ("stripe_request_merge_bytes", i.last_merge_bytes),
             ] {
                 out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
             }
@@ -418,7 +494,12 @@ pub fn parse_scrape(text: &str) -> Result<BTreeMap<String, f64>, String> {
 ///
 /// * `requests = hits + misses + rejects + timeouts`, globally and for
 ///   every tenant that appears in the scrape;
-/// * every histogram's `+Inf` bucket equals its `_count`.
+/// * every histogram's `+Inf` bucket equals its `_count`;
+/// * `stripe_kernel_coverage` lies in `[0, 1]` and equals
+///   `vector / (vector + scalar)` recomputed from the raw lane
+///   counters (exactly 0 when no lanes were recorded);
+/// * the per-request gauges `stripe_request_{fork,merge}_bytes` never
+///   exceed their cumulative `_total` counters.
 ///
 /// Returns a one-line summary on success.
 pub fn reconcile_scrape(text: &str) -> Result<String, String> {
@@ -470,6 +551,28 @@ pub fn reconcile_scrape(text: &str) -> Result<String, String> {
         let count = get(&format!("{h}_count"));
         if inf != count {
             return Err(format!("{h}: +Inf bucket {inf} != count {count}"));
+        }
+    }
+    let coverage = get("stripe_kernel_coverage");
+    if !(0.0..=1.0).contains(&coverage) {
+        return Err(format!("stripe_kernel_coverage {coverage} outside [0, 1]"));
+    }
+    let vector = get("stripe_kernel_vector_lanes_total");
+    let scalar = get("stripe_kernel_scalar_lanes_total");
+    let expected = if vector + scalar > 0.0 { vector / (vector + scalar) } else { 0.0 };
+    if (coverage - expected).abs() > 1e-9 {
+        return Err(format!(
+            "stripe_kernel_coverage {coverage} disagrees with lane counters \
+             ({vector} vector / {scalar} scalar => {expected})"
+        ));
+    }
+    for kind in ["fork", "merge"] {
+        let last = get(&format!("stripe_request_{kind}_bytes"));
+        let total = get(&format!("stripe_{kind}_bytes_total"));
+        if last > total {
+            return Err(format!(
+                "stripe_request_{kind}_bytes {last} exceeds its total {total}"
+            ));
         }
     }
     Ok(format!(
@@ -596,6 +699,44 @@ mod tests {
         assert_eq!(series["x_seconds_bucket{le=\"10\"}"], 2.0);
         assert_eq!(series["x_seconds_bucket{le=\"+Inf\"}"], 3.0);
         assert_eq!(series["x_seconds_count"], 3.0);
+    }
+
+    #[test]
+    fn execution_series_accumulate_and_reconcile() {
+        let m = Metrics::default();
+        assert_eq!(m.kernel_coverage(), None, "no lanes recorded yet");
+        m.record_execution(300, 100, 4096, 512);
+        m.record_execution(100, 0, 1024, 256);
+        assert_eq!(m.kernel_coverage(), Some(0.8));
+        let scrape = m.render_scrape();
+        let series = parse_scrape(&scrape).expect("parses");
+        assert_eq!(series["stripe_kernel_vector_lanes_total"], 400.0);
+        assert_eq!(series["stripe_kernel_scalar_lanes_total"], 100.0);
+        assert_eq!(series["stripe_kernel_coverage"], 0.8);
+        assert_eq!(series["stripe_fork_bytes_total"], 5120.0);
+        assert_eq!(series["stripe_merge_bytes_total"], 768.0);
+        // The per-request gauges hold the most recent execution only.
+        assert_eq!(series["stripe_request_fork_bytes"], 1024.0);
+        assert_eq!(series["stripe_request_merge_bytes"], 256.0);
+        reconcile_scrape(&scrape).expect("reconciles");
+    }
+
+    #[test]
+    fn reconcile_rejects_inconsistent_execution_series() {
+        // Coverage gauge disagreeing with the raw lane counters.
+        let bad = "stripe_kernel_vector_lanes_total 10\n\
+                   stripe_kernel_scalar_lanes_total 10\n\
+                   stripe_kernel_coverage 0.9\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("disagrees"), "{e}");
+        // Coverage outside [0, 1].
+        let e = reconcile_scrape("stripe_kernel_coverage 1.5\n").unwrap_err();
+        assert!(e.contains("outside"), "{e}");
+        // Last-request gauge above its cumulative total.
+        let bad = "stripe_fork_bytes_total 100\n\
+                   stripe_request_fork_bytes 200\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("exceeds"), "{e}");
     }
 
     #[test]

@@ -291,14 +291,25 @@ impl CompileService {
     /// Execute a compiled network on the service's shared page pool,
     /// across `workers` compute units. The pool makes the service's
     /// execution path allocation-recycling: buffers drawn for one
-    /// request are returned and reused by the next.
+    /// request are returned and reused by the next. Each execution
+    /// feeds the metrics registry: the run's kernel-lane split
+    /// (vector vs scalar fallback) and its fork/merge CoW traffic
+    /// land in the `stripe_kernel_*`/`stripe_*_bytes` scrape series.
     pub fn run_blocking(
         &self,
         network: &CompiledNetwork,
         inputs: &BTreeMap<String, Vec<f32>>,
         workers: usize,
     ) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
-        run_network(network, inputs, workers, Some(Arc::clone(&self.pool)))
+        let (outputs, report) =
+            run_network(network, inputs, workers, Some(Arc::clone(&self.pool)))?;
+        let (vector, scalar) = report
+            .ops
+            .iter()
+            .fold((0, 0), |(v, s), o| (v + o.kernel_lanes, s + o.scalar_lanes));
+        self.metrics
+            .record_execution(vector, scalar, report.fork_bytes(), report.merge_bytes());
+        Ok((outputs, report))
     }
 
     /// Enqueue a fully-formed request (the serving tier builds its own,
@@ -711,6 +722,12 @@ mod tests {
             svc.pool.summary()
         );
         assert_eq!(report.ops.len(), c.schedule.ops.len());
+        // Both executions fed the metrics registry; the scrape carries
+        // the execution series and still reconciles.
+        let scrape = svc.metrics.render_scrape();
+        assert!(scrape.contains("stripe_fork_bytes_total"), "{scrape}");
+        assert!(scrape.contains("stripe_kernel_coverage"), "{scrape}");
+        super::super::metrics::reconcile_scrape(&scrape).expect("scrape reconciles");
         svc.shutdown();
     }
 

@@ -1,27 +1,50 @@
-//! The execution storage subsystem: paged copy-on-write `f32` buffers
-//! with Definition-2 write semantics.
+//! The execution storage subsystem: paged copy-on-write buffers with
+//! Definition-2 write semantics, generic over storage dtype.
+//!
+//! # Dtype model
+//!
+//! Every engine computes in `f32` registers; buffers decide how values
+//! are **stored**. Four storage representations exist ([`Scalar`]):
+//!
+//! | dtype | stored as | conversion at the boundary                    |
+//! |-------|-----------|-----------------------------------------------|
+//! | `f32` | `f32`     | identity                                      |
+//! | `f64` | `f64`     | widen on store, narrow on load (lossless)     |
+//! | `i32` | `i32`     | `round()` on store (saturating), exact load   |
+//! | `i8`  | `i8`      | affine quantization with [`Quant`] scale/zero |
+//!
+//! Remaining IR dtypes (`f16`/`bf16`/`i16`) store at `f32` precision.
+//! Conversions happen **only** inside this module — engines read and
+//! write `f32` through the same [`Buffers`] API as before — so all four
+//! engines observe identical storage effects and stay bit-exact with
+//! one another for every dtype ("fake quantization": compute in f32,
+//! round-trip through the storage grid on every write). Aggregations
+//! combine in f32 against the *decoded stored* value and re-encode, so
+//! a bulk fold and a per-element store sequence land on the same bits.
 //!
 //! # Storage model
 //!
 //! Each buffer is a sequence of fixed-size pages ([`PAGE_ELEMS`]
-//! elements each), every page an `Arc<[f32]>`, plus an `Arc`'d write
-//! mask (a bitset with a dirty-range bound). Cloning a [`Buffers`] —
-//! the parallel executor's fork point, see [`Buffers::fork`] — copies
-//! only the page/mask pointers, so a fork costs **O(number of pages)**
-//! pointer bumps and **zero** data bytes. The first write through a
-//! shared page (or mask) un-shares exactly that page (mask) by copying
-//! it — classic copy-on-write — so a worker's memory traffic is
-//! O(its write set), rounded up to page granularity, instead of
-//! O(total live buffer bytes) as with the old deep-clone fork.
+//! elements each), every page an `Arc<[T]>` for its storage dtype `T`,
+//! plus an `Arc`'d write mask (a bitset with a dirty-range bound).
+//! Cloning a [`Buffers`] — the parallel executor's fork point, see
+//! [`Buffers::fork`] — copies only the page/mask pointers, so a fork
+//! costs **O(number of pages)** pointer bumps and **zero** data bytes.
+//! The first write through a shared page (or mask) un-shares exactly
+//! that page (mask) by copying it — classic copy-on-write — so a
+//! worker's memory traffic is O(its write set) **in dtype-sized
+//! bytes** (an i8 page faults 1 KiB where an f64 page faults 8 KiB),
+//! rounded up to page granularity, instead of O(total live buffer
+//! bytes) as with the old deep-clone fork.
 //!
 //! # Fork-cost guarantees
 //!
 //! * [`Buffers::fork`] copies no element data: it bumps one `Arc` per
 //!   page plus one per mask, and resets the child's [`StorageStats`].
 //! * A fork's first write to a page copies that one page
-//!   ([`PAGE_ELEMS`]·4 bytes) and that buffer's mask; further writes to
-//!   the same page are plain stores. Buffers the fork never writes are
-//!   never copied.
+//!   ([`PAGE_ELEMS`]·`size_of::<T>()` bytes) and that buffer's mask;
+//!   further writes to the same page are plain stores. Buffers the
+//!   fork never writes are never copied.
 //! * [`Buffers::merge_disjoint`] walks only the **dirty ranges** the
 //!   workers actually touched (skipping buffers a partition never
 //!   wrote entirely), adopts fully-written interior pages by pointer
@@ -56,13 +79,14 @@
 //! service so repeated execution requests stop paying malloc + page
 //! faults): [`Buffers::with_pool`] draws zeroed pages from the pool
 //! and [`Buffers::release`] returns every page that is no longer
-//! shared.
+//! shared. The pool keeps one free list per storage dtype — an i8
+//! page can never be handed to an f64 buffer.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
-use crate::ir::AggOp;
+use crate::ir::{AggOp, DType};
 
 /// Elements per storage page (4 KiB of `f32`). A power of two so
 /// element→page arithmetic is a shift/mask on the hot path.
@@ -71,6 +95,160 @@ const PAGE_SHIFT: usize = 10;
 const PAGE_MASK: usize = PAGE_ELEMS - 1;
 /// Mask words (u64) covering one full page.
 const WORDS_PER_PAGE: usize = PAGE_ELEMS / 64;
+
+/// Affine quantization parameters for integer storage:
+/// `real = (stored - zero_point) * scale`. Ignored by the float and
+/// i32 representations. The default i8 scale is a power of two
+/// (1/16, range ±8) so small integer-valued test data round-trips the
+/// grid exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quant {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl Default for Quant {
+    fn default() -> Quant {
+        Quant { scale: 1.0, zero_point: 0 }
+    }
+}
+
+impl Quant {
+    /// The default parameters a buffer of `dtype` is allocated with
+    /// when the caller does not supply explicit ones.
+    pub fn default_for(dtype: DType) -> Quant {
+        match dtype {
+            DType::I8 => Quant { scale: 1.0 / 16.0, zero_point: 0 },
+            _ => Quant::default(),
+        }
+    }
+}
+
+/// A storage element type. Engines never see `T`: every conversion to
+/// and from the f32 compute domain happens at this trait's boundary,
+/// so the decode∘encode round-trip (identity for f32/f64, rounding for
+/// the integer grids) is applied uniformly by every engine.
+trait Scalar: Copy + PartialEq + Send + Sync + std::fmt::Debug + 'static {
+    const ZERO: Self;
+    const SIZE: usize;
+    fn to_f32(self, q: Quant) -> f32;
+    fn from_f32(v: f32, q: Quant) -> Self;
+    /// Wrap a typed buffer into the dispatch enum.
+    fn wrap(buf: TBuf<Self>) -> Buf;
+    /// The pool's free list for this dtype.
+    fn pool_list(pool: &BufferPool) -> &Mutex<Vec<Arc<[Self]>>>;
+    /// Bulk decode (overridden by f32 with a memcpy).
+    fn decode_slice(src: &[Self], dst: &mut [f32], q: Quant) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = s.to_f32(q);
+        }
+    }
+    /// Bulk encode (overridden by f32 with a memcpy).
+    fn encode_slice(src: &[f32], dst: &mut [Self], q: Quant) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = Self::from_f32(*s, q);
+        }
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const SIZE: usize = 4;
+    #[inline(always)]
+    fn to_f32(self, _q: Quant) -> f32 {
+        self
+    }
+    #[inline(always)]
+    fn from_f32(v: f32, _q: Quant) -> Self {
+        v
+    }
+    fn wrap(buf: TBuf<f32>) -> Buf {
+        Buf::F32(buf)
+    }
+    fn pool_list(pool: &BufferPool) -> &Mutex<Vec<Arc<[f32]>>> {
+        &pool.f32_pages
+    }
+    fn decode_slice(src: &[f32], dst: &mut [f32], _q: Quant) {
+        dst.copy_from_slice(src);
+    }
+    fn encode_slice(src: &[f32], dst: &mut [f32], _q: Quant) {
+        dst.copy_from_slice(src);
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const SIZE: usize = 8;
+    #[inline(always)]
+    fn to_f32(self, _q: Quant) -> f32 {
+        self as f32
+    }
+    #[inline(always)]
+    fn from_f32(v: f32, _q: Quant) -> Self {
+        v as f64
+    }
+    fn wrap(buf: TBuf<f64>) -> Buf {
+        Buf::F64(buf)
+    }
+    fn pool_list(pool: &BufferPool) -> &Mutex<Vec<Arc<[f64]>>> {
+        &pool.f64_pages
+    }
+}
+
+impl Scalar for i32 {
+    const ZERO: Self = 0;
+    const SIZE: usize = 4;
+    #[inline(always)]
+    fn to_f32(self, _q: Quant) -> f32 {
+        self as f32
+    }
+    /// Round-to-nearest; `as` saturates at the i32 range and maps NaN
+    /// to 0, so the conversion is total and deterministic.
+    #[inline(always)]
+    fn from_f32(v: f32, _q: Quant) -> Self {
+        v.round() as i32
+    }
+    fn wrap(buf: TBuf<i32>) -> Buf {
+        Buf::I32(buf)
+    }
+    fn pool_list(pool: &BufferPool) -> &Mutex<Vec<Arc<[i32]>>> {
+        &pool.i32_pages
+    }
+}
+
+impl Scalar for i8 {
+    const ZERO: Self = 0;
+    const SIZE: usize = 1;
+    #[inline(always)]
+    fn to_f32(self, q: Quant) -> f32 {
+        (self as i32 - q.zero_point) as f32 * q.scale
+    }
+    /// Quantize: scale, round to nearest, shift by the zero point,
+    /// clamp to the i8 range. NaN lands on the zero point.
+    #[inline(always)]
+    fn from_f32(v: f32, q: Quant) -> Self {
+        let units = (v / q.scale).round() as i64 + q.zero_point as i64;
+        units.clamp(-128, 127) as i8
+    }
+    fn wrap(buf: TBuf<i8>) -> Buf {
+        Buf::I8(buf)
+    }
+    fn pool_list(pool: &BufferPool) -> &Mutex<Vec<Arc<[i8]>>> {
+        &pool.i8_pages
+    }
+}
+
+/// Dispatch a `&Buf`/`&mut Buf`/owned `Buf` to a dtype-generic body.
+macro_rules! for_buf {
+    ($buf:expr, $b:ident => $body:expr) => {
+        match $buf {
+            Buf::F32($b) => $body,
+            Buf::F64($b) => $body,
+            Buf::I32($b) => $body,
+            Buf::I8($b) => $body,
+        }
+    };
+}
 
 /// Copy-traffic accounting for one `Buffers` instance. Forks start at
 /// zero (see [`Buffers::fork`]); the parallel engine reads the deltas
@@ -91,11 +269,16 @@ pub struct StorageStats {
     pub adopted_pages: u64,
 }
 
-/// A recycling pool of storage pages. Cheap to share (`Arc`) between a
-/// service and its execution requests; thread-safe.
+/// A recycling pool of storage pages, one free list per storage dtype.
+/// Cheap to share (`Arc`) between a service and its execution
+/// requests; thread-safe.
 #[derive(Debug)]
 pub struct BufferPool {
-    pages: Mutex<Vec<Arc<[f32]>>>,
+    f32_pages: Mutex<Vec<Arc<[f32]>>>,
+    f64_pages: Mutex<Vec<Arc<[f64]>>>,
+    i32_pages: Mutex<Vec<Arc<[i32]>>>,
+    i8_pages: Mutex<Vec<Arc<[i8]>>>,
+    /// Cap per free list (beyond it, returned pages are dropped).
     max_pages: usize,
     /// Pages served from the pool (recycled allocations).
     pub hits: AtomicU64,
@@ -116,7 +299,10 @@ impl BufferPool {
     /// returned pages are simply dropped).
     pub fn with_capacity(max_pages: usize) -> BufferPool {
         BufferPool {
-            pages: Mutex::new(Vec::new()),
+            f32_pages: Mutex::new(Vec::new()),
+            f64_pages: Mutex::new(Vec::new()),
+            i32_pages: Mutex::new(Vec::new()),
+            i8_pages: Mutex::new(Vec::new()),
             max_pages,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -124,9 +310,12 @@ impl BufferPool {
         }
     }
 
-    /// Number of free pages currently pooled.
+    /// Number of free pages currently pooled, across every dtype list.
     pub fn free_pages(&self) -> usize {
-        self.pages.lock().unwrap().len()
+        self.f32_pages.lock().unwrap().len()
+            + self.f64_pages.lock().unwrap().len()
+            + self.i32_pages.lock().unwrap().len()
+            + self.i8_pages.lock().unwrap().len()
     }
 
     /// One-line counter summary (for service metrics output).
@@ -140,34 +329,34 @@ impl BufferPool {
         )
     }
 
-    /// A zeroed, uniquely-owned page — recycled when possible.
-    fn take_zero_page(&self) -> Arc<[f32]> {
+    /// A zeroed, uniquely-owned page of `T` — recycled when possible.
+    fn take_zero_page<T: Scalar>(&self) -> Arc<[T]> {
         loop {
-            let page = self.pages.lock().unwrap().pop();
+            let page = T::pool_list(self).lock().unwrap().pop();
             match page {
                 Some(mut page) => {
                     // Pages are only pooled while unique, but re-check:
                     // a shared page cannot be recycled safely.
                     if let Some(slice) = Arc::get_mut(&mut page) {
-                        slice.fill(0.0);
+                        slice.fill(T::ZERO);
                         self.hits.fetch_add(1, Relaxed);
                         return page;
                     }
                 }
                 None => {
                     self.misses.fetch_add(1, Relaxed);
-                    return Arc::from(vec![0.0f32; PAGE_ELEMS]);
+                    return Arc::from(vec![T::ZERO; PAGE_ELEMS]);
                 }
             }
         }
     }
 
     /// Return a page if it is uniquely owned and regular-sized.
-    fn put_page(&self, page: Arc<[f32]>) {
+    fn put_page<T: Scalar>(&self, page: Arc<[T]>) {
         if Arc::strong_count(&page) != 1 || page.len() != PAGE_ELEMS {
             return;
         }
-        let mut free = self.pages.lock().unwrap();
+        let mut free = T::pool_list(self).lock().unwrap();
         if free.len() < self.max_pages {
             free.push(page);
             self.returned.fetch_add(1, Relaxed);
@@ -305,22 +494,54 @@ impl WriteMask {
     }
 }
 
-/// One buffer: logical length plus CoW pages and write mask. All pages
-/// hold exactly [`PAGE_ELEMS`] elements; `len` bounds logical access
-/// (the tail of the last page is dead space, at most one page's worth).
+/// One typed buffer: logical length, quantization parameters, CoW
+/// pages and write mask. All pages hold exactly [`PAGE_ELEMS`]
+/// elements; `len` bounds logical access (the tail of the last page is
+/// dead space, at most one page's worth).
 #[derive(Debug, Clone)]
-struct Buf {
+struct TBuf<T> {
     len: usize,
-    pages: Vec<Arc<[f32]>>,
+    quant: Quant,
+    pages: Vec<Arc<[T]>>,
     mask: Arc<WriteMask>,
 }
 
-/// Un-share one page for writing, accounting the copy.
+/// A buffer of any storage dtype. The enum (not a trait object) keeps
+/// dispatch a jump table and the typed ops monomorphized.
+#[derive(Debug, Clone)]
+enum Buf {
+    F32(TBuf<f32>),
+    F64(TBuf<f64>),
+    I32(TBuf<i32>),
+    I8(TBuf<i8>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        for_buf!(self, b => b.len)
+    }
+
+    fn mask(&self) -> &WriteMask {
+        for_buf!(self, b => &*b.mask)
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Buf::F32(_) => DType::F32,
+            Buf::F64(_) => DType::F64,
+            Buf::I32(_) => DType::I32,
+            Buf::I8(_) => DType::I8,
+        }
+    }
+}
+
+/// Un-share one page for writing, accounting the copy in dtype-sized
+/// bytes.
 #[inline]
-fn page_mut<'a>(page: &'a mut Arc<[f32]>, cow_bytes: &mut u64) -> &'a mut [f32] {
+fn page_mut<'a, T: Scalar>(page: &'a mut Arc<[T]>, cow_bytes: &mut u64) -> &'a mut [T] {
     if Arc::get_mut(page).is_none() {
-        *cow_bytes += (page.len() * 4) as u64;
-        let copy: Arc<[f32]> = Arc::from(&**page);
+        *cow_bytes += (page.len() * T::SIZE) as u64;
+        let copy: Arc<[T]> = Arc::from(&**page);
         *page = copy;
     }
     Arc::get_mut(page).expect("freshly copied page is uniquely owned")
@@ -333,6 +554,303 @@ fn mask_mut<'a>(mask: &'a mut Arc<WriteMask>, cow_bytes: &mut u64) -> &'a mut Wr
         *cow_bytes += mask.byte_size();
     }
     Arc::make_mut(mask)
+}
+
+// ---------------------------------------------------------------------
+// Dtype-generic operation bodies. `Buffers` methods dispatch here via
+// `for_buf!`; each body monomorphizes per storage dtype, so the f32
+// instantiations compile to exactly the pre-dtype code (identity
+// conversions fold away).
+// ---------------------------------------------------------------------
+
+#[inline]
+fn read_t<T: Scalar>(buf: &TBuf<T>, name: &str, elem: i64) -> Result<f32, String> {
+    if elem < 0 || elem as usize >= buf.len {
+        return Err(format!("read out of bounds: {name}[{elem}] (len {})", buf.len));
+    }
+    let e = elem as usize;
+    Ok(buf.pages[e >> PAGE_SHIFT][e & PAGE_MASK].to_f32(buf.quant))
+}
+
+#[inline]
+fn store_t<T: Scalar>(
+    buf: &mut TBuf<T>,
+    stats: &mut StorageStats,
+    name: &str,
+    elem: i64,
+    value: f32,
+    agg: AggOp,
+    relaxed_assign: bool,
+) -> Result<(), String> {
+    if elem < 0 || elem as usize >= buf.len {
+        return Err(format!("write out of bounds: {name}[{elem}] (len {})", buf.len));
+    }
+    let e = elem as usize;
+    let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+    if buf.mask.get(e) {
+        if agg == AggOp::Assign && !relaxed_assign {
+            return Err(format!("double write to assign-aggregated {name}[{elem}]"));
+        }
+        let combined = agg.combine(buf.pages[p][off].to_f32(buf.quant), value);
+        page_mut(&mut buf.pages[p], &mut stats.cow_bytes)[off] = T::from_f32(combined, buf.quant);
+    } else {
+        page_mut(&mut buf.pages[p], &mut stats.cow_bytes)[off] = T::from_f32(value, buf.quant);
+        mask_mut(&mut buf.mask, &mut stats.cow_bytes).set(e);
+    }
+    Ok(())
+}
+
+fn read_run_t<T: Scalar>(
+    buf: &TBuf<T>,
+    name: &str,
+    start: i64,
+    dst: &mut [f32],
+) -> Result<(), String> {
+    if dst.is_empty() {
+        return Ok(());
+    }
+    let end = start + dst.len() as i64 - 1;
+    if start < 0 || end >= buf.len as i64 {
+        return Err(format!("read out of bounds: {name}[{start}..={end}] (len {})", buf.len));
+    }
+    let mut e = start as usize;
+    let mut filled = 0usize;
+    while filled < dst.len() {
+        let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+        let n = (PAGE_ELEMS - off).min(dst.len() - filled);
+        T::decode_slice(&buf.pages[p][off..off + n], &mut dst[filled..filled + n], buf.quant);
+        filled += n;
+        e += n;
+    }
+    Ok(())
+}
+
+fn read_strided_t<T: Scalar>(
+    buf: &TBuf<T>,
+    name: &str,
+    start: i64,
+    stride: i64,
+    dst: &mut [f32],
+) -> Result<(), String> {
+    if dst.is_empty() {
+        return Ok(());
+    }
+    let last = start + stride * (dst.len() as i64 - 1);
+    let (lo, hi) = (start.min(last), start.max(last));
+    if lo < 0 || hi >= buf.len as i64 {
+        return Err(format!("read out of bounds: {name}[{lo}..={hi}] (len {})", buf.len));
+    }
+    let mut e = start;
+    for d in dst.iter_mut() {
+        let u = e as usize;
+        *d = buf.pages[u >> PAGE_SHIFT][u & PAGE_MASK].to_f32(buf.quant);
+        e += stride;
+    }
+    Ok(())
+}
+
+fn write_run_t<T: Scalar>(
+    buf: &mut TBuf<T>,
+    stats: &mut StorageStats,
+    name: &str,
+    start: i64,
+    vals: &[f32],
+    agg: AggOp,
+    relaxed_assign: bool,
+) -> Result<(), String> {
+    if vals.is_empty() {
+        return Ok(());
+    }
+    let end = start + vals.len() as i64 - 1;
+    if start < 0 || end >= buf.len as i64 {
+        return Err(format!("write out of bounds: {name}[{start}..={end}] (len {})", buf.len));
+    }
+    let (lo, hi) = (start as usize, end as usize);
+    if !buf.mask.any_set_in(lo, hi) {
+        // Fresh range: bulk encode + one ranged mask update.
+        let mut e = lo;
+        let mut done = 0usize;
+        while done < vals.len() {
+            let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+            let n = (PAGE_ELEMS - off).min(vals.len() - done);
+            T::encode_slice(
+                &vals[done..done + n],
+                &mut page_mut(&mut buf.pages[p], &mut stats.cow_bytes)[off..off + n],
+                buf.quant,
+            );
+            done += n;
+            e += n;
+        }
+        mask_mut(&mut buf.mask, &mut stats.cow_bytes).set_range(lo, hi);
+        return Ok(());
+    }
+    if agg != AggOp::Assign && buf.mask.all_set_in(lo, hi) {
+        // Fully written: combine in place, masks unchanged. Decode →
+        // combine → encode per element, exactly like a `store` chain.
+        let q = buf.quant;
+        let mut e = lo;
+        let mut done = 0usize;
+        while done < vals.len() {
+            let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+            let n = (PAGE_ELEMS - off).min(vals.len() - done);
+            let dst = page_mut(&mut buf.pages[p], &mut stats.cow_bytes);
+            for i in 0..n {
+                let cur = dst[off + i].to_f32(q);
+                dst[off + i] = T::from_f32(agg.combine(cur, vals[done + i]), q);
+            }
+            done += n;
+            e += n;
+        }
+        return Ok(());
+    }
+    // Mixed range (or Assign over written data): per-element
+    // Definition-2 path with its exact error reporting.
+    for (i, &v) in vals.iter().enumerate() {
+        store_t(buf, stats, name, start + i as i64, v, agg, relaxed_assign)?;
+    }
+    Ok(())
+}
+
+fn fold_run_t<T: Scalar>(
+    buf: &mut TBuf<T>,
+    stats: &mut StorageStats,
+    name: &str,
+    elem: i64,
+    vals: &[f32],
+    agg: AggOp,
+    relaxed_assign: bool,
+) -> Result<(), String> {
+    if vals.is_empty() {
+        return Ok(());
+    }
+    if elem < 0 || elem as usize >= buf.len {
+        return Err(format!("write out of bounds: {name}[{elem}] (len {})", buf.len));
+    }
+    let e = elem as usize;
+    let written = buf.mask.get(e);
+    if agg == AggOp::Assign && !relaxed_assign && (written || vals.len() > 1) {
+        // Serial execution errors on the double assign (after the
+        // legal writes land) — delegate to the scalar path so the
+        // behavior matches exactly.
+        for &v in vals {
+            store_t(buf, stats, name, elem, v, agg, relaxed_assign)?;
+        }
+        return Ok(());
+    }
+    let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
+    let q = buf.quant;
+    // Fold in storage space: every combine round-trips the grid, so
+    // the result is bit-exact with one `store` call per lane (for f32
+    // the round-trips are identities and this is a plain f32 fold).
+    let mut acc: T;
+    let rest: &[f32];
+    if written {
+        acc = buf.pages[p][off];
+        rest = vals;
+    } else {
+        acc = T::from_f32(vals[0], q);
+        rest = &vals[1..];
+    }
+    for &v in rest {
+        acc = T::from_f32(agg.combine(acc.to_f32(q), v), q);
+    }
+    page_mut(&mut buf.pages[p], &mut stats.cow_bytes)[off] = acc;
+    if !written {
+        mask_mut(&mut buf.mask, &mut stats.cow_bytes).set(e);
+    }
+    Ok(())
+}
+
+fn snapshot_t<T: Scalar>(buf: &TBuf<T>) -> Vec<f32> {
+    let mut out = vec![0f32; buf.len];
+    for (p, page) in buf.pages.iter().enumerate() {
+        let lo = p * PAGE_ELEMS;
+        let take = (buf.len - lo).min(PAGE_ELEMS);
+        T::decode_slice(&page[..take], &mut out[lo..lo + take], buf.quant);
+    }
+    out
+}
+
+fn shared_pages_t<T: Scalar>(a: &TBuf<T>, b: &TBuf<T>) -> usize {
+    a.pages.iter().zip(&b.pages).filter(|(x, y)| Arc::ptr_eq(x, y)).count()
+}
+
+/// Merge one worker partition's writes into the master buffer —
+/// element copies stay in `T` (bit-preserving, no decode/encode), and
+/// byte accounting uses the dtype's element size.
+fn merge_tbuf<T: Scalar>(
+    buf: &mut TBuf<T>,
+    part_buf: &TBuf<T>,
+    stats: &mut StorageStats,
+    name: &str,
+) -> Result<usize, String> {
+    if part_buf.len != buf.len {
+        return Err(format!("partition shape drift on {name}: {} vs {}", part_buf.len, buf.len));
+    }
+    // Dirty-range skip: this partition never wrote the buffer, so
+    // there is nothing to scan at all.
+    let Some((dlo, dhi)) = part_buf.mask.dirty else { return Ok(0) };
+    let len = buf.len;
+    let mut merged = 0usize;
+    let mask = mask_mut(&mut buf.mask, &mut stats.cow_bytes);
+    for p in (dlo >> PAGE_SHIFT)..=(dhi >> PAGE_SHIFT) {
+        let wlo = p * WORDS_PER_PAGE;
+        let whi = (wlo + WORDS_PER_PAGE).min(mask.words.len());
+        // Zero-copy fast path: the worker wrote this whole page and we
+        // have not touched it — adopt the worker's page by pointer.
+        let page_full = (p + 1) * PAGE_ELEMS <= len
+            && part_buf.mask.words[wlo..whi].iter().all(|&w| w == !0u64)
+            && mask.words[wlo..whi].iter().all(|&w| w == 0);
+        if page_full {
+            buf.pages[p] = Arc::clone(&part_buf.pages[p]);
+            for w in &mut mask.words[wlo..whi] {
+                *w = !0u64;
+            }
+            mask.extend_dirty(p * PAGE_ELEMS, (p + 1) * PAGE_ELEMS - 1);
+            merged += PAGE_ELEMS;
+            stats.merged_elems += PAGE_ELEMS as u64;
+            stats.adopted_pages += 1;
+            continue;
+        }
+        for w in wlo..whi {
+            let pbits = part_buf.mask.words[w];
+            if pbits == 0 {
+                continue;
+            }
+            let overlap = mask.words[w] & pbits;
+            if overlap != 0 {
+                let e = (w << 6) + overlap.trailing_zeros() as usize;
+                return Err(format!(
+                    "parallel workers both wrote {name}[{e}] — disjointness \
+                     analysis violated"
+                ));
+            }
+            let dst = page_mut(&mut buf.pages[p], &mut stats.cow_bytes);
+            let src = &part_buf.pages[p];
+            let mut bits = pbits;
+            let mut first = 0usize;
+            let mut last = 0usize;
+            let mut n = 0usize;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                let e = (w << 6) | b;
+                let off = e & PAGE_MASK;
+                dst[off] = src[off];
+                if n == 0 {
+                    first = e;
+                }
+                last = e;
+                n += 1;
+                bits &= bits - 1;
+            }
+            mask.words[w] |= pbits;
+            mask.extend_dirty(first, last);
+            merged += n;
+            stats.merged_elems += n as u64;
+            stats.merged_bytes += (n * T::SIZE) as u64;
+        }
+    }
+    Ok(merged)
 }
 
 /// The set of live buffers during execution. Indices into the buffer
@@ -382,29 +900,35 @@ impl Buffers {
         self.stats
     }
 
-    fn take_page(&self) -> Arc<[f32]> {
+    fn take_page<T: Scalar>(&self) -> Arc<[T]> {
         match &self.pool {
             Some(pool) => pool.take_zero_page(),
-            None => Arc::from(vec![0.0f32; PAGE_ELEMS]),
+            None => Arc::from(vec![T::ZERO; PAGE_ELEMS]),
         }
     }
 
-    fn push_buf(&mut self, name: &str, len: usize, init: Option<&[f32]>) -> usize {
+    fn push_tbuf<T: Scalar>(
+        &mut self,
+        name: &str,
+        len: usize,
+        init: Option<&[f32]>,
+        quant: Quant,
+    ) -> usize {
         let n_pages = len.div_ceil(PAGE_ELEMS);
         let mut pages = Vec::with_capacity(n_pages);
         for p in 0..n_pages {
-            let mut page = self.take_page();
+            let mut page = self.take_page::<T>();
             if let Some(vals) = init {
                 let lo = p * PAGE_ELEMS;
                 let n = (vals.len() - lo).min(PAGE_ELEMS);
-                Arc::get_mut(&mut page).expect("fresh page is uniquely owned")[..n]
-                    .copy_from_slice(&vals[lo..lo + n]);
+                let dst = Arc::get_mut(&mut page).expect("fresh page is uniquely owned");
+                T::encode_slice(&vals[lo..lo + n], &mut dst[..n], quant);
             }
             pages.push(page);
         }
         let mask = Arc::new(WriteMask::with_len(len, init.is_some()));
         let id = self.bufs.len();
-        self.bufs.push(Buf { len, pages, mask });
+        self.bufs.push(T::wrap(TBuf { len, quant, pages, mask }));
         Arc::make_mut(&mut self.names).push(name.to_string());
         Arc::make_mut(&mut self.index)
             .entry(name.to_string())
@@ -412,16 +936,65 @@ impl Buffers {
         id
     }
 
-    /// Allocate a zero-filled buffer of `len` elements; returns its id.
-    pub fn alloc(&mut self, name: &str, len: usize) -> usize {
-        self.push_buf(name, len, None)
+    fn push_dtype(
+        &mut self,
+        name: &str,
+        len: usize,
+        init: Option<&[f32]>,
+        dtype: DType,
+        quant: Quant,
+    ) -> usize {
+        match dtype {
+            DType::F64 => self.push_tbuf::<f64>(name, len, init, quant),
+            DType::I32 => self.push_tbuf::<i32>(name, len, init, quant),
+            DType::I8 => self.push_tbuf::<i8>(name, len, init, quant),
+            // f16/bf16/i16 store at f32 precision (no native storage).
+            _ => self.push_tbuf::<f32>(name, len, init, quant),
+        }
     }
 
-    /// Allocate and fill with caller data (inputs/weights). Elements
-    /// count as written (reads see caller values, aggregations combine
-    /// with them).
+    /// Allocate a zero-filled f32 buffer of `len` elements; returns
+    /// its id.
+    pub fn alloc(&mut self, name: &str, len: usize) -> usize {
+        self.push_tbuf::<f32>(name, len, None, Quant::default())
+    }
+
+    /// Allocate and fill with caller data (f32 inputs/weights).
+    /// Elements count as written (reads see caller values,
+    /// aggregations combine with them).
     pub fn alloc_init(&mut self, name: &str, values: Vec<f32>) -> usize {
-        self.push_buf(name, values.len(), Some(&values))
+        self.push_tbuf::<f32>(name, values.len(), Some(&values), Quant::default())
+    }
+
+    /// Allocate a zero-filled buffer stored at `dtype` with that
+    /// dtype's default [`Quant`].
+    pub fn alloc_dtype(&mut self, name: &str, len: usize, dtype: DType) -> usize {
+        self.push_dtype(name, len, None, dtype, Quant::default_for(dtype))
+    }
+
+    /// Allocate and fill a buffer stored at `dtype`: the caller's f32
+    /// values are encoded through the storage grid on the way in (an
+    /// i8 input is quantized immediately, so reads see the
+    /// dequantized grid values, identically in every engine).
+    pub fn alloc_init_dtype(&mut self, name: &str, values: Vec<f32>, dtype: DType) -> usize {
+        self.push_dtype(name, values.len(), Some(&values), dtype, Quant::default_for(dtype))
+    }
+
+    /// [`Buffers::alloc_dtype`] with explicit quantization parameters.
+    pub fn alloc_dtype_q(&mut self, name: &str, len: usize, dtype: DType, quant: Quant) -> usize {
+        self.push_dtype(name, len, None, dtype, quant)
+    }
+
+    /// [`Buffers::alloc_init_dtype`] with explicit quantization
+    /// parameters.
+    pub fn alloc_init_dtype_q(
+        &mut self,
+        name: &str,
+        values: Vec<f32>,
+        dtype: DType,
+        quant: Quant,
+    ) -> usize {
+        self.push_dtype(name, values.len(), Some(&values), dtype, quant)
     }
 
     /// Buffer id behind a name (first allocation wins on duplicates).
@@ -434,34 +1007,36 @@ impl Buffers {
     }
 
     pub fn len_of(&self, id: usize) -> usize {
-        self.bufs[id].len
+        self.bufs[id].len()
     }
 
     pub fn count(&self) -> usize {
         self.bufs.len()
     }
 
-    /// Read one element. Unwritten elements read as 0.0 (matching the
-    /// zero-fill; the validator flags reads-before-writes where they are
-    /// semantically suspect).
+    /// The storage dtype behind a buffer id (one of `STORAGE`).
+    pub fn dtype_of(&self, id: usize) -> DType {
+        self.bufs[id].dtype()
+    }
+
+    /// A buffer's quantization parameters (only meaningful for i8).
+    pub fn quant_of(&self, id: usize) -> Quant {
+        for_buf!(&self.bufs[id], b => b.quant)
+    }
+
+    /// Read one element, decoded to f32. Unwritten elements read as 0.0
+    /// (matching the zero-fill; the validator flags reads-before-writes
+    /// where they are semantically suspect).
     #[inline]
     pub fn read(&self, id: usize, elem: i64) -> Result<f32, String> {
-        let buf = &self.bufs[id];
-        if elem < 0 || elem as usize >= buf.len {
-            return Err(format!(
-                "read out of bounds: {}[{elem}] (len {})",
-                self.names[id],
-                buf.len
-            ));
-        }
-        let e = elem as usize;
-        Ok(buf.pages[e >> PAGE_SHIFT][e & PAGE_MASK])
+        for_buf!(&self.bufs[id], b => read_t(b, &self.names[id], elem))
     }
 
     /// Write one element with Definition-2 aggregation semantics: the
-    /// first write assigns, later writes combine with `agg`. For
-    /// `AggOp::Assign`, a second write reports an error (illegal per
-    /// §3.2) unless `relaxed_assign` is set by the caller. Writes
+    /// first write assigns, later writes combine with `agg` — against
+    /// the decoded stored value, re-encoding through the storage grid.
+    /// For `AggOp::Assign`, a second write reports an error (illegal
+    /// per §3.2) unless `relaxed_assign` is set by the caller. Writes
     /// through a shared page un-share it first (copy-on-write).
     #[inline]
     pub fn store(
@@ -472,30 +1047,10 @@ impl Buffers {
         agg: AggOp,
         relaxed_assign: bool,
     ) -> Result<(), String> {
-        let buf = &mut self.bufs[id];
-        if elem < 0 || elem as usize >= buf.len {
-            return Err(format!(
-                "write out of bounds: {}[{elem}] (len {})",
-                self.names[id],
-                buf.len
-            ));
-        }
-        let e = elem as usize;
-        let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
-        if buf.mask.get(e) {
-            if agg == AggOp::Assign && !relaxed_assign {
-                return Err(format!(
-                    "double write to assign-aggregated {}[{elem}]",
-                    self.names[id]
-                ));
-            }
-            let combined = agg.combine(buf.pages[p][off], value);
-            page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off] = combined;
-        } else {
-            page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off] = value;
-            mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).set(e);
-        }
-        Ok(())
+        let Buffers { bufs, stats, names, .. } = self;
+        for_buf!(&mut bufs[id], b => {
+            store_t(b, stats, &names[id], elem, value, agg, relaxed_assign)
+        })
     }
 
     /// Read a contiguous run `[start, start + dst.len())` into `dst`,
@@ -503,27 +1058,7 @@ impl Buffers {
     /// (the per-element `read` pays it per call); unwritten elements
     /// read as 0.0, exactly like `read`.
     pub fn read_run_into(&self, id: usize, start: i64, dst: &mut [f32]) -> Result<(), String> {
-        if dst.is_empty() {
-            return Ok(());
-        }
-        let buf = &self.bufs[id];
-        let end = start + dst.len() as i64 - 1;
-        if start < 0 || end >= buf.len as i64 {
-            return Err(format!(
-                "read out of bounds: {}[{start}..={end}] (len {})",
-                self.names[id], buf.len
-            ));
-        }
-        let mut e = start as usize;
-        let mut filled = 0usize;
-        while filled < dst.len() {
-            let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
-            let n = (PAGE_ELEMS - off).min(dst.len() - filled);
-            dst[filled..filled + n].copy_from_slice(&buf.pages[p][off..off + n]);
-            filled += n;
-            e += n;
-        }
-        Ok(())
+        for_buf!(&self.bufs[id], b => read_run_t(b, &self.names[id], start, dst))
     }
 
     /// Gather `dst.len()` elements spaced `stride` apart starting at
@@ -536,25 +1071,7 @@ impl Buffers {
         stride: i64,
         dst: &mut [f32],
     ) -> Result<(), String> {
-        if dst.is_empty() {
-            return Ok(());
-        }
-        let buf = &self.bufs[id];
-        let last = start + stride * (dst.len() as i64 - 1);
-        let (lo, hi) = (start.min(last), start.max(last));
-        if lo < 0 || hi >= buf.len as i64 {
-            return Err(format!(
-                "read out of bounds: {}[{lo}..={hi}] (len {})",
-                self.names[id], buf.len
-            ));
-        }
-        let mut e = start;
-        for d in dst.iter_mut() {
-            let u = e as usize;
-            *d = buf.pages[u >> PAGE_SHIFT][u & PAGE_MASK];
-            e += stride;
-        }
-        Ok(())
+        for_buf!(&self.bufs[id], b => read_strided_t(b, &self.names[id], start, stride, dst))
     }
 
     /// Write a contiguous run with Definition-2 aggregation semantics
@@ -581,57 +1098,10 @@ impl Buffers {
         agg: AggOp,
         relaxed_assign: bool,
     ) -> Result<(), String> {
-        if vals.is_empty() {
-            return Ok(());
-        }
-        let end = start + vals.len() as i64 - 1;
-        if start < 0 || end >= self.bufs[id].len as i64 {
-            return Err(format!(
-                "write out of bounds: {}[{start}..={end}] (len {})",
-                self.names[id],
-                self.bufs[id].len
-            ));
-        }
-        let (lo, hi) = (start as usize, end as usize);
-        if !self.bufs[id].mask.any_set_in(lo, hi) {
-            // Fresh range: bulk assign + one ranged mask update.
-            let buf = &mut self.bufs[id];
-            let mut e = lo;
-            let mut done = 0usize;
-            while done < vals.len() {
-                let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
-                let n = (PAGE_ELEMS - off).min(vals.len() - done);
-                page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off..off + n]
-                    .copy_from_slice(&vals[done..done + n]);
-                done += n;
-                e += n;
-            }
-            mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).set_range(lo, hi);
-            return Ok(());
-        }
-        if agg != AggOp::Assign && self.bufs[id].mask.all_set_in(lo, hi) {
-            // Fully written: combine in place, masks unchanged.
-            let buf = &mut self.bufs[id];
-            let mut e = lo;
-            let mut done = 0usize;
-            while done < vals.len() {
-                let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
-                let n = (PAGE_ELEMS - off).min(vals.len() - done);
-                let dst = page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes);
-                for i in 0..n {
-                    dst[off + i] = agg.combine(dst[off + i], vals[done + i]);
-                }
-                done += n;
-                e += n;
-            }
-            return Ok(());
-        }
-        // Mixed range (or Assign over written data): per-element
-        // Definition-2 path with its exact error reporting.
-        for (i, &v) in vals.iter().enumerate() {
-            self.store(id, start + i as i64, v, agg, relaxed_assign)?;
-        }
-        Ok(())
+        let Buffers { bufs, stats, names, .. } = self;
+        for_buf!(&mut bufs[id], b => {
+            write_run_t(b, stats, &names[id], start, vals, agg, relaxed_assign)
+        })
     }
 
     /// Aggregate a lane sequence into **one** element in lane order —
@@ -649,73 +1119,39 @@ impl Buffers {
         agg: AggOp,
         relaxed_assign: bool,
     ) -> Result<(), String> {
-        if vals.is_empty() {
-            return Ok(());
-        }
-        let buf = &self.bufs[id];
-        if elem < 0 || elem as usize >= buf.len {
-            return Err(format!(
-                "write out of bounds: {}[{elem}] (len {})",
-                self.names[id], buf.len
-            ));
-        }
-        let e = elem as usize;
-        let written = buf.mask.get(e);
-        if agg == AggOp::Assign && !relaxed_assign && (written || vals.len() > 1) {
-            // Serial execution errors on the double assign (after the
-            // legal writes land) — delegate to the scalar path so the
-            // behavior matches exactly.
-            for &v in vals {
-                self.store(id, elem, v, agg, relaxed_assign)?;
-            }
-            return Ok(());
-        }
-        let (p, off) = (e >> PAGE_SHIFT, e & PAGE_MASK);
-        let mut acc;
-        let rest: &[f32];
-        if written {
-            acc = buf.pages[p][off];
-            rest = vals;
-        } else {
-            acc = vals[0];
-            rest = &vals[1..];
-        }
-        for &v in rest {
-            acc = agg.combine(acc, v);
-        }
-        let buf = &mut self.bufs[id];
-        page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes)[off] = acc;
-        if !written {
-            mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).set(e);
-        }
-        Ok(())
+        let Buffers { bufs, stats, names, .. } = self;
+        for_buf!(&mut bufs[id], b => {
+            fold_run_t(b, stats, &names[id], elem, vals, agg, relaxed_assign)
+        })
     }
 
     /// True if a specific element has been written (test introspection
     /// for the bulk-write paths).
     pub fn written(&self, id: usize, elem: usize) -> bool {
-        self.bufs[id].mask.get(elem)
+        self.bufs[id].mask().get(elem)
     }
 
     /// Reset write tracking for a buffer (used when an op legitimately
     /// rewrites a temp, e.g. reusing scratch between iterations). Only
     /// the dirty word range is cleared.
     pub fn reset_written(&mut self, id: usize) {
-        let buf = &mut self.bufs[id];
-        mask_mut(&mut buf.mask, &mut self.stats.cow_bytes).clear();
+        let Buffers { bufs, stats, .. } = self;
+        for_buf!(&mut bufs[id], b => {
+            mask_mut(&mut b.mask, &mut stats.cow_bytes).clear()
+        })
     }
 
     /// True if any element of the buffer has been written. O(1): the
     /// mask tracks a dirty bound.
     pub fn written_any(&self, id: usize) -> bool {
-        self.bufs[id].mask.dirty.is_some()
+        self.bufs[id].mask().dirty.is_some()
     }
 
     /// The inclusive element bounds covering this buffer's written
     /// elements (`None` when nothing is written). A conservative
     /// superset of the exact write set.
     pub fn dirty_range(&self, id: usize) -> Option<(usize, usize)> {
-        self.bufs[id].mask.dirty
+        self.bufs[id].mask().dirty
     }
 
     /// Merge per-worker partitions back after a parallel block run.
@@ -735,96 +1171,34 @@ impl Buffers {
     /// are adopted by pointer — zero bytes copied.
     pub fn merge_disjoint(&mut self, parts: &[Buffers], ids: &[usize]) -> Result<usize, String> {
         let mut merged = 0usize;
+        let Buffers { bufs, stats, names, .. } = self;
         for &id in ids {
             for part in parts {
-                let part_buf = &part.bufs[id];
-                if part_buf.len != self.bufs[id].len {
-                    return Err(format!(
-                        "partition shape drift on {}: {} vs {}",
-                        self.names[id],
-                        part_buf.len,
-                        self.bufs[id].len
-                    ));
-                }
-                // Dirty-range skip: this partition never wrote the
-                // buffer, so there is nothing to scan at all.
-                let Some((dlo, dhi)) = part_buf.mask.dirty else { continue };
-                let buf = &mut self.bufs[id];
-                let len = buf.len;
-                let mask = mask_mut(&mut buf.mask, &mut self.stats.cow_bytes);
-                for p in (dlo >> PAGE_SHIFT)..=(dhi >> PAGE_SHIFT) {
-                    let wlo = p * WORDS_PER_PAGE;
-                    let whi = (wlo + WORDS_PER_PAGE).min(mask.words.len());
-                    // Zero-copy fast path: the worker wrote this whole
-                    // page and we have not touched it — adopt the
-                    // worker's page by pointer.
-                    let page_full = (p + 1) * PAGE_ELEMS <= len
-                        && part_buf.mask.words[wlo..whi].iter().all(|&w| w == !0u64)
-                        && mask.words[wlo..whi].iter().all(|&w| w == 0);
-                    if page_full {
-                        buf.pages[p] = Arc::clone(&part_buf.pages[p]);
-                        for w in &mut mask.words[wlo..whi] {
-                            *w = !0u64;
-                        }
-                        mask.extend_dirty(p * PAGE_ELEMS, (p + 1) * PAGE_ELEMS - 1);
-                        merged += PAGE_ELEMS;
-                        self.stats.merged_elems += PAGE_ELEMS as u64;
-                        self.stats.adopted_pages += 1;
-                        continue;
+                merged += match (&mut bufs[id], &part.bufs[id]) {
+                    (Buf::F32(m), Buf::F32(p)) => merge_tbuf(m, p, stats, &names[id])?,
+                    (Buf::F64(m), Buf::F64(p)) => merge_tbuf(m, p, stats, &names[id])?,
+                    (Buf::I32(m), Buf::I32(p)) => merge_tbuf(m, p, stats, &names[id])?,
+                    (Buf::I8(m), Buf::I8(p)) => merge_tbuf(m, p, stats, &names[id])?,
+                    // Forks are clones, so partition dtypes always
+                    // match — reaching this arm means corruption.
+                    (m, p) => {
+                        return Err(format!(
+                            "partition dtype drift on {}: {} vs {}",
+                            names[id],
+                            p.dtype(),
+                            m.dtype()
+                        ))
                     }
-                    for w in wlo..whi {
-                        let pbits = part_buf.mask.words[w];
-                        if pbits == 0 {
-                            continue;
-                        }
-                        let overlap = mask.words[w] & pbits;
-                        if overlap != 0 {
-                            let e = (w << 6) + overlap.trailing_zeros() as usize;
-                            return Err(format!(
-                                "parallel workers both wrote {}[{e}] — disjointness \
-                                 analysis violated",
-                                self.names[id]
-                            ));
-                        }
-                        let dst = page_mut(&mut buf.pages[p], &mut self.stats.cow_bytes);
-                        let src = &part_buf.pages[p];
-                        let mut bits = pbits;
-                        let mut first = 0usize;
-                        let mut last = 0usize;
-                        let mut n = 0usize;
-                        while bits != 0 {
-                            let b = bits.trailing_zeros() as usize;
-                            let e = (w << 6) | b;
-                            let off = e & PAGE_MASK;
-                            dst[off] = src[off];
-                            if n == 0 {
-                                first = e;
-                            }
-                            last = e;
-                            n += 1;
-                            bits &= bits - 1;
-                        }
-                        mask.words[w] |= pbits;
-                        mask.extend_dirty(first, last);
-                        merged += n;
-                        self.stats.merged_elems += n as u64;
-                        self.stats.merged_bytes += (n * 4) as u64;
-                    }
-                }
+                };
             }
         }
         Ok(merged)
     }
 
-    /// Take a snapshot of a buffer's contents (contiguous copy).
+    /// Take a snapshot of a buffer's contents (contiguous copy,
+    /// decoded to f32).
     pub fn snapshot(&self, id: usize) -> Vec<f32> {
-        let buf = &self.bufs[id];
-        let mut out = Vec::with_capacity(buf.len);
-        for (p, page) in buf.pages.iter().enumerate() {
-            let take = (buf.len - p * PAGE_ELEMS).min(PAGE_ELEMS);
-            out.extend_from_slice(&page[..take]);
-        }
-        out
+        for_buf!(&self.bufs[id], b => snapshot_t(b))
     }
 
     /// Return every uniquely-owned page to this instance's pool (no-op
@@ -834,26 +1208,29 @@ impl Buffers {
     pub fn release(mut self) {
         let Some(pool) = self.pool.take() else { return };
         for buf in self.bufs.drain(..) {
-            for page in buf.pages {
-                pool.put_page(page);
-            }
+            for_buf!(buf, b => {
+                for page in b.pages {
+                    pool.put_page(page);
+                }
+            })
         }
     }
 
     /// How many of a buffer's pages are physically shared with the same
     /// buffer of `other` (test introspection for CoW semantics).
     pub fn pages_shared_with(&self, other: &Buffers, id: usize) -> usize {
-        self.bufs[id]
-            .pages
-            .iter()
-            .zip(&other.bufs[id].pages)
-            .filter(|(a, b)| Arc::ptr_eq(a, b))
-            .count()
+        match (&self.bufs[id], &other.bufs[id]) {
+            (Buf::F32(a), Buf::F32(b)) => shared_pages_t(a, b),
+            (Buf::F64(a), Buf::F64(b)) => shared_pages_t(a, b),
+            (Buf::I32(a), Buf::I32(b)) => shared_pages_t(a, b),
+            (Buf::I8(a), Buf::I8(b)) => shared_pages_t(a, b),
+            _ => 0,
+        }
     }
 
     /// Number of storage pages backing a buffer.
     pub fn page_count(&self, id: usize) -> usize {
-        self.bufs[id].pages.len()
+        for_buf!(&self.bufs[id], b => b.pages.len())
     }
 }
 
@@ -1281,5 +1658,162 @@ mod tests {
         assert_eq!(b.snapshot(id), Vec::<f32>::new());
         let id2 = b.alloc_init("z2", Vec::new());
         assert!(!b.written_any(id2));
+    }
+
+    #[test]
+    fn dtype_storage_mapping_and_defaults() {
+        let mut b = Buffers::new();
+        for (dt, want) in [
+            (DType::F32, DType::F32),
+            (DType::F64, DType::F64),
+            (DType::I32, DType::I32),
+            (DType::I8, DType::I8),
+            // No native storage: held at f32 precision.
+            (DType::F16, DType::F32),
+            (DType::BF16, DType::F32),
+            (DType::I16, DType::F32),
+        ] {
+            let id = b.alloc_dtype(dt.name(), 8, dt);
+            assert_eq!(b.dtype_of(id), want, "{dt}");
+        }
+        assert_eq!(b.quant_of(b.id_of("i8").unwrap()), Quant { scale: 1.0 / 16.0, zero_point: 0 });
+        assert_eq!(b.quant_of(b.id_of("f32").unwrap()), Quant::default());
+    }
+
+    #[test]
+    fn i8_round_trips_grid_values_exactly() {
+        // Default i8 scale is 1/16 — multiples of 1/16 within ±8 sit
+        // exactly on the grid and must round-trip bit-for-bit.
+        let vals = vec![0.0f32, 1.0, -1.0, 0.0625, -0.0625, 7.9375, -8.0, 2.5];
+        let mut b = Buffers::new();
+        let id = b.alloc_init_dtype("q", vals.clone(), DType::I8);
+        assert_eq!(b.snapshot(id), vals);
+        // Off-grid values snap to the nearest grid point...
+        let id2 = b.alloc_init_dtype("q2", vec![0.03, 100.0, -100.0], DType::I8);
+        let snap = b.snapshot(id2);
+        assert_eq!(snap[0], 0.0625 * (0.03f32 / 0.0625).round());
+        // ...and out-of-range values clamp at the i8 rails.
+        assert_eq!(snap[1], 127.0 / 16.0);
+        assert_eq!(snap[2], -128.0 / 16.0);
+    }
+
+    #[test]
+    fn i8_zero_point_shifts_representable_range() {
+        let q = Quant { scale: 0.5, zero_point: 100 };
+        let mut b = Buffers::new();
+        let id = b.alloc_dtype_q("q", 2, DType::I8, q);
+        // With zero_point 100 the range is [-114, 13.5] in steps of 0.5.
+        b.store(id, 0, 13.5, AggOp::Assign, false).unwrap();
+        b.store(id, 1, -114.0, AggOp::Assign, false).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), 13.5);
+        assert_eq!(b.read(id, 1).unwrap(), -114.0);
+    }
+
+    #[test]
+    fn i32_stores_round_to_nearest() {
+        let mut b = Buffers::new();
+        let id = b.alloc_dtype("n", 4, DType::I32);
+        b.store(id, 0, 2.4, AggOp::Assign, false).unwrap();
+        b.store(id, 1, 2.6, AggOp::Assign, false).unwrap();
+        b.store(id, 2, -2.5, AggOp::Assign, false).unwrap();
+        b.store(id, 3, f32::NAN, AggOp::Assign, false).unwrap();
+        assert_eq!(b.snapshot(id), vec![2.0, 3.0, -3.0, 0.0]);
+        // Aggregation combines against the decoded (rounded) value.
+        b.store(id, 0, 0.4, AggOp::Add, false).unwrap();
+        assert_eq!(b.read(id, 0).unwrap(), 2.0); // round(2.0 + 0.4)
+    }
+
+    #[test]
+    fn f64_storage_round_trips_f32_exactly() {
+        let vals = vec![0.1f32, -3.7, 1e-30, 1e30, std::f32::consts::PI];
+        let mut b = Buffers::new();
+        let id = b.alloc_init_dtype("d", vals.clone(), DType::F64);
+        assert_eq!(b.snapshot(id), vals, "f32→f64→f32 must be lossless");
+    }
+
+    #[test]
+    fn bulk_run_ops_match_store_per_dtype() {
+        // write_run / fold_run / read_run_into must be bit-exact with
+        // per-element store/read for every storage dtype — this is the
+        // invariant that keeps the kernel engine equal to the naive
+        // interpreter on quantized buffers.
+        let lanes = [0.3f32, -1.7, 2.26, 0.055, 4.9];
+        for dt in DType::STORAGE {
+            let mut bulk = Buffers::new();
+            let ib = bulk.alloc_dtype("b", 8, dt);
+            bulk.write_run(ib, 1, &lanes, AggOp::Add, false).unwrap();
+            bulk.write_run(ib, 1, &lanes, AggOp::Add, false).unwrap();
+            bulk.fold_run(ib, 0, &lanes, AggOp::Add, false).unwrap();
+            let mut ser = Buffers::new();
+            let is = ser.alloc_dtype("s", 8, dt);
+            for _rep in 0..2 {
+                for (i, &v) in lanes.iter().enumerate() {
+                    ser.store(is, 1 + i as i64, v, AggOp::Add, false).unwrap();
+                }
+            }
+            for &v in &lanes {
+                ser.store(is, 0, v, AggOp::Add, false).unwrap();
+            }
+            assert_eq!(bulk.snapshot(ib), ser.snapshot(is), "{dt}");
+            let mut got = vec![0f32; 8];
+            bulk.read_run_into(ib, 0, &mut got).unwrap();
+            assert_eq!(got, ser.snapshot(is), "{dt} read_run");
+        }
+    }
+
+    #[test]
+    fn cow_accounting_uses_dtype_sized_bytes() {
+        let mut parent = Buffers::new();
+        let id = parent.alloc_dtype("q", 3000, DType::I8); // 3 pages
+        let mut fork = parent.fork();
+        fork.store(id, 5, 1.0, AggOp::Assign, false).unwrap();
+        // One i8 page (1 byte/elem) plus the buffer's mask.
+        let expected = PAGE_ELEMS as u64 + (3000usize.div_ceil(64) * 8) as u64;
+        assert_eq!(fork.stats().cow_bytes, expected);
+        assert_eq!(fork.pages_shared_with(&parent, id), 2);
+    }
+
+    #[test]
+    fn merge_accounts_dtype_sized_bytes_and_adopts_pages() {
+        let len = 2 * PAGE_ELEMS;
+        let mut master = Buffers::new();
+        let id = master.alloc_dtype("o", len, DType::I8);
+        let mut w0 = master.fork();
+        let mut w1 = master.fork();
+        for e in 0..PAGE_ELEMS {
+            w0.store(id, e as i64, 1.0, AggOp::Assign, false).unwrap();
+        }
+        for e in PAGE_ELEMS..PAGE_ELEMS + 10 {
+            w1.store(id, e as i64, 2.0, AggOp::Assign, false).unwrap();
+        }
+        let n = master.merge_disjoint(&[w0, w1], &[id]).unwrap();
+        assert_eq!(n, PAGE_ELEMS + 10);
+        let st = master.stats();
+        assert_eq!(st.adopted_pages, 1);
+        assert_eq!(st.merged_bytes, 10, "i8 merges account 1 byte per element");
+        let snap = master.snapshot(id);
+        assert!(snap[..PAGE_ELEMS].iter().all(|&v| v == 1.0));
+        assert!(snap[PAGE_ELEMS..PAGE_ELEMS + 10].iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn pool_keeps_dtype_lists_separate() {
+        let pool = Arc::new(BufferPool::with_capacity(64));
+        let mut a = Buffers::with_pool(Some(Arc::clone(&pool)));
+        a.alloc_dtype("q", PAGE_ELEMS, DType::I8);
+        a.alloc_dtype("d", PAGE_ELEMS, DType::F64);
+        a.release();
+        assert_eq!(pool.free_pages(), 2);
+        // A fresh f32 allocation cannot be served from the i8/f64
+        // lists: it must miss.
+        let mut b = Buffers::with_pool(Some(Arc::clone(&pool)));
+        b.alloc("x", PAGE_ELEMS);
+        assert_eq!(pool.hits.load(Relaxed), 0);
+        assert_eq!(pool.misses.load(Relaxed), 3);
+        // Same-dtype allocations do recycle.
+        let mut c = Buffers::with_pool(Some(Arc::clone(&pool)));
+        let qid = c.alloc_dtype("q2", PAGE_ELEMS, DType::I8);
+        assert_eq!(pool.hits.load(Relaxed), 1);
+        assert_eq!(c.read(qid, 0).unwrap(), 0.0);
     }
 }

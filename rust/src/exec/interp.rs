@@ -69,6 +69,12 @@ pub struct ExecOptions {
     /// Which engine executes op blocks — serially, or per worker chunk
     /// when `workers > 1`. Defaults to the serial plan.
     pub engine: Engine,
+    /// Execute kernel-engine lane bodies through the SIMD-shaped
+    /// chunked kernels (`exec::simd`). Off retains the per-element
+    /// lane interpreter — bitwise identical, used as the measured
+    /// baseline for the simd speedup gate (`stripe run --simd-check`).
+    /// Ignored by the naive and planned engines.
+    pub simd: bool,
     /// Optional page pool: buffers draw their backing pages from it and
     /// return them when the run finishes, so repeated requests (the
     /// coordinator's service path) recycle allocations instead of
@@ -91,6 +97,7 @@ impl Default for ExecOptions {
             max_iterations: 200_000_000,
             workers: 1,
             engine: Engine::default(),
+            simd: true,
             pool: None,
         }
     }
@@ -175,7 +182,10 @@ pub fn run_program_sink(
     sink: &mut dyn Sink,
 ) -> Result<BTreeMap<String, Vec<f32>>, ExecError> {
     let mut bufs = Buffers::with_pool(opts.pool.clone());
-    // Allocate program buffers.
+    // Allocate program buffers with their declared storage dtype
+    // (program-level buffers are typed; block-local scratch below
+    // stays f32 — identical to the planned/kernel engines, which is
+    // what keeps all engines bit-exact per dtype).
     for b in &program.buffers {
         let span = b.ttype.span_elems() as usize;
         match b.kind {
@@ -194,10 +204,10 @@ pub fn run_program_sink(
                         ),
                     });
                 }
-                bufs.alloc_init(&b.name, vals.clone());
+                bufs.alloc_init_dtype(&b.name, vals.clone(), b.ttype.dtype);
             }
             BufKind::Output | BufKind::Temp => {
-                bufs.alloc(&b.name, span);
+                bufs.alloc_dtype(&b.name, span, b.ttype.dtype);
             }
         }
     }

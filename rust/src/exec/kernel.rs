@@ -3,12 +3,18 @@
 //! The pipeline (§1.3) is `Block` → [`Plan`] (slot resolution, one
 //! flat dot product per view) → **lowered kernel form** (this module):
 //! the innermost polyhedral band of each leaf block is compiled into a
-//! fused run-level kernel over contiguous `f32` runs, with the per-
-//! element constraint / bounds / write-mask machinery hoisted out of
-//! the loop. The scalar odometer stays available as the guarded
-//! fallback, so lowering is always a pure optimization — semantics are
-//! bit-exact with the planned path (the differential harness pins
-//! naive ≡ planned ≡ kernel ≡ parallel).
+//! fused run-level kernel over contiguous runs, with the per-element
+//! constraint / bounds / write-mask machinery hoisted out of the loop
+//! and the lane bodies executed through the SIMD-shaped kernel table
+//! in [`super::simd`] (fixed 8-wide chunks stable rustc
+//! auto-vectorizes). Lane values are always f32 registers; the
+//! *storage* dtype (f32/f64/i32/quantized i8) lives entirely in the
+//! buffer layer, which decodes runs on read and encodes on write — so
+//! one kernel table serves every dtype. The scalar odometer stays
+//! available as the guarded fallback, so lowering is always a pure
+//! optimization — semantics are bit-exact with the planned path (the
+//! differential harness pins naive ≡ planned ≡ kernel ≡ parallel for
+//! every storage dtype).
 //!
 //! # Lowering criteria — when a band vectorizes
 //!
@@ -59,24 +65,41 @@
 //!   masks per-range, not per-bit); otherwise the run demotes to the
 //!   guarded lanes, preserving exact serial error behavior.
 //!
-//! # Fused kernel forms
+//! # Fused kernel forms and SIMD dispatch
 //!
-//! Classified statically for dispatch (everything else runs the
-//! generic lane program, still free of per-element checks):
+//! Classified statically for dispatch. Under [`ExecOptions::simd`]
+//! (the default) each form's lane body runs through the chunked
+//! kernels in [`super::simd`]; with `simd: false` the same forms run
+//! the retained per-element lane interpreter — the measured baseline
+//! for the simd speedup gate (`stripe run --simd-check`). Both paths
+//! are bitwise identical (no FMA contraction, identical op order):
 //!
-//! | form | body | examples |
-//! |------|------|----------|
-//! | fill | no loads | zero/constant init |
-//! | copy | load → store | maxpool (`max=`), flatten |
-//! | map  | load → unary chain → store | relu, tanh |
-//! | zip  | load × load → binop → store | add, mul; axpy when one side broadcasts; dot when the store reduces |
+//! | form | body | simd execution | examples |
+//! |------|------|----------------|----------|
+//! | fill | no loads | evaluate once, `fill` the run | zero/constant init |
+//! | copy | load → store | `copy_from_slice` | maxpool (`max=`), flatten |
+//! | map  | load → unary chain → store | first op src→out, rest in place | relu, tanh |
+//! | zip  | load × load → binop → store | binary kernel; broadcast sides splat-materialized | add, mul; axpy; dot when the store reduces |
+//! | mul-add | load ×3 → mul, add → store | fused `a[i]*b[i]+c[i]` kernel | scale-and-accumulate bodies |
+//! | generic | any `Load* (Const\|Intr)* Store` | register program over full-length lanes | fused multi-op bodies |
+//!
+//! A generic body whose ops all have table entries vectorizes as a
+//! register program (each scalar register widens to a full-length
+//! lane); ternary `Select` has no kernel and demotes that run to the
+//! per-element interpreter. Reduce-kind stores vectorize their
+//! *gathers and lane math* only — the final fold keeps serial lane
+//! order in [`Buffers::fold_run`], because reassociating a float
+//! reduction would break bit-exactness.
 //!
 //! Coverage accounting: every leaf iteration handled by the lowered
 //! band machinery (including runs skipped whole by the hoisted
 //! constraint check) counts as a *vector lane*; iterations that fell
-//! back to the guarded odometer count as *scalar lanes*. The
-//! coordinator records the per-op split in the compiled schedule, and
-//! `stripe run --engine kernel` reports it per run.
+//! back to the guarded odometer count as *scalar lanes*. The split is
+//! independent of the `simd` toggle (the toggle changes *how* covered
+//! lanes compute, not which lanes are covered), so coverage compares
+//! cleanly across both modes. The coordinator records the per-op
+//! split in the compiled schedule, and `stripe run --engine kernel`
+//! reports it per run.
 //!
 //! The kernel engine does not drive a trace [`super::trace::Sink`]
 //! (runs would have to be decomposed back into per-element events);
@@ -89,6 +112,7 @@ use crate::ir::{AggOp, Block, BufKind, IntrOp, Program, Statement};
 use super::buffer::Buffers;
 use super::interp::{ExecError, ExecOptions};
 use super::plan::{PStmt, Plan, RootScope, View};
+use super::simd;
 
 /// Lane counters for one execution: how many leaf iterations ran
 /// through vector kernels vs the guarded scalar odometer.
@@ -193,14 +217,18 @@ enum StoreKind {
     Reduce,
 }
 
-/// Fused kernel form (see the module docs' table). `Generic` interprets
-/// the lane register program per lane and covers every conforming body.
+/// Fused kernel form (see the module docs' table). `MulAdd` fields are
+/// *load positions* (indexes into `Leaf::loads`) for the two multiply
+/// operands and the addend. `Generic` runs the lane register program —
+/// vectorized over full-length register lanes when every op has a
+/// kernel-table entry, per lane otherwise.
 #[derive(Debug, Clone)]
 enum Form {
     Fill,
     Copy,
     Map(Vec<IntrOp>),
     Zip(IntrOp),
+    MulAdd { a: usize, b: usize, c: usize },
     Generic,
 }
 
@@ -383,6 +411,26 @@ fn classify_form(loads: &[LeafLoad], ops: &[LaneOp], store_reg: usize) -> Form {
             }
         }
     }
+    // Mul-then-add over three distinct loads with the product as the
+    // add's first operand: the fused axpy kernel. (Product-second or
+    // register-aliased bodies stay Generic, which still vectorizes
+    // them as a register program with the exact serial op order.)
+    if loads.len() == 3 && ops.len() == 2 {
+        if let (
+            LaneOp::Intr { op: IntrOp::Mul, args: m, n: 2, out: t },
+            LaneOp::Intr { op: IntrOp::Add, args: a, n: 2, out },
+        ) = (&ops[0], &ops[1])
+        {
+            let regs = [loads[0].reg, loads[1].reg, loads[2].reg];
+            let distinct = regs[0] != regs[1] && regs[0] != regs[2] && regs[1] != regs[2];
+            let pos = |r: usize| regs.iter().position(|&x| x == r);
+            if *out == store_reg && distinct && a[0] == *t && a[1] != *t {
+                if let (Some(pa), Some(pb), Some(pc)) = (pos(m[0]), pos(m[1]), pos(a[1])) {
+                    return Form::MulAdd { a: pa, b: pb, c: pc };
+                }
+            }
+        }
+    }
     Form::Generic
 }
 
@@ -461,6 +509,8 @@ pub(crate) fn exec_block_kernel(
         out_lane: Vec::new(),
         srcs: Vec::new(),
         regs: Vec::new(),
+        reg_lanes: Vec::new(),
+        lane_tmp: Vec::new(),
     };
     exec.run(&plan, &kp, &scope.views, &[])?;
     Ok((exec.executed, exec.stats))
@@ -540,6 +590,12 @@ struct KernelExec<'a> {
     srcs: Vec<Src>,
     /// Register scratch for the Fill/Generic forms (reused across runs).
     regs: Vec<f32>,
+    /// Full-length register lanes for the vectorized Generic register
+    /// program (reused across runs).
+    reg_lanes: Vec<Vec<f32>>,
+    /// Kernel output staging for the vectorized register program
+    /// (swapped, never copied; reused across runs).
+    lane_tmp: Vec<f32>,
 }
 
 /// A resolved lane source: a gathered run or a broadcast scalar.
@@ -744,6 +800,14 @@ impl<'a> KernelExec<'a> {
     /// One fused kernel run: gather, compute, bulk store. All scratch
     /// (lane buffers, sources, registers) lives on the executor and is
     /// reused across runs — this sits inside the band's outer odometer.
+    ///
+    /// Under `opts.simd` broadcast sources (inner coefficient 0) are
+    /// materialized into splat-filled lanes so every kernel sees
+    /// uniform slice operands; the compute step then dispatches the
+    /// form through the [`super::simd`] table, falling back to the
+    /// per-element lane interpreter for anything the table cannot
+    /// express. With `opts.simd` off, the per-element interpreter is
+    /// the only compute path — the honest scalar baseline.
     fn exec_run(&mut self, plan: &Plan, leaf: &Leaf, st: &BandState) -> Result<(), String> {
         let n = leaf.n as usize;
         // Gather inputs.
@@ -754,7 +818,14 @@ impl<'a> KernelExec<'a> {
             let start = st.cur_offsets[ld.ref_slot];
             if c == 0 {
                 let val = self.bufs.read(v.buf, start)?;
-                self.srcs.push(Src::Scalar(val));
+                if self.opts.simd {
+                    let lane = &mut self.lanes[i];
+                    lane.resize(n, 0.0);
+                    lane.fill(val);
+                    self.srcs.push(Src::Run(i));
+                } else {
+                    self.srcs.push(Src::Scalar(val));
+                }
             } else {
                 let lane = &mut self.lanes[i];
                 lane.resize(n, 0.0);
@@ -767,6 +838,135 @@ impl<'a> KernelExec<'a> {
             }
         }
         // Compute the output lanes.
+        if !(self.opts.simd && self.try_compute_simd(plan, leaf, n)) {
+            self.compute_lanes_scalar(plan, leaf, n);
+        }
+        // Bulk store.
+        let out = &self.out_lane;
+        let sv = &st.views[leaf.store_ref];
+        let start = st.cur_offsets[leaf.store_ref];
+        match leaf.kind {
+            StoreKind::Run => {
+                self.bufs.write_run(sv.buf, start, out, sv.agg, self.opts.relaxed_assign)?
+            }
+            StoreKind::Reduce => {
+                self.bufs.fold_run(sv.buf, start, out, sv.agg, self.opts.relaxed_assign)?
+            }
+        }
+        Ok(())
+    }
+
+    /// Vectorized lane computation for one run via the kernel table.
+    /// Returns `false` when the form resists vectorization (ternary
+    /// `Select` in a generic body, a source that stayed scalar) — the
+    /// caller then recomputes the whole run per element, so a partial
+    /// write to `out_lane` here is always overwritten.
+    fn try_compute_simd(&mut self, plan: &Plan, leaf: &Leaf, n: usize) -> bool {
+        self.out_lane.clear();
+        self.out_lane.resize(n, 0.0);
+        match &leaf.form {
+            Form::Fill => {
+                // No loads: the body is lane-invariant — run it once.
+                self.regs.clear();
+                self.regs.resize(plan.n_regs, 0.0);
+                eval_ops(&leaf.lane_ops, &mut self.regs);
+                let v = self.regs[leaf.store_reg];
+                self.out_lane.fill(v);
+                true
+            }
+            Form::Copy => match &self.srcs[0] {
+                Src::Run(i) => {
+                    let i = *i;
+                    self.out_lane.copy_from_slice(&self.lanes[i]);
+                    true
+                }
+                Src::Scalar(v) => {
+                    let v = *v;
+                    self.out_lane.fill(v);
+                    true
+                }
+            },
+            Form::Map(chain) => {
+                let Src::Run(i) = &self.srcs[0] else { return false };
+                let i = *i;
+                let Some((first, rest)) = chain.split_first() else { return false };
+                let Some(k) = simd::unary_fn(*first) else { return false };
+                k(&self.lanes[i], &mut self.out_lane);
+                for op in rest {
+                    let Some(ki) = simd::unary_inplace_fn(*op) else { return false };
+                    ki(&mut self.out_lane);
+                }
+                true
+            }
+            Form::Zip(op) => {
+                let Some(k) = simd::binary_fn(*op) else { return false };
+                let (Src::Run(a), Src::Run(b)) = (&self.srcs[0], &self.srcs[1]) else {
+                    return false;
+                };
+                k(&self.lanes[*a], &self.lanes[*b], &mut self.out_lane);
+                true
+            }
+            Form::MulAdd { a, b, c } => {
+                let (Src::Run(x), Src::Run(y), Src::Run(z)) =
+                    (&self.srcs[*a], &self.srcs[*b], &self.srcs[*c])
+                else {
+                    return false;
+                };
+                simd::mul_add(&self.lanes[*x], &self.lanes[*y], &self.lanes[*z], &mut self.out_lane);
+                true
+            }
+            Form::Generic => self.generic_simd(plan, leaf, n),
+        }
+    }
+
+    /// Vectorized generic register program: every scalar register
+    /// widens to a full-length lane, loads fill their registers, and
+    /// each op applies its table kernel over the whole run. Op order
+    /// and operand order match the per-element interpreter exactly, so
+    /// results are bitwise identical.
+    fn generic_simd(&mut self, plan: &Plan, leaf: &Leaf, n: usize) -> bool {
+        while self.reg_lanes.len() < plan.n_regs {
+            self.reg_lanes.push(Vec::new());
+        }
+        for rl in self.reg_lanes.iter_mut().take(plan.n_regs) {
+            rl.clear();
+            rl.resize(n, 0.0);
+        }
+        for (i, ld) in leaf.loads.iter().enumerate() {
+            match &self.srcs[i] {
+                Src::Run(j) => self.reg_lanes[ld.reg].copy_from_slice(&self.lanes[*j]),
+                Src::Scalar(v) => self.reg_lanes[ld.reg].fill(*v),
+            }
+        }
+        for op in &leaf.lane_ops {
+            match op {
+                LaneOp::Const { out, val } => self.reg_lanes[*out].fill(*val),
+                LaneOp::Intr { op, args, n: 1, out } => {
+                    let Some(k) = simd::unary_fn(*op) else { return false };
+                    self.lane_tmp.resize(n, 0.0);
+                    k(&self.reg_lanes[args[0]], &mut self.lane_tmp);
+                    std::mem::swap(&mut self.reg_lanes[*out], &mut self.lane_tmp);
+                }
+                LaneOp::Intr { op, args, n: 2, out } => {
+                    let Some(k) = simd::binary_fn(*op) else { return false };
+                    self.lane_tmp.resize(n, 0.0);
+                    k(&self.reg_lanes[args[0]], &self.reg_lanes[args[1]], &mut self.lane_tmp);
+                    std::mem::swap(&mut self.reg_lanes[*out], &mut self.lane_tmp);
+                }
+                // Ternary ops (Select) have no kernel: demote the run.
+                LaneOp::Intr { .. } => return false,
+            }
+        }
+        std::mem::swap(&mut self.out_lane, &mut self.reg_lanes[leaf.store_reg]);
+        true
+    }
+
+    /// Per-element lane computation — the retained scalar lane
+    /// interpreter. Runs when `opts.simd` is off (the measured
+    /// baseline for `--simd-check`) and as the in-band fallback for
+    /// runs the kernel table cannot express. Writes every element of
+    /// `out_lane`.
+    fn compute_lanes_scalar(&mut self, plan: &Plan, leaf: &Leaf, n: usize) {
         let out = &mut self.out_lane;
         out.clear();
         out.resize(n, 0.0);
@@ -812,7 +1012,7 @@ impl<'a> KernelExec<'a> {
                     *o = op.eval(&[get(&srcs[0], l), get(&srcs[1], l)]);
                 }
             }
-            Form::Generic => {
+            Form::MulAdd { .. } | Form::Generic => {
                 for (l, o) in out.iter_mut().enumerate() {
                     for (i, ld) in leaf.loads.iter().enumerate() {
                         regs[ld.reg] = get(&srcs[i], l);
@@ -822,18 +1022,6 @@ impl<'a> KernelExec<'a> {
                 }
             }
         }
-        // Bulk store.
-        let sv = &st.views[leaf.store_ref];
-        let start = st.cur_offsets[leaf.store_ref];
-        match leaf.kind {
-            StoreKind::Run => {
-                self.bufs.write_run(sv.buf, start, out, sv.agg, self.opts.relaxed_assign)?
-            }
-            StoreKind::Reduce => {
-                self.bufs.fold_run(sv.buf, start, out, sv.agg, self.opts.relaxed_assign)?
-            }
-        }
-        Ok(())
     }
 
     /// Guarded lanes for one run: per-lane constraint evaluation and
@@ -1180,6 +1368,94 @@ mod tests {
             // prediction is exact.
             assert_eq!(v, op.stats.vector_lanes, "{}: vector lanes", b.name);
         }
+    }
+
+    /// The simd toggle must not change results (both paths are
+    /// bitwise identical by construction) or the coverage split (the
+    /// toggle changes *how* covered lanes compute, not which lanes
+    /// the band machinery handles).
+    #[test]
+    fn scalar_lane_path_matches_simd_path_bitwise() {
+        for (p, seed) in [
+            (ops::cnn_program(), 21u64),
+            (ops::fig4_conv_program(), 22),
+            (ops::tiny_mlp_program(4, 8, 3), 23),
+        ] {
+            let inputs = gen_inputs(&p, seed);
+            let (vec_out, vec_rep) = run_program_kernel(&p, &inputs, &kernel_opts()).unwrap();
+            let scalar_opts = ExecOptions { simd: false, ..kernel_opts() };
+            let (sc_out, sc_rep) = run_program_kernel(&p, &inputs, &scalar_opts).unwrap();
+            assert_eq!(vec_out, sc_out, "{}: simd toggle changed results", p.name);
+            assert_eq!(
+                vec_rep.totals(),
+                sc_rep.totals(),
+                "{}: simd toggle changed lane accounting",
+                p.name
+            );
+        }
+    }
+
+    /// A three-load mul-then-add body classifies as the fused MulAdd
+    /// form, vectorizes fully, and matches the planned engine bitwise.
+    #[test]
+    fn mul_add_body_takes_the_fused_kernel() {
+        let t = TensorType::contiguous(DType::F32, &[64]);
+        let mut blk = contraction(
+            "muladd",
+            &[("x", 64)],
+            vec![],
+            Operand::new("O", vec![Affine::var("x")], &t),
+            crate::ir::AggOp::Assign,
+            &[
+                Operand::new("A", vec![Affine::var("x")], &t),
+                Operand::new("B", vec![Affine::var("x")], &t),
+            ],
+            IntrOp::Mul,
+        );
+        // Rewrite the body to O[x] = A[x] * B[x] + C[x].
+        let mut cref = blk.find_ref("A").unwrap().clone();
+        cref.from = "C".into();
+        cref.into = "C".into();
+        blk.refs.push(cref);
+        blk.stmts.clear();
+        for nm in ["A", "B", "C"] {
+            blk.stmts.push(Statement::Load { from: nm.into(), into: format!("${nm}") });
+        }
+        blk.stmts.push(Statement::Intrinsic {
+            op: IntrOp::Mul,
+            inputs: vec!["$A".into(), "$B".into()],
+            output: "$p".into(),
+        });
+        blk.stmts.push(Statement::Intrinsic {
+            op: IntrOp::Add,
+            inputs: vec!["$p".into(), "$C".into()],
+            output: "$o".into(),
+        });
+        blk.stmts.push(Statement::Store { from: "$o".into(), into: "O".into() });
+        let mut p = Program::new(
+            "muladd",
+            vec![
+                Buffer { name: "A".into(), kind: BufKind::Input, ttype: t.clone() },
+                Buffer { name: "B".into(), kind: BufKind::Input, ttype: t.clone() },
+                Buffer { name: "C".into(), kind: BufKind::Input, ttype: t.clone() },
+                Buffer { name: "O".into(), kind: BufKind::Output, ttype: t.clone() },
+            ],
+        );
+        p.main.stmts.push(Statement::Block(Box::new(blk)));
+        // The static classification picks the fused form.
+        let names: Vec<String> = p.main.refs.iter().map(|r| r.into.clone()).collect();
+        let strides: Vec<Vec<i64>> = p.main.refs.iter().map(|r| r.ttype.strides()).collect();
+        let Statement::Block(b) = &p.main.stmts[0] else { unreachable!() };
+        let plan = Plan::build(b, &names, &[]).unwrap();
+        let kp = lower(&plan, &strides).unwrap();
+        let leaf = kp.leaf.as_ref().expect("muladd body lowers");
+        assert!(
+            matches!(leaf.form, Form::MulAdd { a: 0, b: 1, c: 2 }),
+            "unexpected form {:?}",
+            leaf.form
+        );
+        let r = assert_kernel_exact(&p, 24);
+        assert_eq!(r.coverage(), Some(1.0), "{}", r.summary());
     }
 
     #[test]

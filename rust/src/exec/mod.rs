@@ -1,7 +1,7 @@
 //! Stripe interpreter — the semantic executor.
 //!
-//! The interpreter executes Stripe IR directly over real `f32` buffers,
-//! implementing Definition 2's semantics exactly:
+//! The interpreter executes Stripe IR directly over real, dtype-typed
+//! storage buffers, implementing Definition 2's semantics exactly:
 //!
 //! * iterations of a block are executed (here: serially, in
 //!   lexicographic order — any order is legal by construction);
@@ -28,7 +28,7 @@
 //! |--------|--------|-----|
 //! | naive interpreter | [`interp`] | ground truth; only path executing `Special` statements; access tracing |
 //! | serial plan | [`plan`] | slot-resolved odometer; default |
-//! | leaf kernel | [`kernel`] | plan + leaf-kernel lowering: fused run-level kernels (map/zip/axpy/reductions) over contiguous `f32` runs, constraint/OOB checks hoisted per band, guarded-odometer fallback |
+//! | leaf kernel | [`kernel`] | plan + leaf-kernel lowering: fused run-level kernels (fill/copy/map/zip/mul-add/generic) over contiguous runs, lane bodies executed through the SIMD-shaped chunked kernels in [`simd`], constraint/OOB checks hoisted per band, guarded-odometer fallback |
 //! | parallel | [`parallel`] | chunk dispatch across compute units; each chunk runs the planned or kernel engine |
 //!
 //! [`run_program_with`] dispatches from [`ExecOptions`]: `Special`s
@@ -39,32 +39,48 @@
 //! engine reports per-op coverage (% of leaf iterations executed via
 //! vector kernels) in a [`KernelReport`]; the compiled-network
 //! schedule records the static prediction of the same split.
+//! [`ExecOptions::simd`] (default on) toggles the chunked kernels;
+//! turning it off retains the per-element lane interpreter as the
+//! measured baseline — both paths are bitwise identical.
 //!
 //! # Memory model
 //!
 //! All engines execute over the storage subsystem in [`buffer`]:
-//! per-buffer **paged copy-on-write storage** (`Arc`-shared 4 KiB
-//! pages) with a compact write-mask bitset and **dirty-range
-//! tracking**. The properties the engines rely on:
+//! per-buffer **paged copy-on-write storage** (`Arc`-shared pages of
+//! [`PAGE_ELEMS`] elements) with a compact write-mask bitset and
+//! **dirty-range tracking**. Storage is **dtype-generic**: a buffer
+//! holds native `f32`, `f64`, or `i32` words, or affine-quantized
+//! `i8` (scale + zero-point, [`Quant`]); every other IR dtype stores
+//! at f32 precision. Engines always *compute* in f32 registers —
+//! conversions happen only at the buffer boundary (decode on read,
+//! round/clamp-encode on write, aggregations combine against the
+//! decoded stored value) — so all four engines remain bit-exact per
+//! dtype by construction. The properties the engines rely on:
 //!
 //! * **O(1) forks.** [`Buffers::fork`] copies page *pointers*, not
 //!   data. The parallel engine forks one buffer set per worker per op;
 //!   a worker pays only for the pages it actually writes (un-shared on
 //!   first write), so fork traffic is O(write set), never O(total live
-//!   buffer bytes). Per-op byte counts surface in [`ParallelReport`].
+//!   buffer bytes) — and is accounted in *storage-dtype bytes* (an i8
+//!   page costs a quarter of an i32 page). Per-op byte counts surface
+//!   in [`ParallelReport`].
 //! * **Dirty-range merges.** [`Buffers::merge_disjoint`] skips buffers
 //!   a worker never wrote, scans only dirty word ranges otherwise, and
-//!   adopts fully-written interior pages by pointer. It still
-//!   *verifies* write disjointness element-by-element at runtime — the
-//!   differential harness (`rust/tests/differential.rs`, naive ≡
-//!   planned ≡ kernel ≡ parallel on randomized networks) relies on
-//!   that check to catch analysis bugs loudly.
+//!   adopts fully-written interior pages by pointer; merged elements
+//!   copy as storage words (bit-preserving, no decode/encode cycle).
+//!   It still *verifies* write disjointness element-by-element at
+//!   runtime — the differential harness
+//!   (`rust/tests/differential.rs`, naive ≡ planned ≡ kernel ≡
+//!   parallel on randomized networks, swept per storage dtype) relies
+//!   on that check to catch analysis bugs loudly.
 //! * **Bulk run operations.** The kernel engine reads and writes
 //!   contiguous runs ([`Buffers::read_run_into`],
 //!   [`Buffers::write_run`], [`Buffers::fold_run`]): one bounds check
 //!   per run, write masks filled per-range instead of per-bit, page
-//!   boundaries honored, CoW accounting identical to the per-element
-//!   path.
+//!   boundaries honored, decode/encode performed per page segment,
+//!   CoW accounting identical to the per-element path. Integer folds
+//!   round-trip the storage grid per lane, so a bulk reduction equals
+//!   the serial per-lane store sequence bitwise.
 //! * **Pre-resolved regions.** The plan compiler resolves buffer names
 //!   to ids once per program ([`plan`]'s root scope) and folds each
 //!   parallel chunk's write refinements into flat extents, so workers
@@ -92,9 +108,10 @@ pub mod interp;
 pub mod kernel;
 pub mod parallel;
 pub mod plan;
+pub mod simd;
 pub mod trace;
 
-pub use buffer::{BufferPool, Buffers, StorageStats, PAGE_ELEMS};
+pub use buffer::{BufferPool, Buffers, Quant, StorageStats, PAGE_ELEMS};
 pub use interp::{
     run_program, run_program_sink, run_program_with, Engine, ExecError, ExecOptions,
 };

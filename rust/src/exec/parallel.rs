@@ -787,7 +787,8 @@ mod tests {
         let inputs = gen_inputs(&p, 31);
         let (_, report) = run_program_parallel(&p, &inputs, &parallel_opts(4)).unwrap();
         assert!(report.parallel_ops() >= 4, "{}", report.summary());
-        let total_bytes: u64 = p.buffers.iter().map(|b| b.ttype.span_elems() * 4).sum();
+        let total_bytes: u64 =
+            p.buffers.iter().map(|b| b.ttype.span_elems() * b.ttype.dtype.size_bytes()).sum();
         // What the old deep-clone fork would have copied: the whole
         // live buffer set into every worker of every parallel op.
         let old_model: u64 = report

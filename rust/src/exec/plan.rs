@@ -276,8 +276,9 @@ impl RootScope {
 }
 
 /// Allocate a program's buffers, filling inputs/weights from `inputs`.
-/// Pages come from `pool` when one is supplied (see
-/// [`super::buffer::BufferPool`]).
+/// Each buffer takes its declared storage dtype (root-scope and
+/// block-local scratch stay f32 on every engine). Pages come from
+/// `pool` when one is supplied (see [`super::buffer::BufferPool`]).
 pub(crate) fn alloc_program_buffers(
     program: &Program,
     inputs: &BTreeMap<String, Vec<f32>>,
@@ -299,10 +300,10 @@ pub(crate) fn alloc_program_buffers(
                         vals.len()
                     )));
                 }
-                bufs.alloc_init(&b.name, vals.clone());
+                bufs.alloc_init_dtype(&b.name, vals.clone(), b.ttype.dtype);
             }
             BufKind::Output | BufKind::Temp => {
-                bufs.alloc(&b.name, span);
+                bufs.alloc_dtype(&b.name, span, b.ttype.dtype);
             }
         }
     }

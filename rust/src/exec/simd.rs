@@ -1,0 +1,272 @@
+//! SIMD-shaped lane kernels for the classified band forms.
+//!
+//! The kernel engine (`exec::kernel`) classifies each leaf band into a
+//! form (fill/copy/map/zip/mul-add/generic) and, for contiguous runs,
+//! executes the form through the monomorphized kernels in this module
+//! instead of interpreting the lane program one element at a time.
+//!
+//! # Shape
+//!
+//! Every kernel walks its operands in [`LANE_WIDTH`]-wide chunks
+//! (`chunks_exact` / `chunks_exact_mut`) with a fixed-trip inner loop,
+//! then finishes the sub-chunk tail with a scalar loop. The chunked
+//! loop bodies carry no bounds checks (`chunks_exact` guarantees the
+//! width statically) and no cross-lane dependencies, which is the
+//! shape stable rustc auto-vectorizes on every tier-1 target.
+//!
+//! # Bit-exactness
+//!
+//! Each kernel body evaluates `IntrOp::<Op>.eval(&[...])` with a
+//! *constant* receiver: the match inside `eval` const-folds and the
+//! lane body inlines to the exact scalar expression the interpreter
+//! executes (`a + b`, `a.max(0.0)`, ...). Lane reordering is safe
+//! because every table entry is lane-independent (element `i` of the
+//! output depends only on element `i` of the inputs), and rustc never
+//! contracts `a * b + c` into a fused multiply-add on its own — so the
+//! vectorized result is bitwise identical to the per-element
+//! interpreter, which the differential suite pins across all four
+//! engines and every storage dtype.
+//!
+//! Reductions are **not** in this table: reassociating a serial fold
+//! changes float results, so reduce stores keep their serial lane
+//! order in `Buffers::fold_run` and only their *input* gathers and
+//! multiplies (e.g. the dot product's `Zip(Mul)`) vectorize.
+
+use crate::ir::IntrOp;
+
+/// Lanes per chunk. Eight f32 lanes fill one AVX2 register (or two
+/// NEON registers); the compiler further unrolls where profitable.
+pub const LANE_WIDTH: usize = 8;
+
+/// Kernel over one source run: `out[i] = f(src[i])`.
+pub type UnaryKernel = fn(&[f32], &mut [f32]);
+/// In-place kernel: `buf[i] = f(buf[i])` (map chains past the first
+/// op run on the output lanes directly).
+pub type UnaryInplaceKernel = fn(&mut [f32]);
+/// Kernel over two source runs: `out[i] = f(a[i], b[i])`.
+pub type BinaryKernel = fn(&[f32], &[f32], &mut [f32]);
+
+#[inline(always)]
+fn map_unary(src: &[f32], out: &mut [f32], f: impl Fn(f32) -> f32 + Copy) {
+    debug_assert_eq!(src.len(), out.len());
+    for (o, s) in out.chunks_exact_mut(LANE_WIDTH).zip(src.chunks_exact(LANE_WIDTH)) {
+        for l in 0..LANE_WIDTH {
+            o[l] = f(s[l]);
+        }
+    }
+    let head = src.len() - src.len() % LANE_WIDTH;
+    for i in head..src.len() {
+        out[i] = f(src[i]);
+    }
+}
+
+#[inline(always)]
+fn map_unary_inplace(buf: &mut [f32], f: impl Fn(f32) -> f32 + Copy) {
+    for o in buf.chunks_exact_mut(LANE_WIDTH) {
+        for l in 0..LANE_WIDTH {
+            o[l] = f(o[l]);
+        }
+    }
+    let head = buf.len() - buf.len() % LANE_WIDTH;
+    let n = buf.len();
+    for i in head..n {
+        buf[i] = f(buf[i]);
+    }
+}
+
+#[inline(always)]
+fn map_binary(a: &[f32], b: &[f32], out: &mut [f32], f: impl Fn(f32, f32) -> f32 + Copy) {
+    debug_assert_eq!(a.len(), out.len());
+    debug_assert_eq!(b.len(), out.len());
+    for ((o, x), y) in out
+        .chunks_exact_mut(LANE_WIDTH)
+        .zip(a.chunks_exact(LANE_WIDTH))
+        .zip(b.chunks_exact(LANE_WIDTH))
+    {
+        for l in 0..LANE_WIDTH {
+            o[l] = f(x[l], y[l]);
+        }
+    }
+    let head = a.len() - a.len() % LANE_WIDTH;
+    for i in head..a.len() {
+        out[i] = f(a[i], b[i]);
+    }
+}
+
+/// The vectorized kernel for a unary op, or `None` if the op has no
+/// unary table entry. Every returned fn is a monomorphized chunked
+/// loop whose body is the op's exact `eval` expression.
+pub fn unary_fn(op: IntrOp) -> Option<UnaryKernel> {
+    macro_rules! k {
+        ($v:ident) => {
+            Some(|src: &[f32], out: &mut [f32]| {
+                map_unary(src, out, |a| IntrOp::$v.eval(&[a]))
+            })
+        };
+    }
+    match op {
+        IntrOp::Neg => k!(Neg),
+        IntrOp::Exp => k!(Exp),
+        IntrOp::Log => k!(Log),
+        IntrOp::Sqrt => k!(Sqrt),
+        IntrOp::Tanh => k!(Tanh),
+        IntrOp::Relu => k!(Relu),
+        _ => None,
+    }
+}
+
+/// In-place variant of [`unary_fn`] for map chains: ops past the first
+/// rewrite the output lanes without a second buffer.
+pub fn unary_inplace_fn(op: IntrOp) -> Option<UnaryInplaceKernel> {
+    macro_rules! k {
+        ($v:ident) => {
+            Some(|buf: &mut [f32]| map_unary_inplace(buf, |a| IntrOp::$v.eval(&[a])))
+        };
+    }
+    match op {
+        IntrOp::Neg => k!(Neg),
+        IntrOp::Exp => k!(Exp),
+        IntrOp::Log => k!(Log),
+        IntrOp::Sqrt => k!(Sqrt),
+        IntrOp::Tanh => k!(Tanh),
+        IntrOp::Relu => k!(Relu),
+        _ => None,
+    }
+}
+
+/// The vectorized kernel for a binary op, or `None` if the op has no
+/// binary table entry (`Select` is ternary and falls back to the
+/// per-element path).
+pub fn binary_fn(op: IntrOp) -> Option<BinaryKernel> {
+    macro_rules! k {
+        ($v:ident) => {
+            Some(|a: &[f32], b: &[f32], out: &mut [f32]| {
+                map_binary(a, b, out, |x, y| IntrOp::$v.eval(&[x, y]))
+            })
+        };
+    }
+    match op {
+        IntrOp::Add => k!(Add),
+        IntrOp::Sub => k!(Sub),
+        IntrOp::Mul => k!(Mul),
+        IntrOp::Div => k!(Div),
+        IntrOp::Max => k!(Max),
+        IntrOp::Min => k!(Min),
+        IntrOp::Lt => k!(Lt),
+        _ => None,
+    }
+}
+
+/// Fused axpy kernel: `out[i] = a[i] * b[i] + c[i]`, chunked. Rust
+/// never contracts the multiply-add into an FMA, so this is bitwise
+/// identical to evaluating `Mul` then `Add` through the lane program.
+pub fn mul_add(a: &[f32], b: &[f32], c: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    debug_assert_eq!(b.len(), out.len());
+    debug_assert_eq!(c.len(), out.len());
+    for (((o, x), y), z) in out
+        .chunks_exact_mut(LANE_WIDTH)
+        .zip(a.chunks_exact(LANE_WIDTH))
+        .zip(b.chunks_exact(LANE_WIDTH))
+        .zip(c.chunks_exact(LANE_WIDTH))
+    {
+        for l in 0..LANE_WIDTH {
+            o[l] = x[l] * y[l] + z[l];
+        }
+    }
+    let head = a.len() - a.len() % LANE_WIDTH;
+    for i in head..a.len() {
+        out[i] = a[i] * b[i] + c[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe_values(n: usize) -> Vec<f32> {
+        // Deterministic values exercising signs, magnitudes, zeros,
+        // subnormal-ish smalls, an infinity and a NaN.
+        (0..n)
+            .map(|i| match i % 9 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 1.5 + i as f32,
+                3 => -(i as f32) * 0.37,
+                4 => 1e-30,
+                5 => -1e30,
+                6 => f32::INFINITY,
+                7 => f32::NAN,
+                _ => (i as f32).sin(),
+            })
+            .collect()
+    }
+
+    fn bits(v: f32) -> u32 {
+        v.to_bits()
+    }
+
+    #[test]
+    fn unary_kernels_match_eval_bitwise() {
+        for op in [IntrOp::Neg, IntrOp::Exp, IntrOp::Log, IntrOp::Sqrt, IntrOp::Tanh, IntrOp::Relu]
+        {
+            let k = unary_fn(op).unwrap();
+            let ki = unary_inplace_fn(op).unwrap();
+            // Lengths straddling chunk boundaries, incl. 0 and sub-chunk.
+            for n in [0usize, 1, 7, 8, 9, 16, 27] {
+                let src = probe_values(n);
+                let mut out = vec![0f32; n];
+                k(&src, &mut out);
+                let mut inplace = src.clone();
+                ki(&mut inplace);
+                for i in 0..n {
+                    let want = op.eval(&[src[i]]);
+                    assert_eq!(bits(out[i]), bits(want), "{op:?}[{i}] n={n}");
+                    assert_eq!(bits(inplace[i]), bits(want), "inplace {op:?}[{i}] n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_kernels_match_eval_bitwise() {
+        for op in
+            [IntrOp::Add, IntrOp::Sub, IntrOp::Mul, IntrOp::Div, IntrOp::Max, IntrOp::Min, IntrOp::Lt]
+        {
+            let k = binary_fn(op).unwrap();
+            for n in [0usize, 1, 7, 8, 9, 16, 27] {
+                let a = probe_values(n);
+                let b: Vec<f32> = probe_values(n).into_iter().rev().collect();
+                let mut out = vec![0f32; n];
+                k(&a, &b, &mut out);
+                for i in 0..n {
+                    assert_eq!(bits(out[i]), bits(op.eval(&[a[i], b[i]])), "{op:?}[{i}] n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mul_add_matches_two_step_lane_program() {
+        for n in [0usize, 1, 7, 8, 9, 16, 27] {
+            let a = probe_values(n);
+            let b: Vec<f32> = probe_values(n).into_iter().rev().collect();
+            let c: Vec<f32> = probe_values(n).iter().map(|v| v * 0.5).collect();
+            let mut out = vec![0f32; n];
+            mul_add(&a, &b, &c, &mut out);
+            for i in 0..n {
+                let t = IntrOp::Mul.eval(&[a[i], b[i]]);
+                let want = IntrOp::Add.eval(&[t, c[i]]);
+                assert_eq!(bits(out[i]), bits(want), "muladd[{i}] n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ops_without_table_entries_return_none() {
+        assert!(unary_fn(IntrOp::Add).is_none());
+        assert!(binary_fn(IntrOp::Neg).is_none());
+        assert!(binary_fn(IntrOp::Select).is_none());
+        assert!(unary_fn(IntrOp::Select).is_none());
+    }
+}

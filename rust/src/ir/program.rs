@@ -109,6 +109,24 @@ impl Program {
     pub fn depth(&self) -> usize {
         self.main.depth()
     }
+
+    /// A copy of the program with every buffer and every refinement
+    /// retyped to `dtype`. Used by the CLI `--dtype` flag and the
+    /// differential dtype sweep: the canned frontend networks are
+    /// authored in f32, and retyping them uniformly exercises the
+    /// dtype-generic storage layer without changing any topology.
+    pub fn with_dtype(&self, dtype: super::types::DType) -> Program {
+        let mut p = self.clone();
+        for b in &mut p.buffers {
+            b.ttype.dtype = dtype;
+        }
+        p.main.walk_mut(&mut |blk| {
+            for r in &mut blk.refs {
+                r.ttype.dtype = dtype;
+            }
+        });
+        p
+    }
 }
 
 #[cfg(test)]

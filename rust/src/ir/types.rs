@@ -2,10 +2,12 @@
 
 use std::fmt;
 
-/// Element data types. The interpreter computes in f32 regardless (see
-/// `exec`), but dtypes drive printing fidelity (the paper's Fig. 5 uses
-/// `i8`), element sizes for the cache-line cost model, and the stencil
-/// pass's dtype matching.
+/// Element data types. The engines compute in f32 registers regardless
+/// (see `exec`), but dtypes drive the *storage* representation (the
+/// buffer layer stores f32/f64/i32 natively and i8 through an affine
+/// quantization — see `exec::buffer`), printing fidelity (the paper's
+/// Fig. 5 uses `i8`), element sizes for the cache-line cost model, and
+/// the stencil pass's dtype matching.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     I8,
@@ -14,6 +16,7 @@ pub enum DType {
     F16,
     BF16,
     F32,
+    F64,
 }
 
 impl DType {
@@ -22,6 +25,7 @@ impl DType {
             DType::I8 => 1,
             DType::I16 | DType::F16 | DType::BF16 => 2,
             DType::I32 | DType::F32 => 4,
+            DType::F64 => 8,
         }
     }
 
@@ -33,6 +37,7 @@ impl DType {
             DType::F16 => "f16",
             DType::BF16 => "bf16",
             DType::F32 => "f32",
+            DType::F64 => "f64",
         }
     }
 
@@ -44,9 +49,16 @@ impl DType {
             "f16" => DType::F16,
             "bf16" => DType::BF16,
             "f32" => DType::F32,
+            "f64" => DType::F64,
             _ => return None,
         })
     }
+
+    /// The dtypes the execution storage layer represents natively:
+    /// f32, f64, i32, and quantized i8 (everything else stores at f32
+    /// precision). These are the dtypes the CLI `--dtype` flag, the
+    /// differential sweep, and the e2e bench iterate over.
+    pub const STORAGE: [DType; 4] = [DType::F32, DType::F64, DType::I32, DType::I8];
 }
 
 impl fmt::Display for DType {
@@ -228,7 +240,9 @@ mod tests {
 
     #[test]
     fn dtype_roundtrip() {
-        for d in [DType::I8, DType::I16, DType::I32, DType::F16, DType::BF16, DType::F32] {
+        for d in
+            [DType::I8, DType::I16, DType::I32, DType::F16, DType::BF16, DType::F32, DType::F64]
+        {
             assert_eq!(DType::parse(d.name()), Some(d));
         }
         assert_eq!(DType::parse("i64"), None);

@@ -22,7 +22,7 @@ use stripe::util::cli::Args;
 
 const VALUE_OPTS: &[&str] = &[
     "target", "net", "workers", "seed", "set", "tile", "kernels", "archs", "versions", "shapes",
-    "engine", "queue-depth", "tenant-cap", "cache-bytes", "deadline-ms",
+    "engine", "dtype", "queue-depth", "tenant-cap", "cache-bytes", "deadline-ms",
 ];
 
 fn main() {
@@ -59,12 +59,16 @@ fn print_help() {
          \x20 compile --target <t>         compile a network, print pass report (+ --print for IR)\n\
          \x20         --net <name|f.tile>  canned: fig4_conv, conv_relu, cnn, mlp, matmul\n\
          \x20         --set <path=value>   override a config parameter (Fig.1 set_config_params)\n\
+         \x20         --dtype <d>          retype buffers: f32 | f64 | i32 | i8 (quantized)\n\
          \x20         --tune               search pass-pipeline variants via the cost models\n\
          \x20 run     --target <t>         compile + execute on seeded random inputs\n\
          \x20         --engine <e>         naive | planned | kernel (leaf-kernel lowering)\n\
+         \x20         --dtype <d>          retype buffers: f32 | f64 | i32 | i8 (quantized)\n\
          \x20         --parallel           execute across the target's compute units\n\
          \x20         --workers <n>        explicit worker count (overrides --parallel)\n\
          \x20         --tune               compile through the pipeline autotuner\n\
+         \x20         --simd-check         kernel engine: assert coverage >= 80% and that the\n\
+         \x20                              chunked SIMD kernels beat the scalar lane baseline\n\
          \x20 tune    --target <t>         autotune a network, print the tuning decision, and\n\
          \x20         --net <name|f.tile>  verify the tuned artifact is cached by the service\n\
          \x20 validate <file.stripe>       parse + validate textual Stripe\n\
@@ -81,19 +85,31 @@ fn print_help() {
 
 fn load_net(args: &Args) -> Result<stripe::ir::Program, String> {
     let net = args.get_or("net", "fig4_conv");
-    if net.ends_with(".tile") {
+    let p = if net.ends_with(".tile") {
         let src = std::fs::read_to_string(net).map_err(|e| format!("read {net}: {e}"))?;
         let f = stripe::frontend::parse_function(&src).map_err(|e| e.to_string())?;
-        return stripe::frontend::lower_function(&f).map_err(|e| e.to_string());
+        stripe::frontend::lower_function(&f).map_err(|e| e.to_string())?
+    } else {
+        match net {
+            "fig4_conv" => ops::fig4_conv_program(),
+            "conv_relu" => ops::conv_relu_program(),
+            "cnn" => ops::cnn_program(),
+            "mlp" => ops::tiny_mlp_program(16, 32, 10),
+            "matmul" => ops::matmul_program(16, 16, 16),
+            other => return Err(format!("unknown net {other:?}")),
+        }
+    };
+    // --dtype retypes every program buffer (and its refinements) before
+    // compilation; the dtype lands in the schedule summary and the
+    // compile-cache key.
+    match args.get("dtype") {
+        None => Ok(p),
+        Some(name) => {
+            let dt = stripe::ir::DType::parse(name)
+                .ok_or_else(|| format!("unknown dtype {name:?} (f32|f64|i32|i8)"))?;
+            Ok(p.with_dtype(dt))
+        }
     }
-    Ok(match net {
-        "fig4_conv" => ops::fig4_conv_program(),
-        "conv_relu" => ops::conv_relu_program(),
-        "cnn" => ops::cnn_program(),
-        "mlp" => ops::tiny_mlp_program(16, 32, 10),
-        "matmul" => ops::matmul_program(16, 16, 16),
-        other => return Err(format!("unknown net {other:?}")),
-    })
 }
 
 fn load_target(args: &Args) -> Result<stripe::hw::MachineConfig, String> {
@@ -169,6 +185,9 @@ fn cmd_run(args: &Args) -> i32 {
         }
         let seed = args.get_u64("seed", 42);
         let inputs = stripe::passes::equiv::gen_inputs(&c.program, seed);
+        if args.flag("simd-check") {
+            return simd_check(&c.program, &inputs);
+        }
         let engine_name = args.get_or("engine", "planned");
         let engine = stripe::exec::Engine::parse(engine_name)
             .ok_or_else(|| format!("unknown engine {engine_name:?} (naive|planned|kernel)"))?;
@@ -231,6 +250,70 @@ fn cmd_run(args: &Args) -> i32 {
         Ok(())
     };
     report(run())
+}
+
+/// Run the compiled program through the kernel engine `reps` times
+/// with the chunked SIMD kernels toggled by `simd`, returning the
+/// median wall time, the reported kernel coverage, and the outputs of
+/// the final run.
+fn time_kernel_engine(
+    program: &stripe::ir::Program,
+    inputs: &std::collections::BTreeMap<String, Vec<f32>>,
+    reps: usize,
+    simd: bool,
+) -> Result<
+    (std::time::Duration, Option<f64>, std::collections::BTreeMap<String, Vec<f32>>),
+    String,
+> {
+    let opts = stripe::exec::ExecOptions {
+        engine: stripe::exec::Engine::Kernel,
+        simd,
+        ..stripe::exec::ExecOptions::default()
+    };
+    let mut times = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let r = stripe::exec::run_program_kernel(program, inputs, &opts)
+            .map_err(|e| e.to_string())?;
+        times.push(t0.elapsed());
+        last = Some(r);
+    }
+    times.sort();
+    let (out, report) = last.ok_or("simd-check needs at least one rep")?;
+    Ok((times[times.len() / 2], report.coverage(), out))
+}
+
+/// `--simd-check`: execute the kernel engine with the chunked SIMD
+/// kernels on and off over identical inputs, then require (a) bitwise
+/// identical outputs, (b) kernel coverage of at least 80% of leaf
+/// iterations, and (c) a median speedup over the scalar lane baseline.
+/// Exits nonzero on any failure — `scripts/verify.sh` runs this per
+/// storage dtype as the `VERIFY_SIMD_SMOKE` gate.
+fn simd_check(
+    program: &stripe::ir::Program,
+    inputs: &std::collections::BTreeMap<String, Vec<f32>>,
+) -> Result<(), String> {
+    const REPS: usize = 30;
+    let (t_simd, cov, out_simd) = time_kernel_engine(program, inputs, REPS, true)?;
+    let (t_scalar, _, out_scalar) = time_kernel_engine(program, inputs, REPS, false)?;
+    if out_simd != out_scalar {
+        return Err("simd-check: SIMD and scalar lane paths disagree".into());
+    }
+    let cov = cov.ok_or("simd-check: kernel engine reported no coverage")?;
+    let speedup = t_scalar.as_secs_f64() / t_simd.as_secs_f64().max(1e-12);
+    println!(
+        "simd-check: coverage {:.1}%, median {t_simd:?} (simd) vs {t_scalar:?} (scalar), \
+         speedup {speedup:.2}x",
+        cov * 100.0
+    );
+    if cov < 0.8 {
+        return Err(format!("simd-check: kernel coverage {:.1}% below 80%", cov * 100.0));
+    }
+    if speedup <= 1.0 {
+        return Err(format!("simd-check: no speedup over the scalar lane baseline ({speedup:.2}x)"));
+    }
+    Ok(())
 }
 
 /// Autotune a network through the compile service, print the tuning

@@ -19,6 +19,14 @@
 //! page leaking a previous request's data) would surface as bit
 //! mismatches against the unpooled naive/serial runs.
 //!
+//! The engine matrix is additionally swept **per storage dtype**
+//! (`DType::STORAGE`: f32, f64, i32, quantized i8): every engine
+//! computes in f32 registers and converts only at the buffer boundary,
+//! so retyping a network must leave all four engines bit-identical —
+//! including the lossy integer grids, where a single misplaced
+//! decode/encode (e.g. a bulk kernel skipping the storage round-trip a
+//! scalar store performs) diverges immediately.
+//!
 //! On top of the default-pipeline sweep, a **property-based pipeline
 //! fuzzer** applies *random legal pass pipelines* — random pass order
 //! and random parameters drawn against a random built-in target — to
@@ -150,6 +158,43 @@ fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
     differential_case_pooled(p, seed, workers, None)
 }
 
+/// Per-dtype differential case: retype the program's buffers to `dt`
+/// and assert naive ≡ serial plan ≡ kernel ≡ parallel bit-exactly. The
+/// parallel run uses the kernel chunk executor, so each dtype crosses
+/// the full engine matrix without doubling the dispatcher runs.
+fn dtype_case(p: &Program, dt: DType, seed: u64, workers: usize, pool: Option<Arc<BufferPool>>) {
+    let pd = p.with_dtype(dt);
+    let inputs = gen_inputs(&pd, seed);
+    let naive = run_program_sink(&pd, &inputs, &ExecOptions::default(), &mut NullSink)
+        .unwrap_or_else(|e| panic!("{} [{}]: naive failed: {e}", pd.name, dt.name()));
+    let serial = run_program_planned(&pd, &inputs, &ExecOptions::default(), &mut NullSink)
+        .unwrap_or_else(|e| panic!("{} [{}]: serial plan failed: {e}", pd.name, dt.name()));
+    let kopts =
+        ExecOptions { engine: Engine::Kernel, pool: pool.clone(), ..ExecOptions::default() };
+    let (kernel, kreport) = run_program_kernel(&pd, &inputs, &kopts)
+        .unwrap_or_else(|e| panic!("{} [{}]: kernel engine failed: {e}", pd.name, dt.name()));
+    let popts = ExecOptions { workers, engine: Engine::Kernel, pool, ..ExecOptions::default() };
+    let (parallel, preport) = run_program_parallel(&pd, &inputs, &popts)
+        .unwrap_or_else(|e| panic!("{} [{}]: parallel failed: {e}", pd.name, dt.name()));
+    assert_eq!(naive, serial, "{} [{}]: naive vs serial plan diverged", pd.name, dt.name());
+    assert_eq!(
+        serial,
+        kernel,
+        "{} [{}]: serial vs kernel diverged\ncoverage:\n{}",
+        pd.name,
+        dt.name(),
+        kreport.summary()
+    );
+    assert_eq!(
+        serial,
+        parallel,
+        "{} [{}]: serial vs parallel diverged\nschedule:\n{}",
+        pd.name,
+        dt.name(),
+        preport.summary()
+    );
+}
+
 /// Build a random *legal* pass pipeline against `cfg`: 1–5 passes in
 /// random order, each with random parameters, referencing only the
 /// target's real memory units and compute units (the one legality
@@ -252,6 +297,60 @@ fn fifty_random_networks_agree_across_all_engines() {
         "page pool never recycled across the sweep ({})",
         pool.summary()
     );
+}
+
+#[test]
+fn fifty_random_networks_agree_across_all_engines_per_dtype() {
+    let mut rng = Rng::new(0xD7E5);
+    // One shared pool across the sweep: pages released by an f64 net
+    // must never leak into a later i8 net's buffers.
+    let pool = Arc::new(BufferPool::default());
+    for case in 0..50u64 {
+        let p = random_program(200 + case, &mut rng);
+        let workers = 1 + rng.below(4) as usize; // 1..=4
+        for dt in DType::STORAGE {
+            dtype_case(&p, dt, 3000 + case, workers, Some(Arc::clone(&pool)));
+        }
+    }
+}
+
+/// Directed quantized-storage case: the affine i8 grid
+/// (`stored = round(v / scale) + zero_point`, clamped to the i8 range;
+/// `decoded = (stored - zero_point) * scale`) exercised through the
+/// public `Buffers` API — exact round-trips on the grid, rounding to
+/// the nearest representable point off it, saturation at the range
+/// edges, and aggregation combining against the *decoded* stored value.
+#[test]
+fn quantized_i8_storage_round_trips_through_the_buffer_boundary() {
+    use stripe::exec::{Buffers, Quant};
+    use stripe::ir::AggOp;
+    let mut bufs = Buffers::new();
+    let q = Quant { scale: 0.5, zero_point: -3 };
+    let id = bufs.alloc_dtype_q("q", 16, DType::I8, q);
+    // Grid points (multiples of the scale) store and read back exactly.
+    for (i, v) in [-2.0f32, -0.5, 0.0, 1.5, 3.0].into_iter().enumerate() {
+        bufs.store(id, i as i64, v, AggOp::Assign, false).unwrap();
+        assert_eq!(bufs.read(id, i as i64).unwrap(), v, "grid value {v} must round-trip");
+    }
+    // Off-grid values land on the nearest representable point:
+    // 0.26 / 0.5 = 0.52 rounds up one unit.
+    bufs.store(id, 8, 0.26, AggOp::Assign, false).unwrap();
+    assert_eq!(bufs.read(id, 8).unwrap(), 0.5);
+    // Saturation: the decoded extremes of the shifted i8 range.
+    bufs.store(id, 9, 1.0e6, AggOp::Assign, false).unwrap();
+    assert_eq!(bufs.read(id, 9).unwrap(), (127 + 3) as f32 * 0.5);
+    bufs.store(id, 10, -1.0e6, AggOp::Assign, false).unwrap();
+    assert_eq!(bufs.read(id, 10).unwrap(), (-128 + 3) as f32 * 0.5);
+    // Aggregation combines in f32 against the decoded stored value,
+    // then re-encodes: 0.5 (stored) + 0.26 = 0.76 -> nearest grid 1.0.
+    bufs.store(id, 11, 0.5, AggOp::Assign, false).unwrap();
+    bufs.store(id, 11, 0.26, AggOp::Add, false).unwrap();
+    assert_eq!(bufs.read(id, 11).unwrap(), 1.0);
+    // The default i8 parameters give a 1/16 grid around zero.
+    assert_eq!(Quant::default_for(DType::I8), Quant { scale: 1.0 / 16.0, zero_point: 0 });
+    let d = bufs.alloc_dtype("d", 4, DType::I8);
+    bufs.store(d, 0, 0.2, AggOp::Assign, false).unwrap();
+    assert_eq!(bufs.read(d, 0).unwrap(), 3.0 / 16.0, "0.2 rounds to 3/16 on the default grid");
 }
 
 #[test]

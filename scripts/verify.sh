@@ -59,4 +59,21 @@ else
     echo "(set VERIFY_BENCH_SMOKE=1 to run the e2e bench smoke)"
 fi
 
+echo "== simd smoke (gated) =="
+# Opt-in SIMD kernel smoke: runs the canned cnn through the kernel
+# engine once per storage dtype with `--simd-check`, which asserts
+# bitwise-identical outputs between the chunked SIMD kernels and the
+# scalar lane baseline, kernel coverage of at least 80%, and a median
+# speedup over the scalar path (exits nonzero otherwise).
+if [ "${VERIFY_SIMD_SMOKE:-0}" = "1" ]; then
+    for dt in f32 f64 i32 i8; do
+        echo "-- dtype $dt --"
+        cargo run --release --quiet -- run \
+            --net cnn --target cpu_cache --engine kernel \
+            --dtype "$dt" --simd-check
+    done
+else
+    echo "(set VERIFY_SIMD_SMOKE=1 to run the per-dtype SIMD kernel smoke)"
+fi
+
 echo "verify: OK"
