@@ -145,16 +145,22 @@ pub fn compile_network(
 
 /// Execute a compiled network with explicit options — worker count,
 /// engine selection ([`ExecOptions::engine`]: planned odometer or
-/// leaf-kernel lowering per chunk), page pool. The returned
-/// [`ParallelReport`] records per-op decisions including fork/merge
-/// byte counters and, under the kernel engine, the measured per-op
-/// kernel coverage.
+/// leaf-kernel lowering per chunk, or the inter-op dataflow scheduler),
+/// page pool, compute pool. The returned [`ParallelReport`] records
+/// per-op decisions including fork/merge byte counters and, under the
+/// kernel engine, the measured per-op kernel coverage; under the
+/// dataflow engine [`ParallelReport::dag`] carries the DAG/scheduler
+/// counters.
 pub fn run_network_with(
     c: &CompiledNetwork,
     inputs: &BTreeMap<String, Vec<f32>>,
     opts: &ExecOptions,
 ) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
-    crate::exec::run_program_parallel(&c.program, inputs, opts).map_err(|e| e.to_string())
+    if opts.engine == crate::exec::Engine::Dataflow {
+        crate::exec::run_program_dataflow(&c.program, inputs, opts).map_err(|e| e.to_string())
+    } else {
+        crate::exec::run_program_parallel(&c.program, inputs, opts).map_err(|e| e.to_string())
+    }
 }
 
 /// Execute a compiled network across `workers` compute units, drawing

@@ -195,6 +195,16 @@ struct Inner {
     /// Most recent execution's CoW traffic (per-request gauges).
     last_fork_bytes: u64,
     last_merge_bytes: u64,
+    /// Dataflow-engine scheduler series: cumulative run and
+    /// chunk-steal counters, plus gauges describing the most recent
+    /// dataflow run's DAG and achieved overlap.
+    dataflow_runs: u64,
+    dataflow_steals: u64,
+    dataflow_pool_size: u64,
+    dataflow_dag_ops: u64,
+    dataflow_dag_width: u64,
+    dataflow_critical_path: u64,
+    dataflow_ops_overlapped: u64,
     /// Submit → worker-pop wait, per popped request.
     queue_wait: Histogram,
     /// Actual compile duration, one sample per compile execution.
@@ -302,6 +312,22 @@ impl Metrics {
             i.merge_bytes += merge_bytes;
             i.last_fork_bytes = fork_bytes;
             i.last_merge_bytes = merge_bytes;
+        });
+    }
+
+    /// One call per dataflow-engine execution: accumulates the run and
+    /// steal counters and overwrites the scheduler gauges
+    /// (`stripe_dataflow_*`) with this run's DAG shape, pool size, and
+    /// achieved overlap.
+    pub fn record_dataflow(&self, dag: &crate::exec::DataflowStats) {
+        self.with(|i| {
+            i.dataflow_runs += 1;
+            i.dataflow_steals += dag.steals;
+            i.dataflow_pool_size = dag.pool_size as u64;
+            i.dataflow_dag_ops = dag.dag_ops as u64;
+            i.dataflow_dag_width = dag.width as u64;
+            i.dataflow_critical_path = dag.critical_path as u64;
+            i.dataflow_ops_overlapped = dag.max_in_flight as u64;
         });
     }
 
@@ -424,6 +450,8 @@ impl Metrics {
                 ("stripe_kernel_scalar_lanes_total", i.kernel_scalar_lanes),
                 ("stripe_fork_bytes_total", i.fork_bytes),
                 ("stripe_merge_bytes_total", i.merge_bytes),
+                ("stripe_dataflow_runs_total", i.dataflow_runs),
+                ("stripe_dataflow_steals_total", i.dataflow_steals),
             ] {
                 out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
             }
@@ -443,6 +471,11 @@ impl Metrics {
                 ("stripe_cache_bytes", i.cache_bytes),
                 ("stripe_request_fork_bytes", i.last_fork_bytes),
                 ("stripe_request_merge_bytes", i.last_merge_bytes),
+                ("stripe_dataflow_pool_size", i.dataflow_pool_size),
+                ("stripe_dataflow_dag_ops", i.dataflow_dag_ops),
+                ("stripe_dataflow_dag_width", i.dataflow_dag_width),
+                ("stripe_dataflow_critical_path", i.dataflow_critical_path),
+                ("stripe_dataflow_ops_overlapped", i.dataflow_ops_overlapped),
             ] {
                 out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
             }
@@ -499,7 +532,11 @@ pub fn parse_scrape(text: &str) -> Result<BTreeMap<String, f64>, String> {
 ///   `vector / (vector + scalar)` recomputed from the raw lane
 ///   counters (exactly 0 when no lanes were recorded);
 /// * the per-request gauges `stripe_request_{fork,merge}_bytes` never
-///   exceed their cumulative `_total` counters.
+///   exceed their cumulative `_total` counters;
+/// * the dataflow scheduler gauges are internally consistent: width,
+///   critical path, and achieved overlap never exceed the DAG's op
+///   count, and a non-empty DAG has width and critical path of at
+///   least 1.
 ///
 /// Returns a one-line summary on success.
 pub fn reconcile_scrape(text: &str) -> Result<String, String> {
@@ -573,6 +610,27 @@ pub fn reconcile_scrape(text: &str) -> Result<String, String> {
             return Err(format!(
                 "stripe_request_{kind}_bytes {last} exceeds its total {total}"
             ));
+        }
+    }
+    let dag_ops = get("stripe_dataflow_dag_ops");
+    for bounded in [
+        "stripe_dataflow_dag_width",
+        "stripe_dataflow_critical_path",
+        "stripe_dataflow_ops_overlapped",
+    ] {
+        let v = get(bounded);
+        if v > dag_ops {
+            return Err(format!("{bounded} {v} exceeds stripe_dataflow_dag_ops {dag_ops}"));
+        }
+    }
+    if dag_ops > 0.0 {
+        for floored in ["stripe_dataflow_dag_width", "stripe_dataflow_critical_path"] {
+            let v = get(floored);
+            if v < 1.0 {
+                return Err(format!(
+                    "{floored} {v} below 1 for a non-empty DAG ({dag_ops} ops)"
+                ));
+            }
         }
     }
     Ok(format!(
@@ -737,6 +795,57 @@ mod tests {
                    stripe_request_fork_bytes 200\n";
         let e = reconcile_scrape(bad).unwrap_err();
         assert!(e.contains("exceeds"), "{e}");
+    }
+
+    #[test]
+    fn dataflow_series_render_and_reconcile() {
+        let m = Metrics::default();
+        m.record_dataflow(&crate::exec::DataflowStats {
+            dag_ops: 5,
+            width: 2,
+            critical_path: 3,
+            pool_size: 4,
+            max_in_flight: 2,
+            steals: 7,
+            chunks: 20,
+            ..Default::default()
+        });
+        m.record_dataflow(&crate::exec::DataflowStats {
+            dag_ops: 5,
+            width: 2,
+            critical_path: 3,
+            pool_size: 4,
+            max_in_flight: 3,
+            steals: 1,
+            chunks: 20,
+            ..Default::default()
+        });
+        let scrape = m.render_scrape();
+        let series = parse_scrape(&scrape).expect("parses");
+        assert_eq!(series["stripe_dataflow_runs_total"], 2.0);
+        assert_eq!(series["stripe_dataflow_steals_total"], 8.0);
+        assert_eq!(series["stripe_dataflow_pool_size"], 4.0);
+        assert_eq!(series["stripe_dataflow_dag_ops"], 5.0);
+        assert_eq!(series["stripe_dataflow_dag_width"], 2.0);
+        assert_eq!(series["stripe_dataflow_critical_path"], 3.0);
+        assert_eq!(series["stripe_dataflow_ops_overlapped"], 3.0);
+        reconcile_scrape(&scrape).expect("reconciles");
+    }
+
+    #[test]
+    fn reconcile_rejects_inconsistent_dataflow_series() {
+        // Critical path longer than the DAG has ops.
+        let bad = "stripe_dataflow_dag_ops 5\n\
+                   stripe_dataflow_dag_width 1\n\
+                   stripe_dataflow_critical_path 9\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("stripe_dataflow_critical_path"), "{e}");
+        // A non-empty DAG must report a width of at least 1.
+        let bad = "stripe_dataflow_dag_ops 3\n\
+                   stripe_dataflow_dag_width 0\n\
+                   stripe_dataflow_critical_path 3\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("below 1"), "{e}");
     }
 
     #[test]

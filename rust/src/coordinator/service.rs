@@ -45,11 +45,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::exec::{BufferPool, ParallelReport};
+use crate::exec::dataflow::panic_message;
+use crate::exec::{BufferPool, ComputePool, ExecOptions, ParallelReport};
 use crate::hw::MachineConfig;
 use crate::ir::Program;
 
-use super::driver::{cache_key, compile_network, run_network, CompiledNetwork};
+use super::driver::{cache_key, compile_network, run_network_with, CompiledNetwork};
 use super::metrics::{Metrics, TenantId};
 use super::server::AdmitTicket;
 use super::tune::{compile_network_tuned, TuneOptions};
@@ -231,6 +232,11 @@ pub struct CompileService {
     /// recycle their storage pages instead of re-allocating per
     /// request.
     pub pool: Arc<BufferPool>,
+    /// Shared persistent compute pool for dataflow-engine executions:
+    /// worker threads are spawned once at service start and recycled
+    /// across requests (like the page pool), so per-request thread
+    /// spawns are zero.
+    pub compute: Arc<ComputePool>,
 }
 
 impl CompileService {
@@ -285,6 +291,9 @@ impl CompileService {
             faults,
             metrics,
             pool: Arc::new(BufferPool::default()),
+            compute: ComputePool::new(
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+            ),
         }
     }
 
@@ -301,14 +310,39 @@ impl CompileService {
         inputs: &BTreeMap<String, Vec<f32>>,
         workers: usize,
     ) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
-        let (outputs, report) =
-            run_network(network, inputs, workers, Some(Arc::clone(&self.pool)))?;
+        let opts = ExecOptions { workers: workers.max(1), ..ExecOptions::default() };
+        self.run_blocking_with(network, inputs, &opts)
+    }
+
+    /// [`CompileService::run_blocking`] with full engine control: the
+    /// service injects its shared page pool and — for the dataflow
+    /// engine — its shared persistent [`ComputePool`], so repeated
+    /// requests recycle both storage pages and worker threads. Dataflow
+    /// runs additionally feed the scheduler gauges
+    /// (`stripe_dataflow_*`) in the metrics scrape.
+    pub fn run_blocking_with(
+        &self,
+        network: &CompiledNetwork,
+        inputs: &BTreeMap<String, Vec<f32>>,
+        opts: &ExecOptions,
+    ) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), String> {
+        let opts = ExecOptions {
+            pool: Some(Arc::clone(&self.pool)),
+            compute: Some(Arc::clone(&self.compute)),
+            ..opts.clone()
+        };
+        let (outputs, report) = run_network_with(network, inputs, &opts)?;
         let (vector, scalar) = report
             .ops
             .iter()
             .fold((0, 0), |(v, s), o| (v + o.kernel_lanes, s + o.scalar_lanes));
         self.metrics
             .record_execution(vector, scalar, report.fork_bytes(), report.merge_bytes());
+        if opts.engine == crate::exec::Engine::Dataflow {
+            if let Some(dag) = &report.dag {
+                self.metrics.record_dataflow(dag);
+            }
+        }
         Ok((outputs, report))
     }
 
@@ -630,16 +664,6 @@ fn janitor_loop(stop: &AtomicBool, state: &Mutex<State>, metrics: &Metrics) {
     }
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&'static str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::super::metrics::Counter;
@@ -728,6 +752,40 @@ mod tests {
         assert!(scrape.contains("stripe_fork_bytes_total"), "{scrape}");
         assert!(scrape.contains("stripe_kernel_coverage"), "{scrape}");
         super::super::metrics::reconcile_scrape(&scrape).expect("scrape reconciles");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dataflow_executions_share_the_compute_pool_and_feed_gauges() {
+        let svc = CompileService::start(1);
+        let p = ops::cnn_program();
+        let c = svc.compile_blocking(p, targets::cpu_cache(), false).unwrap();
+        let inputs = crate::passes::equiv::gen_inputs(&c.program, 11);
+        let opts = ExecOptions {
+            workers: 2,
+            engine: crate::exec::Engine::Dataflow,
+            ..ExecOptions::default()
+        };
+        let spawned = svc.compute.threads_spawned();
+        let (a, ra) = svc.run_blocking_with(&c, &inputs, &opts).unwrap();
+        let (b, _) = svc.run_blocking_with(&c, &inputs, &opts).unwrap();
+        assert_eq!(a, b, "dataflow service executions must be bit-exact");
+        assert_eq!(
+            svc.compute.threads_spawned(),
+            spawned,
+            "requests must recycle the persistent compute pool, not spawn threads"
+        );
+        let dag = ra.dag.expect("dataflow run reports DAG stats");
+        assert_eq!(dag.pool_size, svc.compute.size());
+        assert!(dag.chunks > 0, "{}", dag.summary_line());
+        let scrape = svc.metrics.render_scrape();
+        assert!(scrape.contains("stripe_dataflow_runs_total"), "{scrape}");
+        assert!(scrape.contains("stripe_dataflow_pool_size"), "{scrape}");
+        assert!(scrape.contains("stripe_dataflow_critical_path"), "{scrape}");
+        super::super::metrics::reconcile_scrape(&scrape).expect("scrape reconciles");
+        // And the dataflow outputs match the per-op parallel path.
+        let (plain, _) = svc.run_blocking(&c, &inputs, 2).unwrap();
+        assert_eq!(a, plain);
         svc.shutdown();
     }
 

@@ -1,0 +1,1078 @@
+//! Inter-op dataflow execution: DAG scheduling over a persistent
+//! worker pool.
+//!
+//! The fifth engine stage. The per-op parallel dispatcher
+//! (`exec::parallel`) exploits *intra*-op parallelism but walks
+//! `main.stmts` strictly in order, spawning a fresh `thread::scope`
+//! per op and paying a full fork→join→merge barrier at every op
+//! boundary. This module removes both costs:
+//!
+//! 1. **Dependency DAG** ([`analyze_dataflow`] / the internal
+//!    `build_dag`): every top-level op's buffer footprint is folded to
+//!    conservative flat read/write extents against the root scope
+//!    (`plan::flat_read_extents` / `plan::flat_write_extents` — the
+//!    same folding the parallel engine uses to pre-resolve worker
+//!    write regions). For ops `i < j` in program order an edge `i → j`
+//!    is added when any hazard exists:
+//!
+//!    * **RAW** — `i` writes a flat range of a buffer that `j` reads;
+//!    * **WAR** — `i` reads a range that `j` writes;
+//!    * **WAW** — `i` and `j` write overlapping ranges of one buffer.
+//!
+//!    Ranges of *different* buffers, or non-overlapping flat ranges of
+//!    the same buffer, never create an edge — two ops writing disjoint
+//!    halves of one tensor run concurrently. An op whose footprint
+//!    does not fold (an access using an undeclared index, an
+//!    unresolvable refinement) is **opaque**: it conservatively
+//!    conflicts with every other op, i.e. it is fully serialized into
+//!    program order. Edges only ever point forward in program order,
+//!    so the graph is acyclic by construction.
+//!
+//! 2. **Persistent worker pool** ([`ComputePool`]): worker threads are
+//!    spawned once — per program run, or once per *service* when the
+//!    coordinator's `CompileService` shares its pool via
+//!    [`ExecOptions::compute`] (exactly like its shared `BufferPool`)
+//!    — and recycled across ops and requests. Thread spawns per run
+//!    are O(1) (zero with a shared pool) instead of O(ops × workers).
+//!
+//! 3. **DAG scheduling with work-stealing**: the scheduler dispatches
+//!    every dependency-free op immediately, so independent ops overlap
+//!    across compute units. Each dispatched op is still chunked along
+//!    its proven-disjoint dimension, *over-decomposed* (2× the unit
+//!    count) into the pool's shared queue: workers pull chunks
+//!    whenever idle, so a slow chunk (e.g. one demoted to the guarded
+//!    fallback) no longer stalls siblings the way the old static even
+//!    split did. Chunks executed by a worker other than their "home"
+//!    unit are counted as steals in [`DataflowStats`].
+//!
+//! # When an op falls back to serial (inline) execution
+//!
+//! A dispatched op runs on copy-on-write forks and is merged back via
+//! the verified-disjoint merge, which is only unambiguous when the
+//! op's write targets hold no earlier data. An op runs **inline** on
+//! the scheduler thread — against the master buffers, after all its
+//! DAG predecessors completed — when:
+//!
+//! * a write target already holds earlier data (`written_any`), e.g.
+//!   a second op accumulating into the same tensor;
+//! * a write refinement does not resolve against the root scope;
+//! * the op has no write refinements at all.
+//!
+//! Everything else is offloaded to the pool — as parallel chunks when
+//! a provably disjoint dimension exists and more than one compute unit
+//! is configured, as a single chunk otherwise (single-chunk offload
+//! still buys inter-op overlap: a reduction can run concurrently with
+//! an unrelated elementwise op).
+//!
+//! # Bit-exactness
+//!
+//! Unchanged from the parallel engine, and pinned by the differential
+//! sweep (naive ≡ planned ≡ kernel ≡ parallel ≡ dataflow, per storage
+//! dtype): each chunk's CoW fork/verified-disjoint merge is the same
+//! machinery, DAG edges serialize every conflicting pair, merges of
+//! concurrent ops commute because their write sets are element-wise
+//! disjoint (re-verified at merge time), and within one chunk the
+//! lexicographic iteration order — hence per-element aggregation order
+//! — is the serial order.
+//!
+//! The `max_iterations` runaway guard is approximate like the parallel
+//! engine's: each chunk counts its own iterations on top of the
+//! highest completed count at its dispatch time, so the program-wide
+//! bound is at most `(in-flight chunks) × max_iterations`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::ir::{Block, BufKind, Program, Statement};
+
+use super::buffer::Buffers;
+use super::interp::{ExecError, ExecOptions};
+use super::kernel::KernelStats;
+use super::parallel::{
+    best_parallel_dim, chunk_block, exec_chunk, split_range, OpParallelism, ParallelReport,
+};
+use super::plan::{self, RootScope};
+
+/// Chunks dispatched per compute unit for a parallel op: the
+/// over-decomposition factor that gives the pool's shared queue
+/// something to steal. 2 keeps per-chunk fork/merge overhead low while
+/// letting a worker that finishes early pick up a sibling's remainder.
+const OVERSUBSCRIPTION: usize = 2;
+
+/// Human-readable panic payload (string payloads pass through, others
+/// are labelled). Shared by the execution engines and the compile
+/// service so a worker panic is never collapsed to a generic message.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One chunk of one op, shipped to a pool worker. Owns everything it
+/// needs (`'static`): the range-restricted block, a CoW fork of the
+/// master buffers, and the reply channel.
+struct Job {
+    op: usize,
+    chunk: usize,
+    /// Home worker (`chunk % pool size`) — a chunk executed by any
+    /// other worker counts as a steal.
+    home: usize,
+    blk: Block,
+    scope: Arc<RootScope>,
+    opts: ExecOptions,
+    local: Buffers,
+    executed_base: u64,
+    reply: Sender<ChunkDone>,
+}
+
+struct ChunkDone {
+    op: usize,
+    chunk: usize,
+    result: Result<(Buffers, u64, KernelStats), ExecError>,
+}
+
+#[derive(Default)]
+struct PoolCounters {
+    spawned: AtomicU64,
+    steals: AtomicU64,
+    chunks: AtomicU64,
+    /// Test-only fault injection: the next N chunks panic.
+    fail_next: AtomicU64,
+}
+
+/// A persistent pool of execution workers. Threads are spawned once at
+/// construction and live until the pool drops; jobs are pulled from
+/// one shared queue (natural work-stealing — an idle worker takes the
+/// next chunk regardless of which op or "home" unit it belongs to).
+/// Create one per run, or share one across requests via
+/// [`ExecOptions::compute`] (the coordinator's `CompileService` does).
+pub struct ComputePool {
+    tx: Mutex<Option<Sender<Job>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    size: usize,
+    counters: Arc<PoolCounters>,
+}
+
+impl ComputePool {
+    /// Spawn `size` persistent workers (clamped to at least 1).
+    pub fn new(size: usize) -> Arc<ComputePool> {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let counters = Arc::new(PoolCounters::default());
+        let mut workers = Vec::with_capacity(size);
+        for id in 0..size {
+            let rx = Arc::clone(&rx);
+            let ctr = Arc::clone(&counters);
+            counters.spawned.fetch_add(1, Ordering::Relaxed);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("stripe-dataflow-{id}"))
+                    .spawn(move || worker_loop(id, &rx, &ctr))
+                    .expect("spawn dataflow worker"),
+            );
+        }
+        Arc::new(ComputePool {
+            tx: Mutex::new(Some(tx)),
+            workers: Mutex::new(workers),
+            size,
+            counters,
+        })
+    }
+
+    /// Worker count.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Threads ever spawned by this pool — stays equal to [`size`](Self::size)
+    /// for the pool's whole life, which is exactly the O(1)-spawns
+    /// claim the benches assert.
+    pub fn threads_spawned(&self) -> u64 {
+        self.counters.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative chunks executed by a worker other than the chunk's
+    /// home unit.
+    pub fn steal_count(&self) -> u64 {
+        self.counters.steals.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative chunks executed.
+    pub fn chunk_count(&self) -> u64 {
+        self.counters.chunks.load(Ordering::Relaxed)
+    }
+
+    /// Test-only fault injection: the next `n` chunks panic inside the
+    /// worker (used by the panic-payload-forwarding regression tests).
+    #[doc(hidden)]
+    pub fn inject_chunk_panics(&self, n: u64) {
+        self.counters.fail_next.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn submit(&self, job: Job) -> Result<(), ExecError> {
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else {
+            return Err(ExecError {
+                block: job.blk.name.clone(),
+                message: "compute pool is shut down".into(),
+            });
+        };
+        tx.send(job).map_err(|e| {
+            // Recover the job from the send error so its fork's pages
+            // go back to the buffer pool instead of leaking.
+            let job = e.0;
+            let name = job.blk.name.clone();
+            job.local.release();
+            ExecError { block: name, message: "compute pool workers exited".into() }
+        })
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        // Closing the channel is the shutdown signal; workers exit on
+        // the recv error.
+        drop(self.tx.lock().unwrap().take());
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputePool")
+            .field("size", &self.size)
+            .field("spawned", &self.threads_spawned())
+            .field("chunks", &self.chunk_count())
+            .field("steals", &self.steal_count())
+            .finish()
+    }
+}
+
+fn worker_loop(id: usize, rx: &Mutex<Receiver<Job>>, ctr: &PoolCounters) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(job) = job else { break };
+        ctr.chunks.fetch_add(1, Ordering::Relaxed);
+        if job.home != id {
+            ctr.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        let injected = ctr
+            .fail_next
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok();
+        let Job { op, chunk, blk, scope, opts, mut local, executed_base, reply, .. } = job;
+        let block_name = blk.name.clone();
+        // Panics are fenced per chunk so one poisoned op cannot take
+        // the persistent pool down with it; the payload is forwarded
+        // verbatim into the ExecError the scheduler surfaces.
+        let result = catch_unwind(AssertUnwindSafe(
+            move || -> Result<(Buffers, u64, KernelStats), ExecError> {
+                if injected {
+                    panic!("injected dataflow chunk fault");
+                }
+                let (done, ks) = exec_chunk(&mut local, &opts, &blk, &scope, executed_base)?;
+                Ok((local, done, ks))
+            },
+        ));
+        let result = match result {
+            Ok(r) => r,
+            Err(payload) => Err(ExecError {
+                block: block_name,
+                message: format!("dataflow worker panicked: {}", panic_message(payload.as_ref())),
+            }),
+        };
+        // A send error means the run was aborted and its receiver
+        // dropped; the chunk's buffers just drop with the message.
+        let _ = reply.send(ChunkDone { op, chunk, result });
+    }
+}
+
+/// Scheduler statistics of one dataflow run (or, from
+/// [`analyze_dataflow`], the static DAG shape of a compiled network —
+/// runtime fields zero there). Carried on
+/// [`ParallelReport::dag`](super::ParallelReport).
+#[derive(Debug, Clone, Default)]
+pub struct DataflowStats {
+    /// Top-level ops in the DAG.
+    pub dag_ops: usize,
+    /// Ordered pairs with a read-after-write hazard.
+    pub edges_raw: usize,
+    /// Ordered pairs with a write-after-read hazard.
+    pub edges_war: usize,
+    /// Ordered pairs with a write-after-write hazard.
+    pub edges_waw: usize,
+    /// Maximum number of ops on one dependency level — the width the
+    /// scheduler can exploit.
+    pub width: usize,
+    /// Longest dependency chain, in ops (the schedule can never beat
+    /// `critical_path` sequential op executions).
+    pub critical_path: usize,
+    /// Worker threads in the pool that executed the run.
+    pub pool_size: usize,
+    /// Most ops simultaneously dispatched (merged-but-unfinished) at
+    /// any point — the overlap the scheduler actually achieved.
+    pub max_in_flight: usize,
+    /// Chunks executed by a worker other than their home unit during
+    /// this run (approximate under a pool shared by concurrent runs).
+    pub steals: u64,
+    /// Chunks executed during this run (same sharing caveat).
+    pub chunks: u64,
+    /// Ops that ran inline on the scheduler thread (stateful target,
+    /// unresolved footprint, or no writes).
+    pub inline_ops: usize,
+}
+
+impl DataflowStats {
+    /// Total hazard-pair count (a pair with several hazard kinds
+    /// counts once per kind).
+    pub fn edges(&self) -> usize {
+        self.edges_raw + self.edges_war + self.edges_waw
+    }
+
+    /// One-line rendering for report summaries.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "dag: {} ops, {} hazards (raw {} / war {} / waw {}), width {}, \
+             critical path {}, pool {}, overlapped {}, chunks {}, steals {}, inline {}",
+            self.dag_ops,
+            self.edges(),
+            self.edges_raw,
+            self.edges_war,
+            self.edges_waw,
+            self.width,
+            self.critical_path,
+            self.pool_size,
+            self.max_in_flight,
+            self.chunks,
+            self.steals,
+            self.inline_ops
+        )
+    }
+}
+
+/// The op dependency DAG: forward edges only (acyclic by construction).
+struct Dag {
+    succs: Vec<Vec<usize>>,
+    indeg: Vec<usize>,
+    edges_raw: usize,
+    edges_war: usize,
+    edges_waw: usize,
+    width: usize,
+    critical_path: usize,
+}
+
+/// Do two footprints share any flat element range? `None` (an opaque
+/// footprint) conservatively conflicts with everything.
+fn footprints_overlap(
+    a: &Option<Vec<(usize, i64, i64)>>,
+    b: &Option<Vec<(usize, i64, i64)>>,
+) -> bool {
+    match (a, b) {
+        (Some(x), Some(y)) => x.iter().any(|&(ab, alo, ahi)| {
+            y.iter().any(|&(bb, blo, bhi)| ab == bb && alo <= bhi && blo <= ahi)
+        }),
+        _ => true,
+    }
+}
+
+fn build_dag(blocks: &[&Block], scope: &RootScope) -> Dag {
+    let n = blocks.len();
+    let reads: Vec<_> = blocks.iter().map(|b| plan::flat_read_extents(b, scope)).collect();
+    let writes: Vec<_> = blocks.iter().map(|b| plan::flat_write_extents(b, scope)).collect();
+    let mut succs = vec![Vec::new(); n];
+    let mut indeg = vec![0usize; n];
+    let (mut raw, mut war, mut waw) = (0usize, 0usize, 0usize);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let is_raw = footprints_overlap(&writes[i], &reads[j]);
+            let is_war = footprints_overlap(&reads[i], &writes[j]);
+            let is_waw = footprints_overlap(&writes[i], &writes[j]);
+            raw += usize::from(is_raw);
+            war += usize::from(is_war);
+            waw += usize::from(is_waw);
+            if is_raw || is_war || is_waw {
+                succs[i].push(j);
+                indeg[j] += 1;
+            }
+        }
+    }
+    // Levelization (edges point forward, so index order is topological):
+    // critical path = deepest level + 1, width = fullest level.
+    let mut level = vec![0usize; n];
+    for i in 0..n {
+        for &j in &succs[i] {
+            level[j] = level[j].max(level[i] + 1);
+        }
+    }
+    let mut occupancy: BTreeMap<usize, usize> = BTreeMap::new();
+    for &l in &level {
+        *occupancy.entry(l).or_insert(0) += 1;
+    }
+    Dag {
+        succs,
+        indeg,
+        edges_raw: raw,
+        edges_war: war,
+        edges_waw: waw,
+        width: occupancy.values().copied().max().unwrap_or(0),
+        critical_path: level.iter().map(|l| l + 1).max().unwrap_or(0),
+    }
+}
+
+/// Static dataflow analysis of a program: the DAG shape
+/// ([`run_program_dataflow`]'s schedule would honor exactly these
+/// hazard edges) with runtime counters zeroed. `None` when the program
+/// has non-block main statements (`Special`s — not schedulable) or its
+/// root scope does not resolve.
+pub fn analyze_dataflow(p: &Program, workers: usize) -> Option<DataflowStats> {
+    let blocks: Vec<&Block> = p
+        .main
+        .stmts
+        .iter()
+        .map(|st| match st {
+            Statement::Block(b) => Some(b),
+            _ => None,
+        })
+        .collect::<Option<_>>()?;
+    let scope = plan::symbolic_root_scope(p).ok()?;
+    let dag = build_dag(&blocks, &scope);
+    Some(DataflowStats {
+        dag_ops: blocks.len(),
+        edges_raw: dag.edges_raw,
+        edges_war: dag.edges_war,
+        edges_waw: dag.edges_waw,
+        width: dag.width,
+        critical_path: dag.critical_path,
+        pool_size: workers.max(1),
+        ..DataflowStats::default()
+    })
+}
+
+/// How the scheduler executes one DAG-ready op.
+enum DfDecision {
+    /// Run on the master buffers, on the scheduler thread (see the
+    /// module docs for what forces this).
+    Inline(String),
+    /// Fork-execute-merge through the pool; `dim: None` means a single
+    /// chunk (no provably disjoint dimension, or one compute unit).
+    Offload { dim: Option<(String, u64)>, write_ids: Vec<usize> },
+}
+
+fn decide_dataflow(b: &Block, scope: &RootScope, master: &Buffers, units: usize) -> DfDecision {
+    let mut write_ids: BTreeSet<usize> = BTreeSet::new();
+    for r in &b.refs {
+        if !r.dir.is_write() {
+            continue;
+        }
+        let Some(id) = scope.buffer_of(&r.from) else {
+            return DfDecision::Inline(format!("unresolved write target {:?}", r.from));
+        };
+        // The verified-disjoint merge is only unambiguous when the
+        // op's write targets start fresh (same gate as the parallel
+        // engine) — the DAG guarantees every predecessor already
+        // merged, so running inline here is ordered correctly.
+        if master.written_any(id) {
+            return DfDecision::Inline(format!("write target {:?} holds earlier data", r.from));
+        }
+        write_ids.insert(id);
+    }
+    if write_ids.is_empty() {
+        return DfDecision::Inline("no write refinements".into());
+    }
+    let dim = if units >= 2 { best_parallel_dim(b, units) } else { None };
+    DfDecision::Offload { dim, write_ids: write_ids.into_iter().collect() }
+}
+
+/// An op dispatched to the pool, awaiting its chunks.
+struct Flight {
+    dim: Option<String>,
+    range: u64,
+    write_ids: Vec<usize>,
+    extents: Vec<Option<Vec<(usize, i64, i64)>>>,
+    parts: Vec<Option<(Buffers, u64, KernelStats)>>,
+    pending: usize,
+}
+
+/// Run a program through the dataflow engine: DAG-scheduled inter-op
+/// parallelism over a persistent worker pool, each dispatched op still
+/// chunked along its proven-disjoint dimension with chunk-level work
+/// stealing. Semantics are bit-exact with the serial planned path (see
+/// the module docs). Returns the outputs plus the schedule actually
+/// used, with [`ParallelReport::dag`] populated.
+///
+/// The pool comes from [`ExecOptions::compute`] when set (the service
+/// path shares one across requests); otherwise a run-local pool of
+/// `opts.workers` threads is created — still one spawn batch for the
+/// whole run, never per op.
+pub fn run_program_dataflow(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+) -> Result<(BTreeMap<String, Vec<f32>>, ParallelReport), ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let units = opts.workers.max(1);
+    let mut bufs = plan::alloc_program_buffers(program, inputs, opts.pool.clone())?;
+    let scope = Arc::new(plan::build_root_scope(program, &mut bufs)?);
+    let mut blocks: Vec<&Block> = Vec::new();
+    for st in &program.main.stmts {
+        let Statement::Block(b) = st else {
+            bufs.release();
+            return Err(err("main-level statements must be blocks".into()));
+        };
+        blocks.push(b);
+    }
+    let dag = build_dag(&blocks, &scope);
+    let pool = match &opts.compute {
+        Some(p) => Arc::clone(p),
+        None => ComputePool::new(units),
+    };
+    let steals_before = pool.steal_count();
+    let chunks_before = pool.chunk_count();
+
+    // Job options: chunks must not recurse into the dataflow engine
+    // (and must not keep the pool alive through its own queue).
+    let job_opts = ExecOptions { compute: None, ..opts.clone() };
+
+    let n = blocks.len();
+    let (done_tx, done_rx) = channel::<ChunkDone>();
+    let mut indeg = dag.indeg.clone();
+    let mut ready: BTreeSet<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut flights: Vec<Option<Flight>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<OpParallelism>> = vec![None; n];
+    let mut in_flight = 0usize;
+    let mut max_in_flight = 0usize;
+    let mut inline_ops = 0usize;
+    // High-water mark of completed iteration counts: each dispatch
+    // seeds chunks with it, so the runaway budget stays (approximately)
+    // cumulative across ops — see the module docs for the exact bound.
+    let mut executed_hwm = 0u64;
+    let mut failure: Option<ExecError> = None;
+
+    loop {
+        // Dispatch everything dependency-free. Ready ops are taken in
+        // program order (deterministic scheduling decisions; completion
+        // order still floats, which merging tolerates).
+        while failure.is_none() {
+            let Some(&i) = ready.iter().next() else { break };
+            ready.remove(&i);
+            let b = blocks[i];
+            match decide_dataflow(b, &scope, &bufs, units) {
+                DfDecision::Inline(reason) => {
+                    inline_ops += 1;
+                    match exec_chunk(&mut bufs, opts, b, &scope, executed_hwm) {
+                        Ok((done, ks)) => {
+                            executed_hwm = executed_hwm.max(done);
+                            slots[i] = Some(OpParallelism {
+                                op: b.name.clone(),
+                                dim: None,
+                                range: 0,
+                                workers: 1,
+                                reason,
+                                fork_bytes: 0,
+                                merge_bytes: 0,
+                                kernel_lanes: ks.vector_lanes,
+                                scalar_lanes: ks.scalar_lanes,
+                            });
+                            for &j in &dag.succs[i] {
+                                indeg[j] -= 1;
+                                if indeg[j] == 0 {
+                                    ready.insert(j);
+                                }
+                            }
+                        }
+                        Err(e) => failure = Some(e),
+                    }
+                }
+                DfDecision::Offload { dim, write_ids } => {
+                    let (chunks, dim_name, range) = match &dim {
+                        Some((d, range)) => (
+                            split_range(*range, units * OVERSUBSCRIPTION),
+                            Some(d.clone()),
+                            *range,
+                        ),
+                        None => (vec![(0u64, 0u64)], None, 0u64),
+                    };
+                    let chunk_blocks: Vec<Block> = match &dim_name {
+                        Some(d) => chunks
+                            .iter()
+                            .map(|&(lo, len)| chunk_block(b, d, lo as i64, len))
+                            .collect(),
+                        None => vec![b.clone()],
+                    };
+                    let extents: Vec<Option<Vec<(usize, i64, i64)>>> = chunk_blocks
+                        .iter()
+                        .map(|blk| plan::flat_write_extents(blk, &scope))
+                        .collect();
+                    let pending = chunk_blocks.len();
+                    let mut submit_err = None;
+                    let mut submitted = 0usize;
+                    for (c, blk) in chunk_blocks.into_iter().enumerate() {
+                        let job = Job {
+                            op: i,
+                            chunk: c,
+                            home: c % pool.size(),
+                            blk,
+                            scope: Arc::clone(&scope),
+                            opts: job_opts.clone(),
+                            local: bufs.fork(),
+                            executed_base: executed_hwm,
+                            reply: done_tx.clone(),
+                        };
+                        if let Err(e) = pool.submit(job) {
+                            submit_err = Some(e);
+                            break;
+                        }
+                        submitted += 1;
+                    }
+                    if submitted > 0 {
+                        flights[i] = Some(Flight {
+                            dim: dim_name,
+                            range,
+                            write_ids,
+                            extents,
+                            parts: (0..pending).map(|_| None).collect(),
+                            pending: submitted,
+                        });
+                        in_flight += 1;
+                        max_in_flight = max_in_flight.max(in_flight);
+                    }
+                    if let Some(e) = submit_err {
+                        failure = Some(e);
+                    }
+                }
+            }
+        }
+        if in_flight == 0 {
+            break;
+        }
+        // Collect one chunk completion (blocking: the scheduler owns
+        // the master buffers, so merges are serialized here).
+        let done = done_rx.recv().expect("scheduler holds a live sender");
+        let flight = flights[done.op].as_mut().expect("completion for an in-flight op");
+        match done.result {
+            Ok(part) => flight.parts[done.chunk] = Some(part),
+            Err(e) => {
+                if failure.is_none() {
+                    failure = Some(e);
+                }
+            }
+        }
+        flight.pending -= 1;
+        if flight.pending > 0 {
+            continue;
+        }
+        let flight = flights[done.op].take().unwrap();
+        in_flight -= 1;
+        let complete = flight.parts.iter().all(|p| p.is_some());
+        if failure.is_some() || !complete {
+            for part in flight.parts.into_iter().flatten() {
+                part.0.release();
+            }
+            if failure.is_none() {
+                failure = Some(ExecError {
+                    block: blocks[done.op].name.clone(),
+                    message: "dataflow chunk lost without a result".into(),
+                });
+            }
+            continue;
+        }
+        match merge_op(
+            &mut bufs,
+            blocks[done.op],
+            flight,
+            &mut executed_hwm,
+        ) {
+            Ok(op) => {
+                slots[done.op] = Some(op);
+                for &j in &dag.succs[done.op] {
+                    indeg[j] -= 1;
+                    if indeg[j] == 0 {
+                        ready.insert(j);
+                    }
+                }
+            }
+            Err(e) => failure = Some(e),
+        }
+    }
+
+    if let Some(e) = failure {
+        bufs.release();
+        return Err(e);
+    }
+    let mut report = ParallelReport {
+        ops: slots.into_iter().map(|s| s.expect("every op scheduled")).collect(),
+        ..ParallelReport::default()
+    };
+    report.dag = Some(DataflowStats {
+        dag_ops: n,
+        edges_raw: dag.edges_raw,
+        edges_war: dag.edges_war,
+        edges_waw: dag.edges_waw,
+        width: dag.width,
+        critical_path: dag.critical_path,
+        pool_size: pool.size(),
+        max_in_flight,
+        steals: pool.steal_count() - steals_before,
+        chunks: pool.chunk_count() - chunks_before,
+        inline_ops,
+    });
+    let mut out = BTreeMap::new();
+    for bdef in program.buffers_of(BufKind::Output) {
+        let id = bufs.id_of(&bdef.name).unwrap();
+        out.insert(bdef.name.clone(), bufs.snapshot(id));
+    }
+    bufs.release();
+    Ok((out, report))
+}
+
+/// Verify each chunk's dirty range against its predicted write extent,
+/// merge the parts into the master, and account fork/merge traffic —
+/// the same post-flight the per-op parallel dispatcher runs.
+fn merge_op(
+    master: &mut Buffers,
+    b: &Block,
+    flight: Flight,
+    executed_hwm: &mut u64,
+) -> Result<OpParallelism, ExecError> {
+    let mut parts = Vec::with_capacity(flight.parts.len());
+    let mut lanes = KernelStats::default();
+    for part in flight.parts.into_iter() {
+        let (bufs, done, ks) = part.expect("merge_op called on a complete flight");
+        *executed_hwm = (*executed_hwm).max(done);
+        lanes.absorb(ks);
+        parts.push(bufs);
+    }
+    let mut fork_bytes = 0u64;
+    let mut verdict: Result<(), ExecError> = Ok(());
+    'verify: for (i, part) in parts.iter().enumerate() {
+        fork_bytes += part.stats().cow_bytes;
+        let Some(ext) = &flight.extents[i] else { continue };
+        for &id in &flight.write_ids {
+            let Some((dlo, dhi)) = part.dirty_range(id) else { continue };
+            let mut lo = i64::MAX;
+            let mut hi = i64::MIN;
+            for &(bid, elo, ehi) in ext {
+                if bid == id {
+                    lo = lo.min(elo);
+                    hi = hi.max(ehi);
+                }
+            }
+            if lo > hi {
+                continue;
+            }
+            if (dlo as i64) < lo || (dhi as i64) > hi {
+                verdict = Err(ExecError {
+                    block: b.name.clone(),
+                    message: format!(
+                        "chunk {i} wrote {}[{dlo}..={dhi}] outside its predicted \
+                         write extent [{lo}..={hi}] — chunking analysis violated",
+                        master.name_of(id)
+                    ),
+                });
+                break 'verify;
+            }
+        }
+    }
+    let before = master.stats();
+    if verdict.is_ok() {
+        verdict = master
+            .merge_disjoint(&parts, &flight.write_ids)
+            .map(|_| ())
+            .map_err(|m| ExecError { block: b.name.clone(), message: m });
+    }
+    let after = master.stats();
+    let merge_bytes =
+        (after.merged_bytes - before.merged_bytes) + (after.cow_bytes - before.cow_bytes);
+    let workers = parts.len();
+    for part in parts {
+        part.release();
+    }
+    verdict?;
+    Ok(match flight.dim {
+        Some(dim) => OpParallelism {
+            op: b.name.clone(),
+            reason: format!("disjoint writes across {dim}, {workers} stealable chunks"),
+            workers,
+            dim: Some(dim),
+            range: flight.range,
+            fork_bytes,
+            merge_bytes,
+            kernel_lanes: lanes.vector_lanes,
+            scalar_lanes: lanes.scalar_lanes,
+        },
+        None => OpParallelism {
+            op: b.name.clone(),
+            dim: None,
+            range: 0,
+            workers: 1,
+            reason: "offloaded as one chunk (no provably disjoint outer dimension \
+                     or a single compute unit)"
+                .into(),
+            fork_bytes,
+            merge_bytes,
+            kernel_lanes: lanes.vector_lanes,
+            scalar_lanes: lanes.scalar_lanes,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Engine, NullSink};
+    use crate::frontend::ops;
+    use crate::graph::NetworkBuilder;
+    use crate::ir::DType;
+    use crate::passes::equiv::gen_inputs;
+
+    fn serial(p: &Program, inputs: &BTreeMap<String, Vec<f32>>) -> BTreeMap<String, Vec<f32>> {
+        plan::run_program_planned(p, inputs, &ExecOptions::default(), &mut NullSink).unwrap()
+    }
+
+    fn dataflow_opts(workers: usize) -> ExecOptions {
+        ExecOptions { workers, engine: Engine::Dataflow, ..ExecOptions::default() }
+    }
+
+    #[test]
+    fn cnn_is_bit_exact_and_reports_dag_stats() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 71);
+        let (out, report) = run_program_dataflow(&p, &inputs, &dataflow_opts(4)).unwrap();
+        assert_eq!(serial(&p, &inputs), out, "dataflow must be bit-exact\n{}", report.summary());
+        let dag = report.dag.as_ref().expect("dataflow reports DAG stats");
+        assert_eq!(dag.dag_ops, report.ops.len());
+        assert!(dag.critical_path >= 1 && dag.critical_path <= dag.dag_ops);
+        assert!(dag.width >= 1);
+        assert!(dag.chunks > 0, "{}", dag.summary_line());
+        assert!(report.summary().contains("dag:"), "{}", report.summary());
+    }
+
+    #[test]
+    fn relu_chain_is_fully_serialized_by_raw_edges() {
+        let mut nb = NetworkBuilder::new("chain", DType::F32);
+        let x = nb.input("I", &[64]);
+        let a = nb.relu(x);
+        let b = nb.relu(a);
+        let c = nb.relu(b);
+        let p = nb.finish(c);
+        let dag = analyze_dataflow(&p, 4).expect("chain analyzes");
+        assert_eq!(dag.dag_ops, 3);
+        assert!(dag.edges_raw >= 2, "{}", dag.summary_line());
+        assert_eq!(dag.critical_path, 3, "{}", dag.summary_line());
+        assert_eq!(dag.width, 1, "a chain has no schedulable width");
+        // And the schedule executes it bit-exactly with zero overlap.
+        let inputs = gen_inputs(&p, 7);
+        let (out, report) = run_program_dataflow(&p, &inputs, &dataflow_opts(3)).unwrap();
+        assert_eq!(serial(&p, &inputs), out);
+        assert_eq!(report.dag.unwrap().max_in_flight, 1);
+    }
+
+    /// Main-scope name of the first write target of op `op_idx`.
+    fn write_target(p: &Program, op_idx: usize) -> String {
+        let Statement::Block(b) = &p.main.stmts[op_idx] else { panic!("op is a block") };
+        b.refs.iter().find(|r| r.dir.is_write()).expect("op writes").from.clone()
+    }
+
+    /// Retarget every write refinement of op `op_idx` at `new_from`
+    /// (a main-scope name of identical shape) — the hazard-injection
+    /// helper for the WAR/WAW tests.
+    fn retarget_writes(p: &mut Program, op_idx: usize, new_from: &str) {
+        let Statement::Block(b) = &mut p.main.stmts[op_idx] else { panic!("op is a block") };
+        for r in &mut b.refs {
+            if r.dir.is_write() {
+                r.from = new_from.to_string();
+            }
+        }
+    }
+
+    /// Two same-shape elementwise branches off one input; the hazard
+    /// tests rewrite the second branch's write target.
+    fn two_branch_net() -> Program {
+        let mut nb = NetworkBuilder::new("hz", DType::F32);
+        let x = nb.input("I", &[48]);
+        let a = nb.relu(x);
+        let b = nb.tanh(x);
+        let s = nb.add(a, b);
+        nb.finish(s)
+    }
+
+    #[test]
+    fn waw_pair_is_serialized() {
+        let mut p = two_branch_net();
+        let base = analyze_dataflow(&p, 4).unwrap();
+        assert_eq!(base.width, 2, "branches are independent before injection");
+        // Make op1 (tanh) write op0's (relu's) output: a WAW pair.
+        let a_target = write_target(&p, 0);
+        retarget_writes(&mut p, 1, &a_target);
+        let dag = analyze_dataflow(&p, 4).unwrap();
+        assert!(dag.edges_waw >= 1, "{}", dag.summary_line());
+        assert!(dag.critical_path >= 2, "WAW pair must be ordered: {}", dag.summary_line());
+        // Runtime: the second writer sees earlier data -> inline, after
+        // the first completed; results must equal the serial order
+        // (tanh overwrote relu). Double-writes through assign need the
+        // relaxed gate, identically on both engines.
+        let opts =
+            ExecOptions { relaxed_assign: true, workers: 3, ..ExecOptions::default() };
+        let inputs = gen_inputs(&p, 17);
+        let want =
+            plan::run_program_planned(&p, &inputs, &opts, &mut NullSink).unwrap();
+        let (got, report) = run_program_dataflow(&p, &inputs, &opts).unwrap();
+        assert_eq!(want, got, "WAW serialization must match program order");
+        assert!(report.dag.unwrap().inline_ops >= 1, "second writer runs inline");
+    }
+
+    #[test]
+    fn war_pair_is_serialized() {
+        let mut p = two_branch_net();
+        // Make op1 (tanh) overwrite the shared input I that op0 (relu)
+        // reads: a WAR pair (and a RAW for op1's own read of I).
+        let input_scope_name = p
+            .main
+            .refs
+            .iter()
+            .find(|r| r.from == "I")
+            .map(|r| r.into.clone())
+            .expect("input is in main scope");
+        retarget_writes(&mut p, 1, &input_scope_name);
+        let dag = analyze_dataflow(&p, 4).unwrap();
+        assert!(dag.edges_war >= 1, "{}", dag.summary_line());
+        assert!(dag.critical_path >= 2, "WAR pair must be ordered: {}", dag.summary_line());
+        let opts =
+            ExecOptions { relaxed_assign: true, workers: 3, ..ExecOptions::default() };
+        let inputs = gen_inputs(&p, 19);
+        let want =
+            plan::run_program_planned(&p, &inputs, &opts, &mut NullSink).unwrap();
+        let (got, _) = run_program_dataflow(&p, &inputs, &opts).unwrap();
+        assert_eq!(want, got, "WAR serialization must match program order");
+    }
+
+    #[test]
+    fn diamond_overlaps_independent_arms() {
+        // A -> (B, C) -> D: the two arms are independent and must be
+        // dispatched concurrently once A merges.
+        let mut nb = NetworkBuilder::new("diamond", DType::F32);
+        let x = nb.input("I", &[96]);
+        let a = nb.relu(x);
+        let b = nb.relu(a);
+        let c = nb.tanh(a);
+        let d = nb.add(b, c);
+        let p = nb.finish(d);
+        let dag = analyze_dataflow(&p, 4).unwrap();
+        assert_eq!(dag.width, 2, "{}", dag.summary_line());
+        assert_eq!(dag.critical_path, 3, "{}", dag.summary_line());
+        let inputs = gen_inputs(&p, 23);
+        let (out, report) = run_program_dataflow(&p, &inputs, &dataflow_opts(4)).unwrap();
+        assert_eq!(serial(&p, &inputs), out);
+        let stats = report.dag.unwrap();
+        assert!(
+            stats.max_in_flight >= 2,
+            "independent arms must be in flight together: {}",
+            stats.summary_line()
+        );
+    }
+
+    #[test]
+    fn pool_is_persistent_across_runs_with_o1_spawns() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 29);
+        let pool = ComputePool::new(3);
+        let opts = ExecOptions {
+            workers: 3,
+            compute: Some(Arc::clone(&pool)),
+            ..ExecOptions::default()
+        };
+        let (a, ra) = run_program_dataflow(&p, &inputs, &opts).unwrap();
+        let (b, rb) = run_program_dataflow(&p, &inputs, &opts).unwrap();
+        assert_eq!(a, b, "shared-pool reruns must be bit-exact");
+        assert_eq!(
+            pool.threads_spawned(),
+            3,
+            "thread spawns are O(1) for the pool's life, not O(ops)"
+        );
+        assert!(pool.chunk_count() > 0);
+        assert_eq!(ra.dag.as_ref().unwrap().pool_size, 3);
+        assert_eq!(rb.dag.as_ref().unwrap().pool_size, 3);
+        assert_eq!(a, serial(&p, &inputs));
+    }
+
+    #[test]
+    fn worker_panic_payload_is_forwarded() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 31);
+        let pool = ComputePool::new(2);
+        pool.inject_chunk_panics(1);
+        let opts = ExecOptions {
+            workers: 2,
+            compute: Some(Arc::clone(&pool)),
+            ..ExecOptions::default()
+        };
+        let e = run_program_dataflow(&p, &inputs, &opts).unwrap_err();
+        assert!(
+            e.message.contains("injected dataflow chunk fault"),
+            "panic payload must be forwarded verbatim, got: {e}"
+        );
+        // The pool survives the poisoned chunk: the next run succeeds.
+        let (out, _) = run_program_dataflow(&p, &inputs, &opts).unwrap();
+        assert_eq!(out, serial(&p, &inputs));
+    }
+
+    #[test]
+    fn iteration_budget_stays_cumulative_across_ops() {
+        // tiny_mlp executes 64 odometer steps across three chained
+        // ops; a budget of 50 covers any single op but not the chain.
+        let p = ops::tiny_mlp_program(4, 8, 3);
+        let inputs = gen_inputs(&p, 37);
+        let opts = ExecOptions { max_iterations: 50, workers: 1, ..ExecOptions::default() };
+        let e = run_program_dataflow(&p, &inputs, &opts).unwrap_err();
+        assert!(e.message.contains("iteration budget"), "{e}");
+    }
+
+    #[test]
+    fn single_unit_still_overlaps_nothing_but_matches() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 41);
+        let (out, report) = run_program_dataflow(&p, &inputs, &dataflow_opts(1)).unwrap();
+        assert_eq!(serial(&p, &inputs), out);
+        assert_eq!(report.parallel_ops(), 0, "one unit never chunks:\n{}", report.summary());
+        assert!(report.dag.is_some());
+    }
+
+    #[test]
+    fn kernel_engine_chunks_report_lanes() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 43);
+        let opts = ExecOptions { workers: 3, engine: Engine::Kernel, ..ExecOptions::default() };
+        let (out, report) = run_program_dataflow(&p, &inputs, &opts).unwrap();
+        assert_eq!(serial(&p, &inputs), out);
+        let cov = report.kernel_coverage().expect("kernel chunks report lanes");
+        assert!(cov >= 0.8, "coverage {cov:.3}\n{}", report.summary());
+    }
+
+    #[test]
+    fn compiled_networks_run_dataflow_bit_exact() {
+        let cfg = crate::hw::targets::cpu_cache();
+        let c = crate::coordinator::compile_network(&ops::cnn_program(), &cfg, false).unwrap();
+        let inputs = gen_inputs(&c.program, 47);
+        let (out, report) = run_program_dataflow(&c.program, &inputs, &dataflow_opts(4)).unwrap();
+        assert_eq!(serial(&c.program, &inputs), out, "{}", report.summary());
+        // The compile-time schedule carries the same static DAG shape.
+        let static_dag = c.schedule.dag.as_ref().expect("compiled schedule has DAG stats");
+        let run_dag = report.dag.unwrap();
+        assert_eq!(static_dag.critical_path, run_dag.critical_path);
+        assert_eq!(static_dag.width, run_dag.width);
+    }
+}

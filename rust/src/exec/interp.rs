@@ -31,6 +31,11 @@ pub enum Engine {
     /// Plan compilation + leaf-kernel lowering (`exec::kernel`): fused
     /// run-level kernels with hoisted checks, guarded-odometer fallback.
     Kernel,
+    /// Inter-op DAG scheduling over a persistent worker pool
+    /// (`exec::dataflow`): independent ops overlap across compute
+    /// units, each op's chunks run the kernel lowering with
+    /// work-stealing.
+    Dataflow,
 }
 
 impl Engine {
@@ -39,6 +44,7 @@ impl Engine {
             Engine::Naive => "naive",
             Engine::Planned => "planned",
             Engine::Kernel => "kernel",
+            Engine::Dataflow => "dataflow",
         }
     }
 
@@ -47,6 +53,7 @@ impl Engine {
             "naive" => Engine::Naive,
             "planned" => Engine::Planned,
             "kernel" => Engine::Kernel,
+            "dataflow" => Engine::Dataflow,
             _ => return None,
         })
     }
@@ -80,6 +87,12 @@ pub struct ExecOptions {
     /// coordinator's service path) recycle allocations instead of
     /// paying fresh heap per request. `None` = plain allocation.
     pub pool: Option<Arc<BufferPool>>,
+    /// Optional persistent compute pool for the dataflow engine: worker
+    /// threads recycled across requests (the coordinator's service
+    /// shares one, like its `BufferPool`). `None` = the dataflow run
+    /// creates its own pool of `workers` threads — still one spawn
+    /// batch per run, never per op. Ignored by the other engines.
+    pub compute: Option<Arc<super::dataflow::ComputePool>>,
 }
 
 impl ExecOptions {
@@ -99,6 +112,7 @@ impl Default for ExecOptions {
             engine: Engine::default(),
             simd: true,
             pool: None,
+            compute: None,
         }
     }
 }
@@ -144,8 +158,9 @@ pub fn run_program(
 
 /// Run with explicit options, choosing the execution engine:
 /// `Special`-bearing programs take the naive interpreter (the only path
-/// that executes specials); `opts.workers > 1` takes the parallel
-/// dispatcher (`exec::parallel`, which runs each chunk on
+/// that executes specials); `Engine::Dataflow` takes the inter-op DAG
+/// scheduler (`exec::dataflow`); `opts.workers > 1` takes the per-op
+/// parallel dispatcher (`exec::parallel`, which runs each chunk on
 /// `opts.engine`); otherwise `opts.engine` selects between the naive
 /// interpreter, the serial plan, and the leaf-kernel engine.
 pub fn run_program_with(
@@ -159,6 +174,8 @@ pub fn run_program_with(
     });
     if has_special {
         run_program_sink(program, inputs, opts, &mut NullSink)
+    } else if opts.engine == Engine::Dataflow {
+        super::dataflow::run_program_dataflow(program, inputs, opts).map(|(out, _)| out)
     } else if opts.workers > 1 {
         super::parallel::run_program_parallel(program, inputs, opts).map(|(out, _)| out)
     } else {
@@ -170,6 +187,7 @@ pub fn run_program_with(
             Engine::Kernel => {
                 super::kernel::run_program_kernel(program, inputs, opts).map(|(out, _)| out)
             }
+            Engine::Dataflow => unreachable!("dispatched above"),
         }
     }
 }

@@ -22,23 +22,27 @@
 //!
 //! # Execution engines
 //!
-//! Four engines share these semantics:
+//! Five engines share these semantics:
 //!
 //! | engine | module | use |
 //! |--------|--------|-----|
 //! | naive interpreter | [`interp`] | ground truth; only path executing `Special` statements; access tracing |
 //! | serial plan | [`plan`] | slot-resolved odometer; default |
 //! | leaf kernel | [`kernel`] | plan + leaf-kernel lowering: fused run-level kernels (fill/copy/map/zip/mul-add/generic) over contiguous runs, lane bodies executed through the SIMD-shaped chunked kernels in [`simd`], constraint/OOB checks hoisted per band, guarded-odometer fallback |
-//! | parallel | [`parallel`] | chunk dispatch across compute units; each chunk runs the planned or kernel engine |
+//! | parallel | [`parallel`] | per-op chunk dispatch across compute units; ops run in program order, each chunk runs the planned or kernel engine |
+//! | dataflow | [`dataflow`] | inter-op DAG scheduling over a persistent worker pool: independent ops overlap across compute units, chunks are work-stolen, chunks run the kernel lowering |
 //!
 //! [`run_program_with`] dispatches from [`ExecOptions`]: `Special`s
-//! force the naive interpreter, `workers > 1` selects the parallel
-//! dispatcher, and [`ExecOptions::engine`] ([`Engine`]) picks the
+//! force the naive interpreter, [`Engine::Dataflow`] selects the DAG
+//! scheduler, `workers > 1` selects the per-op parallel dispatcher,
+//! and otherwise [`ExecOptions::engine`] ([`Engine`]) picks the
 //! serial engine — or the per-chunk executor under the dispatcher.
 //! [`run_program`] is the serial convenience wrapper. The kernel
 //! engine reports per-op coverage (% of leaf iterations executed via
 //! vector kernels) in a [`KernelReport`]; the compiled-network
-//! schedule records the static prediction of the same split.
+//! schedule records the static prediction of the same split, plus the
+//! static op DAG ([`DataflowStats`] on [`ParallelReport::dag`] — what
+//! creates a hazard edge is documented in [`dataflow`]).
 //! [`ExecOptions::simd`] (default on) toggles the chunked kernels;
 //! turning it off retains the per-element lane interpreter as the
 //! measured baseline — both paths are bitwise identical.
@@ -54,16 +58,16 @@
 //! at f32 precision. Engines always *compute* in f32 registers —
 //! conversions happen only at the buffer boundary (decode on read,
 //! round/clamp-encode on write, aggregations combine against the
-//! decoded stored value) — so all four engines remain bit-exact per
+//! decoded stored value) — so all five engines remain bit-exact per
 //! dtype by construction. The properties the engines rely on:
 //!
 //! * **O(1) forks.** [`Buffers::fork`] copies page *pointers*, not
-//!   data. The parallel engine forks one buffer set per worker per op;
-//!   a worker pays only for the pages it actually writes (un-shared on
-//!   first write), so fork traffic is O(write set), never O(total live
-//!   buffer bytes) — and is accounted in *storage-dtype bytes* (an i8
-//!   page costs a quarter of an i32 page). Per-op byte counts surface
-//!   in [`ParallelReport`].
+//!   data. The parallel and dataflow engines fork one buffer set per
+//!   chunk; a worker pays only for the pages it actually writes
+//!   (un-shared on first write), so fork traffic is O(write set),
+//!   never O(total live buffer bytes) — and is accounted in
+//!   *storage-dtype bytes* (an i8 page costs a quarter of an i32
+//!   page). Per-op byte counts surface in [`ParallelReport`].
 //! * **Dirty-range merges.** [`Buffers::merge_disjoint`] skips buffers
 //!   a worker never wrote, scans only dirty word ranges otherwise, and
 //!   adopts fully-written interior pages by pointer; merged elements
@@ -71,8 +75,8 @@
 //!   It still *verifies* write disjointness element-by-element at
 //!   runtime — the differential harness
 //!   (`rust/tests/differential.rs`, naive ≡ planned ≡ kernel ≡
-//!   parallel on randomized networks, swept per storage dtype) relies
-//!   on that check to catch analysis bugs loudly.
+//!   parallel ≡ dataflow on randomized networks, swept per storage
+//!   dtype) relies on that check to catch analysis bugs loudly.
 //! * **Bulk run operations.** The kernel engine reads and writes
 //!   contiguous runs ([`Buffers::read_run_into`],
 //!   [`Buffers::write_run`], [`Buffers::fold_run`]): one bounds check
@@ -93,17 +97,29 @@
 //! # Parallel execution
 //!
 //! The parallel engine implements the paper's "multiple compute units"
-//! claim: a per-block disjointness analysis (write/write and read/write
-//! overlap across one chosen index dimension, via `poly::overlap`)
-//! selects a parallel-safe outer dimension, whose range is chunked
-//! across a worker pool sized by [`ExecOptions::workers`] (typically
-//! `MachineConfig::compute_units`). Workers run on copy-on-write forks
-//! — no locks — and disjoint writes are merged (and re-verified)
-//! afterwards. Results are bit-exact with serial execution, and serial
-//! execution remains a runtime toggle (`workers: 1`) so any
-//! discrepancy can be bisected.
+//! claim *within* each op: a per-block disjointness analysis
+//! (write/write and read/write overlap across one chosen index
+//! dimension, via `poly::overlap`) selects a parallel-safe outer
+//! dimension, whose range is chunked across a worker pool sized by
+//! [`ExecOptions::workers`] (typically `MachineConfig::compute_units`).
+//! Workers run on copy-on-write forks — no locks — and disjoint writes
+//! are merged (and re-verified) afterwards.
+//!
+//! The dataflow engine extends the same claim *across* ops: it derives
+//! RAW/WAR/WAW hazard edges between top-level ops from their flat
+//! buffer footprints, dispatches every dependency-free op concurrently
+//! to a persistent [`ComputePool`] (recycled across requests on the
+//! service path — thread spawns per run are O(1), not O(ops)), and
+//! over-decomposes each op's chunks into a shared queue so idle
+//! workers steal from slow siblings. See [`dataflow`] for the DAG
+//! rules and the inline-fallback conditions.
+//!
+//! Both engines are bit-exact with serial execution, and serial
+//! execution remains a runtime toggle (`workers: 1`, engine `planned`)
+//! so any discrepancy can be bisected.
 
 pub mod buffer;
+pub mod dataflow;
 pub mod interp;
 pub mod kernel;
 pub mod parallel;
@@ -112,6 +128,7 @@ pub mod simd;
 pub mod trace;
 
 pub use buffer::{BufferPool, Buffers, Quant, StorageStats, PAGE_ELEMS};
+pub use dataflow::{analyze_dataflow, run_program_dataflow, ComputePool, DataflowStats};
 pub use interp::{
     run_program, run_program_sink, run_program_with, Engine, ExecError, ExecOptions,
 };

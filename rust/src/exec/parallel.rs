@@ -111,6 +111,13 @@ impl OpParallelism {
 #[derive(Debug, Clone, Default)]
 pub struct ParallelReport {
     pub ops: Vec<OpParallelism>,
+    /// Inter-op DAG shape and scheduler counters. From
+    /// [`analyze_program`] this is the *static* DAG (hazard edges,
+    /// width, critical path — runtime counters zero); from the
+    /// dataflow engine ([`super::dataflow::run_program_dataflow`]) the
+    /// runtime counters (overlap achieved, chunks, steals) are filled
+    /// in. `None` for per-op parallel runs, which never build the DAG.
+    pub dag: Option<super::dataflow::DataflowStats>,
 }
 
 impl ParallelReport {
@@ -156,6 +163,9 @@ impl ParallelReport {
                 )),
                 None => s.push_str(&format!("  op {:<24} serial: {}{cov}\n", o.op, o.reason)),
             }
+        }
+        if let Some(dag) = &self.dag {
+            s.push_str(&format!("  {}\n", dag.summary_line()));
         }
         s
     }
@@ -314,7 +324,10 @@ pub fn best_parallel_dim(b: &Block, workers: usize) -> Option<(String, u64)> {
 pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
     let scope_names: Vec<String> = p.main.refs.iter().map(|r| r.into.clone()).collect();
     let scope_strides: Vec<Vec<i64>> = p.main.refs.iter().map(|r| r.ttype.strides()).collect();
-    let mut report = ParallelReport::default();
+    let mut report = ParallelReport {
+        dag: super::dataflow::analyze_dataflow(p, workers),
+        ..ParallelReport::default()
+    };
     for st in &p.main.stmts {
         let Statement::Block(b) = st else { continue };
         let (kernel_lanes, scalar_lanes) =
@@ -363,7 +376,10 @@ pub fn analyze_program(p: &Program, workers: usize) -> ParallelReport {
 }
 
 /// Split `[0, range)` into `n` contiguous chunks as `(lo, len)` pairs.
-fn split_range(range: u64, n: usize) -> Vec<(u64, u64)> {
+/// The remainder is spread across the leading chunks, so chunk lengths
+/// differ by at most one iteration (`n` is clamped to the range — never
+/// an empty chunk).
+pub(crate) fn split_range(range: u64, n: usize) -> Vec<(u64, u64)> {
     let n = (n as u64).clamp(1, range.max(1));
     let base = range / n;
     let rem = range % n;
@@ -383,7 +399,7 @@ fn split_range(range: u64, n: usize) -> Vec<(u64, u64)> {
 /// the range. The restricted block iterates its sub-box in the same
 /// lexicographic order as the original, which is what keeps parallel
 /// aggregation bit-exact.
-fn chunk_block(b: &Block, dim: &str, lo: i64, len: u64) -> Block {
+pub(crate) fn chunk_block(b: &Block, dim: &str, lo: i64, len: u64) -> Block {
     let mut nb = b.clone();
     let mut bind: BTreeMap<String, Affine> = BTreeMap::new();
     bind.insert(dim.to_string(), Affine::from_terms(&[(dim, 1)], lo));
@@ -411,6 +427,13 @@ fn chunk_block(b: &Block, dim: &str, lo: i64, len: u64) -> Block {
     }
     nb
 }
+
+/// Test-only fault injection: worker chunks of the named op panic
+/// (exercises the panic-payload forwarding at the join). Keyed by op
+/// name so concurrently running tests cannot consume each other's
+/// injection.
+#[cfg(test)]
+static INJECT_WORKER_PANIC_OP: std::sync::Mutex<Option<String>> = std::sync::Mutex::new(None);
 
 /// Why an op must run serially, or the parallel plan for it.
 enum Decision {
@@ -461,7 +484,7 @@ fn decide(
 /// options select: the kernel engine lowers the chunk and reports its
 /// lane split; the planned engine (and `Naive`, which has no chunkable
 /// form) runs the slot-resolved odometer with empty lane counters.
-fn exec_chunk(
+pub(crate) fn exec_chunk(
     bufs: &mut Buffers,
     opts: &ExecOptions,
     blk: &Block,
@@ -469,7 +492,12 @@ fn exec_chunk(
     executed: u64,
 ) -> Result<(u64, KernelStats), ExecError> {
     match opts.engine {
-        Engine::Kernel => kernel::exec_block_kernel(bufs, opts, blk, scope, executed),
+        // The dataflow engine changes scheduling, not per-chunk
+        // semantics: its chunks run the kernel lowering (whose guarded
+        // odometer fallback makes it a bit-exact superset of planned).
+        Engine::Kernel | Engine::Dataflow => {
+            kernel::exec_block_kernel(bufs, opts, blk, scope, executed)
+        }
         Engine::Planned | Engine::Naive => {
             plan::exec_block_planned(bufs, opts, blk, scope, executed)
                 .map(|done| (done, KernelStats::default()))
@@ -536,6 +564,15 @@ fn run_op(
         let mut handles = Vec::with_capacity(blocks.len());
         for (blk, mut local) in blocks.iter().zip(locals.drain(..)) {
             handles.push(s.spawn(move || -> ChunkResult {
+                #[cfg(test)]
+                if INJECT_WORKER_PANIC_OP
+                    .lock()
+                    .unwrap()
+                    .as_deref()
+                    .is_some_and(|poisoned| poisoned == blk.name)
+                {
+                    panic!("injected parallel worker fault");
+                }
                 let (done, ks) = exec_chunk(&mut local, opts, blk, scope, executed)?;
                 Ok((local, done, ks))
             }));
@@ -543,10 +580,16 @@ fn run_op(
         handles
             .into_iter()
             .map(|h| {
-                h.join().unwrap_or_else(|_| {
+                // Forward the panic payload instead of collapsing it to
+                // a generic string — "index out of bounds: …" in the
+                // ExecError beats grepping worker stderr.
+                h.join().unwrap_or_else(|payload| {
                     Err(ExecError {
                         block: b.name.clone(),
-                        message: "parallel worker panicked".into(),
+                        message: format!(
+                            "parallel worker panicked: {}",
+                            super::dataflow::panic_message(payload.as_ref())
+                        ),
                     })
                 })
             })
@@ -868,6 +911,54 @@ mod tests {
         assert_eq!(split_range(8, 1), vec![(0, 8)]);
         let p = ops::matmul_program(3, 4, 5);
         assert_bit_exact(&p, 14, 16);
+    }
+
+    #[test]
+    fn split_range_spreads_the_remainder_evenly() {
+        // For every range % workers != 0 case: chunks are contiguous,
+        // cover exactly [0, range), and lengths differ by at most 1 —
+        // the remainder must never pile up on one chunk.
+        for range in 1..=64u64 {
+            for n in 1..=12usize {
+                let chunks = split_range(range, n);
+                assert!(!chunks.is_empty());
+                assert!(chunks.len() <= n.max(1));
+                let mut expect_lo = 0u64;
+                for &(lo, len) in &chunks {
+                    assert_eq!(lo, expect_lo, "range {range} / {n}: gap or overlap");
+                    assert!(len >= 1, "range {range} / {n}: empty chunk");
+                    expect_lo += len;
+                }
+                assert_eq!(expect_lo, range, "range {range} / {n}: coverage");
+                let max = chunks.iter().map(|c| c.1).max().unwrap();
+                let min = chunks.iter().map(|c| c.1).min().unwrap();
+                assert!(
+                    max - min <= 1,
+                    "range {range} / {n}: imbalance {max}-{min} exceeds 1 iteration"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_payload_reaches_the_exec_error() {
+        let mut p = ops::cnn_program();
+        // A unique name keeps the poison from touching any other
+        // test's concurrently running workers.
+        let Statement::Block(b) = &mut p.main.stmts[0] else { panic!("cnn op is a block") };
+        b.name = "poisoned_op".to_string();
+        let inputs = gen_inputs(&p, 57);
+        *INJECT_WORKER_PANIC_OP.lock().unwrap() = Some("poisoned_op".to_string());
+        let e = run_program_parallel(&p, &inputs, &parallel_opts(3)).unwrap_err();
+        *INJECT_WORKER_PANIC_OP.lock().unwrap() = None;
+        assert_eq!(e.block, "poisoned_op");
+        assert!(
+            e.message.contains("parallel worker panicked: injected parallel worker fault"),
+            "payload must be forwarded, got: {e}"
+        );
+        // And a clean rerun still matches serial — the failed op
+        // released its forks without corrupting anything.
+        assert_bit_exact(&p, 57, 3);
     }
 
     #[test]

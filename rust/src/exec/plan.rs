@@ -348,6 +348,55 @@ pub(crate) fn build_root_scope(
     Ok(RootScope { views, strides, names, index })
 }
 
+/// A [`RootScope`] built without allocating any storage: buffer "ids"
+/// are positions in `program.buffers` (main-level `tmp` refinements get
+/// fresh ids past the end, mirroring [`build_root_scope`]'s allocation
+/// order). Only structurally valid for footprint queries
+/// ([`flat_write_extents`] / [`flat_read_extents`]) — the ids index no
+/// real [`Buffers`]. Used by the static dataflow-DAG analysis
+/// (`exec::dataflow::analyze_dataflow`), which must not pay a full
+/// buffer allocation per compile.
+pub(crate) fn symbolic_root_scope(program: &Program) -> Result<RootScope, ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let mut by_name: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, b) in program.buffers.iter().enumerate() {
+        by_name.entry(b.name.as_str()).or_insert(i);
+    }
+    let mut next_id = program.buffers.len();
+    let mut views: Vec<View> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    for r in &program.main.refs {
+        let (buf, base) = if r.dir == RefDir::Temp {
+            let id = *by_name.entry(r.into.as_str()).or_insert_with(|| {
+                let id = next_id;
+                next_id += 1;
+                id
+            });
+            (id, 0i64)
+        } else {
+            let id = by_name
+                .get(r.from.as_str())
+                .copied()
+                .ok_or_else(|| err(format!("unknown buffer {:?}", r.from)))?;
+            let base: i64 = r
+                .access
+                .iter()
+                .zip(r.ttype.strides())
+                .map(|(a, s)| a.offset * s)
+                .sum();
+            (id, base)
+        };
+        views.push(View { buf, offset: base, agg: r.agg });
+        names.push(r.into.clone());
+    }
+    let strides: Vec<Vec<i64>> = program.main.refs.iter().map(|r| r.ttype.strides()).collect();
+    let mut index = BTreeMap::new();
+    for (slot, name) in names.iter().enumerate() {
+        index.entry(name.clone()).or_insert(slot);
+    }
+    Ok(RootScope { views, strides, names, index })
+}
+
 /// Conservative flat write extents of a top-level op block against the
 /// root scope: for each write refinement, the target buffer id plus the
 /// inclusive `[lo, hi]` flat element range its iteration box (including
@@ -364,9 +413,29 @@ pub(crate) fn flat_write_extents(
     block: &Block,
     scope: &RootScope,
 ) -> Option<Vec<(usize, i64, i64)>> {
+    flat_ref_extents(block, scope, |r| r.dir.is_write())
+}
+
+/// Conservative flat *read* extents of a top-level op block — the same
+/// folding as [`flat_write_extents`] over the read refinements
+/// (`in`/`inout`). The dataflow scheduler (`exec::dataflow`) derives
+/// RAW/WAR hazard edges from these; `None` makes the op opaque there
+/// (conservatively serialized against everything).
+pub(crate) fn flat_read_extents(
+    block: &Block,
+    scope: &RootScope,
+) -> Option<Vec<(usize, i64, i64)>> {
+    flat_ref_extents(block, scope, |r| r.dir.is_read())
+}
+
+fn flat_ref_extents(
+    block: &Block,
+    scope: &RootScope,
+    select: impl Fn(&crate::ir::Refinement) -> bool,
+) -> Option<Vec<(usize, i64, i64)>> {
     let mut out: Vec<(usize, i64, i64)> = Vec::new();
     for r in &block.refs {
-        if !r.dir.is_write() {
+        if !select(r) {
             continue;
         }
         let slot = scope.slot_of(&r.from)?;

@@ -62,13 +62,15 @@ fn print_help() {
          \x20         --dtype <d>          retype buffers: f32 | f64 | i32 | i8 (quantized)\n\
          \x20         --tune               search pass-pipeline variants via the cost models\n\
          \x20 run     --target <t>         compile + execute on seeded random inputs\n\
-         \x20         --engine <e>         naive | planned | kernel (leaf-kernel lowering)\n\
+         \x20         --engine <e>         naive | planned | kernel | dataflow (inter-op DAG)\n\
          \x20         --dtype <d>          retype buffers: f32 | f64 | i32 | i8 (quantized)\n\
          \x20         --parallel           execute across the target's compute units\n\
          \x20         --workers <n>        explicit worker count (overrides --parallel)\n\
          \x20         --tune               compile through the pipeline autotuner\n\
          \x20         --simd-check         kernel engine: assert coverage >= 80% and that the\n\
          \x20                              chunked SIMD kernels beat the scalar lane baseline\n\
+         \x20         --dataflow-check     dataflow engine: assert bit-equality with the serial\n\
+         \x20                              plan and O(1) pool thread spawns across repeat runs\n\
          \x20 tune    --target <t>         autotune a network, print the tuning decision, and\n\
          \x20         --net <name|f.tile>  verify the tuned artifact is cached by the service\n\
          \x20 validate <file.stripe>       parse + validate textual Stripe\n\
@@ -188,9 +190,16 @@ fn cmd_run(args: &Args) -> i32 {
         if args.flag("simd-check") {
             return simd_check(&c.program, &inputs);
         }
+        if args.flag("dataflow-check") {
+            let units = match args.get_usize("workers", 0) {
+                0 => cfg.compute_units.max(2),
+                w => w.max(1),
+            };
+            return dataflow_check(&c.program, &inputs, units);
+        }
         let engine_name = args.get_or("engine", "planned");
         let engine = stripe::exec::Engine::parse(engine_name)
-            .ok_or_else(|| format!("unknown engine {engine_name:?} (naive|planned|kernel)"))?;
+            .ok_or_else(|| format!("unknown engine {engine_name:?} (naive|planned|kernel|dataflow)"))?;
         // --workers N overrides; --parallel uses the target's
         // compute-unit count; default stays serial (the always-available
         // fallback for bisection).
@@ -199,7 +208,7 @@ fn cmd_run(args: &Args) -> i32 {
             w => w.max(1),
         };
         let t0 = std::time::Instant::now();
-        let out = if workers > 1 {
+        let out = if workers > 1 || engine == stripe::exec::Engine::Dataflow {
             let opts = stripe::exec::ExecOptions {
                 workers,
                 engine,
@@ -313,6 +322,63 @@ fn simd_check(
     if speedup <= 1.0 {
         return Err(format!("simd-check: no speedup over the scalar lane baseline ({speedup:.2}x)"));
     }
+    Ok(())
+}
+
+/// `--dataflow-check`: execute the program serially through the plan
+/// engine and through the inter-op dataflow scheduler over identical
+/// inputs, then require (a) bitwise identical outputs, (b) a
+/// persistent worker pool — thread spawns stay O(1) across repeat runs
+/// instead of O(ops) — and (c) a non-degenerate DAG report. Exits
+/// nonzero on any failure — `scripts/verify.sh` runs this as the
+/// `VERIFY_DATAFLOW_SMOKE` gate.
+fn dataflow_check(
+    program: &stripe::ir::Program,
+    inputs: &std::collections::BTreeMap<String, Vec<f32>>,
+    workers: usize,
+) -> Result<(), String> {
+    const REPS: usize = 3;
+    let serial = stripe::exec::run_program_with(
+        program,
+        inputs,
+        &stripe::exec::ExecOptions::default(),
+    )
+    .map_err(|e| e.to_string())?;
+    let pool = stripe::exec::ComputePool::new(workers);
+    let opts = stripe::exec::ExecOptions {
+        engine: stripe::exec::Engine::Dataflow,
+        workers,
+        compute: Some(pool.clone()),
+        ..stripe::exec::ExecOptions::default()
+    };
+    let mut last = None;
+    for _ in 0..REPS {
+        let r = stripe::exec::run_program_dataflow(program, inputs, &opts)
+            .map_err(|e| e.to_string())?;
+        last = Some(r);
+    }
+    let (out, schedule) = last.ok_or("dataflow-check needs at least one rep")?;
+    if out != serial {
+        return Err("dataflow-check: dataflow and serial plan outputs disagree".into());
+    }
+    let dag = schedule.dag.as_ref().ok_or("dataflow-check: scheduler reported no DAG stats")?;
+    println!("dataflow-check: {}", dag.summary_line());
+    if dag.dag_ops == 0 || dag.critical_path == 0 {
+        return Err("dataflow-check: degenerate DAG report".into());
+    }
+    let spawned = pool.threads_spawned();
+    if spawned != pool.size() as u64 {
+        return Err(format!(
+            "dataflow-check: pool spawned {spawned} thread(s) across {REPS} runs, \
+             expected exactly {} (O(1) per pool, not O(ops))",
+            pool.size()
+        ));
+    }
+    println!(
+        "dataflow-check: outputs bit-exact vs serial plan; {} thread(s) spawned across \
+         {REPS} runs",
+        spawned
+    );
     Ok(())
 }
 

@@ -1,17 +1,22 @@
 //! Differential execution harness: naive interpreter ≡ serial plan ≡
 //! leaf-kernel engine ≡ parallel plan (planned *and* kernel chunk
-//! executors), bit-exactly, on randomized networks.
+//! executors) ≡ inter-op dataflow scheduler, bit-exactly, on
+//! randomized networks.
 //!
 //! Programs are generated through `graph::NetworkBuilder` with the
 //! repo's seeded deterministic PRNG (no external deps): a random HWC
 //! input, then a random chain of conv/relu/tanh/maxpool/add layers,
 //! finished by flatten → dense (and occasionally a softmax head). Each
-//! program runs through all four engines; outputs must agree to the
+//! program runs through every engine; outputs must agree to the
 //! bit. The parallel engine additionally re-verifies write disjointness
 //! while merging worker partitions, so an unsound parallelizability
 //! verdict fails the run loudly rather than corrupting silently; the
 //! kernel engine's guarded fallback keeps unvectorizable bands on the
 //! scalar odometer, so a lowering bug surfaces as a bit mismatch here.
+//! The dataflow runs all share one process-wide persistent compute
+//! pool, so concurrently running sweeps interleave their chunks in a
+//! single job queue — cross-run isolation bugs (a chunk reading
+//! another run's fork) would surface as bit mismatches too.
 //!
 //! The parallel runs share one [`BufferPool`] across the whole sweep:
 //! the copy-on-write storage's page recycling is exercised by 50
@@ -22,7 +27,7 @@
 //! The engine matrix is additionally swept **per storage dtype**
 //! (`DType::STORAGE`: f32, f64, i32, quantized i8): every engine
 //! computes in f32 registers and converts only at the buffer boundary,
-//! so retyping a network must leave all four engines bit-identical —
+//! so retyping a network must leave every engine bit-identical —
 //! including the lossy integer grids, where a single misplaced
 //! decode/encode (e.g. a bulk kernel skipping the storage round-trip a
 //! scalar store performs) diverges immediately.
@@ -32,7 +37,8 @@
 //! and random parameters drawn against a random built-in target — to
 //! the same generator's networks, equivalence-verifying every pass
 //! application (`compile(.., verify=true)`) and then asserting the
-//! four-engine bit-exactness invariant on the transformed program.
+//! full-engine-matrix bit-exactness invariant on the transformed
+//! program.
 //! This is the §3.1.2 contract stated as a property: *any* pipeline
 //! the configuration language can express must preserve semantics on
 //! every engine, not just the pipelines the built-in targets happen to
@@ -44,8 +50,8 @@ use std::sync::Arc;
 
 use stripe::cost::SearchSpace;
 use stripe::exec::{
-    run_program_kernel, run_program_parallel, run_program_planned, run_program_sink,
-    BufferPool, Engine, ExecOptions, NullSink,
+    run_program_dataflow, run_program_kernel, run_program_parallel, run_program_planned,
+    run_program_sink, BufferPool, ComputePool, Engine, ExecOptions, NullSink,
 };
 use stripe::graph::{NetworkBuilder, TensorId};
 use stripe::hw::{builtin_targets, MachineConfig, PassConfig};
@@ -103,11 +109,20 @@ fn gen_inputs(p: &Program, seed: u64) -> BTreeMap<String, Vec<f32>> {
     stripe::passes::equiv::gen_inputs(p, seed)
 }
 
-/// Run all four engines — naive, serial plan, leaf-kernel, and the
-/// parallel dispatcher with both chunk executors — and assert
-/// bit-exact agreement; the parallel and kernel runs draw their pages
-/// from `pool` when one is given. Returns how many ops the (planned)
-/// parallel engine actually parallelized.
+/// One persistent compute pool for every dataflow run in this test
+/// binary: cargo runs tests concurrently, so independent sweeps
+/// interleave their chunks in the same job queue — exactly the
+/// cross-request reuse the service path exercises.
+fn shared_compute() -> Arc<ComputePool> {
+    static POOL: std::sync::OnceLock<Arc<ComputePool>> = std::sync::OnceLock::new();
+    Arc::clone(POOL.get_or_init(|| ComputePool::new(4)))
+}
+
+/// Run every engine — naive, serial plan, leaf-kernel, the parallel
+/// dispatcher with both chunk executors, and the inter-op dataflow
+/// scheduler — and assert bit-exact agreement; the pooled runs draw
+/// their pages from `pool` when one is given. Returns how many ops the
+/// (planned) parallel engine actually parallelized.
 fn differential_case_pooled(
     p: &Program,
     seed: u64,
@@ -129,9 +144,19 @@ fn differential_case_pooled(
     let popts = ExecOptions { workers, pool: pool.clone(), ..ExecOptions::default() };
     let (parallel, report) = run_program_parallel(p, &inputs, &popts)
         .unwrap_or_else(|e| panic!("{}: parallel plan failed: {e}", p.name));
-    let kpopts = ExecOptions { workers, engine: Engine::Kernel, pool, ..ExecOptions::default() };
+    let kpopts =
+        ExecOptions { workers, engine: Engine::Kernel, pool: pool.clone(), ..ExecOptions::default() };
     let (kparallel, kpreport) = run_program_parallel(p, &inputs, &kpopts)
         .unwrap_or_else(|e| panic!("{}: parallel kernel failed: {e}", p.name));
+    let dopts = ExecOptions {
+        workers,
+        engine: Engine::Dataflow,
+        pool,
+        compute: Some(shared_compute()),
+        ..ExecOptions::default()
+    };
+    let (dataflow, dreport) = run_program_dataflow(p, &inputs, &dopts)
+        .unwrap_or_else(|e| panic!("{}: dataflow failed: {e}", p.name));
     assert_eq!(naive, serial, "{}: naive vs serial plan diverged", p.name);
     assert_eq!(
         serial, kernel,
@@ -151,6 +176,12 @@ fn differential_case_pooled(
         p.name,
         kpreport.summary()
     );
+    assert_eq!(
+        serial, dataflow,
+        "{}: serial vs dataflow diverged\nschedule:\n{}",
+        p.name,
+        dreport.summary()
+    );
     report.parallel_ops()
 }
 
@@ -159,9 +190,10 @@ fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
 }
 
 /// Per-dtype differential case: retype the program's buffers to `dt`
-/// and assert naive ≡ serial plan ≡ kernel ≡ parallel bit-exactly. The
-/// parallel run uses the kernel chunk executor, so each dtype crosses
-/// the full engine matrix without doubling the dispatcher runs.
+/// and assert naive ≡ serial plan ≡ kernel ≡ parallel ≡ dataflow
+/// bit-exactly. The parallel run uses the kernel chunk executor, so
+/// each dtype crosses the full engine matrix without doubling the
+/// dispatcher runs; the dataflow run shares the process-wide pool.
 fn dtype_case(p: &Program, dt: DType, seed: u64, workers: usize, pool: Option<Arc<BufferPool>>) {
     let pd = p.with_dtype(dt);
     let inputs = gen_inputs(&pd, seed);
@@ -173,9 +205,19 @@ fn dtype_case(p: &Program, dt: DType, seed: u64, workers: usize, pool: Option<Ar
         ExecOptions { engine: Engine::Kernel, pool: pool.clone(), ..ExecOptions::default() };
     let (kernel, kreport) = run_program_kernel(&pd, &inputs, &kopts)
         .unwrap_or_else(|e| panic!("{} [{}]: kernel engine failed: {e}", pd.name, dt.name()));
-    let popts = ExecOptions { workers, engine: Engine::Kernel, pool, ..ExecOptions::default() };
+    let popts =
+        ExecOptions { workers, engine: Engine::Kernel, pool: pool.clone(), ..ExecOptions::default() };
     let (parallel, preport) = run_program_parallel(&pd, &inputs, &popts)
         .unwrap_or_else(|e| panic!("{} [{}]: parallel failed: {e}", pd.name, dt.name()));
+    let dopts = ExecOptions {
+        workers,
+        engine: Engine::Dataflow,
+        pool,
+        compute: Some(shared_compute()),
+        ..ExecOptions::default()
+    };
+    let (dataflow, dreport) = run_program_dataflow(&pd, &inputs, &dopts)
+        .unwrap_or_else(|e| panic!("{} [{}]: dataflow failed: {e}", pd.name, dt.name()));
     assert_eq!(naive, serial, "{} [{}]: naive vs serial plan diverged", pd.name, dt.name());
     assert_eq!(
         serial,
@@ -192,6 +234,14 @@ fn dtype_case(p: &Program, dt: DType, seed: u64, workers: usize, pool: Option<Ar
         pd.name,
         dt.name(),
         preport.summary()
+    );
+    assert_eq!(
+        serial,
+        dataflow,
+        "{} [{}]: serial vs dataflow diverged\nschedule:\n{}",
+        pd.name,
+        dt.name(),
+        dreport.summary()
     );
 }
 
@@ -235,7 +285,7 @@ fn random_pipeline(cfg: &MachineConfig, rng: &mut Rng) -> Vec<PassConfig> {
 
 /// The pipeline fuzzer: every random pipeline, applied to a random
 /// network, must (a) pass per-pass equivalence verification and (b)
-/// keep all four engines bit-exact on the transformed program.
+/// keep every engine bit-exact on the transformed program.
 #[test]
 fn fuzzed_random_pipelines_stay_bit_exact_across_all_engines() {
     let mut rng = Rng::new(0xF0225);
@@ -371,7 +421,7 @@ fn canned_networks_agree_across_all_engines() {
 #[test]
 fn tuned_networks_agree_across_all_engines() {
     // The autotuner picks pipelines no fixed target ever compiled; its
-    // winners must satisfy the same four-engine invariant.
+    // winners must satisfy the same engine-matrix invariant.
     use stripe::coordinator::{compile_network_tuned, TuneOptions};
     use stripe::frontend::ops;
     for cfg in builtin_targets() {

@@ -76,4 +76,17 @@ else
     echo "(set VERIFY_SIMD_SMOKE=1 to run the per-dtype SIMD kernel smoke)"
 fi
 
+echo "== dataflow smoke (gated) =="
+# Opt-in dataflow scheduler smoke: runs the canned cnn through the
+# inter-op DAG scheduler with `--dataflow-check`, which asserts bitwise
+# equality against the serial plan engine, a non-degenerate DAG report,
+# and O(1) pool thread spawns across repeat runs (exits nonzero
+# otherwise).
+if [ "${VERIFY_DATAFLOW_SMOKE:-0}" = "1" ]; then
+    cargo run --release --quiet -- run \
+        --net cnn --target cpu_cache --dataflow-check
+else
+    echo "(set VERIFY_DATAFLOW_SMOKE=1 to run the dataflow scheduler smoke)"
+fi
+
 echo "verify: OK"
