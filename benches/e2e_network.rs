@@ -217,6 +217,95 @@ fn main() {
     let tune_candidates = tuning.evaluated;
     let tuned_predicted_cost = tuning.chosen_cost;
 
+    section("persistent store: cold vs warm tuned compile + subgraph reuse");
+    let (store_cold_compile_ms, store_warm_compile_ms, subgraph_reuse_ratio) = {
+        let dir =
+            std::env::temp_dir().join(format!("stripe-store-bench-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Cold: a fresh service over an empty store directory pays the
+        // full tuning search, then persists the artifact.
+        let store =
+            std::sync::Arc::new(stripe::coordinator::ArtifactStore::open(&dir).unwrap());
+        let svc = stripe::coordinator::CompileService::start_with_store(2, 64, 0, Some(store));
+        let t0 = std::time::Instant::now();
+        let cold = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
+        let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let cold_tuning = cold.tuning.as_ref().expect("tuned compile records a report");
+        assert!(cold_tuning.evaluated > 0, "cold compile must run the tuning search");
+        svc.shutdown();
+
+        // Warm: a second service — a process restart, as far as the
+        // store can tell — pointed at the same directory serves the
+        // artifact from disk: zero compiles, zero tuning candidates.
+        let store =
+            std::sync::Arc::new(stripe::coordinator::ArtifactStore::open(&dir).unwrap());
+        let svc = stripe::coordinator::CompileService::start_with_store(2, 64, 0, Some(store));
+        let t0 = std::time::Instant::now();
+        let warm = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
+        let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(
+            svc.metrics.total(stripe::coordinator::Counter::CompilesOk),
+            0,
+            "warm start must not compile"
+        );
+        let disk_hits = svc.store().map(|s| s.stats().hits).unwrap_or(0);
+        assert!(disk_hits >= 1, "warm start must be served from the store");
+        assert_eq!(warm.summary(), cold.summary(), "store round-trip must be faithful");
+        svc.shutdown();
+        println!(
+            "cold tuned compile {cold_ms:.2} ms -> warm restart {warm_ms:.2} ms \
+             ({:.1}x faster)",
+            cold_ms / warm_ms.max(1e-9)
+        );
+        assert!(
+            warm_ms < cold_ms,
+            "warm compile ({warm_ms:.2} ms) must beat cold ({cold_ms:.2} ms)"
+        );
+
+        // Subgraph-level reuse: four structurally identical conv layers
+        // cost one tuning search, not four.
+        let deep = {
+            let mut nb =
+                stripe::graph::NetworkBuilder::new("deep_repeat", stripe::ir::DType::F32);
+            let x = nb.input("x", &[8, 8, 4]);
+            let w1 = nb.weight("w1", &[3, 3, 4, 4]);
+            let w2 = nb.weight("w2", &[3, 3, 4, 4]);
+            let w3 = nb.weight("w3", &[3, 3, 4, 4]);
+            let w4 = nb.weight("w4", &[3, 3, 4, 4]);
+            let mut t = nb.conv2d_same(x, w1);
+            t = nb.conv2d_same(t, w2);
+            t = nb.conv2d_same(t, w3);
+            t = nb.conv2d_same(t, w4);
+            nb.finish(t)
+        };
+        let sub_dir = std::env::temp_dir()
+            .join(format!("stripe-store-bench-sub-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&sub_dir);
+        let sub_store = stripe::coordinator::ArtifactStore::open(&sub_dir).unwrap();
+        let tuned_deep = stripe::coordinator::compile_network_tuned_subgraph(
+            &deep,
+            &cfg,
+            &stripe::coordinator::TuneOptions::default(),
+            Some(&sub_store),
+        )
+        .unwrap();
+        let sg = tuned_deep
+            .tuning
+            .as_ref()
+            .and_then(|t| t.subgraphs)
+            .expect("subgraph tuner reports per-shape stats");
+        println!("{}", sg.summary_line());
+        let ratio = sg.reuse_ratio();
+        assert!(
+            ratio > 1.0,
+            "repeated layer shapes must amortize the tuning search (ratio {ratio:.2})"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&sub_dir);
+        (cold_ms, warm_ms, ratio)
+    };
+
     section("simulated memory traffic (32KiB L1 + 1MiB L2)");
     for (label, prog) in [("flat", &p), ("optimized", &compiled.program)] {
         let h = Hierarchy::new(vec![
@@ -469,6 +558,9 @@ fn main() {
              \"tuned_predicted_cost\": {tuned_predicted_cost},\n  \
              \"default_predicted_cost\": {default_predicted_cost},\n  \
              \"tuned_vs_default_speedup\": {tuned_speedup:.3},\n  \
+             \"store_cold_compile_ms\": {store_cold_compile_ms:.3},\n  \
+             \"store_warm_compile_ms\": {store_warm_compile_ms:.3},\n  \
+             \"subgraph_reuse_ratio\": {subgraph_reuse_ratio:.3},\n  \
              \"dataflow_median_s\": {dataflow_median_s:.6},\n  \
              \"branchy_parallel_median_s\": {branchy_parallel_median_s:.6},\n  \
              \"dataflow_vs_parallel_speedup\": {dataflow_vs_parallel_speedup:.3},\n  \

@@ -41,6 +41,17 @@
 //! cost. [`reconcile_scrape`] cross-checks the derived gauge against
 //! the raw lane counters and the last-request gauges against their
 //! totals.
+//!
+//! ## Disk-tier series
+//!
+//! When the service runs with a persistent artifact store, every probe
+//! of the disk tier (the memory-miss path) feeds `stripe_store_*`:
+//! probe/hit/miss/corrupt counters, write-back and GC counters, gauges
+//! for resident entries/bytes, and `stripe_store_warm_start` — a 0/1
+//! gauge latched from the process's *first* probe (1 iff that probe
+//! hit, i.e. the process warm-started from a prior run's store).
+//! [`reconcile_scrape`] checks `probes = hits + misses + corrupt` and
+//! that a warm start implies at least one disk hit.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -205,6 +216,20 @@ struct Inner {
     dataflow_dag_width: u64,
     dataflow_critical_path: u64,
     dataflow_ops_overlapped: u64,
+    /// Disk-tier (persistent store) probe outcomes and maintenance
+    /// counters, plus resident gauges. `store_warm_start` is latched
+    /// once, from the first probe this process ever makes.
+    store_probes: u64,
+    store_hits: u64,
+    store_misses: u64,
+    store_corrupt: u64,
+    store_writes: u64,
+    store_gc_evictions: u64,
+    store_gc_bytes: u64,
+    store_entries: u64,
+    store_bytes: u64,
+    store_warm_start: u64,
+    store_first_probe_done: bool,
     /// Submit → worker-pop wait, per popped request.
     queue_wait: Histogram,
     /// Actual compile duration, one sample per compile execution.
@@ -352,6 +377,62 @@ impl Metrics {
         });
     }
 
+    /// One disk-tier probe on the memory-miss path. The very first
+    /// probe latches `stripe_store_warm_start`: 1 if it hit (the
+    /// process resumed into a store populated by a prior run), 0
+    /// otherwise; later probes never change it.
+    pub fn record_store_probe(&self, hit: bool) {
+        self.with(|i| {
+            i.store_probes += 1;
+            if hit {
+                i.store_hits += 1;
+            } else {
+                i.store_misses += 1;
+            }
+            if !i.store_first_probe_done {
+                i.store_first_probe_done = true;
+                i.store_warm_start = hit as u64;
+            }
+        });
+    }
+
+    /// A probe that found an unreadable entry (truncated, bad checksum,
+    /// or version mismatch). Counted apart from plain misses so
+    /// corruption is visible, but the service recompiles exactly as on
+    /// a miss. A corrupt first probe latches a cold start.
+    pub fn record_store_corrupt(&self) {
+        self.with(|i| {
+            i.store_probes += 1;
+            i.store_corrupt += 1;
+            if !i.store_first_probe_done {
+                i.store_first_probe_done = true;
+                i.store_warm_start = 0;
+            }
+        });
+    }
+
+    /// One artifact written back to the disk tier (encode skips are
+    /// tracked by the store's own counters, not here).
+    pub fn record_store_write(&self) {
+        self.with(|i| i.store_writes += 1);
+    }
+
+    /// One GC sweep: entries evicted and bytes reclaimed.
+    pub fn record_store_gc(&self, evicted: u64, bytes: u64) {
+        self.with(|i| {
+            i.store_gc_evictions += evicted;
+            i.store_gc_bytes += bytes;
+        });
+    }
+
+    /// Disk-tier resident gauges (directory rescan after write/GC).
+    pub fn set_store_gauges(&self, entries: u64, bytes: u64) {
+        self.with(|i| {
+            i.store_entries = entries;
+            i.store_bytes = bytes;
+        });
+    }
+
     pub fn total(&self, c: Counter) -> u64 {
         self.with(|i| match c {
             Counter::Evictions => i.evictions,
@@ -452,6 +533,13 @@ impl Metrics {
                 ("stripe_merge_bytes_total", i.merge_bytes),
                 ("stripe_dataflow_runs_total", i.dataflow_runs),
                 ("stripe_dataflow_steals_total", i.dataflow_steals),
+                ("stripe_store_probes_total", i.store_probes),
+                ("stripe_store_hits_total", i.store_hits),
+                ("stripe_store_misses_total", i.store_misses),
+                ("stripe_store_corrupt_total", i.store_corrupt),
+                ("stripe_store_writes_total", i.store_writes),
+                ("stripe_store_gc_evictions_total", i.store_gc_evictions),
+                ("stripe_store_gc_bytes_total", i.store_gc_bytes),
             ] {
                 out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
             }
@@ -476,6 +564,9 @@ impl Metrics {
                 ("stripe_dataflow_dag_width", i.dataflow_dag_width),
                 ("stripe_dataflow_critical_path", i.dataflow_critical_path),
                 ("stripe_dataflow_ops_overlapped", i.dataflow_ops_overlapped),
+                ("stripe_store_entries", i.store_entries),
+                ("stripe_store_bytes", i.store_bytes),
+                ("stripe_store_warm_start", i.store_warm_start),
             ] {
                 out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
             }
@@ -536,7 +627,10 @@ pub fn parse_scrape(text: &str) -> Result<BTreeMap<String, f64>, String> {
 /// * the dataflow scheduler gauges are internally consistent: width,
 ///   critical path, and achieved overlap never exceed the DAG's op
 ///   count, and a non-empty DAG has width and critical path of at
-///   least 1.
+///   least 1;
+/// * the disk-tier books balance: `stripe_store_probes_total =
+///   hits + misses + corrupt`, `stripe_store_warm_start` is exactly 0
+///   or 1, and a warm start implies at least one disk hit.
 ///
 /// Returns a one-line summary on success.
 pub fn reconcile_scrape(text: &str) -> Result<String, String> {
@@ -632,6 +726,27 @@ pub fn reconcile_scrape(text: &str) -> Result<String, String> {
                 ));
             }
         }
+    }
+    let (probes, store_hits, store_misses, store_corrupt) = (
+        get("stripe_store_probes_total"),
+        get("stripe_store_hits_total"),
+        get("stripe_store_misses_total"),
+        get("stripe_store_corrupt_total"),
+    );
+    if probes != store_hits + store_misses + store_corrupt {
+        return Err(format!(
+            "stripe_store_probes_total {probes} != hits {store_hits} \
+             + misses {store_misses} + corrupt {store_corrupt}"
+        ));
+    }
+    let warm = get("stripe_store_warm_start");
+    if warm != 0.0 && warm != 1.0 {
+        return Err(format!("stripe_store_warm_start {warm} is not 0 or 1"));
+    }
+    if warm == 1.0 && store_hits < 1.0 {
+        return Err(format!(
+            "stripe_store_warm_start 1 with only {store_hits} disk hits"
+        ));
     }
     Ok(format!(
         "scrape reconciles: {req} requests = {hits} hits + {misses} misses \
@@ -846,6 +961,56 @@ mod tests {
                    stripe_dataflow_critical_path 3\n";
         let e = reconcile_scrape(bad).unwrap_err();
         assert!(e.contains("below 1"), "{e}");
+    }
+
+    #[test]
+    fn store_series_latch_warm_start_and_reconcile() {
+        let m = Metrics::default();
+        // First probe hits: warm start latches to 1 and stays there
+        // through later misses and corruption.
+        m.record_store_probe(true);
+        m.record_store_probe(false);
+        m.record_store_corrupt();
+        m.record_store_write();
+        m.record_store_gc(2, 4096);
+        m.set_store_gauges(3, 9000);
+        let scrape = m.render_scrape();
+        let series = parse_scrape(&scrape).expect("parses");
+        assert_eq!(series["stripe_store_probes_total"], 3.0);
+        assert_eq!(series["stripe_store_hits_total"], 1.0);
+        assert_eq!(series["stripe_store_misses_total"], 1.0);
+        assert_eq!(series["stripe_store_corrupt_total"], 1.0);
+        assert_eq!(series["stripe_store_writes_total"], 1.0);
+        assert_eq!(series["stripe_store_gc_evictions_total"], 2.0);
+        assert_eq!(series["stripe_store_gc_bytes_total"], 4096.0);
+        assert_eq!(series["stripe_store_entries"], 3.0);
+        assert_eq!(series["stripe_store_bytes"], 9000.0);
+        assert_eq!(series["stripe_store_warm_start"], 1.0);
+        reconcile_scrape(&scrape).expect("reconciles");
+
+        // A cold first probe latches 0 even if later probes hit.
+        let cold = Metrics::default();
+        cold.record_store_probe(false);
+        cold.record_store_probe(true);
+        let series = parse_scrape(&cold.render_scrape()).unwrap();
+        assert_eq!(series["stripe_store_warm_start"], 0.0);
+        assert_eq!(series["stripe_store_hits_total"], 1.0);
+    }
+
+    #[test]
+    fn reconcile_rejects_inconsistent_store_series() {
+        // Probes that don't balance against their outcomes.
+        let bad = "stripe_store_probes_total 3\n\
+                   stripe_store_hits_total 1\n\
+                   stripe_store_misses_total 1\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("stripe_store_probes_total"), "{e}");
+        // A warm start claimed without a single disk hit.
+        let e = reconcile_scrape("stripe_store_warm_start 1\n").unwrap_err();
+        assert!(e.contains("warm_start"), "{e}");
+        // The warm-start gauge is strictly boolean.
+        let e = reconcile_scrape("stripe_store_warm_start 0.5\n").unwrap_err();
+        assert!(e.contains("not 0 or 1"), "{e}");
     }
 
     #[test]

@@ -7,12 +7,26 @@
 //! as two layers plus shared plumbing:
 //!
 //! * [`service`] — the compile core: worker threads over a **bounded**
-//!   request queue, a content-addressed artifact cache with
-//!   single-flight semantics (N identical concurrent requests pay for
-//!   one compile), **LRU eviction** under a byte budget
-//!   ([`CompiledNetwork::approx_bytes`] sizes artifacts), deadline
-//!   enforcement for queued and parked requests, and panic fencing so
-//!   a crashing pass can never poison the single-flight state.
+//!   request queue, a **two-tier** content-addressed artifact cache
+//!   with single-flight semantics (N identical concurrent requests pay
+//!   for one compile), deadline enforcement for queued and parked
+//!   requests, and panic fencing so a crashing pass can never poison
+//!   the single-flight state. Tier one is the in-memory map with
+//!   **LRU eviction** under a byte budget
+//!   ([`CompiledNetwork::approx_bytes`] sizes artifacts); tier two is
+//!   an optional persistent [`store`] directory probed on every memory
+//!   miss before compiling, so restarts warm-start and concurrent
+//!   processes pointed at one `--store-dir` share compiles and tuning.
+//!   Both tiers are addressed by the same salted request key (program
+//!   fingerprint × full target config × dtype × tune/verify/budget
+//!   flags), so a disk hit is exactly as trustworthy as a memory hit.
+//! * [`store`] — the disk tier itself: checksummed, versioned,
+//!   atomically written entries (temp file + rename), graceful
+//!   skip-and-recompile on corruption or version mismatch, byte-budget
+//!   GC, and per-subgraph tuning records keyed by structural
+//!   fingerprint so the tuner pays one search per *distinct layer
+//!   shape* instead of one per layer
+//!   ([`tune::compile_network_tuned_subgraph`]).
 //! * [`server`] — the tenancy front end: every request names a
 //!   [`TenantId`]; admission control enforces per-tenant in-flight
 //!   caps and sheds load from the full queue with explicit
@@ -39,6 +53,7 @@ pub mod effort;
 pub mod metrics;
 pub mod server;
 pub mod service;
+pub mod store;
 pub mod tune;
 
 pub use driver::{compile_network, run_network, run_network_with, CompiledNetwork};
@@ -47,4 +62,8 @@ pub use server::{AdmitTicket, RequestOptions, ServeConfig, Server};
 pub use service::{
     CacheStats, CompileOutcome, CompileRequest, CompileService, ServeError,
 };
-pub use tune::{compile_network_tuned, TuneOptions, TuningReport};
+pub use store::{ArtifactStore, StoreOutcome, StoreStats};
+pub use tune::{
+    compile_network_tuned, compile_network_tuned_subgraph, SubgraphStats, TuneOptions,
+    TuningReport,
+};

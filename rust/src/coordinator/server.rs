@@ -38,6 +38,7 @@ use super::metrics::{Metrics, TenantId};
 use super::service::{
     CacheStats, CompileOutcome, CompileRequest, CompileService, ServeError,
 };
+use super::store::ArtifactStore;
 
 /// Serving-tier configuration (see module docs for the knobs).
 #[derive(Clone, Debug)]
@@ -52,6 +53,10 @@ pub struct ServeConfig {
     pub cache_bytes: u64,
     /// Default deadline applied to every request (None = none).
     pub deadline: Option<Duration>,
+    /// Persistent disk tier shared by every worker (None = memory-only
+    /// caching). Open one with [`ArtifactStore::open_with_budget`] and
+    /// hand the same `Arc` to as many servers as should share it.
+    pub store: Option<Arc<ArtifactStore>>,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +67,7 @@ impl Default for ServeConfig {
             tenant_cap: 0,
             cache_bytes: 0,
             deadline: None,
+            store: None,
         }
     }
 }
@@ -75,6 +81,12 @@ pub struct RequestOptions {
     pub tune: bool,
     /// Per-request deadline, overriding the server default.
     pub deadline: Option<Duration>,
+    /// Cap on tuning-candidate evaluations for this request (only
+    /// meaningful with `tune`; a budget of 0 still evaluates the
+    /// default pipeline). Budgeted and unbudgeted requests cache
+    /// separately — a capped search must never be served to an
+    /// uncapped request or vice versa.
+    pub tune_budget: Option<usize>,
 }
 
 type Counts = Arc<Mutex<BTreeMap<TenantId, u64>>>;
@@ -116,8 +128,12 @@ pub struct Server {
 impl Server {
     /// Start the compile service and its admission front end.
     pub fn start(config: ServeConfig) -> Server {
-        let service =
-            CompileService::start_with(config.workers, config.queue_depth, config.cache_bytes);
+        let service = CompileService::start_with_store(
+            config.workers,
+            config.queue_depth,
+            config.cache_bytes,
+            config.store.clone(),
+        );
         Server { service, counts: Arc::new(Mutex::new(BTreeMap::new())), config }
     }
 
@@ -148,6 +164,7 @@ impl Server {
             target,
             verify: opts.verify,
             tune: opts.tune,
+            tune_budget: opts.tune_budget,
             tenant: tenant.clone(),
             submitted,
             deadline,
@@ -275,6 +292,46 @@ mod tests {
         rx2.recv().unwrap().unwrap();
         assert_eq!(server.metrics().total(Counter::Rejects), 1);
         assert_eq!(server.metrics().total(Counter::Requests), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn tune_budget_caps_the_search_and_never_aliases() {
+        let server = Server::start(ServeConfig::default());
+        let cfg = targets::paper_fig4();
+        let budgeted = RequestOptions {
+            tune: true,
+            tune_budget: Some(1),
+            ..RequestOptions::default()
+        };
+        let capped = server
+            .compile_blocking("t", ops::matmul_program(8, 8, 8), cfg.clone(), &budgeted)
+            .unwrap();
+        let report = capped.tuning.as_ref().expect("tuned compile records a report");
+        assert!(
+            report.evaluated <= 1,
+            "budget 1 must cap candidate evaluations, got {}",
+            report.evaluated
+        );
+
+        // The same program without a budget runs the full search — and
+        // must not be served the capped artifact out of the cache.
+        let uncapped = RequestOptions { tune: true, ..RequestOptions::default() };
+        let full = server
+            .compile_blocking("t", ops::matmul_program(8, 8, 8), cfg, &uncapped)
+            .unwrap();
+        let full_report = full.tuning.as_ref().expect("tuned compile records a report");
+        assert!(
+            full_report.evaluated > report.evaluated,
+            "uncapped search ({}) must outwork the budgeted one ({})",
+            full_report.evaluated,
+            report.evaluated
+        );
+        assert_eq!(
+            server.metrics().total(Counter::CompilesOk),
+            2,
+            "budgeted and unbudgeted requests must compile separately"
+        );
         server.shutdown();
     }
 

@@ -53,7 +53,8 @@ use crate::ir::Program;
 use super::driver::{cache_key, compile_network, run_network_with, CompiledNetwork};
 use super::metrics::{Metrics, TenantId};
 use super::server::AdmitTicket;
-use super::tune::{compile_network_tuned, TuneOptions};
+use super::store::{ArtifactStore, StoreOutcome};
+use super::tune::{compile_network_tuned, compile_network_tuned_subgraph, TuneOptions};
 
 /// Salt folded into the cache key of tuned requests: a tuned artifact
 /// (searched pipeline + tuning report) and an untuned one for the same
@@ -65,6 +66,12 @@ const TUNED_KEY_SALT: u64 = 0x71D4_E000_0000_0001;
 /// checked, so one must not be served for the other. Matters most for
 /// tuned requests, whose winning pipeline no fixed target ever ran.
 const VERIFIED_KEY_SALT: u64 = 0x5EC5_0000_0000_0002;
+
+/// Salt folded into the cache key of budget-capped tuned requests: an
+/// artifact tuned under a 1-candidate budget saw a different search
+/// than an uncapped one and must not alias it (each distinct budget is
+/// its own entry).
+const TUNE_BUDGET_SALT: u64 = 0xB0D6_0000_0000_0003;
 
 /// Queue depth used by [`CompileService::start`] (the serving tier
 /// configures its own via [`CompileService::start_with`]).
@@ -125,6 +132,11 @@ pub struct CompileRequest {
     /// per (program fingerprint, target, verify) and reused across
     /// requests.
     pub tune: bool,
+    /// Per-request cap on tuning candidates (see
+    /// [`TuneOptions::apply_budget`]). Only meaningful with `tune`;
+    /// salted into the cache key so differently-budgeted artifacts
+    /// never alias.
+    pub tune_budget: Option<usize>,
     pub tenant: TenantId,
     /// When the request was submitted (queue-wait and per-request
     /// latency are measured from here).
@@ -237,6 +249,9 @@ pub struct CompileService {
     /// across requests (like the page pool), so per-request thread
     /// spawns are zero.
     pub compute: Arc<ComputePool>,
+    /// Tier two of the artifact cache: the persistent on-disk store
+    /// probed on every memory miss (None = memory-only service).
+    store: Option<Arc<ArtifactStore>>,
 }
 
 impl CompileService {
@@ -253,6 +268,22 @@ impl CompileService {
         n_workers: usize,
         queue_depth: usize,
         cache_budget_bytes: u64,
+    ) -> CompileService {
+        CompileService::start_with_store(n_workers, queue_depth, cache_budget_bytes, None)
+    }
+
+    /// [`CompileService::start_with`] plus a persistent artifact store
+    /// as the second cache tier: memory misses probe the store before
+    /// compiling (a disk hit is a cache hit — zero passes run), and
+    /// every fresh compile is written back, so a restarted service (or
+    /// a second process sharing the directory) warm-starts. Tuned
+    /// compiles route through the per-subgraph tuner, consulting and
+    /// populating the store per layer shape.
+    pub fn start_with_store(
+        n_workers: usize,
+        queue_depth: usize,
+        cache_budget_bytes: u64,
+        store: Option<Arc<ArtifactStore>>,
     ) -> CompileService {
         let (tx, rx) = sync_channel::<Msg>(queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
@@ -272,8 +303,9 @@ impl CompileService {
             let state = Arc::clone(&state);
             let metrics = Arc::clone(&metrics);
             let faults = Arc::clone(&faults);
+            let store = store.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(&rx, &state, &metrics, &faults)
+                worker_loop(&rx, &state, &metrics, &faults, store.as_deref())
             }));
         }
         let janitor = {
@@ -294,7 +326,13 @@ impl CompileService {
             compute: ComputePool::new(
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
             ),
+            store,
         }
+    }
+
+    /// The persistent store backing this service, if configured.
+    pub fn store(&self) -> Option<&Arc<ArtifactStore>> {
+        self.store.as_ref()
     }
 
     /// Execute a compiled network on the service's shared page pool,
@@ -401,6 +439,7 @@ impl CompileService {
             target,
             verify,
             tune,
+            tune_budget: None,
             tenant: tenant.clone(),
             submitted: Instant::now(),
             deadline: None,
@@ -491,6 +530,7 @@ fn worker_loop(
     state: &Mutex<State>,
     metrics: &Metrics,
     faults: &Faults,
+    store: Option<&ArtifactStore>,
 ) {
     loop {
         let msg = {
@@ -498,16 +538,35 @@ fn worker_loop(
             guard.recv()
         };
         match msg {
-            Ok(Msg::Work(req)) => handle_request(req, state, metrics, faults),
+            Ok(Msg::Work(req)) => handle_request(req, state, metrics, faults, store),
             Ok(Msg::Shutdown) | Err(_) => break,
         }
     }
 }
 
+/// The content key a request compiles and caches under — in memory and
+/// on disk alike. Exposed so the CLI (`stripe store`, warm-start
+/// checks) can address store entries for a concrete request shape.
+pub fn fingerprint(
+    program: &Program,
+    target: &MachineConfig,
+    verify: bool,
+    tune: bool,
+    tune_budget: Option<usize>,
+) -> u64 {
+    let mut key = cache_key(program, target)
+        ^ if tune { TUNED_KEY_SALT } else { 0 }
+        ^ if verify { VERIFIED_KEY_SALT } else { 0 };
+    if tune {
+        if let Some(b) = tune_budget {
+            key ^= TUNE_BUDGET_SALT ^ (b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+    }
+    key
+}
+
 fn request_key(req: &CompileRequest) -> u64 {
-    cache_key(&req.program, &req.target)
-        ^ if req.tune { TUNED_KEY_SALT } else { 0 }
-        ^ if req.verify { VERIFIED_KEY_SALT } else { 0 }
+    fingerprint(&req.program, &req.target, req.verify, req.tune, req.tune_budget)
 }
 
 fn timeout_error(submitted: Instant, now: Instant) -> (Duration, ServeError) {
@@ -515,7 +574,70 @@ fn timeout_error(submitted: Instant, now: Instant) -> (Duration, ServeError) {
     (waited, ServeError::Timeout { waited_ms: waited.as_millis() as u64 })
 }
 
-fn handle_request(mut req: CompileRequest, state: &Mutex<State>, metrics: &Metrics, faults: &Faults) {
+/// Insert a successful artifact into the memory tier (LRU-evicting
+/// under the byte budget), refresh the cache gauges, and return the
+/// waiters parked on `key`. With `net: None` (failed compile) nothing
+/// is cached — the in-flight entry is still cleared so a retry
+/// recompiles.
+fn finish_inflight(
+    state: &Mutex<State>,
+    metrics: &Metrics,
+    key: u64,
+    net: Option<&Arc<CompiledNetwork>>,
+) -> Vec<Waiter> {
+    let mut guard = state.lock().unwrap();
+    let st = &mut *guard;
+    if let Some(net) = net {
+        st.clock += 1;
+        let bytes = net.approx_bytes();
+        st.cache.insert(key, CacheEntry { net: Arc::clone(net), bytes, stamp: st.clock });
+        st.cache_bytes += bytes;
+        // LRU eviction under the byte budget. The entry just inserted
+        // is the most recent, so it is evicted only if it alone
+        // exceeds the whole budget.
+        while st.budget > 0 && st.cache_bytes > st.budget && !st.cache.is_empty() {
+            let oldest =
+                st.cache.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| *k).unwrap();
+            let evicted = st.cache.remove(&oldest).unwrap();
+            st.cache_bytes -= evicted.bytes;
+            metrics.record_eviction(evicted.bytes);
+        }
+    }
+    metrics.set_cache_gauges(st.cache.len() as u64, st.cache_bytes);
+    st.inflight.remove(&key).unwrap_or_default()
+}
+
+/// Probe the disk tier for `key`, mirroring the outcome into the
+/// metrics registry. Corrupt entries were already evicted by the store.
+fn probe_store(
+    store: Option<&ArtifactStore>,
+    metrics: &Metrics,
+    key: u64,
+) -> Option<Arc<CompiledNetwork>> {
+    let store = store?;
+    match store.load_artifact(key) {
+        StoreOutcome::Hit(net) => {
+            metrics.record_store_probe(true);
+            Some(Arc::new(net))
+        }
+        StoreOutcome::Miss => {
+            metrics.record_store_probe(false);
+            None
+        }
+        StoreOutcome::Corrupt(_) => {
+            metrics.record_store_corrupt();
+            None
+        }
+    }
+}
+
+fn handle_request(
+    mut req: CompileRequest,
+    state: &Mutex<State>,
+    metrics: &Metrics,
+    faults: &Faults,
+    store: Option<&ArtifactStore>,
+) {
     let now = Instant::now();
     // A queued request whose deadline passed is dropped at pop.
     if req.deadline.map_or(false, |d| now >= d) {
@@ -554,6 +676,30 @@ fn handle_request(mut req: CompileRequest, state: &Mutex<State>, metrics: &Metri
         }
         Action::Parked => {}
         Action::Compile => {
+            // Tier two: a memory miss probes the persistent store
+            // before compiling. A disk hit is a cache hit — the
+            // artifact is promoted into the memory tier and no passes
+            // run, which is what makes restarts warm-start.
+            if let Some(net) = probe_store(store, metrics, key) {
+                let waiters = finish_inflight(state, metrics, key, Some(&net));
+                metrics.record_hit(&req.tenant, req.submitted.elapsed());
+                let _ = req.reply.send(Ok(Arc::clone(&net)));
+                // Release this request's admission slot before fanning
+                // out to parked waiters.
+                drop(req);
+                let now = Instant::now();
+                for w in waiters {
+                    if w.deadline.map_or(false, |d| now >= d) {
+                        let (waited, err) = timeout_error(w.submitted, now);
+                        metrics.record_timeout(&w.tenant, waited);
+                        let _ = w.reply.send(Err(err));
+                    } else {
+                        metrics.record_hit(&w.tenant, w.submitted.elapsed());
+                        let _ = w.reply.send(Ok(Arc::clone(&net)));
+                    }
+                }
+                return;
+            }
             let t_compile = Instant::now();
             // The compile is fenced with catch_unwind so a panicking
             // pass cannot poison the single-flight entry: whatever
@@ -562,8 +708,17 @@ fn handle_request(mut req: CompileRequest, state: &Mutex<State>, metrics: &Metri
             let compiled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 faults.apply();
                 if req.tune {
-                    let opts = TuneOptions { verify: req.verify, ..TuneOptions::default() };
-                    compile_network_tuned(&req.program, &req.target, &opts).map(Arc::new)
+                    let mut opts = TuneOptions { verify: req.verify, ..TuneOptions::default() };
+                    opts.apply_budget(req.tune_budget);
+                    // With a store, tune per subgraph so repeated layer
+                    // shapes (and future processes) share the search.
+                    match store {
+                        Some(s) => {
+                            compile_network_tuned_subgraph(&req.program, &req.target, &opts, Some(s))
+                                .map(Arc::new)
+                        }
+                        None => compile_network_tuned(&req.program, &req.target, &opts).map(Arc::new),
+                    }
                 } else {
                     compile_network(&req.program, &req.target, req.verify).map(Arc::new)
                 }
@@ -577,38 +732,20 @@ fn handle_request(mut req: CompileRequest, state: &Mutex<State>, metrics: &Metri
                 ))),
             };
             let compile_time = t_compile.elapsed();
-            let waiters = {
-                let mut guard = state.lock().unwrap();
-                let st = &mut *guard;
-                if let Ok(net) = &outcome {
-                    // Only successes are cached; a failure leaves no
-                    // entry, so a subsequent request retries.
-                    st.clock += 1;
-                    let bytes = net.approx_bytes();
-                    st.cache.insert(
-                        key,
-                        CacheEntry { net: Arc::clone(net), bytes, stamp: st.clock },
-                    );
-                    st.cache_bytes += bytes;
-                    // LRU eviction under the byte budget. The entry just
-                    // inserted is the most recent, so it is evicted only
-                    // if it alone exceeds the whole budget.
-                    while st.budget > 0 && st.cache_bytes > st.budget && !st.cache.is_empty()
-                    {
-                        let oldest = st
-                            .cache
-                            .iter()
-                            .min_by_key(|(_, e)| e.stamp)
-                            .map(|(k, _)| *k)
-                            .unwrap();
-                        let evicted = st.cache.remove(&oldest).unwrap();
-                        st.cache_bytes -= evicted.bytes;
-                        metrics.record_eviction(evicted.bytes);
-                    }
+            if let (Some(store), Ok(net)) = (store, &outcome) {
+                // Write-back is best-effort: a failed write only costs
+                // a future process a recompile. GC afterwards keeps the
+                // directory under its byte budget.
+                if let Ok(true) = store.save_artifact(key, net) {
+                    metrics.record_store_write();
                 }
-                metrics.set_cache_gauges(st.cache.len() as u64, st.cache_bytes);
-                st.inflight.remove(&key).unwrap_or_default()
-            };
+                if let Some(gc) = store.maybe_gc() {
+                    metrics.record_store_gc(gc.evicted, gc.evicted_bytes);
+                }
+                let s = store.stats();
+                metrics.set_store_gauges(s.entries, s.bytes);
+            }
+            let waiters = finish_inflight(state, metrics, key, outcome.as_ref().ok());
             metrics.record_compile(compile_time, outcome.is_ok());
             metrics.record_miss(&req.tenant, req.submitted.elapsed());
             let _ = req.reply.send(outcome.clone());
@@ -868,6 +1005,61 @@ mod tests {
         assert_eq!(svc.metrics.total(Counter::CompilesOk), 4);
         assert_eq!(svc.metrics.total(Counter::Evictions), 2);
         svc.shutdown();
+    }
+
+    #[test]
+    fn disk_tier_warm_starts_a_fresh_service() {
+        let dir = std::env::temp_dir()
+            .join(format!("stripe-store-svc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        {
+            let store = Arc::new(super::super::store::ArtifactStore::open(&dir).unwrap());
+            let svc = CompileService::start_with_store(1, 64, 0, Some(store));
+            let a = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
+            assert!(a.tuning.is_some());
+            assert_eq!(svc.metrics.total(Counter::CompilesOk), 1);
+            svc.shutdown();
+        }
+        // A fresh service over the same directory: the whole compile is
+        // one disk read — no compile runs, no tuning candidate is
+        // evaluated, and the request still terminates as a cache hit.
+        let store = Arc::new(super::super::store::ArtifactStore::open(&dir).unwrap());
+        let svc = CompileService::start_with_store(1, 64, 0, Some(Arc::clone(&store)));
+        let b = svc.compile_blocking_tuned(p.clone(), cfg.clone(), false).unwrap();
+        assert!(b.tuning.is_some(), "stored artifact carries its tuning report");
+        assert_eq!(svc.metrics.total(Counter::CompilesOk), 0, "warm start ran no compile");
+        assert_eq!(svc.metrics.total(Counter::Hits), 1);
+        assert!(store.stats().hits >= 1, "{}", store.summary());
+        let scrape = svc.metrics.render_scrape();
+        assert!(scrape.contains("stripe_store_hits_total"), "{scrape}");
+        assert!(scrape.contains("stripe_store_warm_start 1"), "{scrape}");
+        super::super::metrics::reconcile_scrape(&scrape).expect("scrape reconciles");
+        // The memory tier was promoted: a repeat request in this
+        // process never touches the disk again.
+        let probes_before = store.stats().probes;
+        let b2 = svc.compile_blocking_tuned(p, cfg, false).unwrap();
+        assert!(Arc::ptr_eq(&b, &b2));
+        assert_eq!(store.stats().probes, probes_before);
+        svc.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budgeted_tuned_requests_cache_separately() {
+        // A tune-budget-capped artifact must not alias the uncapped
+        // one: different searches, different cache keys.
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        let full = fingerprint(&p, &cfg, false, true, None);
+        let capped = fingerprint(&p, &cfg, false, true, Some(1));
+        assert_ne!(full, capped);
+        // Budget is meaningless without tune: keys coincide.
+        assert_eq!(
+            fingerprint(&p, &cfg, false, false, Some(1)),
+            fingerprint(&p, &cfg, false, false, None)
+        );
     }
 
     #[test]

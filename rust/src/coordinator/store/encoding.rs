@@ -1,0 +1,436 @@
+//! Payload codecs for store entries.
+//!
+//! There is no serde offline, so records use a hand-rolled
+//! little-endian, length-prefixed byte format (`Enc`/`Dec`). The
+//! compiled program itself is stored as **printed IR text** — the
+//! printer/parser round-trip is property-tested
+//! (`parse_program(print_program(p)) == p`), and
+//! [`encode_artifact`] re-checks that round-trip for the concrete
+//! program before writing, so a printable-but-unparseable artifact is
+//! skipped rather than persisted wrong. The parallel schedule is *not*
+//! serialized: it is a deterministic function of the program and the
+//! compute-unit count (`exec::analyze_program`), recomputed at decode.
+//!
+//! Decoders never panic on bad bytes: every read is bounds-checked and
+//! returns `Err` — the store layer treats a decode failure exactly
+//! like a checksum failure (evict + recompile).
+
+use crate::cost::pipeline::ProgramCost;
+use crate::cost::search::SearchStats;
+use crate::passes::PassReport;
+
+use super::super::driver::CompiledNetwork;
+use super::super::tune::{CandidateOutcome, SubgraphStats, TuningReport};
+
+/// Map a decoded metric string back to the `&'static str` the
+/// [`TuningReport`] carries. Unknown strings are a decode error (an
+/// entry from an incompatible build), not a panic.
+fn intern_metric(s: &str) -> Result<&'static str, String> {
+    match s {
+        "sim-traffic-bytes" => Ok("sim-traffic-bytes"),
+        "static-lines" => Ok("static-lines"),
+        "subgraph-aggregate" => Ok("subgraph-aggregate"),
+        other => Err(format!("unknown tuning metric {other:?}")),
+    }
+}
+
+/// Byte writer.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn boolean(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(v) => {
+                self.boolean(true);
+                self.u64(v);
+            }
+            None => self.boolean(false),
+        }
+    }
+}
+
+/// Bounds-checked byte reader.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "decode overrun: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn boolean(&mut self) -> Result<bool, String> {
+        match self.take(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(format!("bad bool byte {b:#x}")),
+        }
+    }
+
+    pub fn str(&mut self) -> Result<String, String> {
+        let n = self.u64()? as usize;
+        if n > self.buf.len() {
+            return Err(format!("string length {n} exceeds payload"));
+        }
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|e| format!("bad utf8: {e}"))
+    }
+
+    pub fn opt_u64(&mut self) -> Result<Option<u64>, String> {
+        Ok(if self.boolean()? { Some(self.u64()?) } else { None })
+    }
+
+    pub fn finish(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "trailing bytes: decoded {} of {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn encode_tuning(e: &mut Enc, t: &TuningReport) {
+    e.str(&t.target);
+    e.u64(t.evaluated as u64);
+    e.u64(t.simulated as u64);
+    e.str(t.metric);
+    e.str(&t.chosen);
+    e.u64(t.chosen_cost);
+    e.opt_u64(t.default_cost);
+    e.u64(t.candidates.len() as u64);
+    for c in &t.candidates {
+        e.str(&c.label);
+        e.str(&c.signature);
+        match &c.static_cost {
+            Some(sc) => {
+                e.boolean(true);
+                e.u64(sc.lines);
+                e.u64(sc.leaf_iterations);
+            }
+            None => e.boolean(false),
+        }
+        e.opt_u64(c.sim_traffic);
+        match &c.error {
+            Some(err) => {
+                e.boolean(true);
+                e.str(err);
+            }
+            None => e.boolean(false),
+        }
+    }
+    match &t.subgraphs {
+        Some(s) => {
+            e.boolean(true);
+            e.u64(s.ops_total as u64);
+            e.u64(s.distinct as u64);
+            e.u64(s.reused as u64);
+            e.u64(s.searched as u64);
+            e.u64(s.candidates_evaluated as u64);
+            e.u64(s.sim_replays as u64);
+        }
+        None => e.boolean(false),
+    }
+}
+
+fn decode_tuning(d: &mut Dec) -> Result<TuningReport, String> {
+    let target = d.str()?;
+    let evaluated = d.u64()? as usize;
+    let simulated = d.u64()? as usize;
+    let metric = intern_metric(&d.str()?)?;
+    let chosen = d.str()?;
+    let chosen_cost = d.u64()?;
+    let default_cost = d.opt_u64()?;
+    let n = d.u64()? as usize;
+    if n > 4096 {
+        return Err(format!("implausible candidate count {n}"));
+    }
+    let mut candidates = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = d.str()?;
+        let signature = d.str()?;
+        let static_cost = if d.boolean()? {
+            Some(ProgramCost { lines: d.u64()?, leaf_iterations: d.u64()? })
+        } else {
+            None
+        };
+        let sim_traffic = d.opt_u64()?;
+        let error = if d.boolean()? { Some(d.str()?) } else { None };
+        candidates.push(CandidateOutcome { label, signature, static_cost, sim_traffic, error });
+    }
+    let subgraphs = if d.boolean()? {
+        Some(SubgraphStats {
+            ops_total: d.u64()? as usize,
+            distinct: d.u64()? as usize,
+            reused: d.u64()? as usize,
+            searched: d.u64()? as usize,
+            candidates_evaluated: d.u64()? as usize,
+            sim_replays: d.u64()? as usize,
+        })
+    } else {
+        None
+    };
+    Ok(TuningReport {
+        target,
+        evaluated,
+        simulated,
+        metric,
+        chosen,
+        chosen_cost,
+        default_cost,
+        candidates,
+        subgraphs,
+    })
+}
+
+/// Serialize a compiled artifact. Fails (instead of writing a record
+/// that can never be decoded faithfully) if the program text does not
+/// round-trip through the parser back to the identical IR.
+pub fn encode_artifact(net: &CompiledNetwork) -> Result<Vec<u8>, String> {
+    let text = crate::ir::printer::print_program(&net.program);
+    let reparsed = crate::ir::parser::parse_program(&text)
+        .map_err(|e| format!("artifact program does not re-parse: {e}"))?;
+    if reparsed != net.program {
+        return Err("artifact program text does not round-trip".into());
+    }
+    let mut e = Enc::default();
+    e.str(&net.target);
+    e.u64(net.compute_units as u64);
+    e.str(&text);
+    e.u64(net.reports.len() as u64);
+    for r in &net.reports {
+        e.str(&r.pass);
+        e.boolean(r.changed);
+        e.u64(r.details.len() as u64);
+        for dtl in &r.details {
+            e.str(dtl);
+        }
+        match &r.search {
+            Some(s) => {
+                e.boolean(true);
+                e.u64(s.evaluated as u64);
+                e.u64(s.feasible as u64);
+            }
+            None => e.boolean(false),
+        }
+    }
+    match &net.tuning {
+        Some(t) => {
+            e.boolean(true);
+            encode_tuning(&mut e, t);
+        }
+        None => e.boolean(false),
+    }
+    Ok(e.finish())
+}
+
+/// Deserialize a compiled artifact. The execution schedule is
+/// recomputed from the program (deterministic), not read from disk.
+pub fn decode_artifact(payload: &[u8]) -> Result<CompiledNetwork, String> {
+    let mut d = Dec::new(payload);
+    let target = d.str()?;
+    let compute_units = d.u64()? as usize;
+    let text = d.str()?;
+    let program =
+        crate::ir::parser::parse_program(&text).map_err(|e| format!("stored IR: {e}"))?;
+    let n_reports = d.u64()? as usize;
+    if n_reports > 4096 {
+        return Err(format!("implausible report count {n_reports}"));
+    }
+    let mut reports = Vec::with_capacity(n_reports);
+    for _ in 0..n_reports {
+        let pass = d.str()?;
+        let changed = d.boolean()?;
+        let n_details = d.u64()? as usize;
+        if n_details > 1 << 20 {
+            return Err(format!("implausible detail count {n_details}"));
+        }
+        let mut details = Vec::with_capacity(n_details);
+        for _ in 0..n_details {
+            details.push(d.str()?);
+        }
+        let search = if d.boolean()? {
+            Some(SearchStats { evaluated: d.u64()? as usize, feasible: d.u64()? as usize })
+        } else {
+            None
+        };
+        reports.push(PassReport { pass, changed, details, search });
+    }
+    let tuning = if d.boolean()? { Some(decode_tuning(&mut d)?) } else { None };
+    d.finish()?;
+    let schedule = crate::exec::analyze_program(&program, compute_units);
+    Ok(CompiledNetwork { target, program, reports, schedule, compute_units, tuning })
+}
+
+/// A per-subgraph tuning record: the candidate scores from one fresh
+/// search over a canonicalized op, keyed by the subgraph fingerprint.
+/// Warm `stripe tune` runs consume these instead of re-searching.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubgraphRecord {
+    /// Target name the scores were measured for (diagnostic; the
+    /// fingerprint already salts the full target configuration).
+    pub target: String,
+    /// Deciding metric of the per-subgraph search.
+    pub metric: &'static str,
+    /// Candidate label → cost under `metric`, in enumeration order
+    /// (the default pipeline first). Failed candidates are absent.
+    pub scores: Vec<(String, u64)>,
+    /// Candidates compiled during the fresh search.
+    pub evaluated: u64,
+    /// Candidates re-scored through the memory simulator.
+    pub simulated: u64,
+}
+
+pub fn encode_subgraph(rec: &SubgraphRecord) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.str(&rec.target);
+    e.str(rec.metric);
+    e.u64(rec.scores.len() as u64);
+    for (label, cost) in &rec.scores {
+        e.str(label);
+        e.u64(*cost);
+    }
+    e.u64(rec.evaluated);
+    e.u64(rec.simulated);
+    e.finish()
+}
+
+pub fn decode_subgraph(payload: &[u8]) -> Result<SubgraphRecord, String> {
+    let mut d = Dec::new(payload);
+    let target = d.str()?;
+    let metric = intern_metric(&d.str()?)?;
+    let n = d.u64()? as usize;
+    if n > 4096 {
+        return Err(format!("implausible score count {n}"));
+    }
+    let mut scores = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = d.str()?;
+        let cost = d.u64()?;
+        scores.push((label, cost));
+    }
+    let evaluated = d.u64()?;
+    let simulated = d.u64()?;
+    d.finish()?;
+    Ok(SubgraphRecord { target, metric, scores, evaluated, simulated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    #[test]
+    fn artifact_roundtrips_including_reports_and_schedule() {
+        let p = ops::cnn_program();
+        let cfg = targets::cpu_cache();
+        let net = super::super::super::compile_network(&p, &cfg, false).unwrap();
+        let bytes = encode_artifact(&net).expect("encodes");
+        let back = decode_artifact(&bytes).expect("decodes");
+        assert_eq!(back.target, net.target);
+        assert_eq!(back.program, net.program);
+        assert_eq!(back.compute_units, net.compute_units);
+        assert_eq!(back.reports.len(), net.reports.len());
+        for (a, b) in back.reports.iter().zip(&net.reports) {
+            assert_eq!(a.pass, b.pass);
+            assert_eq!(a.changed, b.changed);
+            assert_eq!(a.details, b.details);
+            assert_eq!(a.search, b.search);
+        }
+        // The schedule was recomputed, not stored: same decisions.
+        assert_eq!(back.schedule.ops.len(), net.schedule.ops.len());
+        assert_eq!(back.summary(), net.summary());
+    }
+
+    #[test]
+    fn tuned_artifact_roundtrips_with_its_report() {
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        let net = super::super::super::compile_network_tuned(
+            &p,
+            &cfg,
+            &super::super::super::TuneOptions::default(),
+        )
+        .unwrap();
+        let bytes = encode_artifact(&net).expect("encodes");
+        let back = decode_artifact(&bytes).expect("decodes");
+        let (a, b) = (back.tuning.as_ref().unwrap(), net.tuning.as_ref().unwrap());
+        assert_eq!(a.metric, b.metric);
+        assert_eq!(a.chosen, b.chosen);
+        assert_eq!(a.chosen_cost, b.chosen_cost);
+        assert_eq!(a.default_cost, b.default_cost);
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        assert_eq!(a.summary(), b.summary());
+    }
+
+    #[test]
+    fn truncated_payloads_decode_to_errors_not_panics() {
+        let p = ops::fig4_conv_program();
+        let cfg = targets::paper_fig4();
+        let net = super::super::super::compile_network(&p, &cfg, false).unwrap();
+        let bytes = encode_artifact(&net).unwrap();
+        // Every prefix must fail cleanly (the full payload succeeds).
+        for cut in [0, 1, 7, 8, 9, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_artifact(&bytes[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // Trailing garbage is rejected too.
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(b"junk");
+        assert!(decode_artifact(&padded).is_err());
+    }
+
+    #[test]
+    fn subgraph_record_roundtrips() {
+        let rec = SubgraphRecord {
+            target: "cpu_cache".into(),
+            metric: "sim-traffic-bytes",
+            scores: vec![("default".into(), 100), ("space=pow2,fuse=default,localize=default".into(), 90)],
+            evaluated: 5,
+            simulated: 3,
+        };
+        let back = decode_subgraph(&encode_subgraph(&rec)).unwrap();
+        assert_eq!(back, rec);
+        assert!(decode_subgraph(b"short").is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Key derivation for store entries.
+//!
+//! Two key families share one 64-bit FNV-1a space:
+//!
+//! * **Artifact keys** are the service's salted request keys (program
+//!   fingerprint × target config × dtype × tune/verify/budget flags) —
+//!   the store just re-uses them, so the disk tier is addressed by
+//!   exactly the content the in-memory cache is.
+//! * **Subgraph fingerprints** ([`subgraph_fingerprint`]) hash one
+//!   *canonicalized* top-level op: the op block is cloned, every
+//!   diagnostic block name is blanked, and every buffer/view name is
+//!   renamed to a positional placeholder in first-appearance order —
+//!   so two structurally identical layers (`conv1` over `t0→t1`,
+//!   `conv3` over `t2→t3`) hash identically, while shape, strides,
+//!   dtype, access patterns, constraints, tags, and locations all
+//!   still contribute. The target's full configuration and the store
+//!   format version are folded in as salt, so a fingerprint never
+//!   crosses targets or formats.
+
+use std::collections::BTreeMap;
+
+use crate::hw::MachineConfig;
+use crate::ir::block::{Block, Statement};
+use crate::ir::program::Program;
+
+use super::storage::fnv1a;
+
+/// Bumped whenever the on-disk header, payload encoding, or the
+/// canonicalization below changes shape: old entries then read as
+/// version-mismatched ([`super::storage::GetOutcome::Corrupt`]) and are
+/// evicted + recompiled instead of being misinterpreted.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Entry kind for full compiled artifacts.
+pub const KIND_ARTIFACT: &str = "art";
+
+/// Entry kind for per-subgraph tuning records.
+pub const KIND_SUBGRAPH: &str = "sub";
+
+/// Rename every buffer/view name in `b` to a positional placeholder.
+/// `outer` maps enclosing-scope names (program buffers at the top
+/// level, parent-block `into` names below) to their placeholders;
+/// `counter` allocates fresh ones in first-appearance order.
+fn canonicalize(b: &mut Block, outer: &BTreeMap<String, String>, counter: &mut usize) {
+    b.name = String::new();
+    let mut local = outer.clone();
+    for r in &mut b.refs {
+        if let Some(new) = outer.get(&r.from) {
+            r.from = new.clone();
+        }
+        let fresh = format!("v{}", *counter);
+        *counter += 1;
+        local.insert(r.into.clone(), fresh.clone());
+        r.into = fresh;
+    }
+    for s in &mut b.stmts {
+        match s {
+            Statement::Block(c) => canonicalize(c, &local, counter),
+            // Loads read through a view name; their destination is a
+            // scratch register ($-name), which is already positional.
+            Statement::Load { from, .. } => {
+                if let Some(n) = local.get(from) {
+                    *from = n.clone();
+                }
+            }
+            Statement::Store { into, .. } => {
+                if let Some(n) = local.get(into) {
+                    *into = n.clone();
+                }
+            }
+            Statement::Special(sp) => {
+                for name in sp.inputs.iter_mut().chain(sp.outputs.iter_mut()) {
+                    if let Some(n) = local.get(name) {
+                        *name = n.clone();
+                    }
+                }
+            }
+            Statement::Intrinsic { .. } | Statement::Constant { .. } => {}
+        }
+    }
+}
+
+/// Fingerprint one top-level op of `program` for `cfg`. Ops that are
+/// renamed copies of each other — same shapes, strides, dtypes, access
+/// polynomials, constraints, tags — share a fingerprint; anything
+/// structural separates them. Returns `None` for non-block statements
+/// (nothing tunable to fingerprint).
+pub fn subgraph_fingerprint(op: &Block, program: &Program, cfg: &MachineConfig) -> u64 {
+    // Positional placeholders for the program buffers the op touches,
+    // in first-appearance order, plus their declarations (dtype +
+    // sizes + strides): the op body below only sees placeholder names,
+    // so the decls are what keep an f32 layer and an i8 layer apart.
+    let mut outer: BTreeMap<String, String> = BTreeMap::new();
+    let mut decls = String::new();
+    for r in &op.refs {
+        if outer.contains_key(&r.from) {
+            continue;
+        }
+        let placeholder = format!("g{}", outer.len());
+        if let Some(buf) = program.buffers.iter().find(|b| b.name == r.from) {
+            decls.push_str(&format!(
+                "{placeholder}:{}:{}\n",
+                buf.ttype.dtype.name(),
+                buf.ttype
+            ));
+        }
+        outer.insert(r.from.clone(), placeholder);
+    }
+    let mut canon = op.clone();
+    let mut counter = 0usize;
+    canonicalize(&mut canon, &outer, &mut counter);
+    let text = crate::ir::printer::block_to_string(&canon);
+    let salt = format!("v{FORMAT_VERSION}|{cfg:?}");
+    let mut bytes = Vec::with_capacity(text.len() + decls.len() + salt.len());
+    bytes.extend_from_slice(decls.as_bytes());
+    bytes.extend_from_slice(text.as_bytes());
+    bytes.extend_from_slice(salt.as_bytes());
+    fnv1a(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NetworkBuilder;
+    use crate::hw::targets;
+    use crate::ir::DType;
+
+    /// Two structurally identical conv layers stacked: different block
+    /// and buffer names, identical math.
+    fn repeated_conv_net(dtype: DType) -> Program {
+        let mut nb = NetworkBuilder::new("twin_conv", dtype);
+        let x = nb.input("x", &[8, 8, 4]);
+        let w1 = nb.weight("w1", &[3, 3, 4, 4]);
+        let w2 = nb.weight("w2", &[3, 3, 4, 4]);
+        let a = nb.conv2d_same(x, w1);
+        let b = nb.conv2d_same(a, w2);
+        nb.finish(b)
+    }
+
+    #[test]
+    fn renamed_twin_layers_share_a_fingerprint() {
+        let p = repeated_conv_net(DType::F32);
+        let cfg = targets::cpu_cache();
+        let fps: Vec<u64> =
+            p.ops().map(|op| subgraph_fingerprint(op, &p, &cfg)).collect();
+        assert_eq!(fps.len(), 2);
+        assert_eq!(fps[0], fps[1], "renamed identical layers must collide");
+    }
+
+    #[test]
+    fn shape_dtype_and_target_separate_fingerprints() {
+        let cfg = targets::cpu_cache();
+        let p = repeated_conv_net(DType::F32);
+        let base = subgraph_fingerprint(p.ops().next().unwrap(), &p, &cfg);
+
+        // Different layer shape.
+        let mut nb = NetworkBuilder::new("other", DType::F32);
+        let x = nb.input("x", &[8, 8, 4]);
+        let w = nb.weight("w", &[3, 3, 4, 8]);
+        let y = nb.conv2d_same(x, w);
+        let q = nb.finish(y);
+        assert_ne!(base, subgraph_fingerprint(q.ops().next().unwrap(), &q, &cfg));
+
+        // Same topology, different storage dtype.
+        let p8 = repeated_conv_net(DType::I8);
+        assert_ne!(base, subgraph_fingerprint(p8.ops().next().unwrap(), &p8, &cfg));
+
+        // Same op, different target configuration (same name even).
+        let mut resized = cfg.clone();
+        resized.memories[0].capacity_bytes /= 2;
+        assert_ne!(base, subgraph_fingerprint(p.ops().next().unwrap(), &p, &resized));
+    }
+
+    #[test]
+    fn canonicalization_does_not_mutate_the_program() {
+        let p = repeated_conv_net(DType::F32);
+        let before = crate::ir::printer::print_program(&p);
+        let cfg = targets::cpu_cache();
+        for op in p.ops() {
+            subgraph_fingerprint(op, &p, &cfg);
+        }
+        assert_eq!(before, crate::ir::printer::print_program(&p));
+    }
+}

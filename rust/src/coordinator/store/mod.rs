@@ -1,0 +1,396 @@
+//! Persistent content-addressed artifact + tuning store — the disk
+//! tier under the compile service's in-memory LRU.
+//!
+//! One store is one flat directory (`--store-dir`). Entries come in
+//! two kinds, both keyed in the same 64-bit content-hash space
+//! ([`keys`]):
+//!
+//! * **artifacts** (`art-*`): whole serialized [`CompiledNetwork`]s
+//!   under the service's salted request key — a restart (or a second
+//!   process pointed at the same directory) warm-starts: the compile
+//!   is a disk read, zero passes run, zero tuning candidates are
+//!   evaluated.
+//! * **subgraph tuning records** (`sub-*`): per-op candidate scores
+//!   under a canonicalized structural fingerprint
+//!   ([`keys::subgraph_fingerprint`]) — the tuner consults and
+//!   populates the store *per layer shape*, so a deep network with k
+//!   distinct layer shapes costs k searches instead of one per layer,
+//!   and those k amortize across every network and process sharing
+//!   the directory.
+//!
+//! The on-disk format (checksummed versioned header, atomic
+//! temp+rename writes, last-writer-wins concurrency) is documented in
+//! [`storage`]; payload encodings in [`encoding`]. Every failure mode
+//! — truncation, bit flips, version skew, undecodable payloads — is
+//! absorbed as [`StoreOutcome::Corrupt`]: the entry is evicted and the
+//! caller recompiles; nothing panics on bad bytes.
+//!
+//! GC is byte-budgeted and oldest-modified-first ([`ArtifactStore::gc`]),
+//! mirroring the in-memory LRU's recency policy at disk granularity.
+
+pub mod encoding;
+pub mod keys;
+pub mod storage;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use encoding::SubgraphRecord;
+pub use keys::{subgraph_fingerprint, FORMAT_VERSION, KIND_ARTIFACT, KIND_SUBGRAPH};
+pub use storage::{GcResult, GetOutcome};
+
+use super::driver::CompiledNetwork;
+use storage::DiskKv;
+
+/// What a typed load resolves to.
+#[derive(Debug)]
+pub enum StoreOutcome<T> {
+    Hit(T),
+    Miss,
+    /// The entry existed but failed validation (header, checksum, or
+    /// payload decode); it has already been evicted.
+    Corrupt(String),
+}
+
+/// Process-local event counters (`stats`/`summary`; the service
+/// mirrors the same events into the metrics registry).
+#[derive(Debug, Default)]
+struct StoreCounters {
+    probes: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    corrupt: AtomicU64,
+    writes: AtomicU64,
+    /// Artifacts whose program text failed the encode-time round-trip
+    /// check and were not written (served from memory only).
+    encode_skips: AtomicU64,
+    gc_evictions: AtomicU64,
+    gc_evicted_bytes: AtomicU64,
+}
+
+/// A point-in-time view of the store: disk residency (rescanned) plus
+/// this process's event counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    pub entries: u64,
+    pub bytes: u64,
+    pub artifacts: u64,
+    pub subgraphs: u64,
+    pub probes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub corrupt: u64,
+    pub writes: u64,
+    pub encode_skips: u64,
+    pub gc_evictions: u64,
+    pub gc_evicted_bytes: u64,
+}
+
+impl StoreStats {
+    /// The accounting identity `stripe store stats` and the metrics
+    /// reconciler both assert: every probe is a hit, a miss, or a
+    /// corrupt eviction.
+    pub fn reconciles(&self) -> bool {
+        self.probes == self.hits + self.misses + self.corrupt
+            && self.entries == self.artifacts + self.subgraphs
+    }
+}
+
+/// The disk tier. All methods take `&self`; the filesystem is the
+/// shared state, so one `ArtifactStore` can be probed from many
+/// worker threads (and many processes can share one directory).
+#[derive(Debug)]
+pub struct ArtifactStore {
+    kv: DiskKv,
+    /// Byte budget applied by [`ArtifactStore::maybe_gc`] after writes
+    /// (0 = unlimited, never auto-collected).
+    budget: u64,
+    counters: StoreCounters,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store with no GC byte budget.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore, String> {
+        ArtifactStore::open_with_budget(dir, 0)
+    }
+
+    /// Open a store that [`ArtifactStore::maybe_gc`] keeps under
+    /// `budget` bytes (0 = unlimited).
+    pub fn open_with_budget(dir: impl AsRef<Path>, budget: u64) -> Result<ArtifactStore, String> {
+        let kv = DiskKv::open(dir.as_ref(), FORMAT_VERSION)
+            .map_err(|e| format!("open store {}: {e}", dir.as_ref().display()))?;
+        Ok(ArtifactStore { kv, budget, counters: StoreCounters::default() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        self.kv.root()
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    fn load<T>(
+        &self,
+        kind: &str,
+        key: u64,
+        decode: impl FnOnce(&[u8]) -> Result<T, String>,
+    ) -> StoreOutcome<T> {
+        self.counters.probes.fetch_add(1, Ordering::Relaxed);
+        match self.kv.get(kind, key) {
+            storage::GetOutcome::Hit(payload) => match decode(&payload) {
+                Ok(v) => {
+                    self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                    StoreOutcome::Hit(v)
+                }
+                Err(e) => {
+                    // Checksum passed but the payload is meaningless to
+                    // this build: same treatment as corruption.
+                    self.counters.corrupt.fetch_add(1, Ordering::Relaxed);
+                    self.kv.remove(kind, key);
+                    StoreOutcome::Corrupt(format!("undecodable payload: {e}"))
+                }
+            },
+            storage::GetOutcome::Miss => {
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                StoreOutcome::Miss
+            }
+            storage::GetOutcome::Corrupt(reason) => {
+                self.counters.corrupt.fetch_add(1, Ordering::Relaxed);
+                self.kv.remove(kind, key);
+                StoreOutcome::Corrupt(reason)
+            }
+        }
+    }
+
+    /// Probe the artifact tier. A hit is a fully reconstructed
+    /// [`CompiledNetwork`] (schedule recomputed); corrupt entries are
+    /// evicted on the way out.
+    pub fn load_artifact(&self, key: u64) -> StoreOutcome<CompiledNetwork> {
+        self.load(KIND_ARTIFACT, key, encoding::decode_artifact)
+    }
+
+    /// Persist a compiled artifact. Returns `Ok(false)` when the
+    /// artifact was skipped because its program text does not
+    /// round-trip (it still serves from the in-memory cache).
+    pub fn save_artifact(&self, key: u64, net: &CompiledNetwork) -> Result<bool, String> {
+        let payload = match encoding::encode_artifact(net) {
+            Ok(p) => p,
+            Err(_) => {
+                self.counters.encode_skips.fetch_add(1, Ordering::Relaxed);
+                return Ok(false);
+            }
+        };
+        self.kv
+            .put(KIND_ARTIFACT, key, &payload)
+            .map_err(|e| format!("store write: {e}"))?;
+        self.counters.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Probe the subgraph tuning tier.
+    pub fn load_subgraph(&self, key: u64) -> StoreOutcome<SubgraphRecord> {
+        self.load(KIND_SUBGRAPH, key, encoding::decode_subgraph)
+    }
+
+    /// Persist one subgraph's candidate scores.
+    pub fn save_subgraph(&self, key: u64, rec: &SubgraphRecord) -> Result<(), String> {
+        self.kv
+            .put(KIND_SUBGRAPH, key, &encoding::encode_subgraph(rec))
+            .map_err(|e| format!("store write: {e}"))?;
+        self.counters.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Evict oldest-modified entries until the directory fits
+    /// `budget_bytes` (0 = report only, evict nothing).
+    pub fn gc(&self, budget_bytes: u64) -> Result<GcResult, String> {
+        let r = self.kv.gc(budget_bytes).map_err(|e| format!("store gc: {e}"))?;
+        self.counters.gc_evictions.fetch_add(r.evicted, Ordering::Relaxed);
+        self.counters.gc_evicted_bytes.fetch_add(r.evicted_bytes, Ordering::Relaxed);
+        Ok(r)
+    }
+
+    /// Post-write GC under the configured budget (no-op when 0).
+    pub fn maybe_gc(&self) -> Option<GcResult> {
+        if self.budget == 0 {
+            return None;
+        }
+        self.gc(self.budget).ok()
+    }
+
+    /// Rescan the directory and combine residency with this process's
+    /// event counters.
+    pub fn stats(&self) -> StoreStats {
+        let entries = self.kv.list().unwrap_or_default();
+        let c = &self.counters;
+        StoreStats {
+            entries: entries.len() as u64,
+            bytes: entries.iter().map(|e| e.bytes).sum(),
+            artifacts: entries.iter().filter(|e| e.kind == KIND_ARTIFACT).count() as u64,
+            subgraphs: entries.iter().filter(|e| e.kind == KIND_SUBGRAPH).count() as u64,
+            probes: c.probes.load(Ordering::Relaxed),
+            hits: c.hits.load(Ordering::Relaxed),
+            misses: c.misses.load(Ordering::Relaxed),
+            corrupt: c.corrupt.load(Ordering::Relaxed),
+            writes: c.writes.load(Ordering::Relaxed),
+            encode_skips: c.encode_skips.load(Ordering::Relaxed),
+            gc_evictions: c.gc_evictions.load(Ordering::Relaxed),
+            gc_evicted_bytes: c.gc_evicted_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Validate every resident entry end to end (header + checksum +
+    /// payload decode). Returns `(valid, corrupt)` counts; corrupt
+    /// entries are left in place (use [`ArtifactStore::load_artifact`]
+    /// / the service path to evict them lazily).
+    pub fn fsck(&self) -> Result<(u64, Vec<String>), String> {
+        let entries = self.kv.list().map_err(|e| format!("store scan: {e}"))?;
+        let mut valid = 0u64;
+        let mut bad = Vec::new();
+        for e in &entries {
+            let outcome = self.kv.get(&e.kind, e.key);
+            let decoded = match outcome {
+                storage::GetOutcome::Hit(p) => match e.kind.as_str() {
+                    KIND_ARTIFACT => encoding::decode_artifact(&p).map(|_| ()),
+                    KIND_SUBGRAPH => encoding::decode_subgraph(&p).map(|_| ()),
+                    other => Err(format!("unknown entry kind {other:?}")),
+                },
+                storage::GetOutcome::Miss => Err("vanished mid-scan".into()),
+                storage::GetOutcome::Corrupt(r) => Err(r),
+            };
+            match decoded {
+                Ok(()) => valid += 1,
+                Err(r) => bad.push(format!("{}-{:016x}: {r}", e.kind, e.key)),
+            }
+        }
+        Ok((valid, bad))
+    }
+
+    /// One-line human summary (CLI output).
+    pub fn summary(&self) -> String {
+        let s = self.stats();
+        format!(
+            "store {}: {} entr{} ({} artifact(s), {} subgraph record(s)), {} B resident; \
+             this process: {} probe(s) = {} hit(s) + {} miss(es) + {} corrupt, \
+             {} write(s), {} encode skip(s), {} gc eviction(s) ({} B)",
+            self.dir().display(),
+            s.entries,
+            if s.entries == 1 { "y" } else { "ies" },
+            s.artifacts,
+            s.subgraphs,
+            s.bytes,
+            s.probes,
+            s.hits,
+            s.misses,
+            s.corrupt,
+            s.writes,
+            s.encode_skips,
+            s.gc_evictions,
+            s.gc_evicted_bytes,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ops;
+    use crate::hw::targets;
+
+    fn temp_store(tag: &str) -> ArtifactStore {
+        let dir = std::env::temp_dir()
+            .join(format!("stripe-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        ArtifactStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn artifact_store_roundtrip_and_stats_reconcile() {
+        let store = temp_store("roundtrip");
+        let p = ops::conv_relu_program();
+        let cfg = targets::cpu_cache();
+        let net = super::super::compile_network(&p, &cfg, false).unwrap();
+        assert!(matches!(store.load_artifact(42), StoreOutcome::Miss));
+        assert!(store.save_artifact(42, &net).unwrap());
+        match store.load_artifact(42) {
+            StoreOutcome::Hit(back) => {
+                assert_eq!(back.program, net.program);
+                assert_eq!(back.summary(), net.summary());
+            }
+            other => panic!("{other:?}"),
+        }
+        let s = store.stats();
+        assert_eq!((s.probes, s.hits, s.misses), (2, 1, 1));
+        assert_eq!((s.entries, s.artifacts, s.writes), (1, 1, 1));
+        assert!(s.reconciles(), "{s:?}");
+        let (valid, bad) = store.fsck().unwrap();
+        assert_eq!((valid, bad.len()), (1, 0));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn corrupt_entries_are_evicted_and_counted() {
+        let store = temp_store("evict");
+        let p = ops::fig4_conv_program();
+        let cfg = targets::paper_fig4();
+        let net = super::super::compile_network(&p, &cfg, false).unwrap();
+        store.save_artifact(7, &net).unwrap();
+        // Flip a payload byte on disk.
+        let path = store.kv.path_of(KIND_ARTIFACT, 7);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x55;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(store.load_artifact(7), StoreOutcome::Corrupt(_)));
+        // The entry was evicted: a re-probe is a clean miss.
+        assert!(matches!(store.load_artifact(7), StoreOutcome::Miss));
+        let s = store.stats();
+        assert_eq!((s.corrupt, s.entries), (1, 0));
+        assert!(s.reconciles(), "{s:?}");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn subgraph_records_roundtrip_through_disk() {
+        let store = temp_store("sub");
+        let rec = SubgraphRecord {
+            target: "cpu_cache".into(),
+            metric: "static-lines",
+            scores: vec![("default".into(), 11)],
+            evaluated: 3,
+            simulated: 0,
+        };
+        store.save_subgraph(9, &rec).unwrap();
+        match store.load_subgraph(9) {
+            StoreOutcome::Hit(back) => assert_eq!(back, rec),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(store.stats().subgraphs, 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn budgeted_store_collects_after_writes() {
+        let p = ops::fig4_conv_program();
+        let cfg = targets::paper_fig4();
+        let net = super::super::compile_network(&p, &cfg, false).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("stripe-store-budget-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Budget below two artifacts: after the second write + gc, one
+        // entry survives.
+        let one = encoding::encode_artifact(&net).unwrap().len() as u64
+            + storage::HEADER_LEN as u64;
+        let store = ArtifactStore::open_with_budget(&dir, one * 3 / 2).unwrap();
+        store.save_artifact(1, &net).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        store.save_artifact(2, &net).unwrap();
+        let gc = store.maybe_gc().expect("budgeted store collects");
+        assert_eq!(gc.evicted, 1, "{gc:?}");
+        assert!(matches!(store.load_artifact(1), StoreOutcome::Miss), "oldest evicted");
+        assert!(matches!(store.load_artifact(2), StoreOutcome::Hit(_)));
+        assert!(store.stats().reconciles());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

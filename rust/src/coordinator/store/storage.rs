@@ -1,0 +1,341 @@
+//! Disk primitives for the artifact store: a minimal key-value layer
+//! over one flat directory, one file per entry.
+//!
+//! ## On-disk format
+//!
+//! Every entry is a single file named `<kind>-<key:016x>.stripe` whose
+//! contents are a fixed 32-byte header followed by the payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"STPS"
+//! 4       4     format version (u32 LE) — see `keys::FORMAT_VERSION`
+//! 8       8     entry key (u64 LE), must match the key in the filename
+//! 16      8     payload length in bytes (u64 LE)
+//! 24      8     FNV-1a checksum of the payload (u64 LE)
+//! 32      ...   payload (see `encoding`)
+//! ```
+//!
+//! ## Durability and concurrency
+//!
+//! Writes are atomic at the entry level: the header + payload is
+//! written to a unique temp file in the same directory (keyed by pid
+//! and a process-local counter so concurrent writers never collide),
+//! then `rename`d over the final name. On POSIX the rename is atomic,
+//! so a reader observes either the old entry or the new one, never a
+//! torn mix — two processes sharing one store directory coexist with
+//! last-writer-wins semantics and no file locking.
+//!
+//! ## Failure handling
+//!
+//! [`DiskKv::get`] validates everything it reads: magic, version, key
+//! echo, payload length, and checksum. Any mismatch — a truncated
+//! file, a flipped byte, an entry written by a different format
+//! version — is reported as [`GetOutcome::Corrupt`] with a reason, and
+//! the caller decides (the [`super::ArtifactStore`] evicts the entry
+//! and recompiles). Nothing in this layer panics on bad bytes.
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::SystemTime;
+
+/// File magic identifying a store entry.
+pub const MAGIC: [u8; 4] = *b"STPS";
+
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 32;
+
+/// Suffix shared by every entry file (temp files use `.tmp-*`).
+const ENTRY_SUFFIX: &str = ".stripe";
+
+/// Process-local counter making concurrent temp-file names unique.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// FNV-1a over a byte slice — the same hash family as the compile
+/// cache key, applied to payload bytes.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Result of a read: distinguishes "not there" from "there but bad".
+#[derive(Debug)]
+pub enum GetOutcome {
+    /// Entry present, header validated, checksum matched.
+    Hit(Vec<u8>),
+    /// No entry for this key.
+    Miss,
+    /// Entry present but unreadable: truncated, checksum mismatch, or
+    /// wrong format version. The reason is diagnostic only.
+    Corrupt(String),
+}
+
+/// Metadata for one resident entry (from a directory scan).
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub kind: String,
+    pub key: u64,
+    /// Whole-file size (header + payload).
+    pub bytes: u64,
+    pub modified: SystemTime,
+    pub path: PathBuf,
+}
+
+/// Outcome of a GC sweep.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GcResult {
+    pub evicted: u64,
+    pub evicted_bytes: u64,
+    pub resident_entries: u64,
+    pub resident_bytes: u64,
+}
+
+/// The flat-directory KV. Cheap to clone paths from; all methods take
+/// `&self` (the filesystem is the shared state).
+#[derive(Debug)]
+pub struct DiskKv {
+    root: PathBuf,
+    version: u32,
+}
+
+impl DiskKv {
+    /// Open (creating the directory if needed) a store rooted at
+    /// `root`, reading and writing entries of format `version`.
+    pub fn open(root: impl AsRef<Path>, version: u32) -> io::Result<DiskKv> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root)?;
+        Ok(DiskKv { root, version })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Final path of an entry.
+    pub fn path_of(&self, kind: &str, key: u64) -> PathBuf {
+        self.root.join(format!("{kind}-{key:016x}{ENTRY_SUFFIX}"))
+    }
+
+    /// Read and validate an entry.
+    pub fn get(&self, kind: &str, key: u64) -> GetOutcome {
+        let path = self.path_of(kind, key);
+        let mut f = match fs::File::open(&path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return GetOutcome::Miss,
+            Err(e) => return GetOutcome::Corrupt(format!("open: {e}")),
+        };
+        let mut bytes = Vec::new();
+        if let Err(e) = f.read_to_end(&mut bytes) {
+            return GetOutcome::Corrupt(format!("read: {e}"));
+        }
+        if bytes.len() < HEADER_LEN {
+            return GetOutcome::Corrupt(format!(
+                "truncated header: {} bytes < {HEADER_LEN}",
+                bytes.len()
+            ));
+        }
+        if bytes[0..4] != MAGIC {
+            return GetOutcome::Corrupt("bad magic".into());
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != self.version {
+            return GetOutcome::Corrupt(format!(
+                "format version {version}, expected {}",
+                self.version
+            ));
+        }
+        let stored_key = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        if stored_key != key {
+            return GetOutcome::Corrupt(format!("key mismatch: {stored_key:#x} != {key:#x}"));
+        }
+        let payload_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let checksum = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        let payload = &bytes[HEADER_LEN..];
+        if payload.len() != payload_len {
+            return GetOutcome::Corrupt(format!(
+                "truncated payload: {} bytes, header says {payload_len}",
+                payload.len()
+            ));
+        }
+        let actual = fnv1a(payload);
+        if actual != checksum {
+            return GetOutcome::Corrupt(format!(
+                "checksum mismatch: {actual:#x} != {checksum:#x}"
+            ));
+        }
+        GetOutcome::Hit(payload.to_vec())
+    }
+
+    /// Write an entry atomically: unique temp file, then rename over
+    /// the final path (last writer wins).
+    pub fn put(&self, kind: &str, key: u64, payload: &[u8]) -> io::Result<()> {
+        let mut bytes = Vec::with_capacity(HEADER_LEN + payload.len());
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&self.version.to_le_bytes());
+        bytes.extend_from_slice(&key.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&fnv1a(payload).to_le_bytes());
+        bytes.extend_from_slice(payload);
+        let tmp = self.root.join(format!(
+            "{kind}-{key:016x}.tmp-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        match fs::rename(&tmp, self.path_of(kind, key)) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    /// Remove an entry (missing files are fine — a concurrent process
+    /// may have evicted it first).
+    pub fn remove(&self, kind: &str, key: u64) {
+        let _ = fs::remove_file(self.path_of(kind, key));
+    }
+
+    /// Scan the directory for resident entries (temp files and foreign
+    /// files are skipped).
+    pub fn list(&self) -> io::Result<Vec<EntryMeta>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.root)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(ENTRY_SUFFIX) else { continue };
+            let Some((kind, hex)) = stem.rsplit_once('-') else { continue };
+            let Ok(key) = u64::from_str_radix(hex, 16) else { continue };
+            let Ok(meta) = entry.metadata() else { continue };
+            out.push(EntryMeta {
+                kind: kind.to_string(),
+                key,
+                bytes: meta.len(),
+                modified: meta.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+                path: entry.path(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Evict oldest-modified entries until resident bytes fit
+    /// `budget_bytes` (0 = unlimited, nothing evicted). Entries touched
+    /// most recently survive, mirroring the in-memory LRU.
+    pub fn gc(&self, budget_bytes: u64) -> io::Result<GcResult> {
+        let mut entries = self.list()?;
+        let mut result = GcResult {
+            resident_entries: entries.len() as u64,
+            resident_bytes: entries.iter().map(|e| e.bytes).sum(),
+            ..GcResult::default()
+        };
+        if budget_bytes == 0 {
+            return Ok(result);
+        }
+        entries.sort_by_key(|e| e.modified);
+        let mut i = 0;
+        while result.resident_bytes > budget_bytes && i < entries.len() {
+            let victim = &entries[i];
+            i += 1;
+            if fs::remove_file(&victim.path).is_ok() {
+                result.evicted += 1;
+                result.evicted_bytes += victim.bytes;
+                result.resident_entries -= 1;
+                result.resident_bytes -= victim.bytes;
+            }
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("stripe-kv-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_miss() {
+        let kv = DiskKv::open(temp_root("rt"), 1).unwrap();
+        assert!(matches!(kv.get("art", 7), GetOutcome::Miss));
+        kv.put("art", 7, b"hello world").unwrap();
+        match kv.get("art", 7) {
+            GetOutcome::Hit(p) => assert_eq!(p, b"hello world"),
+            other => panic!("{other:?}"),
+        }
+        kv.remove("art", 7);
+        assert!(matches!(kv.get("art", 7), GetOutcome::Miss));
+        let _ = fs::remove_dir_all(kv.root());
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_detected_not_panics() {
+        let kv = DiskKv::open(temp_root("corrupt"), 1).unwrap();
+        kv.put("art", 1, b"payload-bytes").unwrap();
+        let path = kv.path_of("art", 1);
+
+        // Truncated mid-payload.
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() - 3]).unwrap();
+        assert!(matches!(kv.get("art", 1), GetOutcome::Corrupt(ref r) if r.contains("truncated")));
+
+        // Flipped payload byte: checksum mismatch.
+        let mut flipped = full.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0xFF;
+        fs::write(&path, &flipped).unwrap();
+        assert!(matches!(kv.get("art", 1), GetOutcome::Corrupt(ref r) if r.contains("checksum")));
+
+        // Truncated inside the header.
+        fs::write(&path, &full[..10]).unwrap();
+        assert!(matches!(kv.get("art", 1), GetOutcome::Corrupt(ref r) if r.contains("header")));
+
+        // Wrong format version (valid entry written by a future store).
+        let future = DiskKv::open(kv.root(), 2).unwrap();
+        future.put("art", 1, b"payload-bytes").unwrap();
+        assert!(matches!(kv.get("art", 1), GetOutcome::Corrupt(ref r) if r.contains("version")));
+        let _ = fs::remove_dir_all(kv.root());
+    }
+
+    #[test]
+    fn gc_evicts_oldest_first_under_budget() {
+        let kv = DiskKv::open(temp_root("gc"), 1).unwrap();
+        for k in 0..4u64 {
+            kv.put("art", k, &vec![0u8; 100]).unwrap();
+            // Distinct mtimes even on coarse-granularity filesystems.
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        let before = kv.list().unwrap();
+        assert_eq!(before.len(), 4);
+        let per_entry = before[0].bytes;
+        // Budget for two entries: the two oldest must go.
+        let r = kv.gc(per_entry * 2).unwrap();
+        assert_eq!(r.evicted, 2, "{r:?}");
+        assert!(r.resident_bytes <= per_entry * 2);
+        assert!(matches!(kv.get("art", 0), GetOutcome::Miss));
+        assert!(matches!(kv.get("art", 1), GetOutcome::Miss));
+        assert!(matches!(kv.get("art", 2), GetOutcome::Hit(_)));
+        assert!(matches!(kv.get("art", 3), GetOutcome::Hit(_)));
+        // Unlimited budget is a no-op.
+        let r = kv.gc(0).unwrap();
+        assert_eq!(r.evicted, 0);
+        assert_eq!(r.resident_entries, 2);
+        let _ = fs::remove_dir_all(kv.root());
+    }
+}

@@ -66,6 +66,20 @@ impl Default for TuneOptions {
     }
 }
 
+impl TuneOptions {
+    /// Clamp the candidate enumeration under a per-request tuning
+    /// budget (the serving tier's [`super::server::RequestOptions::
+    /// tune_budget`]): at most `budget` pipelines are enumerated,
+    /// compiled, and scored. `enumerate_candidates` floors the cap at
+    /// 1, so even a zero budget still evaluates the default pipeline.
+    pub fn apply_budget(&mut self, budget: Option<usize>) {
+        if let Some(b) = budget {
+            self.max_candidates = self.max_candidates.min(b.max(1));
+            self.top_k = self.top_k.min(self.max_candidates);
+        }
+    }
+}
+
 /// One candidate pipeline's evaluation.
 #[derive(Debug, Clone)]
 pub struct CandidateOutcome {
@@ -104,6 +118,51 @@ pub struct TuningReport {
     /// case where the default pipeline itself failed to compile.
     pub default_cost: Option<u64>,
     pub candidates: Vec<CandidateOutcome>,
+    /// Per-subgraph search accounting, when this report came from the
+    /// store-backed subgraph tuner ([`compile_network_tuned_subgraph`])
+    /// rather than the whole-program search.
+    pub subgraphs: Option<SubgraphStats>,
+}
+
+/// How the subgraph tuner spent (and saved) its search work.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SubgraphStats {
+    /// Top-level ops in the program.
+    pub ops_total: usize,
+    /// Distinct structural fingerprints among them.
+    pub distinct: usize,
+    /// Fingerprints whose scores came from the persistent store.
+    pub reused: usize,
+    /// Fingerprints that required a fresh candidate search.
+    pub searched: usize,
+    /// Candidate pipelines compiled across the fresh searches.
+    pub candidates_evaluated: usize,
+    /// Simulator replays across the fresh searches.
+    pub sim_replays: usize,
+}
+
+impl SubgraphStats {
+    /// Ops tuned per search actually run: `ops_total / max(1,
+    /// searched)`. 1.0 means every layer paid its own search; a deep
+    /// network of repeated shapes (or a warm store) pushes it well
+    /// above 1.
+    pub fn reuse_ratio(&self) -> f64 {
+        self.ops_total as f64 / self.searched.max(1) as f64
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "subgraphs: {} op(s), {} distinct shape(s), {} reused from store, \
+             {} searched ({} candidate(s), {} sim replay(s)); reuse ratio {:.2}x",
+            self.ops_total,
+            self.distinct,
+            self.reused,
+            self.searched,
+            self.candidates_evaluated,
+            self.sim_replays,
+            self.reuse_ratio()
+        )
+    }
 }
 
 impl TuningReport {
@@ -157,6 +216,9 @@ impl TuningReport {
         // identity behind the axis label above.
         if let Some(c) = self.candidates.iter().find(|c| c.label == self.chosen) {
             s.push_str(&format!("  chosen pipeline: {}\n", c.signature));
+        }
+        if let Some(sg) = &self.subgraphs {
+            s.push_str(&format!("  {}\n", sg.summary_line()));
         }
         s
     }
@@ -466,8 +528,239 @@ pub fn compile_network_tuned(
         chosen_cost,
         default_cost,
         candidates: scored.into_iter().map(|s| s.outcome).collect(),
+        subgraphs: None,
     };
 
+    let schedule = crate::exec::analyze_program(&result.program, cfg.compute_units);
+    Ok(CompiledNetwork {
+        target: cfg.name.clone(),
+        program: result.program,
+        reports: result.reports,
+        schedule,
+        compute_units: cfg.compute_units,
+        tuning: Some(report),
+    })
+}
+
+/// Extract one top-level op into a standalone program over just the
+/// buffers it touches. Buffers the op reads become inputs (weights
+/// stay weights) and buffers it writes become outputs, so the
+/// extracted program compiles, simulates, and generates deterministic
+/// inputs exactly like a whole network would.
+fn extract_single_op(program: &Program, op: &crate::ir::Block) -> Program {
+    let mut buffers = Vec::new();
+    for r in &op.refs {
+        if buffers.iter().any(|b: &crate::ir::program::Buffer| b.name == r.from) {
+            continue;
+        }
+        let Some(buf) = program.buffers.iter().find(|b| b.name == r.from) else { continue };
+        let mut buf = buf.clone();
+        buf.kind = if r.dir.is_write() {
+            crate::ir::program::BufKind::Output
+        } else if matches!(buf.kind, crate::ir::program::BufKind::Weight) {
+            crate::ir::program::BufKind::Weight
+        } else {
+            crate::ir::program::BufKind::Input
+        };
+        buffers.push(buf);
+    }
+    let mut p = Program::new(&format!("{}__sub", program.name), buffers);
+    p.main.stmts.push(crate::ir::Statement::Block(Box::new(op.clone())));
+    p
+}
+
+/// Run the candidate search on one extracted subgraph and return its
+/// per-label scores (the whole-program scoring loop in miniature: every
+/// candidate compiles + static-scores, the top-k and the default
+/// re-score through the simulator, and the deciding metric falls back
+/// to static lines unless the default pipeline simulated).
+fn search_subgraph(
+    sub: &Program,
+    cfg: &MachineConfig,
+    opts: &TuneOptions,
+) -> Result<super::store::SubgraphRecord, String> {
+    let line_bytes = cfg.innermost_memory().line_bytes.max(1);
+    // (label, static lines, compiled program) for candidates that built.
+    let mut compiled: Vec<(String, u64, Program)> = Vec::new();
+    let mut evaluated = 0u64;
+    for (label, passes) in enumerate_candidates(cfg, opts.max_candidates) {
+        let mut vcfg = cfg.clone();
+        vcfg.passes = passes;
+        if let Ok(result) = crate::passes::compile(sub, &vcfg, false) {
+            evaluated += 1;
+            let cost = predicted_program_cost(&result.program, line_bytes);
+            compiled.push((label, cost.lines, result.program));
+        }
+    }
+    if compiled.is_empty() {
+        return Err(format!("subgraph {}: every candidate pipeline failed", sub.name));
+    }
+    let mut sim_scores: Vec<Option<u64>> = vec![None; compiled.len()];
+    let mut simulated = 0u64;
+    if target_hierarchy(cfg).is_some() {
+        let mut order: Vec<usize> = (0..compiled.len()).collect();
+        order.sort_by_key(|&i| compiled[i].1);
+        let mut to_sim: Vec<usize> = order.into_iter().take(opts.top_k.max(1)).collect();
+        if !to_sim.contains(&0) {
+            to_sim.push(0); // the default pipeline always rides along
+        }
+        for i in to_sim {
+            sim_scores[i] = sim_score(&compiled[i].2, cfg, opts.sim_seed);
+            if sim_scores[i].is_some() {
+                simulated += 1;
+            }
+        }
+    }
+    // The default is candidate 0 iff it compiled (enumeration puts it
+    // first and the push above preserves order).
+    let default_simulated =
+        compiled.first().map_or(false, |c| c.0 == "default") && sim_scores[0].is_some();
+    let metric: &'static str =
+        if default_simulated { "sim-traffic-bytes" } else { "static-lines" };
+    let scores: Vec<(String, u64)> = compiled
+        .iter()
+        .enumerate()
+        .filter_map(|(i, (label, lines, _))| {
+            let cost = if default_simulated { sim_scores[i]? } else { *lines };
+            Some((label.clone(), cost))
+        })
+        .collect();
+    Ok(super::store::SubgraphRecord {
+        target: cfg.name.clone(),
+        metric,
+        scores,
+        evaluated,
+        simulated,
+    })
+}
+
+/// Compile with a pipeline tuned **per subgraph**: every top-level op
+/// is fingerprinted structurally ([`super::store::subgraph_fingerprint`]),
+/// renamed-identical layers collapse to one fingerprint, and each
+/// distinct fingerprint is either served from the persistent store or
+/// searched once on its extracted single-op program. Candidate costs
+/// aggregate across subgraphs weighted by multiplicity; the winning
+/// pipeline then compiles the whole program once.
+///
+/// A deep network with k distinct layer shapes therefore costs k
+/// candidate searches instead of one whole-network search whose every
+/// candidate compiles all n layers — and with a warm store, zero.
+/// Falls back to [`compile_network_tuned`] whenever the subgraph route
+/// cannot produce a complete comparison (no ops, no commonly-scored
+/// candidate, or the winner failing to compile whole-program).
+pub fn compile_network_tuned_subgraph(
+    program: &Program,
+    cfg: &MachineConfig,
+    opts: &TuneOptions,
+    store: Option<&super::store::ArtifactStore>,
+) -> Result<CompiledNetwork, String> {
+    use super::store::{subgraph_fingerprint, StoreOutcome};
+
+    super::driver::validate_input(program)?;
+    let ops: Vec<&crate::ir::Block> = program.ops().collect();
+    if ops.is_empty() {
+        return compile_network_tuned(program, cfg, opts);
+    }
+
+    // Group ops by structural fingerprint, preserving first-seen order.
+    let mut groups: Vec<(u64, u64, &crate::ir::Block)> = Vec::new(); // (fp, multiplicity, op)
+    for op in ops.iter().copied() {
+        let fp = subgraph_fingerprint(op, program, cfg);
+        match groups.iter_mut().find(|(g, _, _)| *g == fp) {
+            Some((_, mult, _)) => *mult += 1,
+            None => groups.push((fp, 1, op)),
+        }
+    }
+
+    let mut stats = SubgraphStats {
+        ops_total: ops.len(),
+        distinct: groups.len(),
+        ..SubgraphStats::default()
+    };
+    let mut per_group: Vec<(u64, Vec<(String, u64)>)> = Vec::new(); // (multiplicity, scores)
+    for &(fp, mult, op) in &groups {
+        if let Some(store) = store {
+            if let StoreOutcome::Hit(rec) = store.load_subgraph(fp) {
+                stats.reused += 1;
+                per_group.push((mult, rec.scores));
+                continue;
+            }
+        }
+        let sub = extract_single_op(program, op);
+        let rec = match search_subgraph(&sub, cfg, opts) {
+            Ok(rec) => rec,
+            // A subgraph no candidate can compile alone (e.g. one that
+            // only builds fused with its neighbors): whole-program path.
+            Err(_) => return compile_network_tuned(program, cfg, opts),
+        };
+        stats.searched += 1;
+        stats.candidates_evaluated += rec.evaluated as usize;
+        stats.sim_replays += rec.simulated as usize;
+        if let Some(store) = store {
+            // Best-effort: a failed write costs the next process a
+            // re-search, never a wrong answer.
+            let _ = store.save_subgraph(fp, &rec);
+        }
+        per_group.push((mult, rec.scores));
+    }
+
+    // Aggregate: a candidate competes only if every subgraph scored it
+    // (stored records may come from an older enumeration); totals are
+    // weighted by how many ops share each fingerprint. Enumeration
+    // order starts at the default and the comparison is strict, so
+    // ties keep the default pipeline.
+    let candidates = enumerate_candidates(cfg, opts.max_candidates);
+    let mut outcomes: Vec<CandidateOutcome> = Vec::new();
+    let mut winner: Option<(usize, u64)> = None;
+    let mut default_cost = None;
+    for (i, (label, passes)) in candidates.iter().enumerate() {
+        let total: Option<u64> = per_group.iter().try_fold(0u64, |acc, (mult, scores)| {
+            let (_, cost) = scores.iter().find(|(l, _)| l == label)?;
+            Some(acc.saturating_add(cost.saturating_mul(*mult)))
+        });
+        outcomes.push(CandidateOutcome {
+            label: label.clone(),
+            signature: pipeline_signature(passes),
+            static_cost: total
+                .map(|t| ProgramCost { lines: t, leaf_iterations: 0 }),
+            sim_traffic: total,
+            error: None,
+        });
+        if let Some(t) = total {
+            if label == "default" {
+                default_cost = Some(t);
+            }
+            if winner.map_or(true, |(_, best)| t < best) {
+                winner = Some((i, t));
+            }
+        }
+    }
+    let Some((win_idx, chosen_cost)) = winner else {
+        return compile_network_tuned(program, cfg, opts);
+    };
+
+    // One whole-program compile with the winning pipeline (per-pass
+    // verified when requested). A winner that tunes well per-subgraph
+    // but fails on the full program falls back to the whole-program
+    // tuner rather than failing the request.
+    let mut vcfg = cfg.clone();
+    vcfg.passes = candidates[win_idx].1.clone();
+    let result = match crate::passes::compile(program, &vcfg, opts.verify) {
+        Ok(r) => r,
+        Err(_) => return compile_network_tuned(program, cfg, opts),
+    };
+
+    let report = TuningReport {
+        target: cfg.name.clone(),
+        evaluated: stats.candidates_evaluated,
+        simulated: stats.sim_replays,
+        metric: "subgraph-aggregate",
+        chosen: candidates[win_idx].0.clone(),
+        chosen_cost,
+        default_cost,
+        candidates: outcomes,
+        subgraphs: Some(stats),
+    };
     let schedule = crate::exec::analyze_program(&result.program, cfg.compute_units);
     Ok(CompiledNetwork {
         target: cfg.name.clone(),

@@ -1,0 +1,199 @@
+//! Persistent-store robustness: the disk tier under the compile
+//! service must degrade to "recompile" on every corruption mode, stay
+//! readable while concurrent writers race on one directory, and serve
+//! artifacts bit-exact with fresh compiles across engines and storage
+//! dtypes.
+//!
+//! The corruption matrix rewrites real on-disk entries three ways —
+//! truncation, a payload bit flip (checksum mismatch), and a header
+//! version bump (format skew) — and asserts a fresh service recompiles
+//! through each without panicking, evicting the bad entry as it goes.
+
+use std::sync::Arc;
+
+use stripe::coordinator::service::fingerprint;
+use stripe::coordinator::{
+    compile_network, ArtifactStore, CompileService, Counter, StoreOutcome,
+};
+use stripe::exec::{run_program, run_program_kernel, Engine, ExecOptions};
+use stripe::frontend::ops;
+use stripe::hw::targets;
+use stripe::ir::DType;
+use stripe::passes::equiv::gen_inputs;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stripe-store-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Compile once through a store-backed service (populating the entry),
+/// rewrite the entry's bytes with `mutate`, then compile again from a
+/// fresh service over the same directory: the corrupt entry must be
+/// absorbed as a recompile — no panic, no error — and evicted.
+fn corruption_falls_back_to_recompile(tag: &str, mutate: impl FnOnce(&mut Vec<u8>)) {
+    let dir = temp_dir(tag);
+    let p = ops::conv_relu_program();
+    let cfg = targets::cpu_cache();
+    let key = fingerprint(&p, &cfg, false, false, None);
+    let path = dir.join(format!("art-{key:016x}.stripe"));
+
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let svc = CompileService::start_with_store(1, 64, 0, Some(store));
+    let first = svc.compile_blocking(p.clone(), cfg.clone(), false).unwrap();
+    svc.shutdown();
+    assert!(path.is_file(), "compile must persist {}", path.display());
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    mutate(&mut bytes);
+    std::fs::write(&path, &bytes).unwrap();
+
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let svc = CompileService::start_with_store(1, 64, 0, Some(Arc::clone(&store)));
+    let again = svc.compile_blocking(p, cfg, false).unwrap();
+    assert_eq!(again.program, first.program, "recompile must match the original");
+    assert_eq!(
+        svc.metrics.total(Counter::CompilesOk),
+        1,
+        "a corrupt entry costs exactly one recompile"
+    );
+    let s = store.stats();
+    assert_eq!(s.corrupt, 1, "the probe must classify the entry as corrupt: {s:?}");
+    assert!(s.reconciles(), "{s:?}");
+    // The recompile wrote the entry back: a third process warm-starts.
+    match store.load_artifact(key) {
+        StoreOutcome::Hit(n) => assert_eq!(n.program, again.program),
+        other => panic!("rewritten entry must load cleanly, got {other:?}"),
+    }
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_entries_recompile_without_panicking() {
+    corruption_falls_back_to_recompile("truncate", |bytes| {
+        let half = bytes.len() / 2;
+        bytes.truncate(half);
+    });
+}
+
+#[test]
+fn checksum_mismatches_recompile_without_panicking() {
+    corruption_falls_back_to_recompile("bitflip", |bytes| {
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+    });
+}
+
+#[test]
+fn version_skew_recompiles_without_panicking() {
+    corruption_falls_back_to_recompile("version", |bytes| {
+        // Header layout: magic[4] | version u32 LE | key | len | checksum.
+        let bumped = (stripe::coordinator::store::FORMAT_VERSION + 1).to_le_bytes();
+        bytes[4..8].copy_from_slice(&bumped);
+    });
+}
+
+/// Two store instances (stand-ins for two processes) race writes of
+/// *different* artifacts under one key while a reader probes: atomic
+/// temp+rename publication means every read sees a complete entry from
+/// one writer or the other — never torn bytes, never a corrupt verdict.
+#[test]
+fn concurrent_writers_share_a_directory_without_torn_reads() {
+    const KEY: u64 = 0x77;
+    const ROUNDS: usize = 20;
+    let dir = temp_dir("race");
+    let a = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let b = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let cfg = targets::cpu_cache();
+    let net1 = Arc::new(compile_network(&ops::conv_relu_program(), &cfg, false).unwrap());
+    let net2 = Arc::new(compile_network(&ops::fig4_conv_program(), &cfg, false).unwrap());
+    a.save_artifact(KEY, &net1).unwrap();
+
+    let w1 = {
+        let (a, net1) = (Arc::clone(&a), Arc::clone(&net1));
+        std::thread::spawn(move || {
+            for _ in 0..ROUNDS {
+                assert!(a.save_artifact(KEY, &net1).unwrap());
+            }
+        })
+    };
+    let w2 = {
+        let (b, net2) = (Arc::clone(&b), Arc::clone(&net2));
+        std::thread::spawn(move || {
+            for _ in 0..ROUNDS {
+                assert!(b.save_artifact(KEY, &net2).unwrap());
+            }
+        })
+    };
+    let mut hits = 0usize;
+    loop {
+        // Snapshot *before* reading so at least one full reader pass
+        // runs even if both writers finish instantly.
+        let done = w1.is_finished() && w2.is_finished();
+        for reader in [&a, &b] {
+            match reader.load_artifact(KEY) {
+                StoreOutcome::Hit(n) => {
+                    assert!(
+                        n.program == net1.program || n.program == net2.program,
+                        "read a program neither writer published"
+                    );
+                    hits += 1;
+                }
+                StoreOutcome::Miss => panic!("entry vanished mid-race"),
+                StoreOutcome::Corrupt(r) => panic!("torn read: {r}"),
+            }
+        }
+        if done {
+            break;
+        }
+    }
+    w1.join().unwrap();
+    w2.join().unwrap();
+    assert!(hits >= 2, "the reader never sampled the shared entry");
+    // Quiescent: last writer wins with a complete, decodable artifact.
+    match a.load_artifact(KEY) {
+        StoreOutcome::Hit(n) => {
+            assert!(n.program == net1.program || n.program == net2.program);
+        }
+        other => panic!("final state must be a clean hit, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Differential sweep pinning the acceptance bar: a store-served
+/// artifact must be bit-exact with a freshly compiled one — same
+/// program, same outputs through the interpreter and the kernel engine
+/// — for every storage dtype.
+#[test]
+fn store_served_artifacts_are_bit_exact_with_fresh_compiles() {
+    let dir = temp_dir("diff");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let cfg = targets::cpu_cache();
+    for dt in DType::STORAGE {
+        let p = ops::conv_relu_program().with_dtype(dt);
+        let fresh = compile_network(&p, &cfg, false).unwrap();
+        let key = fingerprint(&p, &cfg, false, false, None);
+        assert!(
+            store.save_artifact(key, &fresh).unwrap(),
+            "{}: compiled program must round-trip through the encoder",
+            dt.name()
+        );
+        let served = match store.load_artifact(key) {
+            StoreOutcome::Hit(n) => n,
+            other => panic!("{}: expected a hit, got {other:?}", dt.name()),
+        };
+        assert_eq!(served.program, fresh.program, "{}: program drifted", dt.name());
+        let inputs = gen_inputs(&p, 7);
+        let out_fresh = run_program(&fresh.program, &inputs).unwrap();
+        let out_served = run_program(&served.program, &inputs).unwrap();
+        assert_eq!(out_fresh, out_served, "{}: interpreter outputs drifted", dt.name());
+        let kopts = ExecOptions { engine: Engine::Kernel, ..ExecOptions::default() };
+        let (k_fresh, _) = run_program_kernel(&fresh.program, &inputs, &kopts).unwrap();
+        let (k_served, _) = run_program_kernel(&served.program, &inputs, &kopts).unwrap();
+        assert_eq!(k_fresh, k_served, "{}: kernel-engine outputs drifted", dt.name());
+    }
+    assert!(store.stats().reconciles());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # Machine-readable perf trajectory: run the end-to-end network bench
 # and capture its JSON summary (parallel speedup, CoW fork/merge bytes,
-# kernel coverage and the planned-vs-kernel speedup) in BENCH_e2e.json
-# at the repository root. Override the output path with BENCH_E2E_JSON;
-# BENCH_QUICK=1 shrinks the measurement budget (the verify smoke).
+# kernel coverage, planned-vs-kernel speedup, and the persistent-store
+# cold/warm compile latencies + subgraph reuse ratio) in BENCH_e2e.json
+# at the repository root. The store sections create and remove their
+# own temp directories — no pre-existing --store-dir is needed.
+# Override the output path with BENCH_E2E_JSON; BENCH_QUICK=1 shrinks
+# the measurement budget (the verify smoke).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -89,4 +89,23 @@ else
     echo "(set VERIFY_DATAFLOW_SMOKE=1 to run the dataflow scheduler smoke)"
 fi
 
+echo "== store smoke (gated) =="
+# Opt-in persistent-store smoke: tunes the canned cnn into a fresh temp
+# store, then repeats the compile from a second process pointed at the
+# same --store-dir with --require-warm, which exits nonzero unless the
+# artifact is served from disk with zero compiles and zero tuning
+# candidates evaluated. `stripe store stats` then fscks the directory
+# and exits nonzero unless its books reconcile.
+if [ "${VERIFY_STORE_SMOKE:-0}" = "1" ]; then
+    STORE_DIR="$(mktemp -d)"
+    cargo run --release --quiet -- tune \
+        --net cnn --target cpu_cache --store-dir "$STORE_DIR"
+    cargo run --release --quiet -- tune \
+        --net cnn --target cpu_cache --store-dir "$STORE_DIR" --require-warm
+    cargo run --release --quiet -- store stats --store-dir "$STORE_DIR"
+    rm -rf "$STORE_DIR"
+else
+    echo "(set VERIFY_STORE_SMOKE=1 to run the persistent-store warm-start smoke)"
+fi
+
 echo "verify: OK"
