@@ -439,6 +439,136 @@ fn main() {
         )
     };
 
+    section("heterogeneous sharding: one net across two simulated machines");
+    let (
+        sharded_median_s,
+        sharded_baseline_median_s,
+        sharded_vs_dataflow_speedup,
+        shard_transfer_bytes,
+        shard_imbalance,
+    ) = {
+        use stripe::exec::{pin_shards, run_program_sharded_with};
+        use stripe::hw::ShardTopology;
+        // Two equal conv towers over one input, joined by a final add.
+        // Tower A is pinned to the 8-unit cpu_cache shard, tower B to
+        // the 4-unit dc_accel shard: the towers overlap across whole
+        // *machines*, and exactly tower B's output crosses the link
+        // for the join — an analytic transfer-byte count.
+        let towers = {
+            let mut nb = stripe::graph::NetworkBuilder::new("towers", stripe::ir::DType::F32);
+            let i = nb.input("I", &[48, 64, 8]);
+            let fa1 = nb.weight("FA1", &[3, 3, 16, 8]);
+            let fa2 = nb.weight("FA2", &[3, 3, 16, 16]);
+            let fb1 = nb.weight("FB1", &[3, 3, 16, 8]);
+            let fb2 = nb.weight("FB2", &[3, 3, 16, 16]);
+            let a = nb.conv2d_same(i, fa1);
+            let a = nb.relu(a);
+            let a = nb.conv2d_same(a, fa2);
+            let a = nb.relu(a);
+            let b = nb.conv2d_same(i, fb1);
+            let b = nb.relu(b);
+            let b = nb.conv2d_same(b, fb2);
+            let b = nb.relu(b);
+            let o = nb.add(a, b);
+            nb.finish(o)
+        };
+        let topo = ShardTopology::new(
+            vec![targets::cpu_cache(), targets::dc_accel()],
+            stripe::cost::LinkModel::default(),
+        )
+        .unwrap();
+        // Tower A = the first half of the pre-join ops, tower B the
+        // second half (the builder emits the towers sequentially); the
+        // join lands back on shard 0.
+        let n = towers.ops().count();
+        let pins: Vec<usize> = (0..n)
+            .map(|i| if i + 1 == n || i < (n - 1) / 2 { 0 } else { 1 })
+            .collect();
+        let tower_inputs = stripe::passes::equiv::gen_inputs(&towers, 5);
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let base_units = cfg.compute_units.min(avail.max(1)).max(1);
+        let base_pool = ComputePool::new(base_units);
+        let dopts = ExecOptions {
+            engine: Engine::Dataflow,
+            workers: base_units,
+            compute: Some(base_pool.clone()),
+            ..ExecOptions::default()
+        };
+        let shard_pool = ComputePool::new(topo.total_units());
+        let sopts =
+            ExecOptions { compute: Some(shard_pool.clone()), ..ExecOptions::default() };
+        let assignment = pin_shards(&towers, &topo, &pins).unwrap();
+        // Bit-exactness first: serial plan ≡ dataflow ≡ sharded.
+        let serial_out =
+            run_program_planned(&towers, &tower_inputs, &ExecOptions::default(), &mut NullSink)
+                .unwrap();
+        let (df_out, _) = run_program_dataflow(&towers, &tower_inputs, &dopts).unwrap();
+        let (sh_out, sh_report) =
+            run_program_sharded_with(&towers, &tower_inputs, &topo, assignment.clone(), &sopts)
+                .unwrap();
+        assert_eq!(serial_out, df_out, "dataflow output must be bit-exact");
+        assert_eq!(serial_out, sh_out, "sharded output must be bit-exact");
+        let stats = &sh_report.stats;
+        println!("{}", topo.summary());
+        println!("{}", stats.summary_line());
+        // The acceptance bar on accounting is exact, not statistical:
+        // runtime link traffic equals the static prediction, and the
+        // interleaved join forces real boundary bytes.
+        assert_eq!(
+            stats.transfer_bytes, stats.predicted_transfer_bytes,
+            "runtime transfer bytes disagree with the static prediction"
+        );
+        assert!(stats.transfer_bytes > 0, "the tower join must cross the link");
+        let bench = bench_profile();
+        let s_df_base =
+            bench.run(&format!("run towers (dataflow, {base_units} units)"), || {
+                std::hint::black_box(
+                    run_program_dataflow(&towers, &tower_inputs, &dopts).unwrap(),
+                );
+            });
+        let s_sharded = bench.run(
+            &format!("run towers (sharded, {})", topo.summary()),
+            || {
+                std::hint::black_box(
+                    run_program_sharded_with(
+                        &towers,
+                        &tower_inputs,
+                        &topo,
+                        assignment.clone(),
+                        &sopts,
+                    )
+                    .unwrap(),
+                );
+            },
+        );
+        let sh_speedup = s_df_base.median.as_secs_f64() / s_sharded.median.as_secs_f64();
+        println!(
+            "sharded-vs-dataflow speedup (median, {} aggregate units vs {base_units}, \
+             {avail} hw threads): {sh_speedup:.2}x  [dataflow {:?} -> sharded {:?}]",
+            topo.total_units(),
+            s_df_base.median,
+            s_sharded.median
+        );
+        // Adding the second machine is only a physical win when the
+        // host can actually run its units concurrently.
+        if avail >= topo.total_units() {
+            assert!(
+                sh_speedup > 1.0,
+                "sharding across a second machine must beat single-machine dataflow \
+                 when the hardware allows (got {sh_speedup:.2}x)"
+            );
+        } else {
+            println!("(insufficient hardware parallelism: speedup assertion skipped)");
+        }
+        (
+            s_sharded.median.as_secs_f64(),
+            s_df_base.median.as_secs_f64(),
+            sh_speedup,
+            stats.transfer_bytes,
+            stats.imbalance(),
+        )
+    };
+
     section("parallel execution across compute units (cpu_cache)");
     {
         // Scale the CNN up so per-op work dominates the fork/merge
@@ -566,7 +696,12 @@ fn main() {
              \"dataflow_vs_parallel_speedup\": {dataflow_vs_parallel_speedup:.3},\n  \
              \"dag_width\": {dag_width},\n  \
              \"dag_critical_path\": {dag_critical_path},\n  \
-             \"dataflow_threads_spawned\": {dataflow_threads_spawned}\n}}\n",
+             \"dataflow_threads_spawned\": {dataflow_threads_spawned},\n  \
+             \"sharded_median_s\": {sharded_median_s:.6},\n  \
+             \"sharded_baseline_median_s\": {sharded_baseline_median_s:.6},\n  \
+             \"sharded_vs_dataflow_speedup\": {sharded_vs_dataflow_speedup:.3},\n  \
+             \"shard_transfer_bytes\": {shard_transfer_bytes},\n  \
+             \"shard_imbalance\": {shard_imbalance:.3}\n}}\n",
             s_serial.median.as_secs_f64(),
             s_par.median.as_secs_f64(),
             schedule.parallel_ops(),

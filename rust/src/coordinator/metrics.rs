@@ -216,6 +216,15 @@ struct Inner {
     dataflow_dag_width: u64,
     dataflow_critical_path: u64,
     dataflow_ops_overlapped: u64,
+    /// Sharded-engine series (`exec::shard`): cumulative run and
+    /// inter-shard transfer-byte counters, plus gauges describing the
+    /// most recent sharded run (shard count, its transfer bytes, and
+    /// its busy-time imbalance in permille — 1000 = perfectly even).
+    shard_runs: u64,
+    shard_transfer_bytes: u64,
+    shard_count: u64,
+    shard_last_transfer_bytes: u64,
+    shard_imbalance_permille: u64,
     /// Disk-tier (persistent store) probe outcomes and maintenance
     /// counters, plus resident gauges. `store_warm_start` is latched
     /// once, from the first probe this process ever makes.
@@ -353,6 +362,21 @@ impl Metrics {
             i.dataflow_dag_width = dag.width as u64;
             i.dataflow_critical_path = dag.critical_path as u64;
             i.dataflow_ops_overlapped = dag.max_in_flight as u64;
+        });
+    }
+
+    /// One call per sharded-engine execution: accumulates the run and
+    /// transfer counters and overwrites the `stripe_shard_*` gauges
+    /// with this run's shard count, link traffic, and busy-time
+    /// imbalance (stored in permille so the integer gauge keeps three
+    /// decimals; max/mean ≥ 1 always, so the gauge floor is 1000).
+    pub fn record_shard(&self, stats: &crate::exec::ShardStats) {
+        self.with(|i| {
+            i.shard_runs += 1;
+            i.shard_transfer_bytes += stats.transfer_bytes;
+            i.shard_count = stats.lanes.len() as u64;
+            i.shard_last_transfer_bytes = stats.transfer_bytes;
+            i.shard_imbalance_permille = (stats.imbalance() * 1000.0).round() as u64;
         });
     }
 
@@ -533,6 +557,8 @@ impl Metrics {
                 ("stripe_merge_bytes_total", i.merge_bytes),
                 ("stripe_dataflow_runs_total", i.dataflow_runs),
                 ("stripe_dataflow_steals_total", i.dataflow_steals),
+                ("stripe_shard_runs_total", i.shard_runs),
+                ("stripe_shard_transfer_bytes_total", i.shard_transfer_bytes),
                 ("stripe_store_probes_total", i.store_probes),
                 ("stripe_store_hits_total", i.store_hits),
                 ("stripe_store_misses_total", i.store_misses),
@@ -564,6 +590,9 @@ impl Metrics {
                 ("stripe_dataflow_dag_width", i.dataflow_dag_width),
                 ("stripe_dataflow_critical_path", i.dataflow_critical_path),
                 ("stripe_dataflow_ops_overlapped", i.dataflow_ops_overlapped),
+                ("stripe_shard_count", i.shard_count),
+                ("stripe_shard_last_transfer_bytes", i.shard_last_transfer_bytes),
+                ("stripe_shard_imbalance_permille", i.shard_imbalance_permille),
                 ("stripe_store_entries", i.store_entries),
                 ("stripe_store_bytes", i.store_bytes),
                 ("stripe_store_warm_start", i.store_warm_start),
@@ -628,6 +657,11 @@ pub fn parse_scrape(text: &str) -> Result<BTreeMap<String, f64>, String> {
 ///   critical path, and achieved overlap never exceed the DAG's op
 ///   count, and a non-empty DAG has width and critical path of at
 ///   least 1;
+/// * the sharded-engine series are internally consistent:
+///   `stripe_shard_last_transfer_bytes` never exceeds the cumulative
+///   `stripe_shard_transfer_bytes_total`, and once a sharded run was
+///   recorded the shard count is at least 1 and the busy-time
+///   imbalance gauge at least 1000 permille (max/mean ≥ 1 always);
 /// * the disk-tier books balance: `stripe_store_probes_total =
 ///   hits + misses + corrupt`, `stripe_store_warm_start` is exactly 0
 ///   or 1, and a warm start implies at least one disk hit.
@@ -725,6 +759,28 @@ pub fn reconcile_scrape(text: &str) -> Result<String, String> {
                     "{floored} {v} below 1 for a non-empty DAG ({dag_ops} ops)"
                 ));
             }
+        }
+    }
+    let shard_last = get("stripe_shard_last_transfer_bytes");
+    let shard_total = get("stripe_shard_transfer_bytes_total");
+    if shard_last > shard_total {
+        return Err(format!(
+            "stripe_shard_last_transfer_bytes {shard_last} exceeds its total {shard_total}"
+        ));
+    }
+    if get("stripe_shard_runs_total") >= 1.0 {
+        let shards = get("stripe_shard_count");
+        if shards < 1.0 {
+            return Err(format!(
+                "stripe_shard_count {shards} below 1 after a recorded sharded run"
+            ));
+        }
+        let imbalance = get("stripe_shard_imbalance_permille");
+        if imbalance < 1000.0 {
+            return Err(format!(
+                "stripe_shard_imbalance_permille {imbalance} below 1000 \
+                 (max/mean busy time can never be under 1)"
+            ));
         }
     }
     let (probes, store_hits, store_misses, store_corrupt) = (
@@ -961,6 +1017,63 @@ mod tests {
                    stripe_dataflow_critical_path 3\n";
         let e = reconcile_scrape(bad).unwrap_err();
         assert!(e.contains("below 1"), "{e}");
+    }
+
+    #[test]
+    fn shard_series_render_and_reconcile() {
+        let lane = |name: &str, busy_s: f64, transfer_in_bytes: u64| crate::exec::ShardLane {
+            name: name.to_string(),
+            units: 4,
+            ops: 2,
+            busy_s,
+            transfer_in_bytes,
+        };
+        let m = Metrics::default();
+        m.record_shard(&crate::exec::ShardStats {
+            lanes: vec![lane("fast", 2.0, 0), lane("slow", 1.0, 96)],
+            transfer_bytes: 96,
+            predicted_transfer_bytes: 96,
+            max_in_flight: 2,
+            pool_size: 8,
+            ..Default::default()
+        });
+        m.record_shard(&crate::exec::ShardStats {
+            lanes: vec![lane("fast", 1.0, 32), lane("slow", 1.0, 0)],
+            transfer_bytes: 32,
+            predicted_transfer_bytes: 32,
+            max_in_flight: 1,
+            pool_size: 8,
+            ..Default::default()
+        });
+        let scrape = m.render_scrape();
+        let series = parse_scrape(&scrape).expect("parses");
+        // Counters accumulate across runs; gauges describe the last run.
+        assert_eq!(series["stripe_shard_runs_total"], 2.0);
+        assert_eq!(series["stripe_shard_transfer_bytes_total"], 128.0);
+        assert_eq!(series["stripe_shard_count"], 2.0);
+        assert_eq!(series["stripe_shard_last_transfer_bytes"], 32.0);
+        assert_eq!(series["stripe_shard_imbalance_permille"], 1000.0);
+        reconcile_scrape(&scrape).expect("reconciles");
+    }
+
+    #[test]
+    fn reconcile_rejects_inconsistent_shard_series() {
+        // The last run can never have moved more bytes than all runs.
+        let bad = "stripe_shard_transfer_bytes_total 10\n\
+                   stripe_shard_last_transfer_bytes 11\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("stripe_shard_last_transfer_bytes"), "{e}");
+        // A recorded run implies at least one shard and an imbalance
+        // gauge at its mathematical floor of 1000 permille.
+        let bad = "stripe_shard_runs_total 1\n\
+                   stripe_shard_count 0\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("stripe_shard_count"), "{e}");
+        let bad = "stripe_shard_runs_total 1\n\
+                   stripe_shard_count 2\n\
+                   stripe_shard_imbalance_permille 400\n";
+        let e = reconcile_scrape(bad).unwrap_err();
+        assert!(e.contains("stripe_shard_imbalance_permille"), "{e}");
     }
 
     #[test]

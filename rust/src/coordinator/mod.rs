@@ -45,6 +45,22 @@
 //! end-to-end drivers used by the CLI and the examples in [`driver`];
 //! the cost-guided pass-pipeline autotuner in [`tune`].
 //!
+//! # Heterogeneous sharding
+//!
+//! [`shard`] is the multi-target sibling of [`driver`]: one network is
+//! split across the shards of a `hw::shard::ShardTopology` (each shard
+//! a whole simulated machine — its own cache hierarchy, costs, and
+//! compute-unit count), each region is compiled against its own
+//! target's pass pipeline (optionally with its own tuning search), and
+//! the regions are reassembled into one program the sharded executor
+//! (`exec::shard`) schedules asynchronously over the persistent
+//! compute pool, with boundary hand-offs through the copy-on-write
+//! buffer layer and bytes crossing shard boundaries charged to the
+//! configured inter-shard link. `stripe run --shards t1,t2` drives it;
+//! `--shard-check` asserts bit-equality with the serial engines plus
+//! exact agreement between runtime and predicted transfer bytes, and
+//! the run records `stripe_shard_*` metrics into [`metrics`].
+//!
 //! Rust owns the event loop, the worker threads, and the metrics;
 //! Python exists only behind `make artifacts`.
 
@@ -53,10 +69,15 @@ pub mod effort;
 pub mod metrics;
 pub mod server;
 pub mod service;
+pub mod shard;
 pub mod store;
 pub mod tune;
 
 pub use driver::{compile_network, run_network, run_network_with, CompiledNetwork};
+pub use shard::{
+    compile_network_sharded, compile_network_sharded_with, run_sharded_network, CompiledShard,
+    ShardedNetwork,
+};
 pub use metrics::{Counter, Metrics, TenantId};
 pub use server::{AdmitTicket, RequestOptions, ServeConfig, Server};
 pub use service::{

@@ -1,0 +1,390 @@
+//! Shard-aware compilation: one network compiled as per-shard regions,
+//! each against its own simulated target, then reassembled for the
+//! sharded executor (`exec::shard`).
+//!
+//! The single-target driver ([`super::driver`]) compiles a whole
+//! program against one `MachineConfig`. A [`ShardTopology`] names
+//! several — possibly heterogeneous — targets, so the shard-aware
+//! compile:
+//!
+//! 1. **Assigns** every top-level op to a shard with the same
+//!    contiguous chain-partition search the executor uses
+//!    (`exec::assign_shards` — modeled makespan over roofline-weighted
+//!    work plus the link-transfer term).
+//! 2. **Extracts** each shard's region as a standalone sub-program
+//!    (named `<net>@<shard>`): buffers untouched by the region are
+//!    dropped, and temps crossing the boundary are reclassified —
+//!    a temp produced by another shard becomes a region *input*
+//!    (it arrives over the link), a temp consumed by another shard
+//!    becomes a region *output* (it leaves over the link).
+//! 3. **Compiles** each region against its shard's own target —
+//!    its own pass pipeline, cache hierarchy, cost model, and
+//!    (optionally) its own tuning search via the existing tuner —
+//!    so a 1-unit tiny-cache shard and an 8-unit deep-cache shard
+//!    each get the optimization story *their* hardware wants.
+//! 4. **Reassembles** the compiled regions, in program order, into one
+//!    executable program over the original buffer declarations, tags
+//!    every op `shard:<name>` (`passes::partition::tag_shard_regions`),
+//!    and re-derives the final [`ShardAssignment`] on the compiled
+//!    form — so the static transfer prediction accounts for whatever
+//!    the pass pipelines did to the op list (fusion can merge ops
+//!    within a region; regions never merge across shards).
+//!
+//! One caveat, by construction: region-level pass *verification* runs
+//! each sub-program standalone (boundary temps fed as fresh inputs),
+//! so a temp whose writes are split across shards is verified against
+//! its standalone semantics, not its in-context accumulation. Actual
+//! sharded runs always execute the reassembled full program — end to
+//! end equality against the serial engines is what `--shard-check`
+//! and the differential sweep pin.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::exec::{
+    assign_shards, pin_shards, run_program_sharded_with, ExecOptions, ShardAssignment,
+    ShardReport,
+};
+use crate::hw::shard::ShardTopology;
+use crate::ir::{BufKind, Buffer, Program, Statement};
+use crate::passes::partition::tag_shard_regions;
+
+use super::driver::CompiledNetwork;
+use super::tune::TuneOptions;
+
+/// One shard's compiled region.
+#[derive(Debug, Clone)]
+pub struct CompiledShard {
+    /// Shard index in the topology.
+    pub shard: usize,
+    /// Shard name (`ShardSpec::name`).
+    pub name: String,
+    /// Target the region was compiled against.
+    pub target: String,
+    /// Op block names of the region after compilation.
+    pub ops: Vec<String>,
+    /// The region compiled as a standalone network on this shard's
+    /// target (its own pass reports, schedule, and tuning decision).
+    pub net: CompiledNetwork,
+}
+
+/// A network compiled across a shard topology, ready for
+/// [`run_sharded_network`].
+#[derive(Debug, Clone)]
+pub struct ShardedNetwork {
+    pub topology: Arc<ShardTopology>,
+    /// The reassembled full program: every op is its shard-compiled
+    /// form, tagged `shard:<name>`, over the original buffers.
+    pub program: Program,
+    /// Per-shard compiled regions (shards with no ops are absent).
+    pub shards: Vec<CompiledShard>,
+    /// Final placement of the reassembled program, with the static
+    /// transfer-byte prediction the runtime must reproduce.
+    pub assignment: ShardAssignment,
+}
+
+impl ShardedNetwork {
+    /// Multi-line human summary: topology, placement, per-region
+    /// compile summaries.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "sharded network {:?} across {}\n  {}\n",
+            self.program.name,
+            self.topology.summary(),
+            self.assignment.summary_line(&self.topology)
+        );
+        for s in &self.shards {
+            out.push_str(&format!(
+                "  [{}] {} op(s) on {}: {}\n",
+                s.name,
+                s.ops.len(),
+                s.target,
+                s.net.summary()
+            ));
+        }
+        out
+    }
+}
+
+/// Which region ops read/write each buffer name.
+fn region_touches(p: &Program, op_shard: &[usize], shard: usize, name: &str) -> (bool, bool) {
+    let (mut reads, mut writes) = (false, false);
+    for (i, st) in p.main.stmts.iter().enumerate() {
+        let Statement::Block(b) = st else { continue };
+        if op_shard.get(i).copied() != Some(shard) {
+            continue;
+        }
+        for r in &b.refs {
+            if r.from == name {
+                reads |= r.dir.is_read();
+                writes |= r.dir.is_write();
+            }
+        }
+    }
+    (reads, writes)
+}
+
+/// Does any op *outside* `shard` read this buffer name?
+fn read_elsewhere(p: &Program, op_shard: &[usize], shard: usize, name: &str) -> bool {
+    p.main.stmts.iter().enumerate().any(|(i, st)| {
+        let Statement::Block(b) = st else { return false };
+        op_shard.get(i).copied() != Some(shard)
+            && b.refs.iter().any(|r| r.from == name && r.dir.is_read())
+    })
+}
+
+/// Extract shard `s`'s region as a standalone program. Returns `None`
+/// when the region is empty.
+fn region_program(
+    p: &Program,
+    topo: &ShardTopology,
+    op_shard: &[usize],
+    s: usize,
+) -> Option<Program> {
+    let ops: Vec<&Statement> = p
+        .main
+        .stmts
+        .iter()
+        .enumerate()
+        .filter(|(i, st)| {
+            matches!(st, Statement::Block(_)) && op_shard.get(*i).copied() == Some(s)
+        })
+        .map(|(_, st)| st)
+        .collect();
+    if ops.is_empty() {
+        return None;
+    }
+    let mut buffers: Vec<Buffer> = Vec::new();
+    for b in &p.buffers {
+        let (reads, writes) = region_touches(p, op_shard, s, &b.name);
+        if !reads && !writes {
+            continue;
+        }
+        let kind = match b.kind {
+            BufKind::Input | BufKind::Weight => b.kind,
+            // An output this region doesn't produce is an upstream
+            // value it consumes — fed over the link, like a boundary
+            // temp.
+            BufKind::Output => {
+                if writes {
+                    BufKind::Output
+                } else {
+                    BufKind::Input
+                }
+            }
+            BufKind::Temp => {
+                if !writes {
+                    // Produced by another shard, consumed here.
+                    BufKind::Input
+                } else if read_elsewhere(p, op_shard, s, &b.name) {
+                    // Produced here, consumed by another shard.
+                    BufKind::Output
+                } else {
+                    BufKind::Temp
+                }
+            }
+        };
+        buffers.push(Buffer { name: b.name.clone(), kind, ttype: b.ttype.clone() });
+    }
+    let name = format!("{}@{}", p.name, topo.shards[s].name);
+    let mut sub = Program::new(&name, buffers);
+    sub.main.stmts = ops.into_iter().cloned().collect();
+    Some(sub)
+}
+
+/// Compile `program` across `topo`: auto-assign ops to shards, compile
+/// each shard's region against its own target (per-shard pass
+/// pipelines; `tune` additionally runs the pipeline autotuner per
+/// region), reassemble, and re-derive the final placement. See the
+/// module docs.
+pub fn compile_network_sharded(
+    program: &Program,
+    topo: &Arc<ShardTopology>,
+    verify: bool,
+    tune: bool,
+) -> Result<ShardedNetwork, String> {
+    let assignment = assign_shards(program, topo).map_err(|e| e.to_string())?;
+    compile_network_sharded_with(program, topo, &assignment.op_shard, verify, tune)
+}
+
+/// Compile with an explicit op→shard placement (the shape
+/// `exec::pin_shards` accepts). Ops keep program order within and
+/// across regions, so any placement reassembles correctly; the
+/// automatic path always passes a contiguous one.
+pub fn compile_network_sharded_with(
+    program: &Program,
+    topo: &Arc<ShardTopology>,
+    op_shard: &[usize],
+    verify: bool,
+    tune: bool,
+) -> Result<ShardedNetwork, String> {
+    // Validate shape/range up front (and get the pre-compile
+    // prediction for free).
+    pin_shards(program, topo, op_shard).map_err(|e| e.to_string())?;
+
+    let mut shards: Vec<CompiledShard> = Vec::new();
+    for s in 0..topo.len() {
+        let Some(sub) = region_program(program, topo, op_shard, s) else { continue };
+        let target = &topo.shards[s].target;
+        let net = if tune {
+            let opts = TuneOptions { verify, ..TuneOptions::default() };
+            super::tune::compile_network_tuned(&sub, target, &opts)?
+        } else {
+            super::driver::compile_network(&sub, target, verify)?
+        };
+        shards.push(CompiledShard {
+            shard: s,
+            name: topo.shards[s].name.clone(),
+            target: target.name.clone(),
+            ops: net.program.ops().map(|b| b.name.clone()).collect(),
+            net,
+        });
+    }
+
+    // Reassemble: compiled regions interleave back into program order.
+    // For the contiguous auto-assignment this is a plain concatenation
+    // of regions; for a pinned interleaved placement we walk the
+    // original op order and pull each op's compiled form from its
+    // region in sequence. Pass pipelines may merge ops *within* a
+    // region (fusion), never across regions — a merged op inherits the
+    // region's shard.
+    let mut full = program.clone();
+    full.main.stmts.clear();
+    let mut final_shard: Vec<usize> = Vec::new();
+    let mut cursors: BTreeMap<usize, std::vec::IntoIter<Statement>> = shards
+        .iter()
+        .map(|cs| (cs.shard, cs.net.program.main.stmts.clone().into_iter()))
+        .collect();
+    // Original region sizes vs compiled region sizes: pull
+    // proportionally — each original op drains its region's iterator
+    // until the region's remaining compiled ops equal the remaining
+    // original ops (this keeps interleaved placements ordered while
+    // letting fusion shrink a region).
+    let mut remaining_orig: BTreeMap<usize, usize> = BTreeMap::new();
+    for (i, st) in program.main.stmts.iter().enumerate() {
+        if matches!(st, Statement::Block(_)) {
+            *remaining_orig.entry(op_shard[i]).or_insert(0) += 1;
+        }
+    }
+    for (i, st) in program.main.stmts.iter().enumerate() {
+        let Statement::Block(_) = st else { continue };
+        let s = op_shard[i];
+        let orig_left = remaining_orig.get_mut(&s).expect("region counted");
+        let cursor = cursors.get_mut(&s).expect("region compiled");
+        let compiled_left = cursor.len();
+        // Emit enough compiled ops that the region stays on pace:
+        // ceil(compiled_left / orig_left) ops for this original slot.
+        let take = compiled_left.div_ceil(*orig_left).min(compiled_left);
+        for _ in 0..take {
+            let stmt = cursor.next().expect("cursor length checked");
+            if matches!(stmt, Statement::Block(_)) {
+                final_shard.push(s);
+            }
+            full.main.stmts.push(stmt);
+        }
+        *orig_left -= 1;
+    }
+    // Anything a region still holds (defensive; cannot happen with the
+    // pacing above) flushes at the end in shard order.
+    for (s, cursor) in cursors.iter_mut() {
+        for stmt in cursor.by_ref() {
+            if matches!(stmt, Statement::Block(_)) {
+                final_shard.push(*s);
+            }
+            full.main.stmts.push(stmt);
+        }
+    }
+
+    let names: Vec<&str> =
+        final_shard.iter().map(|&s| topo.shards[s].name.as_str()).collect();
+    tag_shard_regions(&mut full, &names)?;
+    if verify {
+        // End-to-end reassembly check: the stitched program must equal
+        // the original network (this is what catches any cross-region
+        // ordering hazard a region-local rewrite could introduce —
+        // region-level verification alone cannot see across the
+        // boundary).
+        crate::passes::equiv::assert_equiv(program, &full, 0xA55, 1e-3)
+            .map_err(|e| format!("sharded reassembly not equivalent: {e}"))?;
+    }
+    let assignment = pin_shards(&full, topo, &final_shard).map_err(|e| e.to_string())?;
+    Ok(ShardedNetwork { topology: Arc::clone(topo), program: full, shards, assignment })
+}
+
+/// Execute a compiled sharded network: the reassembled program runs on
+/// the sharded engine with the placement the compile derived. Returns
+/// the outputs plus the run's [`ShardReport`] (per-shard lanes,
+/// transfer bytes, schedule).
+pub fn run_sharded_network(
+    c: &ShardedNetwork,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    opts: &ExecOptions,
+) -> Result<(BTreeMap<String, Vec<f32>>, ShardReport), String> {
+    run_program_sharded_with(&c.program, inputs, &c.topology, c.assignment.clone(), opts)
+        .map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run_program;
+    use crate::frontend::ops;
+    use crate::passes::equiv::gen_inputs;
+    use crate::passes::partition::shard_of;
+
+    #[test]
+    fn sharded_compile_matches_serial_run() {
+        let p = ops::cnn_program();
+        let topo = Arc::new(ShardTopology::asymmetric_pair());
+        let c = compile_network_sharded(&p, &topo, true, false).unwrap();
+        assert!(!c.shards.is_empty());
+        // Every op carries its shard tag.
+        for b in c.program.ops() {
+            assert!(shard_of(b).is_some(), "{} missing shard tag", b.name);
+        }
+        let inputs = gen_inputs(&p, 71);
+        let serial = run_program(&p, &inputs).unwrap();
+        let (out, report) = run_sharded_network(&c, &inputs, &ExecOptions::default()).unwrap();
+        assert_eq!(serial, out);
+        assert_eq!(report.stats.transfer_bytes, report.stats.predicted_transfer_bytes);
+        assert!(c.summary().contains("sharded network"));
+    }
+
+    #[test]
+    fn pinned_interleaved_compile_round_trips() {
+        let p = ops::conv_relu_program();
+        let topo = Arc::new(ShardTopology::asymmetric_pair());
+        let nops = p.ops().count();
+        let pins: Vec<usize> = (0..nops).map(|i| i % topo.len()).collect();
+        let c = compile_network_sharded_with(&p, &topo, &pins, true, false).unwrap();
+        let inputs = gen_inputs(&p, 73);
+        let serial = run_program(&p, &inputs).unwrap();
+        let (out, _) = run_sharded_network(&c, &inputs, &ExecOptions::default()).unwrap();
+        assert_eq!(serial, out);
+    }
+
+    #[test]
+    fn boundary_temps_reclassify() {
+        let p = ops::conv_relu_program();
+        let topo = Arc::new(ShardTopology::asymmetric_pair());
+        // First op on shard 0, rest on shard 1: the temp between them
+        // must leave shard 0 as an output and enter shard 1 as an input.
+        let nops = p.ops().count();
+        let mut pins = vec![1usize; nops];
+        pins[0] = 0;
+        let c = compile_network_sharded_with(&p, &topo, &pins, false, false).unwrap();
+        assert_eq!(c.shards.len(), 2);
+        let first = &c.shards[0].net.program;
+        assert!(
+            first.buffers_of(BufKind::Output).count() >= 1,
+            "boundary temp must become a region output: {:?}",
+            first.buffers
+        );
+        let rest = &c.shards[1].net.program;
+        assert!(
+            rest.buffers_of(BufKind::Input).count() >= 1,
+            "boundary temp must become a region input: {:?}",
+            rest.buffers
+        );
+    }
+}

@@ -15,13 +15,19 @@
 //! * [`pipeline`] — the Fig.-4 model generalized from one flat block to
 //!   a whole compiled program tree; ranks candidate pass pipelines for
 //!   the coordinator's autotuner (`coordinator::tune`).
+//! * [`transfer`] — the inter-shard link model for heterogeneous
+//!   sharding (`hw::shard` / `exec::shard`): bytes crossing a shard
+//!   boundary priced as latency + bytes/bandwidth, plus the
+//!   makespan/imbalance folds the shard-assignment search minimizes.
 
 pub mod cacheline;
 pub mod pipeline;
 pub mod roofline;
 pub mod search;
+pub mod transfer;
 
 pub use cacheline::{tiling_cost, CostParams, TileCost};
 pub use pipeline::{predicted_program_cost, ProgramCost};
 pub use roofline::{MachineRoof, RooflineEstimate};
 pub use search::{best_tiling, SearchSpace, SearchStats};
+pub use transfer::{imbalance, makespan, LinkModel};

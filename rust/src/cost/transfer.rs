@@ -1,0 +1,119 @@
+//! Transfer-cost model for shard boundaries (heterogeneous sharding).
+//!
+//! When one network is split across multiple simulated targets
+//! (`hw::shard::ShardTopology`, executed by `exec::shard`), bytes that
+//! one shard reads out of another shard's writes cross the inter-shard
+//! link. This module prices those crossings: a [`LinkModel`] turns a
+//! byte count into seconds (fixed per-hop latency plus bytes over
+//! bandwidth), and the helpers fold per-shard busy times and the
+//! transfer term into the makespan/imbalance figures the shard
+//! assignment search and the bench report use.
+//!
+//! Tiramisu's distributed/communication layer is the reference: the
+//! transfer term is explicit in the schedule's cost, never an
+//! afterthought of the memory model.
+
+/// Default inter-shard link bandwidth: 16 GB/s, roughly a PCIe-gen4
+/// x16 interconnect — deliberately far below every built-in target's
+/// local `mem_bw`, so a bad cut is visibly punished.
+pub const DEFAULT_LINK_BANDWIDTH: f64 = 16.0e9;
+
+/// Default per-hop transfer latency (DMA setup / doorbell cost).
+pub const DEFAULT_LINK_LATENCY_S: f64 = 2.0e-6;
+
+/// An inter-shard interconnect: every byte a shard reads out of
+/// another shard's writes is charged `latency + bytes / bandwidth`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Link bandwidth in bytes per second.
+    pub bandwidth: f64,
+    /// Fixed per-hop latency in seconds, charged once per non-empty
+    /// transfer.
+    pub latency_s: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel { bandwidth: DEFAULT_LINK_BANDWIDTH, latency_s: DEFAULT_LINK_LATENCY_S }
+    }
+}
+
+impl LinkModel {
+    /// A link with the given bandwidth in gigabytes per second and the
+    /// default hop latency.
+    pub fn with_gbps(gbps: f64) -> LinkModel {
+        LinkModel { bandwidth: (gbps * 1e9).max(1.0), ..LinkModel::default() }
+    }
+
+    /// Modeled seconds to move `bytes` across the link (0 for 0 bytes —
+    /// no hop happens at all).
+    pub fn seconds(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.latency_s + bytes as f64 / self.bandwidth.max(1.0)
+    }
+}
+
+/// Load imbalance across shard busy times: `max / mean`, so 1.0 is a
+/// perfectly balanced schedule and 2.0 means the busiest shard carries
+/// twice the average. Degenerate inputs (no shards, all idle) report
+/// 1.0 — "nothing to balance".
+pub fn imbalance(busy: &[f64]) -> f64 {
+    if busy.is_empty() {
+        return 1.0;
+    }
+    let max = busy.iter().copied().fold(0.0f64, f64::max);
+    let mean = busy.iter().sum::<f64>() / busy.len() as f64;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    max / mean
+}
+
+/// Modeled makespan of a sharded schedule: the busiest shard's compute
+/// time plus the (serialized, worst-case) transfer term. The shard
+/// assignment search minimizes this.
+pub fn makespan(busy: &[f64], transfer_s: f64) -> f64 {
+    busy.iter().copied().fold(0.0f64, f64::max) + transfer_s.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_cost_nothing() {
+        let link = LinkModel::default();
+        assert_eq!(link.seconds(0), 0.0);
+        assert!(link.seconds(1) > 0.0);
+    }
+
+    #[test]
+    fn seconds_scale_with_bytes_over_bandwidth() {
+        let link = LinkModel { bandwidth: 1e9, latency_s: 0.0 };
+        assert!((link.seconds(1_000_000_000) - 1.0).abs() < 1e-12);
+        let faster = LinkModel { bandwidth: 2e9, latency_s: 0.0 };
+        assert!(faster.seconds(1_000_000_000) < link.seconds(1_000_000_000));
+    }
+
+    #[test]
+    fn with_gbps_sets_bandwidth() {
+        let link = LinkModel::with_gbps(32.0);
+        assert!((link.bandwidth - 32.0e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 1.0);
+        assert!((imbalance(&[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((imbalance(&[3.0, 1.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_adds_transfer_to_busiest() {
+        assert!((makespan(&[2.0, 5.0], 1.0) - 6.0).abs() < 1e-12);
+        assert_eq!(makespan(&[], 0.0), 0.0);
+    }
+}

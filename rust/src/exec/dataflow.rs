@@ -101,7 +101,7 @@ use super::plan::{self, RootScope};
 /// over-decomposition factor that gives the pool's shared queue
 /// something to steal. 2 keeps per-chunk fork/merge overhead low while
 /// letting a worker that finishes early pick up a sibling's remainder.
-const OVERSUBSCRIPTION: usize = 2;
+pub(crate) const OVERSUBSCRIPTION: usize = 2;
 
 /// Human-readable panic payload (string payloads pass through, others
 /// are labelled). Shared by the execution engines and the compile
@@ -119,24 +119,24 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// One chunk of one op, shipped to a pool worker. Owns everything it
 /// needs (`'static`): the range-restricted block, a CoW fork of the
 /// master buffers, and the reply channel.
-struct Job {
-    op: usize,
-    chunk: usize,
+pub(crate) struct Job {
+    pub(crate) op: usize,
+    pub(crate) chunk: usize,
     /// Home worker (`chunk % pool size`) — a chunk executed by any
     /// other worker counts as a steal.
-    home: usize,
-    blk: Block,
-    scope: Arc<RootScope>,
-    opts: ExecOptions,
-    local: Buffers,
-    executed_base: u64,
-    reply: Sender<ChunkDone>,
+    pub(crate) home: usize,
+    pub(crate) blk: Block,
+    pub(crate) scope: Arc<RootScope>,
+    pub(crate) opts: ExecOptions,
+    pub(crate) local: Buffers,
+    pub(crate) executed_base: u64,
+    pub(crate) reply: Sender<ChunkDone>,
 }
 
-struct ChunkDone {
-    op: usize,
-    chunk: usize,
-    result: Result<(Buffers, u64, KernelStats), ExecError>,
+pub(crate) struct ChunkDone {
+    pub(crate) op: usize,
+    pub(crate) chunk: usize,
+    pub(crate) result: Result<(Buffers, u64, KernelStats), ExecError>,
 }
 
 #[derive(Default)]
@@ -218,7 +218,7 @@ impl ComputePool {
         self.counters.fail_next.fetch_add(n, Ordering::Relaxed);
     }
 
-    fn submit(&self, job: Job) -> Result<(), ExecError> {
+    pub(crate) fn submit(&self, job: Job) -> Result<(), ExecError> {
         let guard = self.tx.lock().unwrap();
         let Some(tx) = guard.as_ref() else {
             return Err(ExecError {
@@ -365,14 +365,14 @@ impl DataflowStats {
 }
 
 /// The op dependency DAG: forward edges only (acyclic by construction).
-struct Dag {
-    succs: Vec<Vec<usize>>,
-    indeg: Vec<usize>,
-    edges_raw: usize,
-    edges_war: usize,
-    edges_waw: usize,
-    width: usize,
-    critical_path: usize,
+pub(crate) struct Dag {
+    pub(crate) succs: Vec<Vec<usize>>,
+    pub(crate) indeg: Vec<usize>,
+    pub(crate) edges_raw: usize,
+    pub(crate) edges_war: usize,
+    pub(crate) edges_waw: usize,
+    pub(crate) width: usize,
+    pub(crate) critical_path: usize,
 }
 
 /// Do two footprints share any flat element range? `None` (an opaque
@@ -389,7 +389,7 @@ fn footprints_overlap(
     }
 }
 
-fn build_dag(blocks: &[&Block], scope: &RootScope) -> Dag {
+pub(crate) fn build_dag(blocks: &[&Block], scope: &RootScope) -> Dag {
     let n = blocks.len();
     let reads: Vec<_> = blocks.iter().map(|b| plan::flat_read_extents(b, scope)).collect();
     let writes: Vec<_> = blocks.iter().map(|b| plan::flat_write_extents(b, scope)).collect();
@@ -463,7 +463,7 @@ pub fn analyze_dataflow(p: &Program, workers: usize) -> Option<DataflowStats> {
 }
 
 /// How the scheduler executes one DAG-ready op.
-enum DfDecision {
+pub(crate) enum DfDecision {
     /// Run on the master buffers, on the scheduler thread (see the
     /// module docs for what forces this).
     Inline(String),
@@ -472,7 +472,12 @@ enum DfDecision {
     Offload { dim: Option<(String, u64)>, write_ids: Vec<usize> },
 }
 
-fn decide_dataflow(b: &Block, scope: &RootScope, master: &Buffers, units: usize) -> DfDecision {
+pub(crate) fn decide_dataflow(
+    b: &Block,
+    scope: &RootScope,
+    master: &Buffers,
+    units: usize,
+) -> DfDecision {
     let mut write_ids: BTreeSet<usize> = BTreeSet::new();
     for r in &b.refs {
         if !r.dir.is_write() {
@@ -498,13 +503,13 @@ fn decide_dataflow(b: &Block, scope: &RootScope, master: &Buffers, units: usize)
 }
 
 /// An op dispatched to the pool, awaiting its chunks.
-struct Flight {
-    dim: Option<String>,
-    range: u64,
-    write_ids: Vec<usize>,
-    extents: Vec<Option<Vec<(usize, i64, i64)>>>,
-    parts: Vec<Option<(Buffers, u64, KernelStats)>>,
-    pending: usize,
+pub(crate) struct Flight {
+    pub(crate) dim: Option<String>,
+    pub(crate) range: u64,
+    pub(crate) write_ids: Vec<usize>,
+    pub(crate) extents: Vec<Option<Vec<(usize, i64, i64)>>>,
+    pub(crate) parts: Vec<Option<(Buffers, u64, KernelStats)>>,
+    pub(crate) pending: usize,
 }
 
 /// Run a program through the dataflow engine: DAG-scheduled inter-op
@@ -742,7 +747,7 @@ pub fn run_program_dataflow(
 /// Verify each chunk's dirty range against its predicted write extent,
 /// merge the parts into the master, and account fork/merge traffic —
 /// the same post-flight the per-op parallel dispatcher runs.
-fn merge_op(
+pub(crate) fn merge_op(
     master: &mut Buffers,
     b: &Block,
     flight: Flight,

@@ -93,6 +93,12 @@ pub struct ExecOptions {
     /// creates its own pool of `workers` threads — still one spawn
     /// batch per run, never per op. Ignored by the other engines.
     pub compute: Option<Arc<super::dataflow::ComputePool>>,
+    /// Shard topology: when set (and the program has no specials),
+    /// `run_program_with` routes to the sharded engine (`exec::shard`),
+    /// splitting the op DAG across the topology's heterogeneous
+    /// targets. Overrides `engine`/`workers` dispatch; `None` (the
+    /// default) leaves the single-target engines in charge.
+    pub shards: Option<Arc<crate::hw::shard::ShardTopology>>,
 }
 
 impl ExecOptions {
@@ -113,6 +119,7 @@ impl Default for ExecOptions {
             simd: true,
             pool: None,
             compute: None,
+            shards: None,
         }
     }
 }
@@ -158,11 +165,12 @@ pub fn run_program(
 
 /// Run with explicit options, choosing the execution engine:
 /// `Special`-bearing programs take the naive interpreter (the only path
-/// that executes specials); `Engine::Dataflow` takes the inter-op DAG
-/// scheduler (`exec::dataflow`); `opts.workers > 1` takes the per-op
-/// parallel dispatcher (`exec::parallel`, which runs each chunk on
-/// `opts.engine`); otherwise `opts.engine` selects between the naive
-/// interpreter, the serial plan, and the leaf-kernel engine.
+/// that executes specials); `opts.shards` takes the multi-target
+/// sharded scheduler (`exec::shard`); `Engine::Dataflow` takes the
+/// inter-op DAG scheduler (`exec::dataflow`); `opts.workers > 1` takes
+/// the per-op parallel dispatcher (`exec::parallel`, which runs each
+/// chunk on `opts.engine`); otherwise `opts.engine` selects between the
+/// naive interpreter, the serial plan, and the leaf-kernel engine.
 pub fn run_program_with(
     program: &Program,
     inputs: &BTreeMap<String, Vec<f32>>,
@@ -174,6 +182,8 @@ pub fn run_program_with(
     });
     if has_special {
         run_program_sink(program, inputs, opts, &mut NullSink)
+    } else if let Some(topo) = &opts.shards {
+        super::shard::run_program_sharded(program, inputs, topo, opts).map(|(out, _)| out)
     } else if opts.engine == Engine::Dataflow {
         super::dataflow::run_program_dataflow(program, inputs, opts).map(|(out, _)| out)
     } else if opts.workers > 1 {

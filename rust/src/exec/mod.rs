@@ -22,7 +22,7 @@
 //!
 //! # Execution engines
 //!
-//! Five engines share these semantics:
+//! Six engines share these semantics:
 //!
 //! | engine | module | use |
 //! |--------|--------|-----|
@@ -31,9 +31,11 @@
 //! | leaf kernel | [`kernel`] | plan + leaf-kernel lowering: fused run-level kernels (fill/copy/map/zip/mul-add/generic) over contiguous runs, lane bodies executed through the SIMD-shaped chunked kernels in [`simd`], constraint/OOB checks hoisted per band, guarded-odometer fallback |
 //! | parallel | [`parallel`] | per-op chunk dispatch across compute units; ops run in program order, each chunk runs the planned or kernel engine |
 //! | dataflow | [`dataflow`] | inter-op DAG scheduling over a persistent worker pool: independent ops overlap across compute units, chunks are work-stolen, chunks run the kernel lowering |
+//! | sharded | [`shard`] | one network split across multiple heterogeneous simulated targets ([`ShardTopology`](crate::hw::shard::ShardTopology)); each op runs on its assigned shard, chunked across that shard's compute units, with boundary bytes charged to the inter-shard link |
 //!
 //! [`run_program_with`] dispatches from [`ExecOptions`]: `Special`s
-//! force the naive interpreter, [`Engine::Dataflow`] selects the DAG
+//! force the naive interpreter, [`ExecOptions::shards`] selects the
+//! sharded scheduler, [`Engine::Dataflow`] selects the DAG
 //! scheduler, `workers > 1` selects the per-op parallel dispatcher,
 //! and otherwise [`ExecOptions::engine`] ([`Engine`]) picks the
 //! serial engine — or the per-chunk executor under the dispatcher.
@@ -75,8 +77,8 @@
 //!   It still *verifies* write disjointness element-by-element at
 //!   runtime — the differential harness
 //!   (`rust/tests/differential.rs`, naive ≡ planned ≡ kernel ≡
-//!   parallel ≡ dataflow on randomized networks, swept per storage
-//!   dtype) relies on that check to catch analysis bugs loudly.
+//!   parallel ≡ dataflow ≡ sharded on randomized networks, swept per
+//!   storage dtype) relies on that check to catch analysis bugs loudly.
 //! * **Bulk run operations.** The kernel engine reads and writes
 //!   contiguous runs ([`Buffers::read_run_into`],
 //!   [`Buffers::write_run`], [`Buffers::fold_run`]): one bounds check
@@ -114,7 +116,18 @@
 //! workers steal from slow siblings. See [`dataflow`] for the DAG
 //! rules and the inline-fallback conditions.
 //!
-//! Both engines are bit-exact with serial execution, and serial
+//! The sharded engine lifts the claim across *machines*: every op is
+//! assigned to one shard of a multi-target topology and chunked across
+//! that shard's own compute-unit count, shards execute asynchronously
+//! (at most one op in flight per shard) over one shared pool, and
+//! boundary hand-offs flow through the same CoW fork/merge — a shard
+//! boundary changes transfer *accounting* (bytes a reader pulls from
+//! another shard's writes, priced by `cost::transfer::LinkModel`),
+//! never semantics. The runtime byte count provably reproduces the
+//! assignment's static prediction; `stripe run --shard-check` asserts
+//! it. See [`shard`] for the ledger rules and the assignment search.
+//!
+//! All of them are bit-exact with serial execution, and serial
 //! execution remains a runtime toggle (`workers: 1`, engine `planned`)
 //! so any discrepancy can be bisected.
 
@@ -124,6 +137,7 @@ pub mod interp;
 pub mod kernel;
 pub mod parallel;
 pub mod plan;
+pub mod shard;
 pub mod simd;
 pub mod trace;
 
@@ -138,4 +152,8 @@ pub use parallel::{
     ParallelReport,
 };
 pub use plan::run_program_planned;
+pub use shard::{
+    assign_shards, pin_shards, run_program_sharded, run_program_sharded_with, ShardAssignment,
+    ShardLane, ShardReport, ShardStats,
+};
 pub use trace::{AccessEvent, NullSink, RecordingSink, Sink};

@@ -1,0 +1,842 @@
+//! Sharded execution: one network split across multiple heterogeneous
+//! simulated targets.
+//!
+//! The sixth engine stage. The dataflow engine (`exec::dataflow`)
+//! overlaps independent ops across one homogeneous worker pool; this
+//! module splits the same op DAG across the *shards* of a
+//! [`ShardTopology`] — each shard a whole simulated machine with its
+//! own compute-unit count — and schedules the shards asynchronously
+//! over one persistent [`ComputePool`]:
+//!
+//! * **Assignment** ([`assign_shards`] / [`pin_shards`]): every
+//!   top-level op is placed on exactly one shard.  The automatic
+//!   search enumerates contiguous chain partitions of the op list
+//!   (regions stay contiguous in program order, so cross-region
+//!   hazards only point forward) and minimizes the modeled makespan —
+//!   per-shard work weighted by the shard's roofline speed, plus the
+//!   transfer term below (`cost::transfer::makespan`). The search is
+//!   free to conclude that sharding is not worth it (everything on
+//!   the fastest shard); [`pin_shards`] accepts any explicit
+//!   placement, contiguous or not.
+//! * **Scheduling**: the op hazard DAG is the dataflow engine's
+//!   (RAW/WAR/WAW from flat footprints, forward edges only). A ready
+//!   op dispatches only when *its shard* is idle — each shard executes
+//!   at most one op at a time, which is what makes per-shard busy
+//!   time, overlap, and imbalance meaningful. A dispatched op is
+//!   chunked across **its own shard's** compute units (a 1-unit shard
+//!   runs single-chunk ops while an 8-unit shard runs 16 stealable
+//!   chunks next to it) into the shared pool.
+//! * **Boundary hand-offs**: ops exchange data through the same
+//!   copy-on-write master buffers and verified-disjoint merges as the
+//!   other engines — a shard boundary changes *accounting*, never
+//!   semantics. A [`TransferLedger`] records, per flat buffer range,
+//!   which shard wrote it last; when an op dispatches, every read
+//!   range last written by a *different* shard is charged to the
+//!   inter-shard link in storage-dtype bytes. Program inputs and
+//!   weights have no writer and are never charged (shards with fully
+//!   disjoint working sets transfer zero bytes). Because every RAW
+//!   hazard is a DAG edge, the ledger at dispatch time equals the
+//!   program-order state, so the runtime byte count reproduces the
+//!   static prediction in [`ShardAssignment`] exactly.
+//! * **Bit-exactness**: unchanged from the parallel/dataflow engines
+//!   and pinned by the differential sweep (naive ≡ planned ≡ kernel ≡
+//!   parallel ≡ dataflow ≡ sharded, per storage dtype): same CoW
+//!   fork / verified-disjoint merge per chunk, same inline fallback
+//!   when a write target holds earlier data (an op spanning a shard
+//!   boundary *serializes* rather than corrupting), same hazard
+//!   serialization.
+//!
+//! [`run_program_sharded`] is selected by [`ExecOptions::shards`]
+//! (`stripe run --shards t1,t2`); the coordinator's shard-aware
+//! compile (per-shard pass pipelines and tuning) lives in
+//! `coordinator::shard`.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cost::transfer::imbalance;
+use crate::hw::shard::ShardTopology;
+use crate::ir::{Block, BufKind, DType, Program, Statement};
+
+use super::buffer::Buffers;
+use super::dataflow::{
+    build_dag, decide_dataflow, merge_op, ChunkDone, ComputePool, DfDecision, Flight, Job,
+    OVERSUBSCRIPTION,
+};
+use super::interp::{ExecError, ExecOptions};
+use super::parallel::{chunk_block, exec_chunk, split_range, OpParallelism};
+use super::plan::{self, RootScope};
+use super::ParallelReport;
+
+/// Flat extents of one op against the root scope (buffer id, lo, hi).
+type Extents = Option<Vec<(usize, i64, i64)>>;
+
+/// Bytes one element of buffer `dt` occupies in storage (non-storage
+/// dtypes are stored at f32 width — same rule as `exec::buffer`).
+fn storage_bytes(dt: DType) -> u64 {
+    if DType::STORAGE.contains(&dt) {
+        dt.size_bytes()
+    } else {
+        DType::F32.size_bytes()
+    }
+}
+
+/// Coalesce extents into disjoint per-buffer intervals so overlapping
+/// refinements of one op never double-charge the link.
+fn coalesce(ext: &[(usize, i64, i64)]) -> Vec<(usize, i64, i64)> {
+    let mut sorted: Vec<(usize, i64, i64)> = ext.to_vec();
+    sorted.sort_unstable();
+    let mut out: Vec<(usize, i64, i64)> = Vec::with_capacity(sorted.len());
+    for (id, lo, hi) in sorted {
+        match out.last_mut() {
+            Some((pid, _, phi)) if *pid == id && lo <= *phi + 1 => *phi = (*phi).max(hi),
+            _ => out.push((id, lo, hi)),
+        }
+    }
+    out
+}
+
+/// Last-writer bookkeeping per flat buffer range: which shard produced
+/// the bytes currently live in each interval. Shared by the static
+/// prediction and the runtime accounting, which is what makes them
+/// agree byte-for-byte.
+#[derive(Default)]
+struct TransferLedger {
+    spans: BTreeMap<usize, Vec<(i64, i64, usize)>>,
+}
+
+impl TransferLedger {
+    /// Bytes of `reads` last written by a shard other than `shard`.
+    fn charge(&self, reads: &Extents, shard: usize, elem_bytes: impl Fn(usize) -> u64) -> u64 {
+        let Some(ext) = reads else { return 0 };
+        let mut total = 0u64;
+        for &(id, lo, hi) in &coalesce(ext) {
+            let Some(spans) = self.spans.get(&id) else { continue };
+            for &(slo, shi, s) in spans {
+                if s != shard && slo <= hi && lo <= shi {
+                    let olen = (hi.min(shi) - lo.max(slo) + 1) as u64;
+                    total += olen * elem_bytes(id);
+                }
+            }
+        }
+        total
+    }
+
+    /// Record `writes` as now owned by `shard` (overwriting any prior
+    /// owner of the overlapped ranges).
+    fn record(&mut self, writes: &Extents, shard: usize) {
+        let Some(ext) = writes else { return };
+        for &(id, lo, hi) in &coalesce(ext) {
+            let spans = self.spans.entry(id).or_default();
+            let mut next = Vec::with_capacity(spans.len() + 1);
+            for &(slo, shi, s) in spans.iter() {
+                if shi < lo || slo > hi {
+                    next.push((slo, shi, s));
+                    continue;
+                }
+                if slo < lo {
+                    next.push((slo, lo - 1, s));
+                }
+                if shi > hi {
+                    next.push((hi + 1, shi, s));
+                }
+            }
+            next.push((lo, hi, shard));
+            *spans = next;
+        }
+    }
+}
+
+/// A placement of every top-level op on a shard, with the static
+/// prediction of what executing it will cost.
+#[derive(Debug, Clone)]
+pub struct ShardAssignment {
+    /// Op index (program order) → shard index.
+    pub op_shard: Vec<usize>,
+    /// Bytes predicted to cross the inter-shard link, from the same
+    /// last-writer accounting the runtime uses — `--shard-check`
+    /// asserts the runtime count equals this exactly.
+    pub predicted_transfer_bytes: u64,
+    /// Modeled compute seconds per shard (leaf iterations weighted by
+    /// the shard's roofline speed).
+    pub predicted_busy: Vec<f64>,
+}
+
+impl ShardAssignment {
+    /// Ops placed on shard `s`.
+    pub fn ops_on(&self, s: usize) -> usize {
+        self.op_shard.iter().filter(|&&x| x == s).count()
+    }
+
+    /// One-line rendering for report summaries.
+    pub fn summary_line(&self, topo: &ShardTopology) -> String {
+        let parts: Vec<String> = topo
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, spec)| format!("{}:{} op(s)", spec.name, self.ops_on(s)))
+            .collect();
+        format!(
+            "assignment: {}; predicted transfer {} B",
+            parts.join(", "),
+            self.predicted_transfer_bytes
+        )
+    }
+}
+
+fn op_blocks(p: &Program) -> Result<Vec<&Block>, ExecError> {
+    p.main
+        .stmts
+        .iter()
+        .map(|st| match st {
+            Statement::Block(b) => Ok(b),
+            _ => Err(ExecError {
+                block: "main".into(),
+                message: "sharded execution requires main-level statements to be blocks".into(),
+            }),
+        })
+        .collect()
+}
+
+/// Storage bytes per element of root-scope buffer `id`, statically:
+/// program buffers carry their declared dtype, scope-allocated temps
+/// are f32.
+fn static_elem_bytes(p: &Program, id: usize) -> u64 {
+    match p.buffers.get(id) {
+        Some(b) => storage_bytes(b.ttype.dtype),
+        None => DType::F32.size_bytes(),
+    }
+}
+
+/// Static prediction for a placement: (link bytes, per-shard busy
+/// seconds). Uses the identical ledger walk as the runtime, in program
+/// order.
+fn predict(
+    p: &Program,
+    topo: &ShardTopology,
+    blocks: &[&Block],
+    scope: &RootScope,
+    op_shard: &[usize],
+) -> (u64, Vec<f64>) {
+    let reads: Vec<Extents> = blocks.iter().map(|b| plan::flat_read_extents(b, scope)).collect();
+    let writes: Vec<Extents> =
+        blocks.iter().map(|b| plan::flat_write_extents(b, scope)).collect();
+    let mut busy = vec![0.0f64; topo.len()];
+    let mut ledger = TransferLedger::default();
+    let mut bytes = 0u64;
+    for (i, b) in blocks.iter().enumerate() {
+        let s = op_shard[i];
+        // ~2 flops (one multiply-accumulate) per leaf iteration against
+        // the shard's roofline peak: crude, but consistent across
+        // shards, which is all the chain-partition search needs.
+        busy[s] += 2.0 * b.total_leaf_iterations() as f64 / topo.speed(s);
+        bytes += ledger.charge(&reads[i], s, |id| static_elem_bytes(p, id));
+        ledger.record(&writes[i], s);
+    }
+    (bytes, busy)
+}
+
+/// Pin an explicit placement (one shard index per top-level op, any
+/// shape — the directed boundary tests and the bench use this) and
+/// compute its static prediction.
+pub fn pin_shards(
+    p: &Program,
+    topo: &ShardTopology,
+    op_shard: &[usize],
+) -> Result<ShardAssignment, ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let blocks = op_blocks(p)?;
+    if op_shard.len() != blocks.len() {
+        return Err(err(format!(
+            "pinned assignment names {} op(s), program has {}",
+            op_shard.len(),
+            blocks.len()
+        )));
+    }
+    if let Some(&bad) = op_shard.iter().find(|&&s| s >= topo.len()) {
+        return Err(err(format!("pinned shard index {bad} out of range ({} shards)", topo.len())));
+    }
+    let scope = plan::symbolic_root_scope(p)?;
+    let (bytes, busy) = predict(p, topo, &blocks, &scope, op_shard);
+    Ok(ShardAssignment {
+        op_shard: op_shard.to_vec(),
+        predicted_transfer_bytes: bytes,
+        predicted_busy: busy,
+    })
+}
+
+/// Enumerate every way to cut `n` ops into `k` contiguous (possibly
+/// empty) segments, calling `f` with the op→shard map.
+fn for_each_chain(n: usize, k: usize, f: &mut impl FnMut(&[usize])) {
+    let mut assign = vec![0usize; n];
+    fn rec(assign: &mut Vec<usize>, from: usize, shard: usize, k: usize, f: &mut impl FnMut(&[usize])) {
+        if shard + 1 == k {
+            for a in assign[from..].iter_mut() {
+                *a = shard;
+            }
+            f(assign);
+            return;
+        }
+        for cut in from..=assign.len() {
+            for a in assign[from..cut].iter_mut() {
+                *a = shard;
+            }
+            rec(assign, cut, shard + 1, k, f);
+        }
+    }
+    rec(&mut assign, 0, 0, k, f);
+}
+
+/// Number of chain partitions of `n` ops into `k` segments,
+/// saturating: C(n + k - 1, k - 1).
+fn chain_count(n: usize, k: usize) -> u64 {
+    let mut c: u64 = 1;
+    for i in 0..(k - 1) as u64 {
+        c = c.saturating_mul(n as u64 + i + 1) / (i + 1);
+        if c > 1_000_000 {
+            return u64::MAX;
+        }
+    }
+    c
+}
+
+/// Automatically place every top-level op on a shard: contiguous chain
+/// partition of the op list minimizing the modeled makespan (per-shard
+/// roofline-weighted work plus the link-transfer term). Falls back to
+/// a work-balanced greedy cut when the exact enumeration would be too
+/// large. The result may be degenerate (all ops on one shard) when the
+/// model says transfers outweigh the parallelism — [`pin_shards`]
+/// overrides.
+pub fn assign_shards(p: &Program, topo: &ShardTopology) -> Result<ShardAssignment, ExecError> {
+    let blocks = op_blocks(p)?;
+    let n = blocks.len();
+    let k = topo.len();
+    let scope = plan::symbolic_root_scope(p)?;
+    let score = |op_shard: &[usize]| -> (f64, u64, Vec<f64>) {
+        let (bytes, busy) = predict(p, topo, &blocks, &scope, op_shard);
+        (crate::cost::transfer::makespan(&busy, topo.link.seconds(bytes)), bytes, busy)
+    };
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    if chain_count(n, k) <= 200_000 {
+        for_each_chain(n, k, &mut |cand| {
+            let (s, _, _) = score(cand);
+            if best.as_ref().map(|(b, _)| s < *b).unwrap_or(true) {
+                best = Some((s, cand.to_vec()));
+            }
+        });
+    } else {
+        // Greedy: walk ops in order, advancing to the next shard when
+        // the current one holds its proportional share of total work.
+        let total: f64 = blocks.iter().map(|b| b.total_leaf_iterations() as f64).sum();
+        let speed_sum: f64 = (0..k).map(|s| topo.speed(s)).sum();
+        let mut cand = vec![0usize; n];
+        let (mut shard, mut acc) = (0usize, 0.0f64);
+        for (i, b) in blocks.iter().enumerate() {
+            cand[i] = shard;
+            acc += b.total_leaf_iterations() as f64;
+            if shard + 1 < k && acc >= total * topo.speed(shard) / speed_sum {
+                shard += 1;
+                acc = 0.0;
+            }
+        }
+        let (s, _, _) = score(&cand);
+        best = Some((s, cand));
+    }
+    let (_, op_shard) = best.expect("chain enumeration yields at least one candidate");
+    let (bytes, busy) = predict(p, topo, &blocks, &scope, &op_shard);
+    Ok(ShardAssignment { op_shard, predicted_transfer_bytes: bytes, predicted_busy: busy })
+}
+
+/// Runtime per-shard lane of one sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardLane {
+    pub name: String,
+    /// Compute units the shard chunks its ops across.
+    pub units: usize,
+    /// Ops this shard executed.
+    pub ops: usize,
+    /// Wall seconds this shard was occupied by an op.
+    pub busy_s: f64,
+    /// Bytes this shard read out of other shards' writes.
+    pub transfer_in_bytes: u64,
+}
+
+/// Statistics of one sharded run.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    pub lanes: Vec<ShardLane>,
+    /// Total bytes that crossed the inter-shard link.
+    pub transfer_bytes: u64,
+    /// Modeled link seconds for those bytes (one hop per op with a
+    /// non-empty transfer).
+    pub transfer_seconds: f64,
+    /// The assignment's static prediction — equals `transfer_bytes`
+    /// (asserted by `--shard-check` and the boundary tests).
+    pub predicted_transfer_bytes: u64,
+    /// Most shards simultaneously occupied at any point.
+    pub max_in_flight: usize,
+    /// Ops that ran inline on the scheduler thread (stateful target,
+    /// unresolved footprint, or no writes).
+    pub inline_ops: usize,
+    /// Worker threads in the shared pool.
+    pub pool_size: usize,
+}
+
+impl ShardStats {
+    /// Load imbalance across shard busy times (max/mean, 1.0 = even).
+    pub fn imbalance(&self) -> f64 {
+        let busy: Vec<f64> = self.lanes.iter().map(|l| l.busy_s).collect();
+        imbalance(&busy)
+    }
+
+    /// One-line rendering for report summaries.
+    pub fn summary_line(&self) -> String {
+        let lanes: Vec<String> = self
+            .lanes
+            .iter()
+            .map(|l| {
+                format!(
+                    "{}[{}u]: {} op(s), busy {:.1}ms, in {} B",
+                    l.name,
+                    l.units,
+                    l.ops,
+                    l.busy_s * 1e3,
+                    l.transfer_in_bytes
+                )
+            })
+            .collect();
+        format!(
+            "shards: {}; transfer {} B ({:.1}us modeled), imbalance {:.2}, \
+             overlapped {}, inline {}, pool {}",
+            lanes.join("; "),
+            self.transfer_bytes,
+            self.transfer_seconds * 1e6,
+            self.imbalance(),
+            self.max_in_flight,
+            self.inline_ops,
+            self.pool_size
+        )
+    }
+}
+
+/// Everything one sharded run reports: the per-op schedule (same shape
+/// as the other engines), the shard lanes, and the assignment used.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub schedule: ParallelReport,
+    pub stats: ShardStats,
+    pub assignment: ShardAssignment,
+}
+
+/// Run a program across the shards of `topo`, placing ops with the
+/// automatic chain-partition search. See the module docs; semantics
+/// are bit-exact with the serial planned path.
+pub fn run_program_sharded(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    topo: &ShardTopology,
+    opts: &ExecOptions,
+) -> Result<(BTreeMap<String, Vec<f32>>, ShardReport), ExecError> {
+    let assignment = assign_shards(program, topo)?;
+    run_program_sharded_with(program, inputs, topo, assignment, opts)
+}
+
+/// Run with an explicit [`ShardAssignment`] (from [`assign_shards`] or
+/// [`pin_shards`] — the coordinator's shard-aware compile pins the
+/// placement it compiled each region for).
+pub fn run_program_sharded_with(
+    program: &Program,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    topo: &ShardTopology,
+    assignment: ShardAssignment,
+    opts: &ExecOptions,
+) -> Result<(BTreeMap<String, Vec<f32>>, ShardReport), ExecError> {
+    let err = |m: String| ExecError { block: "main".into(), message: m };
+    let nshards = topo.len();
+    if nshards == 0 {
+        return Err(err("shard topology is empty".into()));
+    }
+    let mut bufs = plan::alloc_program_buffers(program, inputs, opts.pool.clone())?;
+    let scope = Arc::new(plan::build_root_scope(program, &mut bufs)?);
+    let blocks = match op_blocks(program) {
+        Ok(b) => b,
+        Err(e) => {
+            bufs.release();
+            return Err(e);
+        }
+    };
+    let n = blocks.len();
+    if assignment.op_shard.len() != n {
+        bufs.release();
+        return Err(err(format!(
+            "assignment names {} op(s), program has {n}",
+            assignment.op_shard.len()
+        )));
+    }
+    if let Some(&bad) = assignment.op_shard.iter().find(|&&s| s >= nshards) {
+        bufs.release();
+        return Err(err(format!("assignment shard index {bad} out of range ({nshards} shards)")));
+    }
+    let dag = build_dag(&blocks, &scope);
+    let reads: Vec<Extents> = blocks.iter().map(|b| plan::flat_read_extents(b, &scope)).collect();
+    let writes: Vec<Extents> =
+        blocks.iter().map(|b| plan::flat_write_extents(b, &scope)).collect();
+    // Storage width per root-scope buffer, resolved once (scope
+    // allocation order matches the symbolic scope, so runtime charges
+    // reproduce the static prediction).
+    let widths: Vec<u64> = (0..bufs.count()).map(|id| storage_bytes(bufs.dtype_of(id))).collect();
+    let elem_bytes = |id: usize| widths.get(id).copied().unwrap_or(4);
+
+    let pool = match &opts.compute {
+        Some(p) => Arc::clone(p),
+        None => ComputePool::new(topo.total_units()),
+    };
+    // Chunk options: chunks must not recurse into the sharded or
+    // dataflow engines (and must not keep the pool alive through its
+    // own queue).
+    let job_opts = ExecOptions { compute: None, shards: None, ..opts.clone() };
+
+    let (done_tx, done_rx) = channel::<ChunkDone>();
+    let mut indeg = dag.indeg.clone();
+    let mut ready: std::collections::BTreeSet<usize> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut flights: Vec<Option<Flight>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<OpParallelism>> = vec![None; n];
+    let mut shard_busy = vec![false; nshards];
+    let mut op_start: Vec<Option<Instant>> = vec![None; n];
+    let mut lanes: Vec<ShardLane> = topo
+        .shards
+        .iter()
+        .map(|s| ShardLane {
+            name: s.name.clone(),
+            units: s.target.compute_units.max(1),
+            ops: 0,
+            busy_s: 0.0,
+            transfer_in_bytes: 0,
+        })
+        .collect();
+    let mut ledger = TransferLedger::default();
+    let mut transfer_bytes = 0u64;
+    let mut transfer_seconds = 0.0f64;
+    let mut in_flight = 0usize;
+    let mut max_in_flight = 0usize;
+    let mut inline_ops = 0usize;
+    let mut executed_hwm = 0u64;
+    let mut failure: Option<ExecError> = None;
+
+    loop {
+        // Dispatch every ready op whose shard is idle, in program
+        // order. (If nothing is in flight every shard is idle, so the
+        // loop can never stall with work remaining.)
+        while failure.is_none() {
+            let Some(i) =
+                ready.iter().copied().find(|&i| !shard_busy[assignment.op_shard[i]])
+            else {
+                break;
+            };
+            ready.remove(&i);
+            let s = assignment.op_shard[i];
+            let b = blocks[i];
+            // Boundary hand-off accounting: bytes this op reads out of
+            // another shard's writes cross the link now.
+            let tb = ledger.charge(&reads[i], s, elem_bytes);
+            transfer_bytes += tb;
+            transfer_seconds += topo.link.seconds(tb);
+            lanes[s].transfer_in_bytes += tb;
+            let units = lanes[s].units;
+            match decide_dataflow(b, &scope, &bufs, units) {
+                DfDecision::Inline(reason) => {
+                    inline_ops += 1;
+                    let t0 = Instant::now();
+                    match exec_chunk(&mut bufs, &job_opts, b, &scope, executed_hwm) {
+                        Ok((done, ks)) => {
+                            executed_hwm = executed_hwm.max(done);
+                            lanes[s].busy_s += t0.elapsed().as_secs_f64();
+                            lanes[s].ops += 1;
+                            ledger.record(&writes[i], s);
+                            slots[i] = Some(OpParallelism {
+                                op: b.name.clone(),
+                                dim: None,
+                                range: 0,
+                                workers: 1,
+                                reason: format!("[{}] {reason}", lanes[s].name),
+                                fork_bytes: 0,
+                                merge_bytes: 0,
+                                kernel_lanes: ks.vector_lanes,
+                                scalar_lanes: ks.scalar_lanes,
+                            });
+                            for &j in &dag.succs[i] {
+                                indeg[j] -= 1;
+                                if indeg[j] == 0 {
+                                    ready.insert(j);
+                                }
+                            }
+                        }
+                        Err(e) => failure = Some(e),
+                    }
+                }
+                DfDecision::Offload { dim, write_ids } => {
+                    let (chunks, dim_name, range) = match &dim {
+                        Some((d, range)) => (
+                            split_range(*range, units * OVERSUBSCRIPTION),
+                            Some(d.clone()),
+                            *range,
+                        ),
+                        None => (vec![(0u64, 0u64)], None, 0u64),
+                    };
+                    let chunk_blocks: Vec<Block> = match &dim_name {
+                        Some(d) => chunks
+                            .iter()
+                            .map(|&(lo, len)| chunk_block(b, d, lo as i64, len))
+                            .collect(),
+                        None => vec![b.clone()],
+                    };
+                    let extents: Vec<Extents> = chunk_blocks
+                        .iter()
+                        .map(|blk| plan::flat_write_extents(blk, &scope))
+                        .collect();
+                    let pending = chunk_blocks.len();
+                    let mut submit_err = None;
+                    let mut submitted = 0usize;
+                    for (c, blk) in chunk_blocks.into_iter().enumerate() {
+                        let job = Job {
+                            op: i,
+                            chunk: c,
+                            home: c % pool.size(),
+                            blk,
+                            scope: Arc::clone(&scope),
+                            opts: job_opts.clone(),
+                            local: bufs.fork(),
+                            executed_base: executed_hwm,
+                            reply: done_tx.clone(),
+                        };
+                        if let Err(e) = pool.submit(job) {
+                            submit_err = Some(e);
+                            break;
+                        }
+                        submitted += 1;
+                    }
+                    if submitted > 0 {
+                        flights[i] = Some(Flight {
+                            dim: dim_name,
+                            range,
+                            write_ids,
+                            extents,
+                            parts: (0..pending).map(|_| None).collect(),
+                            pending: submitted,
+                        });
+                        shard_busy[s] = true;
+                        op_start[i] = Some(Instant::now());
+                        in_flight += 1;
+                        max_in_flight = max_in_flight.max(in_flight);
+                    }
+                    if let Some(e) = submit_err {
+                        failure = Some(e);
+                    }
+                }
+            }
+        }
+        if in_flight == 0 {
+            break;
+        }
+        // Collect one chunk completion (blocking: the scheduler owns
+        // the master buffers, so merges are serialized here).
+        let done = done_rx.recv().expect("scheduler holds a live sender");
+        let flight = flights[done.op].as_mut().expect("completion for an in-flight op");
+        match done.result {
+            Ok(part) => flight.parts[done.chunk] = Some(part),
+            Err(e) => {
+                if failure.is_none() {
+                    failure = Some(e);
+                }
+            }
+        }
+        flight.pending -= 1;
+        if flight.pending > 0 {
+            continue;
+        }
+        let flight = flights[done.op].take().unwrap();
+        let s = assignment.op_shard[done.op];
+        shard_busy[s] = false;
+        if let Some(t0) = op_start[done.op].take() {
+            lanes[s].busy_s += t0.elapsed().as_secs_f64();
+        }
+        in_flight -= 1;
+        let complete = flight.parts.iter().all(|p| p.is_some());
+        if failure.is_some() || !complete {
+            for part in flight.parts.into_iter().flatten() {
+                part.0.release();
+            }
+            if failure.is_none() {
+                failure = Some(ExecError {
+                    block: blocks[done.op].name.clone(),
+                    message: "sharded chunk lost without a result".into(),
+                });
+            }
+            continue;
+        }
+        match merge_op(&mut bufs, blocks[done.op], flight, &mut executed_hwm) {
+            Ok(op) => {
+                lanes[s].ops += 1;
+                ledger.record(&writes[done.op], s);
+                slots[done.op] = Some(op);
+                for &j in &dag.succs[done.op] {
+                    indeg[j] -= 1;
+                    if indeg[j] == 0 {
+                        ready.insert(j);
+                    }
+                }
+            }
+            Err(e) => failure = Some(e),
+        }
+    }
+
+    if let Some(e) = failure {
+        bufs.release();
+        return Err(e);
+    }
+    let mut schedule = ParallelReport {
+        ops: slots.into_iter().map(|s| s.expect("every op scheduled")).collect(),
+        ..ParallelReport::default()
+    };
+    schedule.dag = Some(super::DataflowStats {
+        dag_ops: n,
+        edges_raw: dag.edges_raw,
+        edges_war: dag.edges_war,
+        edges_waw: dag.edges_waw,
+        width: dag.width,
+        critical_path: dag.critical_path,
+        pool_size: pool.size(),
+        max_in_flight,
+        inline_ops,
+        ..super::DataflowStats::default()
+    });
+    let stats = ShardStats {
+        lanes,
+        transfer_bytes,
+        transfer_seconds,
+        predicted_transfer_bytes: assignment.predicted_transfer_bytes,
+        max_in_flight,
+        inline_ops,
+        pool_size: pool.size(),
+    };
+    let mut out = BTreeMap::new();
+    for bdef in program.buffers_of(BufKind::Output) {
+        let id = bufs.id_of(&bdef.name).unwrap();
+        out.insert(bdef.name.clone(), bufs.snapshot(id));
+    }
+    bufs.release();
+    Ok((out, ShardReport { schedule, stats, assignment }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::NullSink;
+    use crate::frontend::ops;
+    use crate::passes::equiv::gen_inputs;
+
+    fn serial(p: &Program, inputs: &BTreeMap<String, Vec<f32>>) -> BTreeMap<String, Vec<f32>> {
+        plan::run_program_planned(p, inputs, &ExecOptions::default(), &mut NullSink).unwrap()
+    }
+
+    #[test]
+    fn cnn_is_bit_exact_on_asymmetric_pair() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 53);
+        let topo = ShardTopology::asymmetric_pair();
+        let (out, report) =
+            run_program_sharded(&p, &inputs, &topo, &ExecOptions::default()).unwrap();
+        assert_eq!(serial(&p, &inputs), out, "{}", report.stats.summary_line());
+        assert_eq!(report.assignment.op_shard.len(), report.schedule.ops.len());
+        assert_eq!(
+            report.stats.transfer_bytes, report.stats.predicted_transfer_bytes,
+            "runtime transfer accounting must reproduce the static prediction: {}",
+            report.stats.summary_line()
+        );
+    }
+
+    #[test]
+    fn pinned_round_robin_matches_serial_and_prediction() {
+        let p = ops::cnn_program();
+        let inputs = gen_inputs(&p, 59);
+        let topo = ShardTopology::asymmetric_pair();
+        let nops = p.ops().count();
+        let pins: Vec<usize> = (0..nops).map(|i| i % topo.len()).collect();
+        let assignment = pin_shards(&p, &topo, &pins).unwrap();
+        assert!(
+            assignment.predicted_transfer_bytes > 0,
+            "a round-robin cut of a chain must cross the link"
+        );
+        let (out, report) = run_program_sharded_with(
+            &p,
+            &inputs,
+            &topo,
+            assignment,
+            &ExecOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(serial(&p, &inputs), out);
+        assert_eq!(report.stats.transfer_bytes, report.stats.predicted_transfer_bytes);
+        assert!(report.stats.lanes.iter().all(|l| l.ops > 0), "both shards execute ops");
+    }
+
+    #[test]
+    fn assign_shards_is_contiguous_and_complete() {
+        let p = ops::cnn_program();
+        let topo = ShardTopology::asymmetric_pair();
+        let a = assign_shards(&p, &topo).unwrap();
+        assert_eq!(a.op_shard.len(), p.ops().count());
+        // Chain partition: shard indices never decrease in program order.
+        assert!(a.op_shard.windows(2).all(|w| w[0] <= w[1]), "{:?}", a.op_shard);
+        assert_eq!(a.predicted_busy.len(), 2);
+    }
+
+    #[test]
+    fn pin_shards_validates_shape() {
+        let p = ops::cnn_program();
+        let topo = ShardTopology::asymmetric_pair();
+        assert!(pin_shards(&p, &topo, &[0]).is_err(), "wrong op count");
+        let nops = p.ops().count();
+        assert!(pin_shards(&p, &topo, &vec![9; nops]).is_err(), "shard out of range");
+    }
+
+    #[test]
+    fn ledger_charges_only_foreign_ranges() {
+        let mut ledger = TransferLedger::default();
+        let writes: Extents = Some(vec![(0, 0, 99)]);
+        ledger.record(&writes, 0);
+        // Same shard: free. Other shard: 100 elements x 4 bytes.
+        assert_eq!(ledger.charge(&writes, 0, |_| 4), 0);
+        assert_eq!(ledger.charge(&writes, 1, |_| 4), 400);
+        // Partial overlap charges only the overlapped run.
+        let half: Extents = Some(vec![(0, 50, 149)]);
+        assert_eq!(ledger.charge(&half, 1, |_| 4), 200);
+        // Rewriting a range from shard 1 transfers ownership.
+        ledger.record(&Some(vec![(0, 0, 49)]), 1);
+        assert_eq!(ledger.charge(&writes, 1, |_| 4), 200);
+        // Opaque footprints and unknown buffers charge nothing.
+        assert_eq!(ledger.charge(&None, 1, |_| 4), 0);
+        assert_eq!(ledger.charge(&Some(vec![(7, 0, 9)]), 1, |_| 4), 0);
+    }
+
+    #[test]
+    fn coalesce_merges_overlapping_refinements() {
+        let merged = coalesce(&[(0, 0, 9), (0, 5, 19), (1, 0, 3), (0, 21, 30)]);
+        assert_eq!(merged, vec![(0, 0, 19), (0, 21, 30), (1, 0, 3)]);
+    }
+
+    #[test]
+    fn single_shard_topology_degenerates_to_dataflow() {
+        let p = ops::conv_relu_program();
+        let inputs = gen_inputs(&p, 61);
+        let topo = ShardTopology::parse("cpu_cache").unwrap();
+        let (out, report) =
+            run_program_sharded(&p, &inputs, &topo, &ExecOptions::default()).unwrap();
+        assert_eq!(serial(&p, &inputs), out);
+        assert_eq!(report.stats.transfer_bytes, 0, "one shard never crosses a link");
+        assert!((report.stats.imbalance() - 1.0).abs() < 1e-9);
+    }
+}

@@ -10,8 +10,16 @@
 //! core engineering-effort claim, quantified in `coordinator/effort.rs`
 //! and `benches/fig1_effort.rs`.
 
+//!
+//! [`shard`] lifts the same idea one level: a [`shard::ShardTopology`]
+//! names several whole `MachineConfig`s — heterogeneous cache
+//! hierarchies, costs, and compute-unit counts — that one network is
+//! split across, joined by an explicit interconnect (`cost::transfer`).
+
 pub mod config;
+pub mod shard;
 pub mod targets;
 
 pub use config::{ComputeUnit, MachineConfig, MemoryUnit, PassConfig, Stencil, StencilRule};
+pub use shard::{ShardSpec, ShardTopology};
 pub use targets::{builtin_targets, target_by_name};

@@ -1,0 +1,141 @@
+//! Multi-target shard topologies: several [`MachineConfig`]s joined by
+//! an explicit interconnect.
+//!
+//! The paper's headline abstraction is representing *multiple compute
+//! units* in the IR; a [`ShardTopology`] takes that one level up and
+//! names several whole simulated machines — possibly heterogeneous
+//! (different cache hierarchies, costs, and compute-unit counts per
+//! shard) — that one compiled network is split across. Each shard
+//! keeps its own pass pipeline and tuning (the coordinator compiles
+//! each region against its shard's `MachineConfig`); bytes crossing a
+//! shard boundary are priced by the [`LinkModel`] from
+//! `cost::transfer`. Execution lives in `exec::shard`.
+
+use crate::cost::transfer::LinkModel;
+
+use super::{targets, MachineConfig};
+
+/// One shard: a name plus the full simulated target it runs on.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Unique shard name (defaults to the target name, suffixed with
+    /// `#<i>` when one target appears several times).
+    pub name: String,
+    /// The complete simulated machine this shard executes on — its own
+    /// memory hierarchy, compute units, roofline, and pass pipeline.
+    pub target: MachineConfig,
+}
+
+/// A set of shards joined by one interconnect.
+#[derive(Debug, Clone)]
+pub struct ShardTopology {
+    pub shards: Vec<ShardSpec>,
+    /// The inter-shard link every boundary crossing is charged to.
+    pub link: LinkModel,
+}
+
+impl ShardTopology {
+    /// Build a topology from explicit targets (at least one), naming
+    /// shards after their targets and disambiguating duplicates with a
+    /// `#<index>` suffix.
+    pub fn new(targets: Vec<MachineConfig>, link: LinkModel) -> Result<ShardTopology, String> {
+        if targets.is_empty() {
+            return Err("shard topology needs at least one target".into());
+        }
+        let mut shards = Vec::with_capacity(targets.len());
+        for (i, target) in targets.into_iter().enumerate() {
+            let dup = shards.iter().any(|s: &ShardSpec| s.name == target.name);
+            let name =
+                if dup { format!("{}#{}", target.name, i) } else { target.name.clone() };
+            shards.push(ShardSpec { name, target });
+        }
+        Ok(ShardTopology { shards, link })
+    }
+
+    /// Parse a CLI shard spec: comma-separated built-in target names,
+    /// e.g. `"cpu_cache,dc_accel"` (the `stripe run --shards` syntax).
+    pub fn parse(spec: &str) -> Result<ShardTopology, String> {
+        let mut cfgs = Vec::new();
+        for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let cfg = targets::target_by_name(name)
+                .ok_or_else(|| format!("unknown shard target {name:?}"))?;
+            cfgs.push(cfg);
+        }
+        ShardTopology::new(cfgs, LinkModel::default())
+    }
+
+    /// The asymmetric reference pair the differential harness sweeps:
+    /// a single-unit machine with a tiny cache (`paper_fig4`) next to
+    /// an 8-unit machine with a deep cache hierarchy (`cpu_cache`).
+    pub fn asymmetric_pair() -> ShardTopology {
+        ShardTopology::new(vec![targets::paper_fig4(), targets::cpu_cache()], LinkModel::default())
+            .expect("built-in pair")
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Compute units summed across shards — the worker-pool size the
+    /// sharded engine uses when no shared pool is supplied.
+    pub fn total_units(&self) -> usize {
+        self.shards.iter().map(|s| (s.target.compute_units).max(1)).sum()
+    }
+
+    /// Relative compute speed of shard `s` (the roofline's peak flops;
+    /// what the assignment search weighs op work against).
+    pub fn speed(&self, s: usize) -> f64 {
+        self.shards[s].target.roof.peak_flops.max(1.0)
+    }
+
+    /// One-line rendering: `cpu_cache(8u) + dc_accel(4u) @ 16.0 GB/s`.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .shards
+            .iter()
+            .map(|s| format!("{}({}u)", s.name, s.target.compute_units.max(1)))
+            .collect();
+        format!("{} @ {:.1} GB/s", parts.join(" + "), self.link.bandwidth / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names_and_units() {
+        let t = ShardTopology::parse("cpu_cache, dc_accel").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.shards[0].name, "cpu_cache");
+        assert_eq!(t.shards[1].name, "dc_accel");
+        assert_eq!(t.total_units(), 12);
+        assert!(t.summary().contains("cpu_cache(8u)"), "{}", t.summary());
+    }
+
+    #[test]
+    fn duplicate_targets_get_unique_names() {
+        let t = ShardTopology::parse("cpu_cache,cpu_cache").unwrap();
+        assert_eq!(t.shards[0].name, "cpu_cache");
+        assert_eq!(t.shards[1].name, "cpu_cache#1");
+    }
+
+    #[test]
+    fn unknown_target_and_empty_spec_fail() {
+        assert!(ShardTopology::parse("nope").is_err());
+        assert!(ShardTopology::parse("").is_err());
+    }
+
+    #[test]
+    fn asymmetric_pair_is_heterogeneous() {
+        let t = ShardTopology::asymmetric_pair();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.shards[0].target.compute_units, 1);
+        assert_eq!(t.shards[1].target.compute_units, 8);
+        assert!(t.speed(1) > t.speed(0));
+    }
+}

@@ -24,7 +24,7 @@ use stripe::util::cli::Args;
 const VALUE_OPTS: &[&str] = &[
     "target", "net", "workers", "seed", "set", "tile", "kernels", "archs", "versions", "shapes",
     "engine", "dtype", "queue-depth", "tenant-cap", "cache-bytes", "deadline-ms", "store-dir",
-    "store-budget",
+    "store-budget", "shards", "link-gbps",
 ];
 
 fn main() {
@@ -74,6 +74,12 @@ fn print_help() {
          \x20                              chunked SIMD kernels beat the scalar lane baseline\n\
          \x20         --dataflow-check     dataflow engine: assert bit-equality with the serial\n\
          \x20                              plan and O(1) pool thread spawns across repeat runs\n\
+         \x20         --shards <t1,t2,..>  sharded engine: split the network across several\n\
+         \x20                              simulated targets (comma-separated target names),\n\
+         \x20                              each region compiled for its own shard\n\
+         \x20         --link-gbps <g>      inter-shard link bandwidth (default 16 GB/s)\n\
+         \x20         --shard-check        sharded engine: assert bit-equality with the serial\n\
+         \x20                              plan and runtime == predicted transfer bytes\n\
          \x20 tune    --target <t>         autotune a network, print the tuning decision, and\n\
          \x20         --net <name|f.tile>  verify the tuned artifact is cached by the service\n\
          \x20         --require-warm       with --store-dir: fail unless the compile was served\n\
@@ -242,6 +248,26 @@ fn cmd_run(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let p = load_net(args)?;
         let cfg = load_target(args)?;
+        // --shards owns its own compile: each region is compiled against
+        // its shard's target, so the single-target pipeline below never
+        // runs for the sharded engine.
+        if let Some(spec) = args.get("shards") {
+            let mut topo = stripe::hw::ShardTopology::parse(spec)?;
+            if let Some(g) = args.get("link-gbps") {
+                let gbps: f64 =
+                    g.parse().map_err(|_| format!("bad --link-gbps value {g:?}"))?;
+                if gbps <= 0.0 {
+                    return Err(format!("--link-gbps must be positive, got {gbps}"));
+                }
+                topo.link = stripe::cost::LinkModel::with_gbps(gbps);
+            }
+            let topo = std::sync::Arc::new(topo);
+            let inputs = stripe::passes::equiv::gen_inputs(&p, args.get_u64("seed", 42));
+            if args.flag("shard-check") {
+                return shard_check(&p, &inputs, &topo);
+            }
+            return run_sharded(&p, &inputs, &topo, args.flag("tune"));
+        }
         let store = open_store(args)?;
         let c = compile_with_store(&p, &cfg, false, args.flag("tune"), store.as_deref())?;
         // Schedule summary: the tile-search telemetry behind the
@@ -445,6 +471,100 @@ fn dataflow_check(
         "dataflow-check: outputs bit-exact vs serial plan; {} thread(s) spawned across \
          {REPS} runs",
         spawned
+    );
+    Ok(())
+}
+
+/// `--shards` without `--shard-check`: shard-aware compile (each
+/// region against its own target's pipeline, optionally tuned), one
+/// sharded run over the topology's worker pool, then the per-shard
+/// schedule and outputs.
+fn run_sharded(
+    program: &stripe::ir::Program,
+    inputs: &std::collections::BTreeMap<String, Vec<f32>>,
+    topo: &std::sync::Arc<stripe::hw::ShardTopology>,
+    tune: bool,
+) -> Result<(), String> {
+    let sn = stripe::coordinator::compile_network_sharded(program, topo, false, tune)?;
+    println!("{}", sn.summary());
+    let t0 = std::time::Instant::now();
+    let (out, report) = stripe::coordinator::run_sharded_network(
+        &sn,
+        inputs,
+        &stripe::exec::ExecOptions::default(),
+    )?;
+    let dt = t0.elapsed();
+    println!("{}", report.stats.summary_line());
+    for (name, vals) in &out {
+        let preview: Vec<String> = vals.iter().take(8).map(|v| format!("{v:.4}")).collect();
+        println!("{name}[{}] = [{} ...]", vals.len(), preview.join(", "));
+    }
+    println!("executed in {dt:?}");
+    Ok(())
+}
+
+/// `--shard-check`: compile the network across the shard topology with
+/// per-region verification on, then require (a) bitwise identical
+/// outputs vs the serial plan engine, (b) runtime inter-shard transfer
+/// bytes exactly equal to the assignment's static prediction, (c) O(1)
+/// pool thread spawns across repeat runs, and (d) a scrape whose
+/// `stripe_shard_*` series reconcile. Exits nonzero on any failure —
+/// `scripts/verify.sh` runs this as the `VERIFY_SHARD_SMOKE` gate.
+fn shard_check(
+    program: &stripe::ir::Program,
+    inputs: &std::collections::BTreeMap<String, Vec<f32>>,
+    topo: &std::sync::Arc<stripe::hw::ShardTopology>,
+) -> Result<(), String> {
+    const REPS: usize = 3;
+    let sn = stripe::coordinator::compile_network_sharded(program, topo, true, false)?;
+    println!("{}", sn.summary());
+    let serial = stripe::exec::run_program_with(
+        program,
+        inputs,
+        &stripe::exec::ExecOptions::default(),
+    )
+    .map_err(|e| e.to_string())?;
+    let pool = stripe::exec::ComputePool::new(topo.total_units());
+    let opts = stripe::exec::ExecOptions {
+        compute: Some(pool.clone()),
+        ..stripe::exec::ExecOptions::default()
+    };
+    let metrics = stripe::coordinator::Metrics::default();
+    let mut last = None;
+    for _ in 0..REPS {
+        let r = stripe::coordinator::run_sharded_network(&sn, inputs, &opts)?;
+        metrics.record_shard(&r.1.stats);
+        last = Some(r);
+    }
+    let (out, report) = last.ok_or("shard-check needs at least one rep")?;
+    if out != serial {
+        return Err("shard-check: sharded and serial plan outputs disagree".into());
+    }
+    let stats = &report.stats;
+    println!("shard-check: {}", stats.summary_line());
+    if stats.transfer_bytes != stats.predicted_transfer_bytes {
+        return Err(format!(
+            "shard-check: runtime transfer {} B disagrees with the static prediction {} B",
+            stats.transfer_bytes, stats.predicted_transfer_bytes
+        ));
+    }
+    let spawned = pool.threads_spawned();
+    if spawned != pool.size() as u64 {
+        return Err(format!(
+            "shard-check: pool spawned {spawned} thread(s) across {REPS} runs, \
+             expected exactly {} (O(1) per pool, not O(ops))",
+            pool.size()
+        ));
+    }
+    let scrape = metrics.render_scrape();
+    let line = stripe::coordinator::metrics::reconcile_scrape(&scrape)
+        .map_err(|e| format!("shard-check: scrape does not reconcile: {e}"))?;
+    println!("{line}");
+    println!(
+        "shard-check: outputs bit-exact vs serial plan across {} shard(s); transfer \
+         {} B == predicted; {spawned} thread(s) spawned across {REPS} runs",
+        topo.len(),
+        stats.transfer_bytes
     );
     Ok(())
 }

@@ -19,6 +19,44 @@ use super::PassReport;
 
 pub const PARTITIONED_TAG: &str = "partitioned";
 
+/// Tag prefix marking which shard of a multi-target topology a
+/// top-level op is placed on (`shard:<name>`) — see `exec::shard`.
+pub const SHARD_TAG_PREFIX: &str = "shard:";
+
+/// Record a shard placement in the IR: tag each top-level op block
+/// `shard:<name>` per the assignment (one shard name per op, program
+/// order). Partitioning's cross-*machine* sibling: where [`run`] splits
+/// one op across a target's compute units, this marks which whole
+/// target each op runs on, so a sharded program is self-describing in
+/// printed form. Purely annotational — tags never change semantics.
+pub fn tag_shard_regions(p: &mut Program, shard_names: &[&str]) -> Result<PassReport, String> {
+    let mut report = PassReport::new("shard-regions");
+    let ops = p.main.stmts.iter().filter(|s| matches!(s, Statement::Block(_))).count();
+    if shard_names.len() != ops {
+        return Err(format!(
+            "shard-regions: assignment names {} op(s), program has {ops}",
+            shard_names.len()
+        ));
+    }
+    let mut i = 0usize;
+    for st in &mut p.main.stmts {
+        let Statement::Block(b) = st else { continue };
+        let tag = format!("{SHARD_TAG_PREFIX}{}", shard_names[i]);
+        // Re-tagging (a recompile against a new topology) replaces any
+        // previous placement instead of accumulating.
+        b.tags.retain(|t| !t.starts_with(SHARD_TAG_PREFIX));
+        b.add_tag(&tag);
+        report.note(format!("{}: placed on shard {:?}", b.name, shard_names[i]));
+        i += 1;
+    }
+    Ok(report)
+}
+
+/// The shard an op block is tagged for, if any.
+pub fn shard_of(b: &crate::ir::Block) -> Option<&str> {
+    b.tags.iter().find_map(|t| t.strip_prefix(SHARD_TAG_PREFIX))
+}
+
 pub fn run(
     p: &mut Program,
     cfg: &MachineConfig,

@@ -1,7 +1,7 @@
 //! Differential execution harness: naive interpreter ≡ serial plan ≡
 //! leaf-kernel engine ≡ parallel plan (planned *and* kernel chunk
-//! executors) ≡ inter-op dataflow scheduler, bit-exactly, on
-//! randomized networks.
+//! executors) ≡ inter-op dataflow scheduler ≡ heterogeneous sharded
+//! engine, bit-exactly, on randomized networks.
 //!
 //! Programs are generated through `graph::NetworkBuilder` with the
 //! repo's seeded deterministic PRNG (no external deps): a random HWC
@@ -17,6 +17,14 @@
 //! pool, so concurrently running sweeps interleave their chunks in a
 //! single job queue — cross-run isolation bugs (a chunk reading
 //! another run's fork) would surface as bit mismatches too.
+//!
+//! The sharded runs split every network across the asymmetric
+//! reference topology (a 1-unit tiny-cache machine next to an 8-unit
+//! deep-cache machine) with an interleaved round-robin pinning — the
+//! worst case for boundary traffic, so every producer/consumer edge
+//! crosses the inter-shard link — plus one automatic-assignment run.
+//! Runtime transfer bytes must equal the assignment's static
+//! prediction on every case.
 //!
 //! The parallel runs share one [`BufferPool`] across the whole sweep:
 //! the copy-on-write storage's page recycling is exercised by 50
@@ -50,11 +58,12 @@ use std::sync::Arc;
 
 use stripe::cost::SearchSpace;
 use stripe::exec::{
-    run_program_dataflow, run_program_kernel, run_program_parallel, run_program_planned,
-    run_program_sink, BufferPool, ComputePool, Engine, ExecOptions, NullSink,
+    pin_shards, run_program_dataflow, run_program_kernel, run_program_parallel,
+    run_program_planned, run_program_sharded, run_program_sharded_with, run_program_sink,
+    BufferPool, ComputePool, Engine, ExecOptions, NullSink,
 };
 use stripe::graph::{NetworkBuilder, TensorId};
-use stripe::hw::{builtin_targets, MachineConfig, PassConfig};
+use stripe::hw::{builtin_targets, MachineConfig, PassConfig, ShardTopology};
 use stripe::ir::{DType, Program};
 use stripe::util::rng::Rng;
 
@@ -118,9 +127,47 @@ fn shared_compute() -> Arc<ComputePool> {
     Arc::clone(POOL.get_or_init(|| ComputePool::new(4)))
 }
 
+/// One shard topology for every sharded run: the asymmetric reference
+/// pair (1-unit `paper_fig4` + 8-unit `cpu_cache`).
+fn shared_topology() -> Arc<ShardTopology> {
+    static TOPO: std::sync::OnceLock<Arc<ShardTopology>> = std::sync::OnceLock::new();
+    Arc::clone(TOPO.get_or_init(|| Arc::new(ShardTopology::asymmetric_pair())))
+}
+
+/// Run `p` through the sharded engine with an interleaved round-robin
+/// pinning across the asymmetric pair (maximal boundary traffic) and
+/// assert bit-equality with `serial` plus exact agreement between
+/// runtime and statically predicted transfer bytes.
+fn sharded_case(
+    p: &Program,
+    label: &str,
+    inputs: &BTreeMap<String, Vec<f32>>,
+    serial: &BTreeMap<String, Vec<f32>>,
+    pool: Option<Arc<BufferPool>>,
+) {
+    let topo = shared_topology();
+    let pins: Vec<usize> = (0..p.ops().count()).map(|i| i % topo.len()).collect();
+    let assignment = pin_shards(p, &topo, &pins)
+        .unwrap_or_else(|e| panic!("{label}: pin_shards failed: {e}"));
+    let sopts = ExecOptions { pool, compute: Some(shared_compute()), ..ExecOptions::default() };
+    let (sharded, sreport) = run_program_sharded_with(p, inputs, &topo, assignment, &sopts)
+        .unwrap_or_else(|e| panic!("{label}: sharded failed: {e}"));
+    assert_eq!(
+        serial, &sharded,
+        "{label}: serial vs sharded diverged\nshards:\n{}",
+        sreport.stats.summary_line()
+    );
+    assert_eq!(
+        sreport.stats.transfer_bytes, sreport.stats.predicted_transfer_bytes,
+        "{label}: runtime transfer bytes disagree with the static prediction\nshards:\n{}",
+        sreport.stats.summary_line()
+    );
+}
+
 /// Run every engine — naive, serial plan, leaf-kernel, the parallel
-/// dispatcher with both chunk executors, and the inter-op dataflow
-/// scheduler — and assert bit-exact agreement; the pooled runs draw
+/// dispatcher with both chunk executors, the inter-op dataflow
+/// scheduler, and the heterogeneous sharded engine (pinned and
+/// auto-assigned) — and assert bit-exact agreement; the pooled runs draw
 /// their pages from `pool` when one is given. Returns how many ops the
 /// (planned) parallel engine actually parallelized.
 fn differential_case_pooled(
@@ -151,7 +198,7 @@ fn differential_case_pooled(
     let dopts = ExecOptions {
         workers,
         engine: Engine::Dataflow,
-        pool,
+        pool: pool.clone(),
         compute: Some(shared_compute()),
         ..ExecOptions::default()
     };
@@ -182,6 +229,15 @@ fn differential_case_pooled(
         p.name,
         dreport.summary()
     );
+    // Sharded engine: interleaved pinning across the asymmetric pair,
+    // plus one automatic-assignment run (the search may honestly keep
+    // everything on one shard for a toy net — equality still holds).
+    sharded_case(p, &p.name, &inputs, &serial, pool.clone());
+    let topo = shared_topology();
+    let sopts = ExecOptions { pool, compute: Some(shared_compute()), ..ExecOptions::default() };
+    let (auto_out, _) = run_program_sharded(p, &inputs, &topo, &sopts)
+        .unwrap_or_else(|e| panic!("{}: auto-sharded failed: {e}", p.name));
+    assert_eq!(serial, auto_out, "{}: serial vs auto-sharded diverged", p.name);
     report.parallel_ops()
 }
 
@@ -190,8 +246,8 @@ fn differential_case(p: &Program, seed: u64, workers: usize) -> usize {
 }
 
 /// Per-dtype differential case: retype the program's buffers to `dt`
-/// and assert naive ≡ serial plan ≡ kernel ≡ parallel ≡ dataflow
-/// bit-exactly. The parallel run uses the kernel chunk executor, so
+/// and assert naive ≡ serial plan ≡ kernel ≡ parallel ≡ dataflow ≡
+/// sharded bit-exactly. The parallel run uses the kernel chunk executor, so
 /// each dtype crosses the full engine matrix without doubling the
 /// dispatcher runs; the dataflow run shares the process-wide pool.
 fn dtype_case(p: &Program, dt: DType, seed: u64, workers: usize, pool: Option<Arc<BufferPool>>) {
@@ -212,7 +268,7 @@ fn dtype_case(p: &Program, dt: DType, seed: u64, workers: usize, pool: Option<Ar
     let dopts = ExecOptions {
         workers,
         engine: Engine::Dataflow,
-        pool,
+        pool: pool.clone(),
         compute: Some(shared_compute()),
         ..ExecOptions::default()
     };
@@ -243,6 +299,10 @@ fn dtype_case(p: &Program, dt: DType, seed: u64, workers: usize, pool: Option<Ar
         dt.name(),
         dreport.summary()
     );
+    // Sharded engine per dtype: boundary hand-offs cross the link in
+    // the buffer's storage dtype, so transfer accounting and equality
+    // must both hold on the lossy integer grids too.
+    sharded_case(&pd, &format!("{} [{}]", pd.name, dt.name()), &inputs, &serial, pool);
 }
 
 /// Build a random *legal* pass pipeline against `cfg`: 1–5 passes in

@@ -89,6 +89,22 @@ else
     echo "(set VERIFY_DATAFLOW_SMOKE=1 to run the dataflow scheduler smoke)"
 fi
 
+echo "== shard smoke (gated) =="
+# Opt-in heterogeneous-sharding smoke: splits the canned cnn across two
+# simulated machines (an 8-unit cpu_cache shard and a 1-unit paper_fig4
+# shard) with `--shard-check`, which asserts bitwise equality against
+# the serial plan engine, runtime inter-shard transfer bytes exactly
+# equal to the assignment's static prediction, O(1) pool thread spawns
+# across repeat runs, and a reconciling stripe_shard_* scrape (exits
+# nonzero otherwise).
+if [ "${VERIFY_SHARD_SMOKE:-0}" = "1" ]; then
+    cargo run --release --quiet -- run \
+        --net cnn --target cpu_cache \
+        --shards cpu_cache,paper_fig4 --shard-check
+else
+    echo "(set VERIFY_SHARD_SMOKE=1 to run the heterogeneous-sharding smoke)"
+fi
+
 echo "== store smoke (gated) =="
 # Opt-in persistent-store smoke: tunes the canned cnn into a fresh temp
 # store, then repeats the compile from a second process pointed at the
